@@ -1,0 +1,52 @@
+"""Figs. 5 & 6: interpretability — arm-value progression of Seq-UCB1 and the
+correspondence between final arm values and standalone per-arm speedups."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (GAMMA_MAX, calibrated_pool, calibrated_thresholds,
+                     evaluate_method, get_corpus, save_json, trained_pair)
+from repro.core import SpecEngine, StaticGamma, TapOutSequence, make_controller
+
+ARMS = ["max_confidence", "svip", "adaedl", "svip_difference", "logit_margin"]
+
+
+def run(quick: bool = False) -> dict:
+    draft, target = trained_pair("llama-1b-8b")
+    corpus = get_corpus()
+    out = {}
+    for dataset in ("mt_bench", "humaneval"):
+        prompts = [ids[:48] for _, ids in
+                   corpus.prompts(dataset, 3 if quick else 6, seed=31)]
+        pool = calibrated_pool("llama-1b-8b")
+        ctrl = TapOutSequence(GAMMA_MAX, "ucb1", "blend", pool=pool)
+        eng = SpecEngine(draft, target, ctrl, max_len=512)
+        progression = []
+        for ids in prompts:
+            eng.generate(ids, 40 if quick else 72)
+            progression.append([float(v) for v in ctrl.arm_values])
+        # standalone per-arm speedups (Fig 6 comparison)
+        base = evaluate_method(draft, target, StaticGamma(6), prompts,
+                               max_new=40 if quick else 64)
+        standalone = {}
+        th = calibrated_thresholds("llama-1b-8b")
+        for arm in ARMS:
+            kw = {"threshold": round(float(th[arm]), 4)} if arm in th else {}
+            r = evaluate_method(draft, target,
+                                make_controller(f"fixed_{arm}", GAMMA_MAX, **kw),
+                                prompts, max_new=40 if quick else 64)
+            standalone[arm] = base.cost_per_token / max(r.cost_per_token, 1e-12)
+        final = {a: float(v) for a, v in zip(ARMS, ctrl.arm_values)}
+        # rank correlation between arm values and standalone speedups
+        va = np.array([final[a] for a in ARMS])
+        vs = np.array([standalone[a] for a in ARMS])
+        ra, rs = np.argsort(np.argsort(va)), np.argsort(np.argsort(vs))
+        spearman = float(1 - 6 * np.sum((ra - rs) ** 2) /
+                         (len(ARMS) * (len(ARMS) ** 2 - 1)))
+        out[dataset] = {"arm_value_progression": progression,
+                        "final_arm_values": final,
+                        "standalone_speedups": standalone,
+                        "spearman_values_vs_speedup": spearman,
+                        "value_spread": float(va.max() - va.min())}
+    save_json("fig5_6_arm_values", out)
+    return out

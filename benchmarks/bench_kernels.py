@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: us/call for the XLA execution paths (CPU) and a
+single interpret-mode Pallas validation call per kernel (TPU kernels cannot
+be timed on CPU — the XLA path is what actually runs in CPU benches)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import sdpa
+from repro.models.ssm import ssd_chunked
+from .common import save_json
+
+
+def _time(fn, *args, n=20, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick: bool = False) -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    rows = {}
+    S = 512 if quick else 1024
+    q = jax.random.normal(ks[0], (1, S, 8, 64))
+    k = jax.random.normal(ks[1], (1, S, 2, 64))
+    v = jax.random.normal(ks[2], (1, S, 2, 64))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    f_naive = jax.jit(lambda *a: sdpa(*a, impl="naive"))
+    f_flash = jax.jit(lambda *a: sdpa(*a, impl="flash_xla"))
+    rows["sdpa_naive_us"] = _time(f_naive, q, k, v, pos, pos)
+    rows["sdpa_flash_xla_us"] = _time(f_flash, q, k, v, pos, pos)
+
+    x = jax.random.normal(ks[3], (1, S, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (1, S, 8)))
+    A = -jnp.exp(jnp.arange(1, 9, dtype=jnp.float32) * 0.1)
+    Bm = jax.random.normal(ks[3], (1, S, 1, 64))
+    Cm = jax.random.normal(ks[4], (1, S, 1, 64))
+    f_ssd = jax.jit(lambda *a: ssd_chunked(*a, 128)[0])
+    rows["ssd_chunked_xla_us"] = _time(f_ssd, x, dt, A, Bm, Cm, n=5)
+
+    # interpret-mode Pallas validation (correctness only, 1 call)
+    from repro.kernels import ops, ref
+    ops.FORCE_INTERPRET = True
+    qq = jax.random.normal(ks[0], (1, 4, 128, 64))
+    kk = jax.random.normal(ks[1], (1, 2, 128, 64))
+    vv = jax.random.normal(ks[2], (1, 2, 128, 64))
+    p = jnp.arange(128, dtype=jnp.int32)
+    o = ops.flash_attention(qq, kk, vv, p, p, block_q=64, block_k=64)
+    r = ref.flash_attention_ref(qq, kk, vv, p, p)
+    rows["pallas_flash_max_err"] = float(np.abs(np.asarray(o) - np.asarray(r)).max())
+    save_json("kernels_micro", rows)
+    return rows

@@ -1,0 +1,34 @@
+"""Table 3: all methods x model-pair analogs x {MT-Bench, HumanEval}.
+
+Key paper claim (C3): TapOut Seq-UCB1 delivers top-2 speedup while being
+tuning-free, across model families and datasets."""
+from __future__ import annotations
+
+from .common import (METHODS, get_corpus, run_method_suite, save_json)
+
+PAIRS = ["llama-1b-70b", "llama-1b-8b", "olmo2-1b-32b", "gemma-270m-27b"]
+
+
+def run(quick: bool = False) -> dict:
+    corpus = get_corpus()
+    pairs = PAIRS[:2] if quick else PAIRS
+    table = {}
+    for pair in pairs:
+        for dataset in ("mt_bench", "humaneval"):
+            prompts = [ids[:48] for _, ids in
+                       corpus.prompts(dataset, 3 if quick else 5, seed=17)]
+            res = run_method_suite(pair, prompts,
+                                   max_new=40 if quick else 72)
+            table[f"{pair}|{dataset}"] = {
+                k: {"m": v.m, "accept_rate": v.accept_rate,
+                    "speedup": v.speedup} for k, v in res.items()}
+    # claim: seq-UCB1 speedup is top-2 among methods per (pair, dataset)
+    top2 = 0
+    for key, row in table.items():
+        speeds = sorted((v["speedup"] for v in row.values()), reverse=True)
+        thresh = speeds[1] if len(speeds) > 1 else speeds[0]
+        if row["tapout_seq_ucb1"]["speedup"] >= thresh - 0.03:
+            top2 += 1
+    out = {"table": table, "claim_sequcb1_top2_frac": top2 / len(table)}
+    save_json("table3_main", out)
+    return out

@@ -1,0 +1,48 @@
+"""Appendix A.2: one-threshold-per-heuristic pool vs a multi-threshold pool
+(3 thresholds per heuristic at 0.5x/1x/1.5x the calibrated value).
+Paper: the small pool is ~12% better overall."""
+from __future__ import annotations
+
+from repro.core import StaticGamma, TapOutSequence
+from repro.core.arms import (ADAEDL_DEFAULTS, Arm, _adaedl, _logit_margin,
+                             _max_confidence, _svip, _svip_difference)
+
+from .common import (GAMMA_MAX, calibrated_pool, calibrated_thresholds,
+                     evaluate_method, get_corpus, save_json, trained_pair)
+
+_MAKERS = {"max_confidence": _max_confidence, "svip": _svip,
+           "svip_difference": _svip_difference, "logit_margin": _logit_margin}
+
+
+def _multi_pool(th):
+    pool = [Arm("adaedl", _adaedl(ADAEDL_DEFAULTS["g_coef"]))]
+    for name, maker in _MAKERS.items():
+        for mult in (0.5, 1.0, 1.5):
+            h = round(float(th[name]) * mult, 4)
+            pool.append(Arm(f"{name}_{mult}", maker(h), h))
+    return pool
+
+
+def run(quick: bool = False) -> dict:
+    draft, target = trained_pair("llama-1b-8b")
+    corpus = get_corpus()
+    prompts = [ids[:48] for _, ids in
+               corpus.prompts("specbench", 13 if quick else 26, seed=37)]
+    base = evaluate_method(draft, target, StaticGamma(6), prompts,
+                           max_new=40 if quick else 64)
+    th = calibrated_thresholds("llama-1b-8b")
+    res = {}
+    for name, pool in (("default_pool", calibrated_pool("llama-1b-8b")),
+                       ("multi_threshold_pool", _multi_pool(th))):
+        ctrl = TapOutSequence(GAMMA_MAX, "ucb1", "blend", pool=pool)
+        r = evaluate_method(draft, target, ctrl, prompts,
+                            max_new=40 if quick else 64)
+        res[name] = {"speedup": base.cost_per_token / max(r.cost_per_token, 1e-12),
+                     "m": r.m, "accept_rate": r.accept_rate,
+                     "n_arms": len(pool)}
+    out = {"table": res,
+           "claim_small_pool_wins":
+               bool(res["default_pool"]["speedup"] >=
+                    res["multi_threshold_pool"]["speedup"])}
+    save_json("a2_more_arms", out)
+    return out

@@ -1,0 +1,75 @@
+"""Table 2 + Fig. 3: r_simple vs r_blend for sequence-level UCB1 on
+SpecBench categories (blend should win on acceptance rate and speedup)."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from .common import (GAMMA_MAX, MethodResult, calibrated_pool,
+                     evaluate_method, get_corpus, save_json, trained_pair)
+from repro.core import SpecEngine, StaticGamma, TapOutSequence
+
+
+def run(quick: bool = False) -> dict:
+    draft, target = trained_pair("llama-1b-8b")
+    corpus = get_corpus()
+    per_cat = defaultdict(dict)
+    prompts_by_cat = defaultdict(list)
+    n = 13 if quick else 26
+    for cat, ids in corpus.prompts("specbench", n, seed=11):
+        prompts_by_cat[cat].append(ids[:48])
+    spec_len = defaultdict(dict)
+    for reward in ("simple", "blend"):
+        for cat, prompts in sorted(prompts_by_cat.items()):
+            ctrl = TapOutSequence(GAMMA_MAX, "ucb1", reward,
+                                  pool=calibrated_pool("llama-1b-8b"))
+            res = evaluate_method(draft, target, ctrl, prompts,
+                                  max_new=40 if quick else 64)
+            base = evaluate_method(draft, target, StaticGamma(6), prompts,
+                                   max_new=40 if quick else 64)
+            per_cat[cat][reward] = {
+                "accept_rate": res.accept_rate, "m": res.m,
+                "speedup": base.cost_per_token / max(res.cost_per_token, 1e-12)}
+            # Fig 3: speculated length distribution
+            hist = [h["n_drafted"] for h in ctrl.history]
+            spec_len[cat][reward] = float(np.mean(hist)) if hist else 0.0
+
+    cats = list(per_cat)
+    wins_rate = sum(per_cat[c]["blend"]["accept_rate"] >=
+                    per_cat[c]["simple"]["accept_rate"] for c in cats)
+    wins_speed = sum(per_cat[c]["blend"]["speedup"] >=
+                     per_cat[c]["simple"]["speedup"] for c in cats)
+    simple_longer = sum(spec_len[c]["simple"] >= spec_len[c]["blend"]
+                        for c in cats)
+
+    # pooled run (primary claim): ONE online bandit across the whole
+    # promptset — the paper's deployment setting; per-category numbers above
+    # use 2 prompts each and are noise-dominated at this scale
+    all_prompts = [p for c in sorted(prompts_by_cat) for p in prompts_by_cat[c]]
+    pooled = {}
+    pooled_len = {}
+    base = evaluate_method(draft, target, StaticGamma(6), all_prompts,
+                           max_new=40 if quick else 64)
+    for reward in ("simple", "blend"):
+        ctrl = TapOutSequence(GAMMA_MAX, "ucb1", reward,
+                              pool=calibrated_pool("llama-1b-8b"))
+        r = evaluate_method(draft, target, ctrl, all_prompts,
+                            max_new=40 if quick else 64)
+        pooled[reward] = {"accept_rate": r.accept_rate, "m": r.m,
+                          "speedup": base.cost_per_token / max(r.cost_per_token, 1e-12)}
+        pooled_len[reward] = float(np.mean(
+            [h["n_drafted"] for h in ctrl.history]))
+    out = {"per_category": dict(per_cat),
+           "mean_speculated_length": dict(spec_len),
+           "pooled": pooled, "pooled_speculated_length": pooled_len,
+           "claim_blend_higher_accept_rate":
+               bool(pooled["blend"]["accept_rate"] >= pooled["simple"]["accept_rate"]),
+           "claim_blend_higher_speedup":
+               bool(pooled["blend"]["speedup"] >= pooled["simple"]["speedup"]),
+           "claim_simple_speculates_longer":
+               bool(pooled_len["simple"] >= pooled_len["blend"]),
+           "claim_blend_higher_accept_rate_frac": wins_rate / len(cats),
+           "claim_blend_higher_speedup_frac": wins_speed / len(cats)}
+    save_json("table2_reward", out)
+    return out

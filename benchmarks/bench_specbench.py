@@ -1,0 +1,27 @@
+"""Table 5 (Appendix A.3): SpecBench across the four model-pair analogs."""
+from __future__ import annotations
+
+from .common import get_corpus, run_method_suite, save_json
+
+PAIRS = ["llama-1b-70b", "llama-1b-8b", "olmo2-1b-32b", "gemma-270m-27b"]
+
+
+def run(quick: bool = False) -> dict:
+    corpus = get_corpus()
+    pairs = PAIRS[1:2] if quick else PAIRS
+    prompts = [ids[:48] for _, ids in
+               corpus.prompts("specbench", 13 if quick else 26, seed=19)]
+    table = {}
+    for pair in pairs:
+        res = run_method_suite(pair, prompts, max_new=40 if quick else 64)
+        table[pair] = {k: {"m": v.m, "accept_rate": v.accept_rate,
+                           "speedup": v.speedup} for k, v in res.items()}
+    top2 = 0
+    for pair, row in table.items():
+        speeds = sorted((v["speedup"] for v in row.values()), reverse=True)
+        thresh = speeds[1] if len(speeds) > 1 else speeds[0]
+        if row["tapout_seq_ucb1"]["speedup"] >= thresh - 0.03:
+            top2 += 1
+    out = {"table": table, "claim_sequcb1_top2_frac": top2 / len(table)}
+    save_json("table5_specbench", out)
+    return out

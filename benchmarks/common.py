@@ -1,0 +1,256 @@
+"""Shared benchmark infrastructure: trained model pairs + evaluation loop.
+
+Metrics match the paper: m (mean accepted length per drafting session),
+% (acceptance rate), s (speedup over Static-6 vanilla speculative decoding).
+Speedup uses the analytic cost model (active-params per forward token) —
+CPU wall-clock is not TPU wall-clock (DESIGN.md §6) — wall-clock is also
+recorded for reference.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.registry import PAIR_COST_RATIO, PAPER_PAIRS, paper_pair
+from repro.core import (FixedArm, ModelBundle, SpecEngine, StaticGamma,
+                        make_controller)
+from repro.core.controller import Controller
+from repro.data.synthetic import SyntheticCorpus
+from repro.models import transformer as T
+from repro.training.checkpoint import (checkpoint_exists, load_checkpoint,
+                                       save_checkpoint)
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import train
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+GAMMA_MAX = 16        # CPU proxy for the paper's 128 "unbounded" cap
+STATIC_GAMMA = 6
+
+
+def get_corpus() -> SyntheticCorpus:
+    return SyntheticCorpus(seed=0)
+
+
+def trained_pair(name: str, *, steps: int = 200, seq_len: int = 96,
+                 batch: int = 8) -> tuple:
+    """Train (once, cached) the draft/target analog pair ``name``."""
+    dcfg, tcfg = paper_pair(name)
+    os.makedirs(os.path.join(ART, "models"), exist_ok=True)
+    corpus = get_corpus()
+    bundles = []
+    for cfg, seed in ((dcfg, 0), (tcfg, 1)):
+        path = os.path.join(ART, "models", f"{cfg.name}")
+        template = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                  jax.random.PRNGKey(seed))
+        if checkpoint_exists(path):
+            params = load_checkpoint(path, jax.tree.map(
+                lambda s: np.zeros(s.shape, s.dtype), template))
+            params = jax.tree.map(jax.numpy.asarray, params)
+        else:
+            t0 = time.perf_counter()
+            params = T.init_params(cfg, jax.random.PRNGKey(seed))
+            out = train(cfg, params,
+                        corpus.training_batches(seq_len=seq_len,
+                                                batch_size=batch, seed=seed),
+                        OptConfig(lr=3e-3, warmup_steps=30, total_steps=steps),
+                        steps=steps, log_every=max(steps // 3, 1))
+            params = out["params"]
+            save_checkpoint(path, params,
+                            {"loss": out["history"][-1]["loss"],
+                             "train_s": time.perf_counter() - t0})
+        bundles.append(ModelBundle(params, cfg))
+    # analog models give the acceptance dynamics; the REAL pair's FLOP ratio
+    # gives the cost model (see PAIR_COST_RATIO)
+    bundles[1].cost_per_token = 1.0
+    bundles[0].cost_per_token = PAIR_COST_RATIO[name]
+    return bundles[0], bundles[1]
+
+
+# ---------------------------------------------------------------------
+# Paper protocol (Sec. 4.2): baseline heuristics get a THRESHOLD GRID
+# SEARCH on the Llama-1B/8B analog over SpecBench, fixed for all other
+# pairs/datasets.  TapOut's arm pool is tuning-free: thresholds come from a
+# scale-free signal-quantile calibration (no performance feedback) — the
+# Table-1 constants assume LLM-scale logit distributions, and our analog
+# pairs are char-level (DESIGN.md §6).
+
+# Quantiles chosen so each rule fires on ~the worst 10-15% of tokens
+# (the paper's Table-1 constants imply a similar firing rate at LLM scale,
+# giving oracle-like draft lengths of ~6; a median threshold would stop
+# every other token). Directionality: MC/margin stop on LOW signal values,
+# SVIP/SVIP-diff on HIGH ones.
+CAL_QUANTILES = {  # signal -> (trace column, quantile)
+    "max_confidence": ("top1", 0.15),
+    "svip": ("sqrt_entropy", 0.85),
+    "svip_difference": ("sqrt_entropy_diff", 0.90),
+    "logit_margin": ("margin", 0.15),
+}
+
+BASELINE_GRIDS = {
+    "max_confidence": [0.3, 0.5, 0.7, 0.9],
+    "svip": [0.4, 0.8, 1.2, 1.6],
+    "svip_difference": [0.1, 0.3, 0.6, 1.0],
+    "logit_margin": [0.1, 0.3, 0.5, 0.7],
+}
+
+
+def _collect_calibration_traces(draft, target, n_prompts=4, max_new=48):
+    corpus = get_corpus()
+    eng = SpecEngine(draft, target, StaticGamma(gamma=8), max_len=512)
+    eng.collect_traces = True
+    traces = []
+    for _, ids in corpus.prompts("alpaca", n_prompts, seed=101):
+        r = eng.generate(ids[:48], max_new)
+        traces.extend(r.traces)
+    return traces
+
+
+def calibrated_thresholds(pair_name: str) -> Dict[str, float]:
+    """Quantile calibration of the arm pool for this pair (cached)."""
+    os.makedirs(os.path.join(ART, "bench"), exist_ok=True)
+    path = os.path.join(ART, "bench", f"calibration_{pair_name}.json")
+    if os.path.exists(path):
+        return json.load(open(path))
+    draft, target = trained_pair(pair_name)
+    traces = _collect_calibration_traces(draft, target)
+    sig = np.concatenate([t["signals"][:t["n_drafted"]] for t in traces])
+    # columns: entropy, sqrt_entropy, top1, top2, margin, pos/32
+    cols = {"entropy": sig[:, 0], "sqrt_entropy": sig[:, 1],
+            "top1": sig[:, 2], "margin": sig[:, 4],
+            "sqrt_entropy_diff": np.abs(np.diff(sig[:, 1]))}
+    th = {arm: float(np.quantile(cols[col], q))
+          for arm, (col, q) in CAL_QUANTILES.items()}
+    with open(path, "w") as f:
+        json.dump(th, f, indent=2)
+    return th
+
+
+def calibrated_pool(pair_name: str):
+    from repro.core.arms import pool_from_thresholds
+    return pool_from_thresholds(calibrated_thresholds(pair_name))
+
+
+def tuned_baseline_thresholds() -> Dict[str, float]:
+    """The paper's baseline tuning: grid search each heuristic's threshold on
+    the Llama-1B/8B analog x SpecBench; fix for all pairs/datasets (cached)."""
+    path = os.path.join(ART, "bench", "baseline_grid.json")
+    if os.path.exists(path):
+        return json.load(open(path))
+    draft, target = trained_pair("llama-1b-8b")
+    corpus = get_corpus()
+    prompts = [ids[:48] for _, ids in corpus.prompts("specbench", 13, seed=103)]
+    best = {}
+    for arm, grid in BASELINE_GRIDS.items():
+        scores = {}
+        for h in grid:
+            ctrl = FixedArm(GAMMA_MAX, arm, threshold=h)
+            r = evaluate_method(draft, target, ctrl, prompts, max_new=48)
+            scores[h] = r.cost_per_token
+        best[arm] = min(scores, key=scores.get)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(best, f, indent=2)
+    return best
+
+
+def make_method(mname: str, pair_name: str, gamma_max: int, seed: int):
+    if mname == "static6":
+        return StaticGamma(gamma=STATIC_GAMMA, seed=seed)
+    if mname == "adaedl":
+        return make_controller("fixed_adaedl", gamma_max, seed)
+    if mname in ("svip", "max_confidence", "svip_difference", "logit_margin"):
+        th = tuned_baseline_thresholds()[mname]
+        return FixedArm(gamma_max, mname, threshold=round(float(th), 4),
+                        seed=seed)
+    pool = calibrated_pool(pair_name)
+    kinds = {"tapout_seq_ts": "tapout_seq_ts",
+             "tapout_seq_ucb1": "tapout_seq_ucb1",
+             "tapout_seq_ucb_tuned": "tapout_seq_ucb_tuned",
+             "tapout_token_ts": "tapout_token_ts",
+             "tapout_token_ucb1": "tapout_token_ucb1"}
+    return make_controller(kinds[mname], gamma_max, seed, pool=pool)
+
+
+METHODS = ["static6", "adaedl", "svip", "max_confidence", "tapout_seq_ts",
+           "tapout_seq_ucb1", "tapout_token_ts", "tapout_token_ucb1"]
+
+
+@dataclass
+class MethodResult:
+    method: str
+    m: float            # mean accepted per session
+    accept_rate: float
+    cost_per_token: float
+    wall_per_token: float
+    speedup: float = 0.0   # filled vs static6
+    extra: dict = field(default_factory=dict)
+
+
+def evaluate_method(draft: ModelBundle, target: ModelBundle,
+                    controller: Controller, prompts: List[List[int]], *,
+                    max_new: int = 64, max_len: int = 1024,
+                    seed: int = 0) -> MethodResult:
+    eng = SpecEngine(draft, target, controller, max_len=max_len, seed=seed)
+    tot_acc = tot_draft = tot_sessions = tot_new = 0
+    cost = wall = 0.0
+    for ids in prompts:
+        r = eng.generate(ids, max_new)
+        tot_acc += r.total_accepted
+        tot_draft += r.total_drafted
+        tot_sessions += len(r.sessions)
+        tot_new += r.new_tokens
+        cost += r.modeled_cost
+        wall += r.wall_time_s
+    return MethodResult(
+        controller.name,
+        m=tot_acc / max(tot_sessions, 1),
+        accept_rate=tot_acc / max(tot_draft, 1),
+        cost_per_token=cost / max(tot_new, 1),
+        wall_per_token=wall / max(tot_new, 1),
+        extra={"controller": controller},
+    )
+
+
+def run_method_suite(pair_name: str, prompts: List[List[int]],
+                     methods: Optional[List[str]] = None, *,
+                     max_new: int = 64, seed: int = 0,
+                     gamma_max: int = GAMMA_MAX) -> Dict[str, MethodResult]:
+    draft, target = trained_pair(pair_name)
+    methods = methods or list(METHODS)
+    out: Dict[str, MethodResult] = {}
+    for mname in methods:
+        ctrl = make_method(mname, pair_name, gamma_max, seed)
+        out[mname] = evaluate_method(draft, target, ctrl, prompts,
+                                     max_new=max_new, seed=seed)
+        out[mname].method = mname
+    base = out.get("static6")
+    if base:
+        for r in out.values():
+            r.speedup = base.cost_per_token / max(r.cost_per_token, 1e-12)
+    return out
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(os.path.join(ART, "bench"), exist_ok=True)
+    p = os.path.join(ART, "bench", f"{name}.json")
+    with open(p, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return p
+
+
+def fmt_table(rows: List[dict], cols: List[str]) -> str:
+    widths = [max(len(c), *(len(f"{r.get(c, '')}") for r in rows)) for c in cols]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+    for r in rows:
+        lines.append("  ".join(f"{r.get(c, '')}".ljust(w)
+                               for c, w in zip(cols, widths)))
+    return "\n".join(lines)

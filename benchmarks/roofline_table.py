@@ -1,0 +1,52 @@
+"""Collate artifacts/dryrun/*.json into the §Dry-run / §Roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_all(suffix: str = "") -> dict:
+    out = {}
+    for f in glob.glob(os.path.join(ART, f"*{suffix}.json")):
+        base = os.path.basename(f)[:-5]
+        if suffix and not base.endswith(suffix.rstrip(".json")):
+            continue
+        if not suffix and ("_unroll" in base):
+            continue
+        d = json.load(open(f))
+        if isinstance(d, list):
+            d = d[0]
+        out[base] = d
+    return out
+
+
+def run(quick: bool = False) -> dict:
+    scanned = load_all()
+    unrolled = load_all("_unroll")
+    rows = []
+    for key, d in sorted(unrolled.items()):
+        if d.get("status") != "compiled":
+            rows.append({"pair": key, "status": d.get("status")})
+            continue
+        rl = d["roofline"]
+        rows.append({
+            "arch": rl["arch"], "shape": rl["shape"],
+            "t_compute_ms": rl["t_compute_s"] * 1e3,
+            "t_memory_ms": rl["t_memory_s"] * 1e3,
+            "t_collective_ms": rl["t_collective_s"] * 1e3,
+            "dominant": rl["dominant"],
+            "useful_flops_frac": rl["useful_flops_frac"],
+            "temp_gb_per_chip": d["memory"]["temp_size_in_bytes"] / 1e9,
+        })
+    summary = {
+        "n_compiled_scanned": sum(d.get("status") == "compiled"
+                                  for d in scanned.values()),
+        "n_total_scanned": len(scanned),
+        "n_compiled_unrolled": sum(d.get("status") == "compiled"
+                                   for d in unrolled.values()),
+        "rows": rows,
+    }
+    return summary

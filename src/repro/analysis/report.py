@@ -1,0 +1,242 @@
+"""Generate EXPERIMENTS.md from dry-run + benchmark artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+ART = os.path.join(ROOT, "artifacts")
+
+ARCH_ORDER = ["deepseek-v2-lite-16b", "gemma-2b", "qwen3-4b",
+              "recurrentgemma-2b", "qwen3-moe-235b-a22b", "mamba2-1.3b",
+              "qwen2.5-3b", "internvl2-26b", "seamless-m4t-large-v2",
+              "phi4-mini-3.8b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(pattern):
+    out = {}
+    for f in glob.glob(os.path.join(ART, "dryrun", pattern)):
+        d = json.load(open(f))
+        if isinstance(d, list):
+            d = d[0]
+        out[os.path.basename(f)[:-5]] = d
+    return out
+
+
+def _fmt_bytes(n):
+    for u in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{u}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def _ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def dryrun_section() -> str:
+    rows = []
+    data = _load("*.json")
+    lines = ["## §Dry-run", "",
+             "Every (architecture x input-shape) pair lowered **and compiled** "
+             "with `jax.jit(...).lower().compile()` on both production meshes "
+             "(single pod 16x16 = 256 chips; multi-pod 2x16x16 = 512 chips), "
+             "512 forced host devices. `memory_analysis()` / `cost_analysis()` "
+             "captured per pair (JSON in `artifacts/dryrun/`).", "",
+             "| arch | shape | mesh | status | step kind | args/chip | temp/chip | compile s |",
+             "|---|---|---|---|---|---|---|---|"]
+    n_ok = n_tot = 0
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for tag, mesh in (("single", "16x16"), ("multi", "2x16x16")):
+                key = f"{arch}_{shape}_{tag}"
+                d = data.get(key)
+                if d is None:
+                    continue
+                n_tot += 1
+                ok = d.get("status") == "compiled"
+                n_ok += ok
+                mem = d.get("memory", {})
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | "
+                    f"{'OK' if ok else 'FAIL: ' + str(d.get('error'))[:60]} | "
+                    f"{d.get('kind','')} | "
+                    f"{_fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+                    f"{_fmt_bytes(mem.get('temp_size_in_bytes', 0))} | "
+                    f"{d.get('compile_s', 0):.1f} |")
+    lines.insert(3, f"**{n_ok}/{n_tot} combinations compiled.**")
+    lines.append("")
+    lines.append("Notes: decode shapes lower `serve_step` (1 new token vs a "
+                 "seq_len cache); `long_500k` uses the native bounded state "
+                 "for SSM/hybrid archs and the ring-buffer sliding-window "
+                 "variant (window 8192) for full-attention archs "
+                 "(DESIGN.md §4.2) — all 10 archs run all 4 shapes.")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    data = _load("*_single_unroll.json")
+    lines = ["## §Roofline", "",
+             "Three-term roofline per (arch x shape) on the single-pod mesh "
+             "(256 chips), from the **unrolled** compiled dry-run "
+             "(scan-over-layers bodies are counted once by XLA cost analysis, "
+             "so the roofline pass unrolls; the compile-proof pass above uses "
+             "the scanned production config). Hardware: 197 TFLOP/s bf16, "
+             "819 GB/s HBM, 4x50 GB/s ICI links per chip.", "",
+             "| arch | shape | t_compute ms | t_memory ms | t_collective ms | "
+             "dominant | MODEL_FLOPS/HLO_FLOPS | what would move it |",
+             "|---|---|---|---|---|---|---|---|"]
+    suggestions = {
+        ("compute", "train"): "more chips or lower-precision matmuls",
+        ("memory", "train"): "larger per-chip batch (raise arithmetic intensity), fuse remat reads",
+        ("collective", "train"): "overlap grad reduce-scatter with backward; shard experts 2D",
+        ("memory", "prefill"): "bigger flash-attention blocks; keep weights resident (reduce re-streaming)",
+        ("compute", "prefill"): "near-roofline already; only kernel-level wins left",
+        ("collective", "prefill"): "reshard activations to cut per-layer gathers",
+        ("memory", "decode"): "decode is weight/cache-streaming bound: batch more requests per chip or quantize cache",
+        ("collective", "decode"): "move vocab/head gathers off the critical path (all-gather on logits only)",
+        ("compute", "decode"): "unexpected for decode: check redundant recompute",
+    }
+    scanned = _load("*_single.json")
+    n_cycles = {"deepseek-v2-lite-16b": 26, "gemma-2b": 18, "qwen3-4b": 36,
+                "recurrentgemma-2b": 8, "qwen3-moe-235b-a22b": 94,
+                "mamba2-1.3b": 48, "qwen2.5-3b": 36, "internvl2-26b": 48,
+                "seamless-m4t-large-v2": 24, "phi4-mini-3.8b": 32}
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = data.get(f"{arch}_{shape}_single_unroll")
+            approx = ""
+            if not d or d.get("status") != "compiled":
+                # fall back to the scanned run with a trip-count correction
+                # on the loop-body-once-counted cost terms (upper-bounds by
+                # scaling everything by n_cycles; marked ~)
+                d = scanned.get(f"{arch}_{shape}_single")
+                if not d or d.get("status") != "compiled":
+                    continue
+                d = json.loads(json.dumps(d))
+                rl = d["roofline"]
+                k = n_cycles.get(arch, 1)
+                for key in ("t_compute_s", "t_memory_s", "t_collective_s"):
+                    rl[key] = rl[key] * k
+                rl["useful_flops_frac"] = rl["useful_flops_frac"] / k
+                terms = {"compute": rl["t_compute_s"],
+                         "memory": rl["t_memory_s"],
+                         "collective": rl["t_collective_s"]}
+                rl["dominant"] = max(terms, key=terms.get)
+                approx = "~"
+            rl = d["roofline"]
+            kind = d.get("kind", "?")
+            dom = rl["dominant"]
+            frac = rl["useful_flops_frac"]
+            lines.append(
+                f"| {arch} | {shape} | {approx}{_ms(rl['t_compute_s'])} | "
+                f"{approx}{_ms(rl['t_memory_s'])} | "
+                f"{approx}{_ms(rl['t_collective_s'])} | "
+                f"**{dom}** | {frac:.2f} | "
+                f"{suggestions.get((dom, kind), '-')} |")
+    lines.append("")
+    lines.append("(~ = scanned-run fallback, terms scaled by the layer-scan "
+                 "trip count — an approximation used only if the unrolled "
+                 "compile exceeded its time budget.)")
+    return "\n".join(lines)
+
+
+def bench_section() -> str:
+    lines = ["## §Paper-validation", ""]
+    bdir = os.path.join(ART, "bench")
+    claims = {
+        "table2_reward": ("C1 (Table 2): r_blend >= r_simple on acceptance "
+                          "rate & speedup (pooled online run)",
+                          ["claim_blend_higher_accept_rate",
+                           "claim_blend_higher_speedup",
+                           "claim_simple_speculates_longer"]),
+        "fig4_ucb_variants": ("C2 (Fig 4): UCB1 >= UCB-Tuned (pooled)",
+                              ["claim_ucb1_geq_ucbtuned",
+                               "claim_ucb1_geq_ucbtuned_frac"]),
+        "table3_main": ("C3 (Table 3): Seq-UCB1 top-2 speedup, tuning-free",
+                        ["claim_sequcb1_top2_frac"]),
+        "table5_specbench": ("C3' (Table 5): SpecBench",
+                             ["claim_sequcb1_top2_frac"]),
+        "fig2_entropy": ("C4 (Fig 2): coding entropy lower; decays with t",
+                         ["claim_coding_lower_entropy", "claim_entropy_decays"]),
+        "table4_specdecpp": ("C6 (Table 4): Seq-UCB1 beats trained SpecDec++",
+                             ["claim_sequcb1_beats_specdecpp"]),
+        "a2_more_arms": ("C7 (A.2): small pool beats multi-threshold pool",
+                         ["claim_small_pool_wins"]),
+    }
+    for name, (desc, keys) in claims.items():
+        p = os.path.join(bdir, f"{name}.json")
+        if not os.path.exists(p):
+            lines.append(f"- {desc}: _not yet run_")
+            continue
+        d = json.load(open(p))
+        vals = ", ".join(f"{k.replace('claim_','')}={d.get(k)}" for k in keys)
+        lines.append(f"- {desc}: **{vals}**")
+    p = os.path.join(bdir, "fig5_6_arm_values.json")
+    if os.path.exists(p):
+        d = json.load(open(p))
+        for ds, row in d.items():
+            lines.append(f"- C5 (Figs 5/6, {ds}): spearman(arm values, "
+                         f"standalone speedups)="
+                         f"{row['spearman_values_vs_speedup']:.2f}, "
+                         f"value spread={row['value_spread']:.3f}")
+    lines.append("")
+    lines.append("""Full tables: `artifacts/bench/*.json`. Scale note: the CPU
+reproduction uses tiny trained analog pairs, the REAL paper pairs' FLOP
+ratios for the cost model, gamma_max=16 as the proxy for the paper's 128,
+and the paper's own tuning protocol (baselines grid-searched on the
+Llama-1B/8B analog x SpecBench; TapOut pool calibrated by scale-free signal
+quantiles, no performance feedback).
+
+**Validation summary (honest read).**
+- C1 (reward blending) reproduces cleanly in the pooled online setting:
+  r_blend wins acceptance rate AND speedup, and r_simple over-speculates —
+  the paper's Fig. 3/Table 2 story.
+- C2 (UCB1 vs UCB-Tuned) does NOT reproduce at this scale: pooled UCB-Tuned
+  edges out UCB1. The paper attributes UCB1's win to the LOW variance of the
+  blended reward; with tiny char-level models the blend reward is
+  substantially noisier, which by the paper's own variance argument favors
+  UCB-Tuned — the MECHANISM (reward variance decides the winner) is
+  consistent; the operating point differs.
+- C3 (Seq-UCB1 top-2): partial. TapOut is consistently competitive and never
+  catastrophic, but with only ~100 drafting sessions per run the bandit pays
+  a visible exploration tax against grid-search-tuned single heuristics; the
+  paper's runs give the bandit 1-2 orders of magnitude more sessions.
+- C4 (entropy analysis): coding entropy < non-coding reproduces; the decay-
+  with-position claim does not at char level (line-structured synthetic code
+  has periodic entropy spikes at statement boundaries).
+- C5 (interpretability): see the spearman(arm values, standalone speedups)
+  numbers above — the ordering correspondence is the paper's Fig. 6 check.
+- C6 (vs SpecDec++): reproduces — the training-free Seq-UCB1 beats the
+  trained classifier transplanted to this scale.
+- C7 (arm-pool ablation): see a2_more_arms above.""")
+    return "\n".join(lines)
+
+
+def build(perf_md: str = "") -> str:
+    parts = ["# EXPERIMENTS", "",
+             "Generated by `python -m repro.analysis.report`. "
+             "Paper: TapOut (bandit-based dynamic speculative decoding).", "",
+             dryrun_section(), "", roofline_section(), "", bench_section()]
+    if not perf_md:
+        perf_path = os.path.join(ART, "perf_log.md")
+        if os.path.exists(perf_path):
+            perf_md = open(perf_path).read()
+    parts += ["", perf_md or "## §Perf\n\n_(see artifacts/perf_log.md)_"]
+    return "\n".join(parts)
+
+
+def main():
+    md = build()
+    out = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write(md)
+    print("wrote", out, len(md), "bytes")
+
+
+if __name__ == "__main__":
+    main()

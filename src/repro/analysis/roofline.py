@@ -1,0 +1,161 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs   / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips * HBM_bw)
+    collective term = coll_bytes  / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the (SPMD-partitioned, per-device)
+HLO text and sum the traffic of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, converting each op's
+result size to ring-algorithm bytes-on-the-wire per chip:
+
+    all-gather        result * (g-1)/g        (receives everyone else's shard)
+    all-reduce        2 * size * (g-1)/g      (reduce-scatter + all-gather)
+    reduce-scatter    operand * (g-1)/g  ~= result * (g-1)
+    all-to-all        size * (g-1)/g
+    collective-permute size
+
+where g = replica-group size parsed from the op attributes.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return total_devices
+
+
+def collective_bytes_from_hlo(hlo_text: str, total_devices: int) -> Dict[str, float]:
+    """Per-chip on-the-wire bytes per collective kind (per program run)."""
+    out: Dict[str, float] = {"all-gather": 0.0, "all-reduce": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_part, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        line = m.group(0)
+        if tuple_part:
+            size = sum(_shape_bytes(d, s)
+                       for d, s in _SHAPE_RE.findall(tuple_part))
+        else:
+            size = _shape_bytes(dtype, dims)
+        g = max(_group_size(line, total_devices), 1)
+        if kind == "all-gather":
+            traffic = size * (g - 1) / g
+        elif kind == "all-reduce":
+            traffic = 2 * size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            traffic = size * (g - 1)          # result is 1/g of operand
+        elif kind == "all-to-all":
+            traffic = size * (g - 1) / g
+        else:                                  # collective-permute
+            traffic = size
+        out[kind] += traffic
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # whole-program FLOPs (all chips)
+    hlo_bytes: float            # whole-program HBM bytes (all chips)
+    collective: Dict[str, float]  # per-chip wire bytes by kind
+    model_flops: float = 0.0    # 6*N*D (active) useful FLOPs
+    # link count per chip: v5e 2D torus -> 4 ICI links usable
+    links_per_chip: int = 4
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective.values())
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.links_per_chip * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_per_chip_bytes": self.collective,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+        }
+
+
+def model_flops_for(cfg, kind: str, batch: int, seq_len: int) -> float:
+    """6*N_active*D for train (fwd+bwd), 2*N_active*D for inference fwd."""
+    n = cfg.active_param_count()
+    tokens = batch * (seq_len if kind in ("train", "prefill") else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def build_roofline(arch: str, shape: str, mesh_name: str, chips: int,
+                   cost: dict, hlo_text: str, cfg, kind: str,
+                   batch: int, seq_len: int) -> Roofline:
+    # cost_analysis reports per-device numbers on SPMD-partitioned modules;
+    # scale to whole-program to keep the roofline definition uniform.
+    flops = float(cost.get("flops", 0.0)) * chips
+    byts = float(cost.get("bytes accessed", 0.0)) * chips
+    coll = collective_bytes_from_hlo(hlo_text, chips)
+    return Roofline(arch, shape, mesh_name, chips, flops, byts, coll,
+                    model_flops=model_flops_for(cfg, kind, batch, seq_len))

@@ -1,0 +1,30 @@
+"""deepseek-v2-lite-16b [moe] — MLA kv_lora=512, shared+routed MoE top-6.
+
+[arXiv:2405.04434]  27L d_model=2048 16H d_ff(expert)=1408 vocab=102400.
+Assignment header says "MoE 64e top-6"; the free-text "160 routed" belongs to
+full DeepSeek-V2 — V2-Lite is 64 routed + 2 shared (model card), so we follow
+the structured "64e" field.  Layer 0 keeps the dense 10944-wide FFN (model
+card); d_ff below is that dense layer's width, experts use d_expert=1408.
+"""
+from repro.models import MLAConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    arch_type="moe",
+    num_layers=27,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=10944,
+    vocab_size=102400,
+    activation="swiglu",
+    rope_theta=10000.0,
+    block_pattern=("mla",),
+    moe=MoEConfig(num_experts=64, top_k=6, d_expert=1408,
+                  num_shared_experts=2, d_shared=1408,
+                  capacity_factor=1.25, dense_layers=(0,)),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=0,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    source="arXiv:2405.04434 (DeepSeek-V2; V2-Lite model card)",
+)

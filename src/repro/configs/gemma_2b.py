@@ -1,0 +1,22 @@
+"""gemma-2b [dense] — GeGLU, head_dim=256, MQA (kv=1).
+
+[arXiv:2403.08295]  18L d_model=2048 8H (kv=1) d_ff=16384 vocab=256000.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    arch_type="dense",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    activation="geglu",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    block_pattern=("attn",),
+    source="arXiv:2403.08295 (Gemma)",
+)

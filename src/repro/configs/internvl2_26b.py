@@ -1,0 +1,26 @@
+"""internvl2-26b [vlm] — InternViT (STUB frontend) + InternLM2-20B backbone.
+
+[arXiv:2404.16821]  48L d_model=6144 48H (kv=8) d_ff=16384 vocab=92553.
+The vision frontend is a stub per the assignment carve-out: input_specs()
+provides precomputed InternViT patch embeddings (vit_dim=3200); a 2-layer
+MLP projector maps them into the LM embedding space.
+"""
+from repro.models import ModelConfig, VisionStubConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    arch_type="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    activation="swiglu",
+    rope_theta=1_000_000.0,
+    block_pattern=("attn",),
+    vision=VisionStubConfig(vit_dim=3200, num_patches=256,
+                            projector_hidden=12288),
+    source="arXiv:2404.16821 (InternVL2-26B: InternViT-6B + InternLM2-20B)",
+)

@@ -1,0 +1,22 @@
+"""mamba2-1.3b [ssm] — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060]  48L d_model=2048 vocab=50280, d_state=128, expand=2,
+head_dim=64, conv=4, chunk=256.
+"""
+from repro.models import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    arch_type="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=1,
+    num_kv_heads=1,
+    d_ff=0,
+    vocab_size=50280,
+    tie_embeddings=True,
+    block_pattern=("mamba2",),
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                  ngroups=1, chunk_size=256),
+    source="arXiv:2405.21060 (Mamba-2)",
+)

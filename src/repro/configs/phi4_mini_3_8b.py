@@ -1,0 +1,21 @@
+"""phi4-mini-3.8b [dense] — RoPE, SwiGLU, GQA kv=8.
+
+[arXiv:2412.08905]  32L d_model=3072 24H (kv=8) d_ff=8192 vocab=200064.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=200064,
+    activation="swiglu",
+    rope_theta=10000.0,
+    block_pattern=("attn",),
+    source="arXiv:2412.08905 (Phi-4 family; Phi-4-mini)",
+)

@@ -1,0 +1,23 @@
+"""qwen2.5-3b [dense] — GQA kv=2, QKV bias.
+
+[hf:Qwen/Qwen2.5 family card]  36L d_model=2048 16H (kv=2) d_ff=11008
+vocab=151936.
+"""
+from repro.models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    arch_type="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=151936,
+    activation="swiglu",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    block_pattern=("attn",),
+    source="hf:Qwen/Qwen2.5-3B",
+)

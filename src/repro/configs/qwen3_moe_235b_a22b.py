@@ -1,0 +1,25 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8, GQA kv=4.
+
+[hf:Qwen/Qwen3-30B-A3B family / Qwen3-235B-A22B]  94L d_model=4096 64H (kv=4)
+d_ff(expert)=1536 vocab=151936.
+"""
+from repro.models import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    arch_type="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    activation="swiglu",
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    block_pattern=("attn",),
+    moe=MoEConfig(num_experts=128, top_k=8, d_expert=1536,
+                  capacity_factor=1.25),
+    source="hf:Qwen/Qwen3-235B-A22B",
+)

@@ -1,0 +1,25 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1 attn : 2 recurrent.
+
+[arXiv:2402.19427 (Griffin) / RecurrentGemma]  26L d_model=2560 10H (kv=1)
+d_ff=7680 vocab=256000, window 2048.  Pattern cycle (R, R, A); 26 = 8*(3) + 2,
+the 2-layer tail stays recurrent.
+"""
+from repro.models import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    arch_type="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    activation="geglu",
+    rope_theta=10000.0,
+    block_pattern=("rglru", "rglru", "local"),
+    window=2048,
+    rglru=RGLRUConfig(lru_width=2560, d_conv=4),
+    source="arXiv:2402.19427 (Griffin / RecurrentGemma-2B)",
+)

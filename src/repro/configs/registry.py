@@ -1,0 +1,114 @@
+"""Architecture registry: ``--arch <id>`` resolution + paper model pairs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models import ModelConfig
+
+# arch id -> module (one file per assigned architecture, as required)
+_ARCH_MODULES: Dict[str, str] = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests
+    (<=2 layers beyond one pattern cycle, d_model<=512, <=4 experts)."""
+    cfg = get_config(arch)
+    layers = max(2, len(cfg.block_pattern))
+    return cfg.reduced(layers=layers, d_model=256, n_experts=4, vocab=512)
+
+
+def draft_config(arch: str) -> ModelConfig:
+    """Same-family draft model for speculative decoding with this target:
+    ~1/4 depth, ~1/2 width, same vocab/tokenizer (a paper requirement)."""
+    cfg = get_config(arch)
+    d_model = max(256, cfg.d_model // 2)
+    heads = max(1, cfg.num_heads // 2)
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    layers = max(len(cfg.block_pattern), cfg.num_layers // 4)
+    kw = dict(name=cfg.name + "-draft", num_layers=layers, d_model=d_model,
+              num_heads=heads, num_kv_heads=kv,
+              d_ff=max(128, cfg.d_ff // 2))
+    if cfg.moe is not None:
+        import dataclasses
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=max(4, cfg.moe.num_experts // 8),
+            d_expert=max(128, cfg.moe.d_expert // 2),
+            dense_layers=tuple(i for i in cfg.moe.dense_layers if i < layers))
+    if cfg.encdec is not None:
+        import dataclasses
+        kw["encdec"] = dataclasses.replace(
+            cfg.encdec, num_encoder_layers=max(2, cfg.encdec.num_encoder_layers // 4))
+    return cfg.replace(**kw)
+
+
+# -------- the paper's own evaluation pairs, mapped to in-repo tiny models
+# (trained on the synthetic corpus; DESIGN.md §6). Sizes chosen so the
+# draft/target capability gap mirrors 1B/8B-style pairs at CPU scale.
+def paper_pair(name: str = "llama-1b-8b", vocab: int = 259):
+    """Returns (draft_cfg, target_cfg) for a paper model pair analog."""
+    # sizes picked for a single-CPU-core budget: the draft/target capability
+    # gap is what matters for spec-decode dynamics, not absolute size
+    pairs = {
+        # analog of Llama-3.2 1B / 3.1 8B
+        "llama-1b-8b": (dict(num_layers=2, d_model=128, num_heads=4,
+                             num_kv_heads=2, d_ff=256),
+                        dict(num_layers=6, d_model=224, num_heads=4,
+                             num_kv_heads=2, d_ff=448)),
+        # analog of Llama-3.2 1B / 3.1 70B (bigger gap)
+        "llama-1b-70b": (dict(num_layers=2, d_model=128, num_heads=4,
+                              num_kv_heads=2, d_ff=256),
+                         dict(num_layers=8, d_model=256, num_heads=8,
+                              num_kv_heads=4, d_ff=512)),
+        # analog of Gemma3 270M / 27B (very small draft, MQA+geglu family)
+        "gemma-270m-27b": (dict(num_layers=1, d_model=96, num_heads=2,
+                                num_kv_heads=1, d_ff=192,
+                                activation="geglu"),
+                           dict(num_layers=6, d_model=224, num_heads=4,
+                                num_kv_heads=1, d_ff=512,
+                                activation="geglu")),
+        # analog of OLMo-2 1B / 32B (qk_norm family)
+        "olmo2-1b-32b": (dict(num_layers=2, d_model=128, num_heads=4,
+                              num_kv_heads=4, d_ff=256, qk_norm=True),
+                         dict(num_layers=6, d_model=224, num_heads=4,
+                              num_kv_heads=4, d_ff=448, qk_norm=True)),
+    }
+    dkw, tkw = pairs[name]
+    base = dict(arch_type="dense", vocab_size=vocab, block_pattern=("attn",))
+    return (ModelConfig(name=f"{name}-draft", **base, **dkw),
+            ModelConfig(name=f"{name}-target", **base, **tkw))
+
+
+PAPER_PAIRS = ["llama-1b-8b", "llama-1b-70b", "gemma-270m-27b", "olmo2-1b-32b"]
+
+# Real draft:target forward-cost ratios of the paper's pairs. The tiny analog
+# models supply the acceptance DYNAMICS; the cost model must use the real
+# pair's FLOP ratio or speedups land in the wrong regime (drafting looks
+# artificially expensive at tiny scale, where draft ~ target/6).
+PAIR_COST_RATIO = {
+    "llama-1b-8b": 1 / 8.0,
+    "llama-1b-70b": 1 / 70.0,
+    "gemma-270m-27b": 0.27 / 27.0,
+    "olmo2-1b-32b": 1 / 32.0,
+}

@@ -1,0 +1,27 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder, multimodal.
+
+[arXiv:2308.11596]  24L d_model=1024 16H (kv=16) d_ff=8192 vocab=256206.
+The mel-spectrogram + conformer feature frontend is a STUB: input_specs()
+provides precomputed frame embeddings (frontend_dim=1024); the transformer
+backbone here is the text decoder (24L) + speech encoder (24L) with
+cross-attention.
+"""
+from repro.models import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    arch_type="audio",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256206,
+    activation="gelu",
+    rope_theta=10000.0,
+    block_pattern=("attn",),
+    encdec=EncDecConfig(num_encoder_layers=24, encoder_is_causal=False,
+                        frontend_dim=1024, frontend_len=1024),
+    source="arXiv:2308.11596 (SeamlessM4T v2 large)",
+)

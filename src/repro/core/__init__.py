@@ -1,0 +1,7 @@
+from .arms import Arm, arm_by_name, default_pool, multi_threshold_pool
+from .bandits import make_bandit, BanditBank
+from .controller import (Controller, FixedArm, StaticGamma, TapOutSequence,
+                         TapOutToken, make_controller)
+from .engine import GenResult, ModelBundle, SpecEngine
+from .rewards import r_blend, r_simple
+from .spec_decode import draft_session, verify_session

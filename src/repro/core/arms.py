@@ -1,0 +1,184 @@
+"""TapOut arm pool: parameter- and training-free dynamic speculation rules.
+
+Each arm is a JAX-traceable function ``fn(sig) -> stop (bool scalar/array)``
+evaluated inside the jitted drafting while-loop via ``lax.switch``.  The
+signal dict is computed once per drafted token from the draft distribution.
+
+Paper Table 1 (thresholds are FIXED, not tuned — that is the point):
+
+  Max-Confidence    p(top1) < 0.8
+  SVIP              sqrt(H(p)) > 0.6
+  AdaEDL            1 - sqrt(g_coef * H(p)) < lambda_t    (lambda_t online)
+  SVIP-Difference   sqrt(H_t) - sqrt(H_{t-1}) > 0.2
+  Logit-Margin      p(top1) - p(top2) <= 0.2
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ------------------------------------------------------------ signals
+
+
+def signals_from_probs(probs, prev_sqrt_entropy, lam, pos):
+    """probs: (..., V) draft distribution for the token just drafted."""
+    p = probs.astype(jnp.float32)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0), axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    return {
+        "entropy": ent,
+        "sqrt_entropy": jnp.sqrt(jnp.maximum(ent, 0.0)),
+        "prev_sqrt_entropy": prev_sqrt_entropy,
+        "top1": top2[..., 0],
+        "top2": top2[..., 1],
+        "lam": lam,
+        "pos": pos,
+    }
+
+
+SIGNAL_VECTOR_DIM = 6
+
+
+def signal_vector(sig) -> jnp.ndarray:
+    """(..., 6) numeric feature view of the signal dict (classifier input
+    for SpecDec++ and the per-position trace the engine can record)."""
+    pos = jnp.asarray(sig["pos"], jnp.float32)
+    parts = [sig["entropy"], sig["sqrt_entropy"], sig["top1"], sig["top2"],
+             sig["top1"] - sig["top2"],
+             jnp.broadcast_to(pos / 32.0, jnp.shape(sig["entropy"]))]
+    return jnp.stack([jnp.asarray(x, jnp.float32) for x in parts], axis=-1)
+
+
+# ------------------------------------------------------------ arms
+
+@dataclass(frozen=True)
+class Arm:
+    name: str
+    fn: Callable        # sig -> stop bool
+    # NOTE: None (not nan) for threshold-free arms — nan breaks dataclass
+    # __eq__ and would defeat the jit static-arg cache.
+    threshold: Optional[float] = None
+
+
+@functools.lru_cache(maxsize=None)
+def _max_confidence(h: float):
+    return lambda sig: sig["top1"] < h
+
+
+@functools.lru_cache(maxsize=None)
+def _svip(h: float):
+    return lambda sig: sig["sqrt_entropy"] > h
+
+
+@functools.lru_cache(maxsize=None)
+def _adaedl(g_coef: float):
+    return lambda sig: (1.0 - jnp.sqrt(jnp.maximum(
+        g_coef * sig["entropy"], 0.0))) < sig["lam"]
+
+
+@functools.lru_cache(maxsize=None)
+def _svip_difference(h: float):
+    return lambda sig: (sig["sqrt_entropy"] - sig["prev_sqrt_entropy"]) > h
+
+
+@functools.lru_cache(maxsize=None)
+def _logit_margin(h: float):
+    return lambda sig: (sig["top1"] - sig["top2"]) <= h
+
+
+# AdaEDL online-threshold hyperparameters (its own paper's defaults; these
+# are part of the AdaEDL *rule*, not tuned per-dataset).
+ADAEDL_DEFAULTS = dict(g_coef=1.0, lam_init=0.4, beta1=0.9, beta2=0.9,
+                       eps=0.02, alpha_target=0.8)
+
+
+@functools.lru_cache(maxsize=None)
+def _default_pool_cached():
+    return (
+        Arm("max_confidence", _max_confidence(0.8), 0.8),
+        Arm("svip", _svip(0.6), 0.6),
+        Arm("adaedl", _adaedl(ADAEDL_DEFAULTS["g_coef"])),
+        Arm("svip_difference", _svip_difference(0.2), 0.2),
+        Arm("logit_margin", _logit_margin(0.2), 0.2),
+    )
+
+
+def default_pool() -> List[Arm]:
+    """The paper's 5-arm pool with Table-1 thresholds (singleton arms so
+    jit static-arg caches hit across controller instances)."""
+    return list(_default_pool_cached())
+
+
+@functools.lru_cache(maxsize=None)
+def _multi_pool_cached():
+    pool = []
+    for h in (0.6, 0.8, 0.9):
+        pool.append(Arm(f"max_confidence_{h}", _max_confidence(h), h))
+    for h in (0.2, 0.4, 0.6):
+        pool.append(Arm(f"svip_{h}", _svip(h), h))
+    pool.append(Arm("adaedl", _adaedl(ADAEDL_DEFAULTS["g_coef"])))
+    for h in (0.1, 0.2, 0.3):
+        pool.append(Arm(f"svip_difference_{h}", _svip_difference(h), h))
+    for h in (0.1, 0.2, 0.3):
+        pool.append(Arm(f"logit_margin_{h}", _logit_margin(h), h))
+    return tuple(pool)
+
+
+def multi_threshold_pool() -> List[Arm]:
+    """Appendix A.2 ablation: several thresholds per heuristic (worse)."""
+    return list(_multi_pool_cached())
+
+
+def pool_from_thresholds(th: Dict[str, float]) -> List[Arm]:
+    """Build the 5-arm pool with explicit thresholds (used with the
+    scale-free quantile calibration — see DESIGN.md §6: signal quantiles on
+    a few calibration drafts, NO performance feedback, so the pool remains
+    tuning-free in the paper's sense). Thresholds are rounded so the
+    lru-cached arm makers (and therefore jit static-arg caches) hit."""
+    r = lambda x: round(float(x), 4)
+    return [
+        Arm("max_confidence", _max_confidence(r(th["max_confidence"])), r(th["max_confidence"])),
+        Arm("svip", _svip(r(th["svip"])), r(th["svip"])),
+        Arm("adaedl", _adaedl(ADAEDL_DEFAULTS["g_coef"])),
+        Arm("svip_difference", _svip_difference(r(th["svip_difference"])), r(th["svip_difference"])),
+        Arm("logit_margin", _logit_margin(r(th["logit_margin"])), r(th["logit_margin"])),
+    ]
+
+
+@functools.lru_cache(maxsize=None)
+def arm_by_name(name: str, threshold: float = None) -> Arm:
+    """Single heuristic (for the tuned-baseline comparisons)."""
+    makers = {
+        "max_confidence": _max_confidence,
+        "svip": _svip,
+        "svip_difference": _svip_difference,
+        "logit_margin": _logit_margin,
+    }
+    if name == "adaedl":
+        return Arm("adaedl", _adaedl(ADAEDL_DEFAULTS["g_coef"]))
+    defaults = {"max_confidence": 0.8, "svip": 0.6, "svip_difference": 0.2,
+                "logit_margin": 0.2}
+    h = defaults[name] if threshold is None else threshold
+    return Arm(name, makers[name](h), h)
+
+
+def update_adaedl_lambda(lam: float, accept_rate_ema: float, n_acc: int,
+                         n_drafted: int, *, beta1=None, beta2=None, eps=None,
+                         alpha_target=None) -> Tuple[float, float]:
+    """AdaEDL's post-draft threshold update (Appendix A.1).
+
+    Returns (new_lambda, new_accept_rate_ema)."""
+    d = ADAEDL_DEFAULTS
+    beta1 = d["beta1"] if beta1 is None else beta1
+    beta2 = d["beta2"] if beta2 is None else beta2
+    eps = d["eps"] if eps is None else eps
+    alpha_target = d["alpha_target"] if alpha_target is None else alpha_target
+    r = n_acc / max(n_drafted, 1)
+    ema = beta1 * accept_rate_ema + (1 - beta1) * r
+    sign = 1.0 if (alpha_target - r) > 0 else (-1.0 if (alpha_target - r) < 0 else 0.0)
+    lam = beta2 * lam + (1 - beta2) * (lam + eps * sign)
+    return float(min(max(lam, 0.0), 1.0)), float(ema)

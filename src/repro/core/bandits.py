@@ -1,0 +1,162 @@
+"""Multi-armed bandit algorithms (host-side, O(arms) state).
+
+The bandit state lives on the host: it is a handful of floats updated once
+per verification call, so keeping it out of the jitted device program costs
+nothing and keeps the policies interpretable (arm values are plain numpy).
+
+Implemented: UCB1, UCB-Tuned (Auer et al. 2002), Thompson Sampling with
+Beta-Bernoulli (token-level binary rewards) and Gaussian (sequence-level
+continuous rewards) posteriors, plus epsilon-greedy as an extra baseline.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+import numpy as np
+
+
+class Bandit:
+    """Base: incremental mean/variance tracking per arm."""
+
+    def __init__(self, n_arms: int, seed: int = 0):
+        self.n_arms = n_arms
+        self.counts = np.zeros(n_arms, np.int64)
+        self.means = np.zeros(n_arms, np.float64)
+        self.m2 = np.zeros(n_arms, np.float64)     # sum of squared deviations
+        self.t = 0
+        self.rng = np.random.default_rng(seed)
+
+    def select(self) -> int:
+        raise NotImplementedError
+
+    def update(self, arm: int, reward: float) -> None:
+        self.t += 1
+        self.counts[arm] += 1
+        d = reward - self.means[arm]
+        self.means[arm] += d / self.counts[arm]
+        self.m2[arm] += d * (reward - self.means[arm])
+
+    def variance(self, arm: int) -> float:
+        if self.counts[arm] < 2:
+            return 0.25
+        return self.m2[arm] / self.counts[arm]
+
+    @property
+    def arm_values(self) -> np.ndarray:
+        return self.means.copy()
+
+    def state_dict(self) -> dict:
+        return {"counts": self.counts.copy(), "means": self.means.copy(),
+                "m2": self.m2.copy(), "t": self.t}
+
+
+class UCB1(Bandit):
+    def select(self) -> int:
+        for a in range(self.n_arms):       # play each arm once first
+            if self.counts[a] == 0:
+                return a
+        t = max(self.t, 1)
+        bonus = np.sqrt(2.0 * math.log(t) / self.counts)
+        return int(np.argmax(self.means + bonus))
+
+
+class UCBTuned(Bandit):
+    def select(self) -> int:
+        for a in range(self.n_arms):
+            if self.counts[a] == 0:
+                return a
+        t = max(self.t, 1)
+        logt = math.log(t)
+        v = np.array([self.variance(a) for a in range(self.n_arms)])
+        v_t = v + np.sqrt(2.0 * logt / self.counts)
+        bonus = np.sqrt(logt / self.counts * np.minimum(0.25, v_t))
+        return int(np.argmax(self.means + bonus))
+
+
+class ThompsonBeta(Bandit):
+    """Beta-Bernoulli TS for binary rewards (token-level)."""
+
+    def __init__(self, n_arms: int, seed: int = 0, a0: float = 1.0, b0: float = 1.0):
+        super().__init__(n_arms, seed)
+        self.alpha = np.full(n_arms, a0)
+        self.beta = np.full(n_arms, b0)
+
+    def select(self) -> int:
+        return int(np.argmax(self.rng.beta(self.alpha, self.beta)))
+
+    def update(self, arm: int, reward: float) -> None:
+        super().update(arm, reward)
+        self.alpha[arm] += reward
+        self.beta[arm] += 1.0 - reward
+
+    @property
+    def arm_values(self) -> np.ndarray:
+        return self.alpha / (self.alpha + self.beta)
+
+
+class ThompsonGaussian(Bandit):
+    """Gaussian TS with known observation noise (sequence-level r in [0,1])."""
+
+    def __init__(self, n_arms: int, seed: int = 0, prior_mean: float = 0.5,
+                 prior_var: float = 1.0, noise_var: float = 0.05):
+        super().__init__(n_arms, seed)
+        self.prior_mean = prior_mean
+        self.prior_var = prior_var
+        self.noise_var = noise_var
+
+    def _posterior(self, arm: int):
+        n = self.counts[arm]
+        prec = 1.0 / self.prior_var + n / self.noise_var
+        var = 1.0 / prec
+        mean = var * (self.prior_mean / self.prior_var +
+                      n * self.means[arm] / self.noise_var)
+        return mean, var
+
+    def select(self) -> int:
+        samples = []
+        for a in range(self.n_arms):
+            m, v = self._posterior(a)
+            samples.append(self.rng.normal(m, math.sqrt(v)))
+        return int(np.argmax(samples))
+
+    @property
+    def arm_values(self) -> np.ndarray:
+        return np.array([self._posterior(a)[0] for a in range(self.n_arms)])
+
+
+class EpsilonGreedy(Bandit):
+    def __init__(self, n_arms: int, seed: int = 0, eps: float = 0.1):
+        super().__init__(n_arms, seed)
+        self.eps = eps
+
+    def select(self) -> int:
+        for a in range(self.n_arms):
+            if self.counts[a] == 0:
+                return a
+        if self.rng.random() < self.eps:
+            return int(self.rng.integers(self.n_arms))
+        return int(np.argmax(self.means))
+
+
+class BanditBank:
+    """Token-level setup: one independent bandit per draft position."""
+
+    def __init__(self, n_positions: int, factory, seed: int = 0):
+        self.bandits: List[Bandit] = [factory(seed + i) for i in range(n_positions)]
+
+    def select_all(self) -> np.ndarray:
+        return np.array([b.select() for b in self.bandits], np.int32)
+
+    def update(self, position: int, arm: int, reward: float) -> None:
+        self.bandits[position].update(arm, reward)
+
+    @property
+    def arm_values(self) -> np.ndarray:
+        return np.stack([b.arm_values for b in self.bandits])
+
+
+def make_bandit(kind: str, n_arms: int, seed: int = 0) -> Bandit:
+    kinds = {"ucb1": UCB1, "ucb_tuned": UCBTuned, "ts_beta": ThompsonBeta,
+             "ts_gaussian": ThompsonGaussian, "eps_greedy": EpsilonGreedy}
+    return kinds[kind](n_arms, seed)

@@ -1,0 +1,163 @@
+"""Dynamic-speculation controllers: TapOut (bandit) + every baseline.
+
+A controller owns (a) the arm pool handed to the jitted draft loop and
+(b) the host-side policy state (bandit values, AdaEDL lambda).  The engine
+asks ``begin()`` for per-position arm indices before each drafting session
+and reports ``update(...)`` after verification.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .arms import (ADAEDL_DEFAULTS, Arm, arm_by_name, default_pool,
+                   multi_threshold_pool, update_adaedl_lambda)
+from .bandits import Bandit, BanditBank, make_bandit
+from .rewards import REWARDS
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def never_stop_arm() -> Arm:
+    return Arm("never_stop", lambda sig: (sig["top1"] < -1.0))
+
+
+class Controller:
+    """Base controller; subclasses override select/observe."""
+
+    name = "base"
+
+    def __init__(self, arms: List[Arm], gamma_max: int, seed: int = 0):
+        self.arms = tuple(arms)
+        self.gamma_max = gamma_max
+        self.lam = ADAEDL_DEFAULTS["lam_init"]
+        self._accept_ema = ADAEDL_DEFAULTS["alpha_target"]
+        self.history: List[dict] = []
+
+    # -- engine API ---------------------------------------------------
+    def begin(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def update(self, arm_per_pos: np.ndarray, n_drafted: int,
+               n_accepted: int) -> None:
+        self.lam, self._accept_ema = update_adaedl_lambda(
+            self.lam, self._accept_ema, n_accepted, n_drafted)
+        self._observe(arm_per_pos, n_drafted, n_accepted)
+        self.history.append({"n_drafted": n_drafted, "n_accepted": n_accepted,
+                             "arm_values": self.arm_values})
+
+    def _observe(self, arm_per_pos, n_drafted, n_accepted) -> None:
+        pass
+
+    @property
+    def arm_values(self) -> Optional[np.ndarray]:
+        return None
+
+
+class TapOutSequence(Controller):
+    """Sequence-level TapOut: one arm per drafting session."""
+
+    def __init__(self, gamma_max: int, bandit: str = "ucb1",
+                 reward: str = "blend", pool: Optional[List[Arm]] = None,
+                 seed: int = 0, alpha: float = 0.5):
+        super().__init__(pool or default_pool(), gamma_max, seed)
+        self.name = f"tapout_seq_{bandit}_{reward}"
+        if bandit in ("ts", "ts_gaussian"):
+            bandit = "ts_gaussian"   # continuous reward -> Gaussian posterior
+        self.bandit = make_bandit(bandit, len(self.arms), seed)
+        self.reward_fn = REWARDS[reward]
+        self.alpha = alpha
+        self._current = 0
+
+    def begin(self) -> np.ndarray:
+        self._current = self.bandit.select()
+        return np.full((self.gamma_max,), self._current, np.int32)
+
+    def _observe(self, arm_per_pos, n_drafted, n_accepted):
+        if self.reward_fn is REWARDS["blend"]:
+            r = self.reward_fn(n_accepted, n_drafted, self.gamma_max, self.alpha)
+        else:
+            r = self.reward_fn(n_accepted, n_drafted, self.gamma_max)
+        self.bandit.update(self._current, r)
+
+    @property
+    def arm_values(self) -> np.ndarray:
+        return self.bandit.arm_values
+
+
+class TapOutToken(Controller):
+    """Token-level TapOut: one bandit per draft position, binary rewards."""
+
+    def __init__(self, gamma_max: int, bandit: str = "ucb1",
+                 pool: Optional[List[Arm]] = None, seed: int = 0):
+        super().__init__(pool or default_pool(), gamma_max, seed)
+        self.name = f"tapout_token_{bandit}"
+        if bandit in ("ts", "ts_beta"):
+            bandit = "ts_beta"       # binary reward -> Beta-Bernoulli
+        n = len(self.arms)
+        self.bank = BanditBank(gamma_max,
+                               lambda s: make_bandit(bandit, n, s), seed)
+        self._assignment = np.zeros((gamma_max,), np.int32)
+
+    def begin(self) -> np.ndarray:
+        self._assignment = self.bank.select_all()
+        return self._assignment
+
+    def _observe(self, arm_per_pos, n_drafted, n_accepted):
+        for i in range(int(n_drafted)):
+            self.bank.update(i, int(arm_per_pos[i]),
+                             1.0 if i < n_accepted else 0.0)
+
+    @property
+    def arm_values(self) -> np.ndarray:
+        return self.bank.arm_values
+
+
+class FixedArm(Controller):
+    """A single (possibly tuned) heuristic — the paper's baselines."""
+
+    def __init__(self, gamma_max: int, arm_name: str,
+                 threshold: Optional[float] = None, seed: int = 0):
+        arm = arm_by_name(arm_name, threshold)
+        super().__init__([arm], gamma_max, seed)
+        self.name = f"fixed_{arm.name}"
+
+    def begin(self) -> np.ndarray:
+        return np.zeros((self.gamma_max,), np.int32)
+
+
+class StaticGamma(Controller):
+    """Vanilla speculative decoding: always draft exactly gamma tokens."""
+
+    def __init__(self, gamma: int = 6, seed: int = 0):
+        super().__init__([never_stop_arm()], gamma, seed)
+        self.name = f"static_{gamma}"
+
+    def begin(self) -> np.ndarray:
+        return np.zeros((self.gamma_max,), np.int32)
+
+
+def make_controller(kind: str, gamma_max: int, seed: int = 0, **kw) -> Controller:
+    if kind == "static":
+        return StaticGamma(kw.get("gamma", 6), seed)
+    if kind.startswith("fixed_"):
+        return FixedArm(gamma_max, kind[len("fixed_"):],
+                        kw.get("threshold"), seed)
+    if kind == "tapout_seq_ucb1":
+        return TapOutSequence(gamma_max, "ucb1", kw.get("reward", "blend"),
+                              kw.get("pool"), seed)
+    if kind == "tapout_seq_ucb_tuned":
+        return TapOutSequence(gamma_max, "ucb_tuned", kw.get("reward", "blend"),
+                              kw.get("pool"), seed)
+    if kind == "tapout_seq_ts":
+        return TapOutSequence(gamma_max, "ts_gaussian", kw.get("reward", "blend"),
+                              kw.get("pool"), seed)
+    if kind == "tapout_token_ucb1":
+        return TapOutToken(gamma_max, "ucb1", kw.get("pool"), seed)
+    if kind == "tapout_token_ts":
+        return TapOutToken(gamma_max, "ts_beta", kw.get("pool"), seed)
+    raise ValueError(kind)

@@ -1,0 +1,225 @@
+"""Host-driven speculative-decoding generation engine.
+
+Runs the draft/verify session loop around the jitted primitives in
+``spec_decode.py``, maintains the cache invariants for both rollback
+strategies (pointer rollback for attention/MLA caches, snapshot+recompute
+for recurrent state), and reports the paper's metrics: accepted length m,
+acceptance rate %, and speedup s (wall-clock and an analytic cost model —
+CPU wall-clock is not TPU wall-clock, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.cache import rollback
+from .controller import Controller
+from .spec_decode import draft_session, verify_session
+
+
+@dataclass
+class ModelBundle:
+    params: dict
+    cfg: object
+    # relative cost of one forward token (roofline-style: active params)
+    cost_per_token: float = 0.0
+
+    def __post_init__(self):
+        if not self.cost_per_token:
+            self.cost_per_token = float(self.cfg.active_param_count())
+
+
+@dataclass
+class SessionStats:
+    n_drafted: int
+    n_accepted: int
+    arm: int
+
+
+@dataclass
+class GenResult:
+    tokens: List[int]
+    prompt_len: int
+    sessions: List[SessionStats] = field(default_factory=list)
+    wall_time_s: float = 0.0
+    modeled_cost: float = 0.0
+    traces: List[dict] = field(default_factory=list)
+
+    @property
+    def new_tokens(self) -> int:
+        return len(self.tokens) - self.prompt_len
+
+    @property
+    def total_drafted(self) -> int:
+        return sum(s.n_drafted for s in self.sessions)
+
+    @property
+    def total_accepted(self) -> int:
+        return sum(s.n_accepted for s in self.sessions)
+
+    @property
+    def accept_rate(self) -> float:
+        d = self.total_drafted
+        return self.total_accepted / d if d else 0.0
+
+    @property
+    def mean_accepted(self) -> float:
+        n = len(self.sessions)
+        return self.total_accepted / n if n else 0.0
+
+
+class SpecEngine:
+    def __init__(self, draft: ModelBundle, target: ModelBundle,
+                 controller: Controller, *, max_len: int = 2048,
+                 temperature: float = 0.0, greedy: bool = True,
+                 cache_dtype=jnp.float32, seed: int = 0):
+        self.draft, self.target = draft, target
+        self.controller = controller
+        self.gamma_max = controller.gamma_max
+        self.max_len = max_len
+        self.temperature = temperature
+        self.greedy = greedy
+        self.cache_dtype = cache_dtype
+        self.rng = jax.random.PRNGKey(seed)
+        self.collect_traces = False
+        self._step_cache: Dict[tuple, callable] = {}
+        _, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype)
+        _, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype)
+        self.draft_cheap = self.dspec.cheap_rollback
+        self.target_cheap = self.tspec.cheap_rollback
+
+    # -------------------------------------------------------- helpers
+    def _jit_step(self, which: str, length: int, all_logits: bool):
+        key = (which, length, all_logits)
+        if key not in self._step_cache:
+            bundle = self.draft if which == "draft" else self.target
+            spec = self.dspec if which == "draft" else self.tspec
+
+            @jax.jit
+            def fn(params, tokens, cache):
+                return T.step(params, bundle.cfg, tokens, cache, spec,
+                              all_logits=all_logits)
+            self._step_cache[key] = fn
+        return self._step_cache[key]
+
+    def _advance(self, which: str, params, cache, tokens: np.ndarray):
+        """Feed ``tokens`` (1, L) through the model, return new cache."""
+        if tokens.shape[1] == 0:
+            return cache
+        fn = self._jit_step(which, tokens.shape[1], False)
+        _, cache = fn(params, jnp.asarray(tokens, jnp.int32), cache)
+        return cache
+
+    def _next_rng(self):
+        self.rng, k = jax.random.split(self.rng)
+        return k
+
+    # -------------------------------------------------------- streams
+    def start_stream(self, prompt: List[int]) -> dict:
+        """Prefill a new generation stream; returns the stream state."""
+        assert len(prompt) >= 2, "need >= 2 prompt tokens"
+        seq = list(prompt)
+        res = GenResult(tokens=seq, prompt_len=len(prompt))
+        dcache, _ = T.init_cache(self.draft.cfg, 1, self.max_len, self.cache_dtype)
+        tcache, _ = T.init_cache(self.target.cfg, 1, self.max_len, self.cache_dtype)
+        pre = np.asarray(seq[:-1], np.int32)[None]   # invariant pos = len-1
+        dcache = self._advance("draft", self.draft.params, dcache, pre)
+        tcache = self._advance("target", self.target.params, tcache, pre)
+        return {"seq": seq, "res": res, "dcache": dcache, "tcache": tcache,
+                "done": False}
+
+    def session_step(self, state: dict, eos_id: Optional[int] = None) -> dict:
+        """Run ONE draft/verify session on a stream (serving-layer unit)."""
+        seq, res = state["seq"], state["res"]
+        dcache, tcache = state["dcache"], state["tcache"]
+        c_d = self.draft.cost_per_token
+        c_t = self.target.cost_per_token
+        if True:
+            L = len(seq)
+            arm_per_pos = self.controller.begin()
+            gamma = len(arm_per_pos)
+
+            # ---- draft
+            if self.draft_cheap:
+                dcache_in = rollback(dcache, L - 2)
+                in_toks = jnp.asarray([seq[-2:]], jnp.int32)
+                n_in = 2
+            else:
+                dcache_snapshot = dcache
+                dcache_in = dcache
+                in_toks = jnp.asarray([seq[-1:]], jnp.int32)
+                n_in = 1
+            dres = draft_session(
+                self.draft.params, self.draft.cfg, self.dspec, dcache_in,
+                in_toks, jnp.asarray(arm_per_pos), jnp.float32(self.controller.lam),
+                self._next_rng(), arms=self.controller.arms, gamma_max=gamma,
+                temperature=self.temperature, n_prompt_tokens=n_in)
+            n_drafted = int(dres.n_drafted[0])
+
+            # ---- verify
+            if not self.target_cheap:
+                tcache_snapshot = tcache
+            vres = verify_session(
+                self.target.params, self.target.cfg, self.tspec, tcache,
+                jnp.asarray([seq[-1:]], jnp.int32)[:, 0:1], dres.tokens,
+                dres.n_drafted, dres.qprobs, self._next_rng(),
+                gamma_max=gamma, temperature=self.temperature,
+                greedy=self.greedy)
+            m = int(vres.n_accepted[0])
+            out = np.asarray(vres.out_tokens[0, :m + 1]).tolist()
+
+            # ---- cache maintenance (invariant: pos = len(seq)-1)
+            accepted_feed = np.asarray([seq[-1:] + out[:-1]], np.int32)  # (1, m+1)
+            seq.extend(out)
+            if self.target_cheap:
+                tcache = rollback(vres.cache, L + m)
+            else:
+                tcache = self._advance("target", self.target.params,
+                                       tcache_snapshot, accepted_feed)
+            if self.draft_cheap:
+                dcache = rollback(dres.cache, L + m - 1)
+            else:
+                dcache = self._advance("draft", self.draft.params,
+                                       dcache_snapshot, accepted_feed)
+
+            # ---- controller update + accounting
+            self.controller.update(arm_per_pos, n_drafted, m)
+            res.sessions.append(SessionStats(n_drafted, m, int(arm_per_pos[0])))
+            if self.collect_traces:
+                res.traces.append({
+                    "signals": np.asarray(dres.signals[0]),
+                    "entropies": np.asarray(dres.entropies[0]),
+                    "n_drafted": n_drafted, "n_accepted": m,
+                    "position_base": 0})
+            res.modeled_cost += n_drafted * c_d + c_t + (n_in - 1) * c_d
+            if eos_id is not None and eos_id in out:
+                seq[:] = seq[:len(seq) - len(out) + out.index(eos_id) + 1]
+                state["done"] = True
+            if len(seq) + gamma + 2 >= self.max_len:
+                state["done"] = True
+
+        state["dcache"], state["tcache"] = dcache, tcache
+        return state
+
+    # -------------------------------------------------------- generate
+    def generate(self, prompt: List[int], max_new_tokens: int,
+                 eos_id: Optional[int] = None) -> GenResult:
+        t0 = time.perf_counter()
+        state = self.start_stream(prompt)
+        res = state["res"]
+        while not state["done"] and res.new_tokens < max_new_tokens:
+            state = self.session_step(state, eos_id)
+        res.wall_time_s = time.perf_counter() - t0
+        return res
+
+
+def autoregressive_baseline_cost(n_tokens: int, target: ModelBundle) -> float:
+    """Modeled cost of plain target-only decoding."""
+    return n_tokens * target.cost_per_token

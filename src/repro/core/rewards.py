@@ -1,0 +1,19 @@
+"""Reward formulations (Section 3.2)."""
+from __future__ import annotations
+
+
+def r_simple(n_accepted: int, n_drafted: int, gamma_max: int) -> float:
+    """Normalized acceptance length |Y| / gamma."""
+    return n_accepted / max(gamma_max, 1)
+
+
+def r_blend(n_accepted: int, n_drafted: int, gamma_max: int,
+            alpha: float = 0.5) -> float:
+    """alpha * |Y|/gamma + (1-alpha) * |Y|/|X| (paper fixes alpha = 0.5)."""
+    if n_drafted == 0:
+        return 0.0
+    return (alpha * n_accepted / max(gamma_max, 1)
+            + (1.0 - alpha) * n_accepted / n_drafted)
+
+
+REWARDS = {"simple": r_simple, "blend": r_blend}

@@ -1,0 +1,197 @@
+"""Jitted speculative-decoding primitives: dynamic-stop drafting + parallel
+verification with exact speculative sampling (Leviathan et al. 2023).
+
+Device/host split (DESIGN.md §3): the drafting while-loop (with the stopping
+heuristic evaluated via ``lax.switch`` on a traced arm index) and the
+verification forward are single jitted programs; the bandit update and
+sequence assembly run on host between sessions.
+
+Cache invariant used throughout: ``cache["pos"] == len(generated_seq) - 1``
+— the final token of the sequence has not been fed to the model yet.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.cache import CacheSpec
+from .arms import Arm, SIGNAL_VECTOR_DIM, signal_vector, signals_from_probs
+
+
+class DraftResult(NamedTuple):
+    tokens: jnp.ndarray        # (B, gamma_max) int32 (padded with 0)
+    n_drafted: jnp.ndarray     # (B,) int32
+    qprobs: jnp.ndarray        # (B, gamma_max, V) draft distributions
+    cache: dict                # draft cache AFTER drafting
+    entropies: jnp.ndarray     # (B, gamma_max) sqrt-entropy per position (diag)
+    signals: jnp.ndarray       # (B, gamma_max, 6) per-position signal vector
+
+
+class VerifyResult(NamedTuple):
+    n_accepted: jnp.ndarray    # (B,) accepted DRAFT tokens m <= n_drafted
+    out_tokens: jnp.ndarray    # (B, gamma_max+1) accepted + replacement/bonus
+    n_out: jnp.ndarray         # (B,) = m + 1
+    cache: dict                # target cache AFTER verify forward (pos NOT rolled back)
+
+
+def _sample(logits, rng, temperature: float):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def _probs(logits, temperature: float):
+    t = max(temperature, 1e-4)
+    return jax.nn.softmax(logits.astype(jnp.float32) / t, axis=-1)
+
+
+# ------------------------------------------------------------------ draft
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec", "gamma_max", "temperature", "arms",
+                     "n_prompt_tokens"))
+def draft_session(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
+                  lam, rng, *, arms: Tuple[Arm, ...], gamma_max: int,
+                  temperature: float = 0.0, n_prompt_tokens: int = 2):
+    """Draft up to gamma_max tokens with bandit-selected dynamic stopping.
+
+    in_tokens: (B, n_prompt_tokens) — the last token(s) of the accepted
+      sequence (2 for pointer-rollback caches, 1 for recompute caches).
+    arm_per_pos: (gamma_max,) int32 — arm index per draft position
+      (sequence-level bandits broadcast one arm; token-level vary).
+    lam: AdaEDL online threshold (scalar, host-updated between sessions).
+    """
+    B = in_tokens.shape[0]
+    V = cfg.vocab_size
+    arm_fns = tuple(a.fn for a in arms)
+
+    # feed the known suffix; logits for the first drafted token
+    logits, cache = T.step(params, cfg, in_tokens, cache, spec)
+    rng, k0 = jax.random.split(rng)
+    probs0 = _probs(logits[:, -1], temperature)
+    sig_probs0 = _probs(logits[:, -1], 1.0)   # signals use the raw dist
+    tok0 = _sample(logits[:, -1], k0, temperature)
+
+    tokens_buf = jnp.zeros((B, gamma_max), jnp.int32)
+    qprobs_buf = jnp.zeros((B, gamma_max, V), jnp.float32)
+    ent_buf = jnp.zeros((B, gamma_max), jnp.float32)
+    written = jnp.zeros((B, gamma_max), jnp.int32)
+
+    def eval_stop(i, sig_probs, prev_ent):
+        sig = signals_from_probs(sig_probs, prev_ent, lam, i)
+        # SVIP-Difference needs a previous step; define diff = 0 at i == 0
+        sig["prev_sqrt_entropy"] = jnp.where(
+            i == 0, sig["sqrt_entropy"], sig["prev_sqrt_entropy"])
+        per_arm = jax.lax.switch(arm_per_pos[i],
+                                 [lambda s=s: s(sig) for s in arm_fns])
+        return per_arm, sig["sqrt_entropy"], signal_vector(sig)
+
+    sig_buf = jnp.zeros((B, gamma_max, SIGNAL_VECTOR_DIM), jnp.float32)
+
+    stop0, ent0, sv0 = eval_stop(0, sig_probs0, jnp.zeros((B,), jnp.float32))
+    tokens_buf = tokens_buf.at[:, 0].set(tok0)
+    qprobs_buf = qprobs_buf.at[:, 0].set(probs0)
+    ent_buf = ent_buf.at[:, 0].set(ent0)
+    sig_buf = sig_buf.at[:, 0].set(sv0)
+    written = written.at[:, 0].set(1)
+
+    def cond(state):
+        i, _, _, _, _, stopped, _, _, _, _, _ = state
+        return (i < gamma_max) & ~jnp.all(stopped)
+
+    def body(state):
+        i, tok, prev_ent, tbuf, qbuf, stopped, ebuf, sbuf, wrt, cache, rng = state
+        logits, cache = T.step(params, cfg, tok[:, None], cache, spec)
+        rng, k = jax.random.split(rng)
+        probs = _probs(logits[:, -1], temperature)
+        sig_probs = _probs(logits[:, -1], 1.0)
+        nxt = _sample(logits[:, -1], k, temperature)
+        stop_i, ent_i, sv_i = eval_stop(i, sig_probs, prev_ent)
+        tbuf = tbuf.at[:, i].set(jnp.where(stopped, tbuf[:, i], nxt))
+        qbuf = qbuf.at[:, i].set(jnp.where(stopped[:, None], qbuf[:, i], probs))
+        ebuf = ebuf.at[:, i].set(jnp.where(stopped, ebuf[:, i], ent_i))
+        sbuf = sbuf.at[:, i].set(jnp.where(stopped[:, None], sbuf[:, i], sv_i))
+        wrt = wrt.at[:, i].set(jnp.where(stopped, wrt[:, i], 1))
+        stopped = stopped | stop_i
+        return (i + 1, nxt, ent_i, tbuf, qbuf, stopped, ebuf, sbuf, wrt, cache, rng)
+
+    state = (jnp.int32(1), tok0, ent0, tokens_buf, qprobs_buf, stop0,
+             ent_buf, sig_buf, written, cache, rng)
+    _, _, _, tbuf, qbuf, _, ebuf, sbuf, wrt, cache, _ = jax.lax.while_loop(
+        cond, body, state)
+
+    n_drafted = jnp.sum(wrt, axis=1)
+    return DraftResult(tbuf, n_drafted, qbuf, cache, ebuf, sbuf)
+
+
+# ------------------------------------------------------------------ verify
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec", "gamma_max", "temperature", "greedy"))
+def verify_session(params, cfg, spec: CacheSpec, cache, last_token, drafted,
+                   n_drafted, qprobs, rng, *, gamma_max: int,
+                   temperature: float = 0.0, greedy: bool = True):
+    """Verify drafted tokens with the target model in one forward pass.
+
+    last_token: (B, 1) final accepted token (not yet fed to target).
+    drafted: (B, gamma_max); n_drafted: (B,); qprobs: (B, gamma_max, V).
+
+    Greedy mode: accept while draft token == target argmax. Stochastic mode:
+    exact speculative sampling — accept with prob min(1, p/q), resample the
+    first rejection from norm(max(p-q, 0)) so the output distribution equals
+    the target model's.
+    """
+    B = last_token.shape[0]
+    inp = jnp.concatenate([last_token, drafted], axis=1)       # (B, gamma+1)
+    logits, cache = T.step(params, cfg, inp, cache, spec, all_logits=True)
+    # logits[:, j] is the target dist for position j+1 of inp = drafted[:, j]
+    pprobs = _probs(logits, temperature)                        # (B, g+1, V)
+
+    idx = jnp.arange(gamma_max)
+    in_draft = idx[None, :] < n_drafted[:, None]                # (B, gamma)
+    p_of_draft = jnp.take_along_axis(
+        pprobs[:, :gamma_max], drafted[..., None], axis=-1)[..., 0]
+    q_of_draft = jnp.take_along_axis(
+        qprobs, drafted[..., None], axis=-1)[..., 0]
+
+    if greedy:
+        tgt_argmax = jnp.argmax(logits[:, :gamma_max], axis=-1).astype(jnp.int32)
+        accept = (drafted == tgt_argmax) & in_draft
+    else:
+        rng, k_acc = jax.random.split(rng)
+        u = jax.random.uniform(k_acc, (B, gamma_max))
+        ratio = p_of_draft / jnp.maximum(q_of_draft, 1e-20)
+        accept = (u < jnp.minimum(ratio, 1.0)) & in_draft
+
+    # m = accepted prefix length
+    acc_prefix = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+    m = jnp.sum(acc_prefix, axis=1)                             # (B,)
+
+    # replacement token at position m: residual distribution if m < n_drafted,
+    # otherwise the bonus token straight from the target dist.
+    p_at_m = jnp.take_along_axis(pprobs, m[:, None, None], axis=1)[:, 0]  # (B,V)
+    q_at_m = jnp.take_along_axis(
+        jnp.concatenate([qprobs, jnp.zeros((B, 1, qprobs.shape[-1]))], axis=1),
+        m[:, None, None], axis=1)[:, 0]
+    rejected_inside = m < n_drafted
+    if greedy:
+        repl = jnp.argmax(p_at_m, axis=-1).astype(jnp.int32)
+    else:
+        resid = jnp.maximum(p_at_m - q_at_m, 0.0)
+        resid_sum = resid.sum(-1, keepdims=True)
+        resid = jnp.where(resid_sum > 1e-20, resid / jnp.maximum(resid_sum, 1e-20), p_at_m)
+        dist = jnp.where(rejected_inside[:, None], resid, p_at_m)
+        rng, k_r = jax.random.split(rng)
+        repl = jax.random.categorical(k_r, jnp.log(jnp.maximum(dist, 1e-30))).astype(jnp.int32)
+
+    out = jnp.where(idx[None, :] < m[:, None], drafted, 0)
+    out = jnp.concatenate([out, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    out = out.at[jnp.arange(B), m].set(repl)
+    return VerifyResult(m, out, m + 1, cache)

@@ -1,0 +1,194 @@
+"""Synthetic multi-domain corpus + promptsets (DESIGN.md §6).
+
+The paper evaluates on SpecBench / MT-Bench / HumanEval with Llama-scale
+models.  On CPU we reproduce the *claims* with tiny models trained on a
+synthetic language whose domains mirror the paper's key structure:
+
+  code        low-entropy, highly deterministic grammar  (HumanEval analog)
+  math        exact arithmetic lines (learnable by a larger model)
+  prose       Zipfian word-Markov text, high entropy     (MT-Bench analog)
+  cipher      deterministic word-substitution "translation"
+  list        enumerations with predictable separators   (extraction/rag)
+
+SpecBench categories are mixtures over these base generators, so coding
+prompts really are lower-entropy than non-coding ones (paper Fig. 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from .tokenizer import ByteTokenizer
+
+_WORDS = None
+
+
+def _vocab(rng: np.random.Generator, n: int = 280) -> List[str]:
+    letters = "abcdefghijklmnopqrstuvwxyz"
+    words = set()
+    while len(words) < n:
+        L = int(rng.integers(2, 8))
+        words.add("".join(rng.choice(list(letters), L)))
+    return sorted(words)
+
+
+class DomainGenerators:
+    """Deterministic (seeded) text generators per base domain."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.words = _vocab(self.rng)
+        n = len(self.words)
+        # order-1 word Markov chain, sparse rows -> moderate entropy
+        probs = self.rng.dirichlet(np.full(24, 0.4), size=n)
+        cols = np.stack([self.rng.choice(n, 24, replace=False) for _ in range(n)])
+        self.markov = (cols, probs)
+        # deterministic substitution "translation" table
+        perm = self.rng.permutation(n)
+        self.cipher = {self.words[i]: self.words[perm[i]] + "e" for i in range(n)}
+
+    # -- base domains -------------------------------------------------
+    def code(self, rng, n_lines: int = 8) -> str:
+        vs = [f"x{i}" for i in range(6)]
+        ops = ["+", "-", "*"]
+        out = []
+        for _ in range(n_lines):
+            a, b, c = rng.choice(vs), rng.choice(vs), rng.choice(vs)
+            if rng.random() < 0.3:
+                out.append(f"def f_{rng.integers(10)}({a}, {b}):")
+                out.append(f"    return {a} {rng.choice(ops)} {b}")
+            else:
+                out.append(f"{c} = {a} {rng.choice(ops)} {b};")
+        return "\n".join(out) + "\n"
+
+    def math(self, rng, n_lines: int = 6) -> str:
+        out = []
+        for _ in range(n_lines):
+            a, b = int(rng.integers(0, 50)), int(rng.integers(0, 50))
+            out.append(f"{a} + {b} = {a + b}")
+        return "\n".join(out) + "\n"
+
+    def prose(self, rng, n_words: int = 40) -> str:
+        cols, probs = self.markov
+        n = len(self.words)
+        w = int(rng.integers(n))
+        toks = []
+        for i in range(n_words):
+            toks.append(self.words[w])
+            if rng.random() < 0.08:
+                toks[-1] += "."
+            w = int(rng.choice(cols[w], p=probs[w]))
+        return " ".join(toks) + ".\n"
+
+    def cipher_pairs(self, rng, n_words: int = 12) -> str:
+        cols, probs = self.markov
+        n = len(self.words)
+        w = int(rng.integers(n))
+        src = []
+        for _ in range(n_words):
+            src.append(self.words[w])
+            w = int(rng.choice(cols[w], p=probs[w]))
+        tgt = [self.cipher[x] for x in src]
+        return "EN: " + " ".join(src) + " | FR: " + " ".join(tgt) + "\n"
+
+    def listing(self, rng, n_items: int = 8) -> str:
+        out = [f"- item {i}: {self.words[int(rng.integers(len(self.words)))]}"
+               for i in range(n_items)]
+        return "\n".join(out) + "\n"
+
+
+# SpecBench category -> mixture over base domains
+SPECBENCH_MIX: Dict[str, Dict[str, float]] = {
+    "coding":          {"code": 0.9, "prose": 0.1},
+    "extraction":      {"listing": 0.7, "prose": 0.3},
+    "humanities":      {"prose": 1.0},
+    "math":            {"math": 0.9, "prose": 0.1},
+    "math_reasoning":  {"math": 0.6, "prose": 0.4},
+    "qa":              {"prose": 0.8, "listing": 0.2},
+    "rag":             {"listing": 0.5, "prose": 0.5},
+    "reasoning":       {"prose": 0.7, "math": 0.3},
+    "roleplay":        {"prose": 1.0},
+    "stem":            {"math": 0.4, "prose": 0.6},
+    "summarization":   {"prose": 0.7, "listing": 0.3},
+    "translation":     {"cipher": 0.9, "prose": 0.1},
+    "writing":         {"prose": 1.0},
+}
+
+DATASET_MIX: Dict[str, Dict[str, float]] = {
+    # MT-Bench: broad non-coding chat; HumanEval: pure code
+    "mt_bench":  {"prose": 0.6, "math": 0.15, "listing": 0.15, "cipher": 0.1},
+    "humaneval": {"code": 1.0},
+    "alpaca":    {"prose": 0.5, "code": 0.2, "math": 0.15, "listing": 0.15},
+}
+
+
+class SyntheticCorpus:
+    def __init__(self, seed: int = 0):
+        self.gens = DomainGenerators(seed)
+        self.tok = ByteTokenizer()
+
+    def _sample_domain(self, rng, mix: Dict[str, float]) -> str:
+        names = list(mix)
+        p = np.array([mix[k] for k in names], np.float64)
+        name = names[int(rng.choice(len(names), p=p / p.sum()))]
+        return getattr(self.gens, {"code": "code", "math": "math",
+                                   "prose": "prose", "cipher": "cipher_pairs",
+                                   "listing": "listing"}[name])(rng)
+
+    def document(self, rng, mix: Dict[str, float], min_chars: int = 400) -> str:
+        parts = []
+        total = 0
+        while total < min_chars:
+            t = self._sample_domain(rng, mix)
+            parts.append(t)
+            total += len(t)
+        return "".join(parts)
+
+    def token_stream(self, mix: Dict[str, float], seed: int = 0) -> Iterator[int]:
+        rng = np.random.default_rng(seed)
+        while True:
+            doc = self.document(rng, mix)
+            yield from self.tok.encode(doc, bos=True, eos=True)
+
+    def training_batches(self, *, seq_len: int, batch_size: int,
+                         mix: Dict[str, float] = None, seed: int = 0
+                         ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        """Yields (tokens, labels) of shape (B, S) — next-token LM setup."""
+        mix = mix or DATASET_MIX["alpaca"]
+        streams = [self.token_stream(mix, seed * 1000 + b)
+                   for b in range(batch_size)]
+        buffers = [[] for _ in range(batch_size)]
+        while True:
+            x = np.zeros((batch_size, seq_len), np.int32)
+            y = np.zeros((batch_size, seq_len), np.int32)
+            for b in range(batch_size):
+                while len(buffers[b]) < seq_len + 1:
+                    buffers[b].append(next(streams[b]))
+                chunk = buffers[b][:seq_len + 1]
+                buffers[b] = buffers[b][seq_len:]
+                x[b] = chunk[:-1]
+                y[b] = chunk[1:]
+            yield x, y
+
+    # -- prompt sets ---------------------------------------------------
+    def prompts(self, dataset: str, n: int, seed: int = 100,
+                prompt_chars: int = 80) -> List[Tuple[str, List[int]]]:
+        """Returns [(category, token_ids)] for a named dataset."""
+        out = []
+        if dataset == "specbench":
+            cats = list(SPECBENCH_MIX)
+            per = max(1, n // len(cats))
+            for c in cats:
+                rng = np.random.default_rng(seed + hash(c) % 10000)
+                for _ in range(per):
+                    doc = self.document(rng, SPECBENCH_MIX[c], prompt_chars)
+                    out.append((c, self.tok.encode(doc[:prompt_chars])))
+            return out
+        mix = DATASET_MIX[dataset]
+        rng = np.random.default_rng(seed)
+        for _ in range(n):
+            doc = self.document(rng, mix, prompt_chars)
+            out.append((dataset, self.tok.encode(doc[:prompt_chars])))
+        return out

@@ -1,0 +1,24 @@
+"""Byte-level tokenizer with special tokens (no external vocab files)."""
+from __future__ import annotations
+
+from typing import List
+
+
+class ByteTokenizer:
+    BOS = 256
+    EOS = 257
+    PAD = 258
+
+    def __init__(self):
+        self.vocab_size = 259
+
+    def encode(self, text: str, *, bos: bool = True, eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8", errors="replace"))
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: List[int]) -> str:
+        return bytes(i for i in ids if i < 256).decode("utf-8", errors="replace")

@@ -1,0 +1,100 @@
+"""Pallas TPU flash-decode kernel: single-token query vs a long KV cache.
+
+Decode attention is memory-bound (the entire KV cache streams HBM->VMEM
+once); the kernel tiles the cache length L into MXU-aligned blocks and keeps
+the online-softmax stats in VMEM scratch across the L sweep.  Ring-buffer
+caches are handled by the same position-validity mask used everywhere else
+(slots with kpos < 0 or kpos > qpos are dead).
+
+Layouts: q (B, H, D) one query per head; k, v (B, G, L, D); kpos (L,);
+qpos scalar int32 (current absolute position). -> (B, H, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window: int, nl: int):
+    i_l = pl.program_id(2)
+
+    @pl.when(i_l == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (1(h), D) -> (D,)? keep (1,D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bl, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bl, D)
+    kp = kpos_ref[...]                                # (bl,)
+    qp = qpos_ref[0]                                  # scalar
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * scale  # (bl,)
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)                            # (bl,)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + p.sum()
+    acc_ref[...] = (acc_ref[...] * corr +
+                    jax.lax.dot_general(p[None, :], v, (((1,), (0,)), ((), ()))))
+    m_ref[0] = m_new
+
+    @pl.when(i_l == nl - 1)
+    def _finalize():
+        l = l_ref[0]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, 0] = out[0].astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, qpos, kpos, *, window: int = 0,
+                     block_l: int = 512, interpret: bool = False):
+    """q (B,H,D); k,v (B,G,L,D); qpos () int32; kpos (L,). -> (B,H,D)."""
+    B, H, D = q.shape
+    G, L = k.shape[1], k.shape[2]
+    assert H % G == 0
+    bl = min(block_l, L)
+    pL = (-L) % bl
+    if pL:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pL), constant_values=-1)
+    Lp = k.shape[2]
+    nl = Lp // bl
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+    qpos_arr = jnp.asarray(qpos, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, nl=nl),
+        grid=(B, H, nl),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, il: (0,)),
+            pl.BlockSpec((bl,), lambda b, h, il: (il,)),
+            pl.BlockSpec((1, 1, D), lambda b, h, il: (b, h, 0)),
+            pl.BlockSpec((1, 1, bl, D), lambda b, h, il: (b, h // rep, il, 0)),
+            pl.BlockSpec((1, 1, bl, D), lambda b, h, il: (b, h // rep, il, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, il: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos_arr, kpos, q[:, :, None, :].reshape(B, H, D), k, v)
+    return out

@@ -1,0 +1,112 @@
+"""Pallas TPU flash-attention (prefill/training) kernel.
+
+Tiling: grid (B, H, nq, nk) with the KV index innermost; online-softmax
+running stats (m, l, acc) live in VMEM scratch and persist across the nk
+sweep; the output block is written on the last KV step.  Block shapes are
+MXU-aligned (q/kv block 128, head-dim lanes 128).  GQA folds q-heads onto
+their KV group via the index map (no KV replication in HBM).
+
+Layouts: q (B, H, Sq, D); k, v (B, G, Sk, D); qpos (Sq,), kpos (Sk,) int32
+position vectors driving the causal/window/validity mask (same rule as
+``repro.models.attention.sdpa``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, window: int,
+            causal: bool, nk: int):
+    i_k = pl.program_id(3)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (bk, D)
+    qp = qpos_ref[...]                                  # (bq,)
+    kp = kpos_ref[...]                                  # (bk,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+    mask = kp[None, :] >= 0
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window:
+        mask &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None] +
+                    jax.lax.dot_general(p.astype(v.dtype), v,
+                                        (((1,), (0,)), ((), ()))))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(i_k == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, qpos, kpos, *, causal: bool = True,
+                    window: int = 0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q (B,H,Sq,D); k,v (B,G,Sk,D); qpos (Sq,); kpos (Sk,). -> (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    G, Sk = k.shape[1], k.shape[2]
+    assert H % G == 0
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        qpos = jnp.pad(qpos, (0, pq), constant_values=-(10 ** 9))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pk), constant_values=-1)
+    Sqp, Skp = q.shape[2], k.shape[2]
+    nq, nk = Sqp // bq, Skp // bk
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window,
+                          causal=causal, nk=nk),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((bq,), lambda b, h, iq, ik: (iq,)),
+            pl.BlockSpec((bk,), lambda b, h, iq, ik: (ik,)),
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kpos, q, k, v)
+    return out[:, :, :Sq]

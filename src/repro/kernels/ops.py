@@ -1,0 +1,50 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * on TPU: compiled Pallas kernels (the hardware target);
+  * on CPU: ``interpret=True`` executes the kernel body in Python — used by
+    the correctness tests; model code defaults to the XLA paths instead
+    (``repro.models.attention.sdpa`` / ``ssm.ssd_chunked``) because
+    interpret mode is orders of magnitude slower.
+
+Set ``repro.kernels.ops.FORCE_INTERPRET = True`` (tests do) to exercise the
+kernels on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _da
+from . import flash_attention as _fa
+from . import ssd as _ssd
+
+FORCE_INTERPRET = False
+
+
+def _interpret() -> bool:
+    return FORCE_INTERPRET or jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, qpos, kpos, *, causal: bool = True,
+                    window: int = 0, block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, qpos, kpos, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_l"))
+def decode_attention(q, k, v, qpos, kpos, *, window: int = 0,
+                     block_l: int = 512):
+    return _da.decode_attention(q, k, v, qpos, kpos, window=window,
+                                block_l=block_l, interpret=_interpret())
+
+
+@jax.jit
+def ssd_chunk(xc, dtc, dA, dA_cs, Bc, Cc):
+    # the cumulative form dA_cs carries everything the kernel needs
+    return _ssd.ssd_chunk(xc, dtc, dA, dA_cs, Bc, Cc, interpret=_interpret())

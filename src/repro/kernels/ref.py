@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, qpos, kpos, *, causal: bool = True,
+                        window: int = 0):
+    """q (B,H,Sq,D); k,v (B,G,Sk,D). Naive masked softmax attention."""
+    B, H, Sq, D = q.shape
+    G = k.shape[1]
+    rep = H // G
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / (D ** 0.5)
+    mask = kpos[None, :] >= 0
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window:
+        mask = mask & ((qpos[:, None] - kpos[None, :]) < window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, qpos, kpos, *, window: int = 0):
+    """q (B,H,D); k,v (B,G,L,D)."""
+    out = flash_attention_ref(q[:, :, None, :], k, v,
+                              jnp.asarray([qpos], jnp.int32).reshape(1), kpos,
+                              causal=True, window=window)
+    return out[:, :, 0]
+
+
+def _segsum(x):
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    return jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), seg, -jnp.inf)
+
+
+def ssd_chunk_ref(xc, dtc, dA, dA_cs, Bc, Cc):
+    """Intra-chunk SSD reference (matches repro.models.ssm math).
+    xc (B,NC,Q,H,P); dtc/dA/dA_cs (B,NC,Q,H); Bc/Cc (B,NC,Q,G,N)."""
+    Bsz, NC, Q, H, P = xc.shape
+    G = Bc.shape[3]
+    rep = H // G
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))              # (B,NC,H,Q,Q)
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)
+    CB = jnp.repeat(CB, rep, axis=2)
+    scores = CB * L
+    y = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores, dtc, xc)
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)
+    Br = jnp.repeat(Bc, rep, axis=3)                             # per-head B
+    st = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Br, dtc * decay_to_end, xc)
+    return y.astype(jnp.float32), st.astype(jnp.float32)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk block.
+
+The SSD algorithm splits the sequence into chunks of Q tokens: inside a
+chunk the computation is attention-like dense matmuls (MXU work — this
+kernel); across chunks a tiny recurrence over (H, P, N) states remains in
+XLA (`repro.models.ssm.ssd_chunked`).
+
+Per (batch, chunk, head) grid cell this kernel computes
+    y_diag  = ((C B^T) .* L) diag(dt) X        (Q,P)
+    state   = B^T  (decay_to_end * dt * X)     (P,N)
+where L = exp(segsum(dA)) is the lower-triangular decay matrix.
+
+Layouts: x (B, NC, Q, H, P), dt/dA/dA_cs (B, NC, Q, H), Bm/Cm (B, NC, Q, G, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, dacs_ref, b_ref, c_ref, y_ref, st_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)         # (Q,)
+    dacs = dacs_ref[0, 0, :, 0].astype(jnp.float32)     # (Q,) inclusive cumsum of dA
+    Bm = b_ref[0, 0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0, 0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    Q = x.shape[0]
+
+    # L[i,j] = exp(dacs[i] - dacs[j]) for i >= j else 0
+    seg = dacs[:, None] - dacs[None, :]
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    L = jnp.exp(jnp.where(tri > 0, seg, -jnp.inf)) * tri
+
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    scores = CB * L * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ()))) # (Q, P)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(dacs[-1] - dacs)                      # (Q,)
+    w = (dt * decay_to_end)[:, None] * x                         # (Q, P)
+    st = jax.lax.dot_general(w, Bm, (((0,), (0,)), ((), ())))    # (P, N)
+    st_ref[0, 0, 0, :, :] = st.astype(st_ref.dtype)
+
+
+def ssd_chunk(xc, dtc, dA, dA_cs, Bc, Cc, *, interpret: bool = False):
+    del dA  # dA_cs carries everything the kernel needs
+    """Intra-chunk SSD. xc (B,NC,Q,H,P); dtc/dA/dA_cs (B,NC,Q,H);
+    Bc/Cc (B,NC,Q,G,N). Returns (y_diag (B,NC,Q,H,P), states (B,NC,H,P,N))."""
+    B, NC, Q, H, P = xc.shape
+    G, N = Bc.shape[3], Bc.shape[4]
+    rep = H // G
+
+    y, st = pl.pallas_call(
+        _kernel,
+        grid=(B, NC, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1, N), lambda b, c, h: (b, c, 0, h // rep, 0)),
+            pl.BlockSpec((1, 1, Q, 1, N), lambda b, c, h: (b, c, 0, h // rep, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, NC, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, NC, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dtc, dA_cs, Bc, Cc)
+    return y, st

@@ -1,0 +1,153 @@
+"""Parameter / cache / batch PartitionSpec assignment by pytree path.
+
+Logical scheme (DESIGN.md §5):
+  * tensor-parallel axis "model": attention heads, FFN hidden, MoE experts,
+    vocab dim of the embedding.
+  * FSDP axis ("pod","data"): the other large weight dim (ZeRO-style); for
+    single-pod meshes "pod" resolves away, for batch=1 shapes everything
+    non-divisible is dropped by ``resolve_spec``.
+  * batch axis ("pod","data") on activations and KV caches.
+
+Stacked (scan-over-layers) parameters get a leading replicated cycle dim.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.sharding import resolve_spec
+
+FSDP = ("pod", "data")
+BATCH = ("pod", "data")
+
+# (regex over "/"-joined path, spec WITHOUT the stacked-cycle dim)
+_PARAM_RULES: Tuple[Tuple[str, tuple], ...] = (
+    (r"embed$",                     ("model", FSDP)),
+    (r"lm_head$",                   (FSDP, "model")),
+    (r"(final_norm|norm1|norm2|cross_norm|q_norm|k_norm|kv_norm|out_norm)$", (None,)),
+    # attention
+    (r"mixer/w[qkv]$",              (FSDP, "model")),
+    (r"cross/w[qkv]$",              (FSDP, "model")),
+    (r"mixer/wo$",                  ("model", FSDP)),
+    (r"cross/wo$",                  ("model", FSDP)),
+    (r"mixer/b[qkv]$",              ("model",)),
+    # MLA
+    (r"mixer/w_q$",                 (FSDP, "model")),
+    (r"mixer/w_dq$",                (FSDP, None)),
+    (r"mixer/w_uq$",                (None, "model")),
+    (r"mixer/w_dkv$",               (FSDP, None)),
+    (r"mixer/w_uk$",                (None, "model")),
+    (r"mixer/w_uv$",                (None, "model")),
+    # dense FFN
+    (r"ffn/w_(in|gate)$",           (FSDP, "model")),
+    (r"ffn/w_out$",                 ("model", FSDP)),
+    # MoE
+    (r"ffn/router$",                (None, "model")),
+    (r"ffn/experts/w_(in|gate)$",   ("model", None, FSDP)),
+    (r"ffn/experts/w_out$",         ("model", FSDP, None)),
+    (r"ffn/shared/w_(in|gate)$",    (FSDP, "model")),
+    (r"ffn/shared/w_out$",          ("model", FSDP)),
+    # Mamba2 SSD
+    (r"mixer/w_in$",                (FSDP, "model")),
+    (r"mixer/conv_w$",              (None, "model")),
+    (r"mixer/conv_b$",              ("model",)),
+    (r"mixer/(A_log|D|dt_bias)$",   ("model",)),
+    (r"mixer/w_out$",               ("model", FSDP)),
+    # RG-LRU
+    (r"mixer/w_[xy]$",              (FSDP, "model")),
+    (r"mixer/w_[ri]$",              (None, "model")),
+    (r"mixer/b_[ri]$",              ("model",)),
+    (r"mixer/lam$",                 ("model",)),
+    # frontends
+    (r"vis_proj/w1$",               (None, "model")),
+    (r"vis_proj/w2$",               ("model", None)),
+    (r"enc_proj$",                  (None, None)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_spec(path_str: str, shape) -> tuple:
+    stacked = "/stack/" in path_str or path_str.endswith("/stack")
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_str):
+            if stacked:
+                spec = (None,) + tuple(spec)
+            return tuple(spec)[:len(shape)] + (None,) * (len(shape) - len(spec) - (1 if stacked else 0))
+    return (None,) * len(shape)
+
+
+def tree_shardings(mesh: Mesh, tree: Any, spec_fn) -> Any:
+    """Build a NamedSharding pytree for ``tree`` via spec_fn(path, shape)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        spec = spec_fn(ps, shape)
+        out.append(NamedSharding(mesh, resolve_spec(mesh, spec, shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def params_shardings(mesh: Mesh, params_shape: Any, mode: str = "train") -> Any:
+    """mode="train": ZeRO-3-ish — the non-"model" weight dim shards over
+    ("pod","data") (params+grads+moments must fit). mode="serve": weights
+    stay resident, sharded over "model" only — decode would otherwise
+    all-gather every FSDP shard each layer (§Perf decode iteration 3)."""
+    if mode == "serve":
+        def spec_fn(path, shape):
+            spec = param_spec(path, shape)
+            return tuple(None if s == FSDP else s for s in spec)
+        return tree_shardings(mesh, params_shape, spec_fn)
+    return tree_shardings(mesh, params_shape, param_spec)
+
+
+def cache_spec(path_str: str, shape) -> tuple:
+    """KV/state cache sharding: batch over ("pod","data"); for attention
+    caches prefer sharding KV heads over "model", else the sequence dim;
+    recurrent state shards its channel/head dim over "model"."""
+    stacked = "/stack/" in path_str
+    lead = (None,) if stacked else ()
+    if re.search(r"/(k|v)$", path_str):
+        b, L, G, D = shape[-4:]
+        if G % 16 == 0:
+            return lead + (BATCH, None, "model", None)
+        return lead + (BATCH, "model", None, None)
+    if re.search(r"/ckv$", path_str) or re.search(r"/krope$", path_str):
+        return lead + (BATCH, "model", None)
+    if re.search(r"/pos$", path_str):
+        return lead + (None,) * (len(shape) - len(lead))
+    if re.search(r"/conv$", path_str):
+        return lead + (BATCH, None, "model")
+    if re.search(r"/ssm$", path_str):
+        return lead + (BATCH, "model", None, None)
+    if re.search(r"/rec$", path_str):
+        return lead + (BATCH, "model")
+    if re.search(r"cross/.*(k|v)$", path_str):
+        return lead + (BATCH, None, "model", None)
+    return lead + (BATCH,) + (None,) * (len(shape) - len(lead) - 1)
+
+
+def cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+    return tree_shardings(mesh, cache_shape, cache_spec)
+
+
+def batch_shardings(mesh: Mesh, batch_shape: Any) -> Any:
+    def spec_fn(path, shape):
+        return (BATCH,) + (None,) * (len(shape) - 1)
+    return tree_shardings(mesh, batch_shape, spec_fn)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,94 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) pair.
+
+The four assigned input shapes:
+
+  train_4k       seq 4,096    global_batch 256   -> train_step
+  prefill_32k    seq 32,768   global_batch 32    -> prefill_step
+  decode_32k     seq 32,768   global_batch 128   -> serve_step (1 new token)
+  long_500k      seq 524,288  global_batch 1     -> serve_step (ring cache)
+
+VLM: the patch stub occupies the first ``num_patches`` positions, so the
+token stream is shortened to keep the total sequence at the assigned length.
+Audio (enc-dec): ``seq`` counts decoder positions; the encoder consumes the
+stub's ``frontend_len`` frames.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+from repro.models import transformer as T
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, batch=1, kind="decode"),
+}
+
+
+@dataclass(frozen=True)
+class PairSpec:
+    arch: str
+    shape: str
+    kind: str                 # train | prefill | decode
+    seq_len: int
+    batch: int
+
+
+def pair_spec(arch: str, shape: str) -> PairSpec:
+    s = SHAPES[shape]
+    return PairSpec(arch, shape, s["kind"], s["seq_len"], s["batch"])
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input stand-ins (weak-type-correct, shardable, no allocation)."""
+    s = SHAPES[shape]
+    B, S = s["batch"], s["seq_len"]
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if s["kind"] == "train":
+        S_tok = S
+        if cfg.vision is not None:
+            S_tok = S - cfg.vision.num_patches
+            out["patch_embeds"] = _sds((B, cfg.vision.num_patches,
+                                        cfg.vision.vit_dim), jnp.bfloat16)
+        if cfg.is_encdec:
+            out["frame_embeds"] = _sds((B, cfg.encdec.frontend_len,
+                                        cfg.encdec.frontend_dim), jnp.bfloat16)
+        out["tokens"] = _sds((B, S_tok), jnp.int32)
+        out["labels"] = _sds((B, S_tok), jnp.int32)
+        return out
+    if s["kind"] == "prefill":
+        S_tok = S
+        if cfg.vision is not None:
+            S_tok = S - cfg.vision.num_patches
+            out["patch_embeds"] = _sds((B, cfg.vision.num_patches,
+                                        cfg.vision.vit_dim), jnp.bfloat16)
+        if cfg.is_encdec:
+            out["frame_embeds"] = _sds((B, cfg.encdec.frontend_len,
+                                        cfg.encdec.frontend_dim), jnp.bfloat16)
+        out["tokens"] = _sds((B, S_tok), jnp.int32)
+        return out
+    # decode: ONE new token against a seq_len cache
+    out["tokens"] = _sds((B, 1), jnp.int32)
+    return out
+
+
+def abstract_params(cfg: ModelConfig, dtype) -> dict:
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    from repro.models.cache import build_cache_spec
+    spec = build_cache_spec(cfg, max_len)          # static metadata
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len, dtype)[0])
+    return cache, spec

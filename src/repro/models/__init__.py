@@ -1,0 +1,12 @@
+from .config import (EncDecConfig, MLAConfig, MoEConfig, ModelConfig,
+                     RGLRUConfig, SSMConfig, VisionStubConfig)
+from .transformer import (decode_step, forward_hidden, init_cache, init_params,
+                          logits_fn, prefill, step, verify_chunk)
+from .cache import build_cache_spec, rollback
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RGLRUConfig",
+    "EncDecConfig", "VisionStubConfig", "init_params", "init_cache",
+    "forward_hidden", "step", "prefill", "decode_step", "verify_chunk",
+    "logits_fn", "build_cache_spec", "rollback",
+]

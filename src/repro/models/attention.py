@@ -1,0 +1,275 @@
+"""Self-attention: GQA/MQA/MHA, optional sliding window, qk-norm, QKV bias.
+
+Two XLA execution paths (the Pallas TPU kernels in ``repro.kernels`` are the
+hardware target; on CPU they are validated in interpret mode only):
+
+  * ``naive``     — materializes the (Sq, Sk) score matrix; used for small
+                    shapes and as the reference.
+  * ``flash_xla`` — query-chunked map + kv-chunked scan with online softmax;
+                    O(chunk^2) live memory, required for 32k+ dry-runs.
+
+All masking is position-based: key slot ``s`` is visible to query ``i`` iff
+``0 <= kpos[s] <= qpos[i]`` and (windowed) ``qpos[i] - kpos[s] < window``.
+This single rule covers causal training, ring-buffer decode caches and
+rollback-by-pointer (stale slots carry pos -1 or a future position).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, rms_norm, softcap
+from .sharding import constrain
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------- params
+
+def init_attention(key, cfg, *, cross: bool = False, dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def qkv_proj(params, cfg, x, positions=None, *, rope: bool = True):
+    """Returns q (B,S,H,D), k/v (B,S,G,D); rope applied if positions given."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rms_eps)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------- sdpa
+
+def _mask(qpos, kpos, window: int, causal: bool):
+    """(Sq, Sk) boolean visibility mask from absolute positions."""
+    m = kpos[None, :] >= 0
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+def _naive_sdpa(q, k, v, qpos, kpos, window, causal, cap=0.0,
+                seq_sharded: bool = False):
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    qg = q.reshape(B, Sq, G, H // G, D)
+    scores = jnp.einsum("bsgqd,btgd->bgqst", qg, k).astype(jnp.float32)
+    if seq_sharded:
+        # keep the KV length sharded over "model": XLA then emits the
+        # distributed-softmax pattern (partial max/sum + tiny all-reduce)
+        # instead of all-gathering the cache (§Perf iteration 2)
+        scores = constrain(scores, ("pod", "data"), None, None, None, "model")
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    scores = softcap(scores, cap)
+    m = _mask(qpos, kpos, window, causal)
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (no valid key yet) -> zeros, not NaN
+    p = jnp.where(m.any(-1)[None, None, None, :, None], p, 0.0)
+    out = jnp.einsum("bgqst,btgd->bsgqd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def _flash_xla(q, k, v, qpos, kpos, window, causal, cap=0.0,
+               q_chunk: int = 512, kv_chunk: int = 1024):
+    """Pure-XLA flash attention: scan over KV chunks with online softmax."""
+    B, Sq, H, D = q.shape
+    G = k.shape[2]
+    Dv = v.shape[-1]
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, k.shape[1])
+    # pad to multiples
+    pq = (-Sq) % qc
+    pk = (-k.shape[1]) % kc
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, pq), constant_values=0)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pk), constant_values=-1)
+    Sqp, Skp = q.shape[1], k.shape[1]
+    nq, nk = Sqp // qc, Skp // kc
+    qs = q.reshape(B, nq, qc, G, H // G, D).transpose(1, 0, 2, 3, 4, 5)
+    qps = qpos.reshape(nq, qc)
+    ks = k.reshape(B, nk, kc, G, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, G, Dv).transpose(1, 0, 2, 3, 4)
+    kps = kpos.reshape(nk, kc)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    def q_block(args):
+        qb, qp = args  # (B,qc,G,Hg,D), (qc,)
+
+        def kv_step(carry, kv):
+            m_i, l_i, acc = carry
+            kb, vb, kp = kv
+            s = jnp.einsum("bqghd,bkgd->bqghk", qb, kb).astype(jnp.float32) * scale
+            s = softcap(s, cap)
+            msk = _mask(qp, kp, window, causal)            # (qc, kc)
+            s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m_i, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_i - m_new)
+            l_new = l_i * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqghk,bkgd->bqghd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, qc, G, H // G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, G, H // G), jnp.float32)
+        a0 = jnp.zeros((B, qc, G, H // G, Dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        out = jnp.where((l_f > 0)[..., None], out, 0.0)
+        return out.astype(q.dtype)
+
+    out = jax.lax.map(q_block, (qs, qps))                  # (nq,B,qc,G,Hg,D)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sqp, H, Dv)
+    return out[:, :Sq]
+
+
+def sdpa(q, k, v, qpos, kpos, *, window: int = 0, causal: bool = True,
+         logits_softcap: float = 0.0, impl: str = "auto",
+         seq_sharded: bool = False):
+    """Scaled dot-product attention with position-based masking.
+
+    q: (B,Sq,H,D); k,v: (B,Sk,G,D) with H % G == 0.
+    qpos: (Sq,) absolute positions of queries; kpos: (Sk,) of keys (-1 =
+    invalid slot). seq_sharded: the KV length axis is sharded over "model"
+    (set for decode caches whose KV-head count cannot shard) — keeps
+    attention local via distributed softmax.
+    """
+    if impl == "auto":
+        flops_proxy = q.shape[1] * k.shape[1]
+        impl = "flash_xla" if flops_proxy > 512 * 2048 else "naive"
+    if impl == "naive":
+        return _naive_sdpa(q, k, v, qpos, kpos, window, causal, logits_softcap,
+                           seq_sharded=seq_sharded)
+    if impl == "flash_xla":
+        return _flash_xla(q, k, v, qpos, kpos, window, causal, logits_softcap)
+    raise ValueError(impl)
+
+
+# --------------------------------------------------------------- blocks
+
+def attn_train(params, cfg, x, positions, *, window: int = 0,
+               causal: bool = True, impl: str = "auto"):
+    """Full-sequence self-attention (no cache); causal unless encoder."""
+    q, k, v = qkv_proj(params, cfg, x, positions)
+    q = constrain(q, None, None, "model")
+    k = constrain(k, None, None, "model")
+    out = sdpa(q, k, v, positions, positions, window=window, causal=causal,
+               logits_softcap=cfg.logits_softcap, impl=impl)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    return out @ params["wo"]
+
+
+def write_cache(cache_layer, k_new, v_new, pos0, ring: bool):
+    """Insert S new K/V rows at absolute position pos0 (traced scalar)."""
+    L = cache_layer["k"].shape[1]
+    S = k_new.shape[1]
+    newpos = pos0 + jnp.arange(S, dtype=jnp.int32)
+    if not ring:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache_layer["k"], k_new.astype(cache_layer["k"].dtype), pos0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache_layer["v"], v_new.astype(cache_layer["v"].dtype), pos0, 1)
+        sp = jax.lax.dynamic_update_slice_in_dim(cache_layer["pos"], newpos, pos0, 0)
+        return {"k": ck, "v": cv, "pos": sp}
+    if S >= L:  # only the last L tokens can survive
+        k_new, v_new, newpos = k_new[:, -L:], v_new[:, -L:], newpos[-L:]
+        S = L
+    slots = (newpos % L).astype(jnp.int32)
+    ck = cache_layer["k"].at[:, slots].set(k_new.astype(cache_layer["k"].dtype))
+    cv = cache_layer["v"].at[:, slots].set(v_new.astype(cache_layer["v"].dtype))
+    sp = cache_layer["pos"].at[slots].set(newpos)
+    return {"k": ck, "v": cv, "pos": sp}
+
+
+def attn_cached(params, cfg, x, pos0, cache_layer, *, window: int = 0,
+                ring: bool = False, impl: str = "auto"):
+    """Prefill/decode step: S new tokens starting at absolute pos0.
+
+    ``ring`` is STATIC (decided by the cache spec at cache-init time): ring
+    caches wrap writes modulo the buffer length; full caches use contiguous
+    dynamic-update-slice writes.
+    """
+    B, S, _ = x.shape
+    positions = pos0 + jnp.arange(S, dtype=jnp.int32)
+    q, k, v = qkv_proj(params, cfg, x, positions)
+    cache_layer = write_cache(cache_layer, k, v, pos0, ring=ring)
+    # decode caches whose KV-head count can't shard over "model" are
+    # sequence-sharded (launch/shardings.cache_spec) -> distributed softmax
+    from .sharding import get_mesh
+    mesh = get_mesh()
+    L = cache_layer["k"].shape[1]
+    G = cache_layer["k"].shape[2]
+    seq_sharded = bool(
+        mesh is not None and "model" in mesh.axis_names and
+        G % mesh.shape["model"] != 0 and L % mesh.shape["model"] == 0)
+    out = sdpa(q, cache_layer["k"].astype(q.dtype),
+               cache_layer["v"].astype(q.dtype), positions,
+               cache_layer["pos"], window=window,
+               logits_softcap=cfg.logits_softcap, impl=impl,
+               seq_sharded=seq_sharded)
+    out = out.reshape(B, S, -1)
+    return out @ params["wo"], cache_layer
+
+
+# ------------------------------------------------------- cross-attention
+
+def cross_attn(params, cfg, x, enc, enc_mask=None, impl: str = "auto"):
+    """Decoder->encoder attention.
+
+    ``enc`` is either precomputed KV (dict k/v, the decode path) or the raw
+    encoder output (B, T, d) from which KV is projected (the train path)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, hd)
+    if not isinstance(enc, dict):
+        enc = encode_cross_kv(params, cfg, enc)
+    k, v = enc["k"], enc["v"]
+    T = k.shape[1]
+    qpos = jnp.zeros((S,), jnp.int32)
+    kpos = jnp.zeros((T,), jnp.int32) if enc_mask is None else jnp.where(enc_mask, 0, -1)
+    out = sdpa(q, k, v, qpos, kpos, causal=False, impl=impl)
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def encode_cross_kv(params, cfg, enc_out):
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ params["wk"]).reshape(B, T, cfg.num_kv_heads, hd)
+    v = (enc_out @ params["wv"]).reshape(B, T, cfg.num_kv_heads, hd)
+    return {"k": k, "v": v}

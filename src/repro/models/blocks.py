@@ -1,0 +1,120 @@
+"""Per-layer block: pre-norm mixer + pre-norm FFN/MoE with residuals."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_cached, attn_train, cross_attn, encode_cross_kv, init_attention
+from .common import activation_fn, dense_init, rms_norm
+from .mla import init_mla, mla_cached, mla_train
+from .moe import init_moe, moe_ffn
+from .rglru import init_rglru, rglru_mixer
+from .sharding import constrain
+from .ssm import init_ssm, ssm_mixer
+
+
+def init_ffn(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+         "w_out": dense_init(ks[1], cfg.d_ff, cfg.d_model, dtype)}
+    if cfg.activation in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def ffn_apply(params, cfg, x):
+    act = activation_fn(cfg.activation)
+    h = x @ params["w_in"]
+    if "w_gate" in params:
+        h = act(h) * (x @ params["w_gate"])
+    else:
+        h = act(h)
+    h = constrain(h, ("pod", "data"), None, "model")
+    return h @ params["w_out"]
+
+
+def init_block(key, cfg, layer_idx: int, *, cross: bool = False,
+               dtype=jnp.float32):
+    kind = cfg.block_kind(layer_idx)
+    ks = jax.random.split(key, 4)
+    p = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind in ("attn", "local"):
+        p["mixer"] = init_attention(ks[0], cfg, dtype=dtype)
+    elif kind == "mla":
+        p["mixer"] = init_mla(ks[0], cfg, dtype=dtype)
+    elif kind == "mamba2":
+        p["mixer"] = init_ssm(ks[0], cfg, dtype=dtype)
+    elif kind == "rglru":
+        p["mixer"] = init_rglru(ks[0], cfg, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    has_ffn = kind != "mamba2"
+    if has_ffn:
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        if cfg.is_moe_layer(layer_idx):
+            p["ffn"] = init_moe(ks[1], cfg, dtype=dtype)
+        else:
+            p["ffn"] = init_ffn(ks[1], cfg, dtype=dtype)
+    if cross:
+        p["cross_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        p["cross"] = init_attention(ks[2], cfg, cross=True, dtype=dtype)
+    return p
+
+
+def block_train(params, cfg, layer_idx: int, x, positions, *, enc_out=None,
+                impl: str = "auto"):
+    """Full-sequence pass (no cache). Returns (x, aux)."""
+    kind = cfg.block_kind(layer_idx)
+    h = rms_norm(x, params["norm1"], cfg.rms_eps)
+    aux = {}
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        h = attn_train(params["mixer"], cfg, h, positions, window=window, impl=impl)
+    elif kind == "mla":
+        h = mla_train(params["mixer"], cfg, h, positions, impl=impl)
+    elif kind == "mamba2":
+        h, _ = ssm_mixer(params["mixer"], cfg, h)
+    elif kind == "rglru":
+        h, _ = rglru_mixer(params["mixer"], cfg, h)
+    x = x + h
+    if "cross" in params and enc_out is not None:
+        h = rms_norm(x, params["cross_norm"], cfg.rms_eps)
+        x = x + cross_attn(params["cross"], cfg, h, enc_out)
+    if "ffn" in params:
+        h = rms_norm(x, params["norm2"], cfg.rms_eps)
+        if cfg.is_moe_layer(layer_idx):
+            h, aux = moe_ffn(params["ffn"], cfg, h)
+        else:
+            h = ffn_apply(params["ffn"], cfg, h)
+        x = x + h
+    return x, aux
+
+
+def block_cached(params, cfg, layer_idx: int, x, pos0, layer_cache, spec,
+                 *, cross_kv=None, impl: str = "auto"):
+    """Cached step (prefill chunk or decode). Returns (x, new_layer_cache)."""
+    kind = cfg.block_kind(layer_idx)
+    decode = x.shape[1] == 1
+    h = rms_norm(x, params["norm1"], cfg.rms_eps)
+    if kind in ("attn", "local"):
+        h, layer_cache = attn_cached(params["mixer"], cfg, h, pos0, layer_cache,
+                                     window=spec.window, ring=spec.ring, impl=impl)
+    elif kind == "mla":
+        h, layer_cache = mla_cached(params["mixer"], cfg, h, pos0, layer_cache,
+                                    ring=spec.ring, impl=impl)
+    elif kind == "mamba2":
+        h, layer_cache = ssm_mixer(params["mixer"], cfg, h, layer_cache, decode=decode)
+    elif kind == "rglru":
+        h, layer_cache = rglru_mixer(params["mixer"], cfg, h, layer_cache, decode=decode)
+    x = x + h
+    if "cross" in params and cross_kv is not None:
+        h = rms_norm(x, params["cross_norm"], cfg.rms_eps)
+        x = x + cross_attn(params["cross"], cfg, h, cross_kv)
+    if "ffn" in params:
+        h = rms_norm(x, params["norm2"], cfg.rms_eps)
+        if cfg.is_moe_layer(layer_idx):
+            h, _ = moe_ffn(params["ffn"], cfg, h, capacity_factor=2.0)
+        else:
+            h = ffn_apply(params["ffn"], cfg, h)
+        x = x + h
+    return x, layer_cache

@@ -1,0 +1,95 @@
+"""Decode-state (KV / recurrent) cache.
+
+A cache is a pytree:
+    {"pos": int32 scalar (tokens consumed so far),
+     "layers": {"prefix": [...], "stack": stacked-or-None, "tail": [...]},
+     "cross": optional per-decoder-layer encoder KV (enc-dec only)}
+
+Per-layer entries by block kind:
+    attn/local : {"k","v": (B, L, G, D), "pos": (L,) int32}   (+ ring flag in spec)
+    mla        : {"ckv": (B, L, R), "krope": (B, L, Dr), "pos": (L,)}
+    mamba2     : {"conv": (B, K-1, Cd), "ssm": (B, H, P, N)}
+    rglru      : {"conv": (B, K-1, W), "rec": (B, W)}
+
+``CacheSpec`` carries the STATIC layout decisions (ring?, buffer length) so
+jitted code can branch on them at trace time.  Rollback for attention-style
+caches is O(1) (reset "pos"; stale slots carry future positions and are
+masked out).  Recurrent layers need recompute-from-snapshot — the engine
+keeps the pre-draft cache value (free in functional JAX) instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+RING_SLACK = 256  # extra slots so multi-token (verify) steps never clobber
+                  # keys still inside another in-flight query's window
+
+
+@dataclass(frozen=True)
+class LayerCacheSpec:
+    kind: str          # attn|mla|mamba2|rglru
+    length: int = 0    # KV buffer length (attn/mla)
+    ring: bool = False
+    window: int = 0    # attention window (0 = full)
+
+
+@dataclass(frozen=True)
+class CacheSpec:
+    layers: Tuple[LayerCacheSpec, ...]
+    max_len: int
+
+    @property
+    def cheap_rollback(self) -> bool:
+        return all(l.kind in ("attn", "mla") for l in self.layers)
+
+
+def build_cache_spec(cfg: ModelConfig, max_len: int) -> CacheSpec:
+    specs = []
+    for i in range(cfg.num_layers):
+        kind = cfg.block_kind(i)
+        if kind in ("attn", "mla"):
+            if max_len > cfg.max_full_cache_len:
+                w = cfg.long_context_window
+                specs.append(LayerCacheSpec(kind, w + RING_SLACK, True, w))
+            else:
+                specs.append(LayerCacheSpec(kind, max_len, False, 0))
+        elif kind == "local":
+            w = cfg.window or 4096
+            L = min(max_len, w + RING_SLACK)
+            specs.append(LayerCacheSpec("attn", L, L < max_len, w))
+        elif kind in ("mamba2", "rglru"):
+            specs.append(LayerCacheSpec(kind))
+        else:
+            raise ValueError(kind)
+    return CacheSpec(tuple(specs), max_len)
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerCacheSpec, batch: int,
+                     dtype=jnp.bfloat16):
+    if spec.kind == "attn":
+        hd = cfg.resolved_head_dim
+        return {"k": jnp.zeros((batch, spec.length, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((batch, spec.length, cfg.num_kv_heads, hd), dtype),
+                "pos": jnp.full((spec.length,), -1, jnp.int32)}
+    if spec.kind == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((batch, spec.length, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, spec.length, m.qk_rope_head_dim), dtype),
+                "pos": jnp.full((spec.length,), -1, jnp.int32)}
+    if spec.kind == "mamba2":
+        from .ssm import init_ssm_state
+        return init_ssm_state(cfg, batch, dtype)
+    if spec.kind == "rglru":
+        from .rglru import init_rglru_state
+        return init_rglru_state(cfg, batch, dtype)
+    raise ValueError(spec.kind)
+
+
+def rollback(cache, new_pos):
+    """O(1) pointer rollback (valid for attention/MLA-only stacks)."""
+    return {**cache, "pos": jnp.asarray(new_pos, jnp.int32)}

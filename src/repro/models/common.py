@@ -1,0 +1,72 @@
+"""Shared building blocks: norms, rotary embeddings, activations, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal_init(key, shape, scale: float, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    # python float (weak type) so bf16 params stay bf16
+    std = float(scale / np.sqrt(max(fan_in, 1)))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return truncated_normal_init(key, (d_in, d_out), 1.0, dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d_model), dtype) * 0.02
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def activation_fn(name: str):
+    if name == "swiglu" or name == "silu":
+        return jax.nn.silu
+    if name == "geglu" or name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, D/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_with_logits(logits, labels, mask=None):
+    """Mean CE over valid positions. logits (..., V) fp32-safe."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

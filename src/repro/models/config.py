@@ -1,0 +1,300 @@
+"""Unified model configuration for every supported architecture family.
+
+One ``ModelConfig`` drives layer construction for dense / MoE / MLA / SSM /
+hybrid / enc-dec / VLM models.  Per-layer behaviour is selected by
+``block_pattern`` which is cycled over the layer stack:
+
+  "attn"    full causal self-attention (GQA / MQA / MHA)
+  "local"   sliding-window causal self-attention (``window`` tokens)
+  "mla"     DeepSeek multi-head latent attention (compressed KV cache)
+  "mamba2"  Mamba-2 SSD state-space mixer (attention-free)
+  "rglru"   RecurrentGemma RG-LRU gated linear recurrence (attention-free)
+
+The FFN of each block is dense unless ``moe`` is set, in which case layers
+listed in ``moe.dense_layers`` stay dense and the rest use the routed MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                      # per-expert FFN hidden size
+    num_shared_experts: int = 0
+    d_shared: int = 0                  # hidden size of the shared expert(s)
+    capacity_factor: float = 1.25      # train-time token capacity per expert
+    router_aux_weight: float = 0.01    # load-balance aux loss weight
+    dense_layers: Tuple[int, ...] = () # layer indices that keep a dense FFN
+    routed_scale: float = 1.0          # scaling on routed expert output
+    # tiny-batch decode via active-expert weight GATHER instead of the full
+    # dispatch einsum. Off by default: on a model-sharded expert bank the
+    # gather's collectives cost ~17x what it saves in HBM (§Perf, refuted
+    # hypothesis — kept for single-host serving where it does win).
+    decode_gather: bool = False
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0               # 0 = full-rank queries (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64                 # SSD head dim (nheads = d_inner // head_dim)
+    ngroups: int = 1
+    chunk_size: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0                 # 0 = d_model
+    d_conv: int = 4
+    block_width_mult: int = 1
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder-decoder (audio / seq2seq) configuration."""
+    num_encoder_layers: int = 0
+    encoder_is_causal: bool = False
+    # The modality frontend (mel-spectrogram + conv feature extractor) is a
+    # STUB: input_specs() provides precomputed frame embeddings of this shape.
+    frontend_dim: int = 0              # embedding dim produced by the stub
+    frontend_len: int = 1024           # number of frames the stub emits
+
+
+@dataclass(frozen=True)
+class VisionStubConfig:
+    """VLM vision frontend STUB: precomputed patch embeddings + projector."""
+    vit_dim: int = 1024
+    num_patches: int = 256
+    projector_hidden: int = 0          # 0 = vit_dim*4
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                     # dense|moe|ssm|hybrid|vlm|audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 = d_model // num_heads
+    activation: str = "swiglu"         # swiglu|geglu|gelu
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = True
+    logits_softcap: float = 0.0
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 0                    # sliding window for "local" blocks
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vision: Optional[VisionStubConfig] = None
+    # long-context decode: ring-buffer window applied to "attn" blocks when a
+    # sequence exceeds max_full_cache_len (beyond-paper variant, DESIGN §4.2).
+    long_context_window: int = 8192
+    max_full_cache_len: int = 65536
+    # scan-over-layers (small HLO / fast compile). The dry-run roofline pass
+    # unrolls instead: XLA cost_analysis counts a scan body once, which would
+    # undercount FLOPs/bytes/collectives by the trip count.
+    scan_layers: bool = True
+    # Megatron-SP-style sequence sharding of the inter-block residual stream
+    # (training path): cuts remat-saved activations by the model-axis size at
+    # the cost of one gather per block. (§Perf iteration 1.)
+    seq_shard_activations: bool = True
+    source: str = ""                   # citation for the config
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def block_kind(self, layer: int) -> str:
+        return self.block_pattern[layer % len(self.block_pattern)]
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        return tuple(self.block_kind(i) for i in range(self.num_layers))
+
+    def is_moe_layer(self, layer: int) -> bool:
+        if self.moe is None:
+            return False
+        return layer not in self.moe.dense_layers
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encdec is not None and self.encdec.num_encoder_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        kinds = set(self.layer_kinds())
+        return kinds <= {"mamba2", "rglru"}
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode memory is bounded (sub-quadratic cache)."""
+        return True  # every arch: native state (ssm/rglru) or ring-buffer window
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter counting (for roofline MODEL_FLOPS) ----------------
+    def param_count(self) -> int:
+        """Total parameters (embedding included once if tied)."""
+        return _count_params(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: shared + top_k experts)."""
+        return _count_params(self, active_only=True)
+
+    def reduced(self, *, layers: int = 2, d_model: int = 256, n_experts: int = 4,
+                vocab: int = 512) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        d_model = min(d_model, self.d_model)
+        heads = max(1, min(self.num_heads, d_model // 64))
+        kv = max(1, min(self.num_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        hd = min(self.resolved_head_dim, 64)
+        kw = dict(
+            num_layers=layers, d_model=d_model, num_heads=heads,
+            num_kv_heads=kv, head_dim=hd,
+            d_ff=max(64, min(self.d_ff, d_model * 4)),
+            vocab_size=min(vocab, self.vocab_size),
+            window=min(self.window, 64) if self.window else 0,
+            long_context_window=256, max_full_cache_len=4096,
+            name=self.name + "-smoke",
+        )
+        if self.moe is not None:
+            ne = min(n_experts, self.moe.num_experts)
+            kw["moe"] = dataclasses.replace(
+                self.moe, num_experts=ne, top_k=min(self.moe.top_k, 2),
+                d_expert=max(32, d_model // 2),
+                d_shared=max(32, d_model // 2) if self.moe.num_shared_experts else 0,
+                dense_layers=tuple(i for i in self.moe.dense_layers if i < layers))
+        if self.mla is not None:
+            kw["mla"] = dataclasses.replace(
+                self.mla, kv_lora_rank=64, q_lora_rank=0,
+                qk_nope_head_dim=hd, qk_rope_head_dim=32, v_head_dim=hd)
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=32, head_dim=32, chunk_size=32)
+        if self.rglru is not None:
+            kw["rglru"] = dataclasses.replace(self.rglru, lru_width=d_model)
+        if self.encdec is not None:
+            kw["encdec"] = dataclasses.replace(
+                self.encdec, num_encoder_layers=min(2, self.encdec.num_encoder_layers),
+                frontend_dim=min(self.encdec.frontend_dim, 128), frontend_len=16)
+        if self.vision is not None:
+            kw["vision"] = dataclasses.replace(
+                self.vision, vit_dim=64, num_patches=8, projector_hidden=128)
+        # keep the pattern but make sure at least one full cycle fits
+        pat = self.block_pattern
+        if layers < len(pat):
+            pat = pat[:layers]
+        kw["block_pattern"] = pat
+        return self.replace(**kw)
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        qdim = cfg.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+        n = d * qdim if not m.q_lora_rank else d * m.q_lora_rank + m.q_lora_rank * qdim
+        n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+        n += m.kv_lora_rank * cfg.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+        n += cfg.num_heads * m.v_head_dim * d
+        return n
+    n = d * cfg.num_heads * hd            # Q
+    n += 2 * d * cfg.num_kv_heads * hd    # K, V
+    n += cfg.num_heads * hd * d           # O
+    if cfg.qkv_bias:
+        n += (cfg.num_heads + 2 * cfg.num_kv_heads) * hd
+    return n
+
+
+def _ffn_params(cfg: ModelConfig, layer: int, active_only: bool) -> int:
+    d = cfg.d_model
+    mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    if cfg.is_moe_layer(layer):
+        m = cfg.moe
+        per = mult * d * m.d_expert
+        n_routed = m.top_k if active_only else m.num_experts
+        n = per * n_routed + d * m.num_experts  # + router
+        if m.num_shared_experts:
+            n += m.num_shared_experts * mult * d * m.d_shared
+        return n
+    return mult * d * cfg.d_ff
+
+
+def _mixer_params(cfg: ModelConfig, kind: str) -> int:
+    d = cfg.d_model
+    if kind in ("attn", "local"):
+        return _attn_params(cfg)
+    if kind == "mla":
+        return _attn_params(cfg)
+    if kind == "mamba2":
+        s = cfg.ssm
+        d_in = s.expand * d
+        nheads = d_in // s.head_dim
+        zxbcdt = d * (2 * d_in + 2 * s.ngroups * s.d_state + nheads)
+        conv = s.d_conv * (d_in + 2 * s.ngroups * s.d_state)
+        out = d_in * d
+        return zxbcdt + conv + out + 2 * nheads + d_in  # A,D,dt_bias(normish)
+    if kind == "rglru":
+        w = cfg.rglru.lru_width or d
+        return 2 * d * w + cfg.rglru.d_conv * w + 3 * w + w * d
+    raise ValueError(kind)
+
+
+def _count_params(cfg: ModelConfig, active_only: bool) -> int:
+    n = cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        n += cfg.vocab_size * cfg.d_model
+    for i in range(cfg.num_layers):
+        kind = cfg.block_kind(i)
+        n += _mixer_params(cfg, kind)
+        if kind in ("attn", "local", "mla"):   # mixer blocks carry the FFN
+            n += _ffn_params(cfg, i, active_only)
+        elif kind in ("mamba2",):
+            pass                               # mamba2 block has no separate FFN
+        elif kind == "rglru":
+            n += _ffn_params(cfg, i, active_only)
+        n += 2 * cfg.d_model                   # norms
+    if cfg.is_encdec:
+        e = cfg.encdec
+        for _ in range(e.num_encoder_layers):
+            n += _attn_params(cfg) + _ffn_params(cfg, -1, active_only) + 2 * cfg.d_model
+        # cross attention per decoder layer
+        n += cfg.num_layers * (_attn_params(cfg) + cfg.d_model)
+        n += e.frontend_dim * cfg.d_model      # frontend projector
+    if cfg.vision is not None:
+        v = cfg.vision
+        h = v.projector_hidden or v.vit_dim * 4
+        n += v.vit_dim * h + h * cfg.d_model
+    return n

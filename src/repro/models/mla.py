@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV state is compressed into a per-token latent ``c_kv`` of rank
+``kv_lora_rank`` plus a single shared RoPE key of dim ``qk_rope_head_dim``;
+the cache stores only these (the technique's memory win).
+
+Two execution paths:
+  * prefill/train: decompress K/V per head and reuse the flash ``sdpa``
+    (chunked, long-sequence safe).
+  * cached decode (short S): the "absorbed" formulation — queries are folded
+    through W_uk so attention runs directly against the latent cache, never
+    materializing per-head K/V for the full context.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, sdpa
+from .common import apply_rope, dense_init, rms_norm
+from .sharding import constrain
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {}
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(ks[0], d, m.q_lora_rank, dtype)
+        p["q_norm"] = jnp.zeros((m.q_lora_rank,), dtype)
+        p["w_uq"] = dense_init(ks[1], m.q_lora_rank, H * qk_dim, dtype)
+    else:
+        p["w_q"] = dense_init(ks[0], d, H * qk_dim, dtype)
+    p["w_dkv"] = dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype)
+    p["kv_norm"] = jnp.zeros((m.kv_lora_rank,), dtype)
+    p["w_uk"] = dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype)
+    p["w_uv"] = dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim, dtype)
+    p["wo"] = dense_init(ks[5], H * m.v_head_dim, d, dtype)
+    return p
+
+
+def _queries(params, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        q = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.rms_eps) @ params["w_uq"]
+    else:
+        q = x @ params["w_q"]
+    q = q.reshape(B, S, H, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(params, cfg, x, positions):
+    m = cfg.mla
+    ckv_rope = x @ params["w_dkv"]
+    c_kv, k_rope = jnp.split(ckv_rope, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.rms_eps)
+    # shared (single-"head") rope key, stored post-rotation
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _expand_kv(params, cfg, c_kv, k_rope):
+    """Decompress latents to per-head K/V (prefill path)."""
+    m = cfg.mla
+    B, S, _ = c_kv.shape
+    H = cfg.num_heads
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    return k, v
+
+
+def mla_train(params, cfg, x, positions, impl: str = "auto"):
+    m = cfg.mla
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    k, v = _expand_kv(params, cfg, c_kv, k_rope)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = constrain(q, None, None, "model")
+    out = sdpa(q, k, v, positions, positions, impl=impl)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def write_mla_cache(cache_layer, c_kv, k_rope, pos0, ring: bool):
+    L = cache_layer["ckv"].shape[1]
+    S = c_kv.shape[1]
+    newpos = pos0 + jnp.arange(S, dtype=jnp.int32)
+    if not ring:
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["ckv"], c_kv.astype(cache_layer["ckv"].dtype), pos0, 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["krope"], k_rope.astype(cache_layer["krope"].dtype), pos0, 1)
+        sp = jax.lax.dynamic_update_slice_in_dim(cache_layer["pos"], newpos, pos0, 0)
+        return {"ckv": cc, "krope": cr, "pos": sp}
+    if S >= L:
+        c_kv, k_rope, newpos = c_kv[:, -L:], k_rope[:, -L:], newpos[-L:]
+    slots = (newpos % L).astype(jnp.int32)
+    cc = cache_layer["ckv"].at[:, slots].set(c_kv.astype(cache_layer["ckv"].dtype))
+    cr = cache_layer["krope"].at[:, slots].set(k_rope.astype(cache_layer["krope"].dtype))
+    sp = cache_layer["pos"].at[slots].set(newpos)
+    return {"ckv": cc, "krope": cr, "pos": sp}
+
+
+def mla_cached(params, cfg, x, pos0, cache_layer, *, ring: bool = False,
+               impl: str = "auto"):
+    """Cached step via the absorbed formulation (S is small: 1..gamma)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    positions = pos0 + jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    cache_layer = write_mla_cache(cache_layer, c_kv, k_rope, pos0, ring)
+    ckv = cache_layer["ckv"].astype(x.dtype)             # (B, L, R)
+    krope = cache_layer["krope"].astype(x.dtype)         # (B, L, Dr)
+    kpos = cache_layer["pos"]
+    # absorb W_uk into the queries: q_c (B,S,H,R)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    scores = (jnp.einsum("bshr,blr->bhsl", q_c, ckv) +
+              jnp.einsum("bshr,blr->bhsl", q_rope, krope)).astype(jnp.float32)
+    scores = scores / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    mask = (kpos[None, :] >= 0) & (kpos[None, :] <= positions[:, None])
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
+    o_c = jnp.einsum("bhsl,blr->bshr", p.astype(ckv.dtype), ckv)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", o_c, w_uv)
+    return out.reshape(B, S, -1) @ params["wo"], cache_layer

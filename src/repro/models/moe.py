@@ -1,0 +1,155 @@
+"""Routed mixture-of-experts FFN — group-parallel, capacity-bounded dispatch.
+
+GSPMD/expert-parallel formulation (GShard-style groups, no (T, E, C)
+one-hot dispatch tensor and no cross-shard scatter):
+
+  1. tokens stay grouped (G=batch, S, d) with G sharded over the data axes —
+     every dispatch step below is LOCAL to a data shard;
+  2. router top-k → ids/gates (G, S, K);
+  3. position-in-expert via a (G, S, E) cumsum along S (top-k ids are
+     distinct within a token, so no within-token correction is needed);
+  4. batched scatter into a per-group buffer (G, E, C, d), C = S*K*cf/E
+     (tokens over per-group capacity are dropped — GShard semantics);
+  5. expert einsum over the E axis; expert weights are sharded
+     ("model", FSDP) so the E dimension is consumed model-parallel;
+  6. local gather back + gate-weighted combine.
+
+Shared experts (DeepSeek) are a plain dense FFN added to the routed output.
+Aux: Switch load-balance loss, router z-loss, drop fraction.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import activation_fn, dense_init
+from .sharding import constrain
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    glu = cfg.activation in ("swiglu", "geglu")
+
+    def expert_bank(k, n, dff):
+        kk = jax.random.split(k, 3)
+        p = {
+            "w_in": jax.vmap(lambda q: dense_init(q, d, dff, dtype))(jax.random.split(kk[0], n)),
+            "w_out": jax.vmap(lambda q: dense_init(q, dff, d, dtype))(jax.random.split(kk[1], n)),
+        }
+        if glu:
+            p["w_gate"] = jax.vmap(lambda q: dense_init(q, d, dff, dtype))(jax.random.split(kk[2], n))
+        return p
+
+    p = {"router": dense_init(ks[0], d, m.num_experts, dtype),
+         "experts": expert_bank(ks[1], m.num_experts, m.d_expert)}
+    if m.num_shared_experts:
+        dsh = (m.d_shared or m.d_expert) * m.num_shared_experts
+        kk = jax.random.split(ks[2], 3)
+        sh = {"w_in": dense_init(kk[0], d, dsh, dtype),
+              "w_out": dense_init(kk[1], dsh, d, dtype)}
+        if glu:
+            sh["w_gate"] = dense_init(kk[2], d, dsh, dtype)
+        p["shared"] = sh
+    return p
+
+
+def _ffn_apply(p, x, act):
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        h = act(h) * (x @ p["w_gate"])
+    else:
+        h = act(h)
+    return h @ p["w_out"]
+
+
+def _moe_decode_gather(params, cfg, x, gates, ids, act):
+    """x (G,S,d); gates/ids (G,S,K). Gathers (G*S*K) expert weight rows."""
+    m = cfg.moe
+    G, S, d = x.shape
+    K = m.top_k
+    flat_ids = ids.reshape(-1)                                   # (T*K,)
+    w_in = params["experts"]["w_in"][flat_ids]                   # (T*K,d,f)
+    w_out = params["experts"]["w_out"][flat_ids]                 # (T*K,f,d)
+    xt = jnp.repeat(x.reshape(-1, d), K, axis=0)                 # (T*K,d)
+    h = jnp.einsum("td,tdf->tf", xt, w_in)
+    if "w_gate" in params["experts"]:
+        w_g = params["experts"]["w_gate"][flat_ids]
+        h = act(h) * jnp.einsum("td,tdf->tf", xt, w_g)
+    else:
+        h = act(h)
+    yt = jnp.einsum("tf,tfd->td", h, w_out)                      # (T*K,d)
+    yt = yt.reshape(G, S, K, d) * gates.astype(yt.dtype)[..., None]
+    return yt.sum(axis=2) * jnp.asarray(m.routed_scale, x.dtype)
+
+
+def moe_ffn(params, cfg, x, *, capacity_factor: float = None
+            ) -> Tuple[jnp.ndarray, dict]:
+    """x: (G, S, d) — G is the (data-sharded) group/batch axis.
+    Returns (y (G,S,d), aux dict)."""
+    m = cfg.moe
+    act = activation_fn(cfg.activation)
+    G, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    C = max(1, min(int(S * K * cf / E + 0.999), S * K))
+
+    logits = (x @ params["router"]).astype(jnp.float32)            # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, K)                           # (G,S,K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    if m.decode_gather and G * S * K < E:
+        # tiny-batch decode: gather ONLY the active experts' weights instead
+        # of streaming the full expert bank through the dispatch einsum —
+        # at batch 1 that is the difference between reading N_total and
+        # N_active parameters per token (§Perf long_500k iteration)
+        y = _moe_decode_gather(params, cfg, x, gates, ids, act)
+        if "shared" in params:
+            y = y + _ffn_apply(params["shared"], x, act)
+        aux = {"moe_aux_loss": jnp.zeros(()), "moe_z_loss": jnp.zeros(()),
+               "moe_drop_frac": jnp.zeros(())}
+        return y, aux
+
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int8).sum(2)         # (G,S,E)
+    pos_base = (jnp.cumsum(onehot.astype(jnp.int32), axis=1)
+                - onehot.astype(jnp.int32))                        # (G,S,E)
+    pos = jnp.take_along_axis(pos_base, ids.astype(jnp.int32), axis=2)  # (G,S,K)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C - 1).astype(jnp.int32)
+
+    # local batched scatter into (G, E, C, d)
+    e_f = ids.reshape(G, S * K).astype(jnp.int32)
+    p_f = pos_c.reshape(G, S * K)
+    upd = jnp.repeat(x, K, axis=1) * keep.reshape(G, S * K, 1).astype(x.dtype)
+    g_ix = jnp.arange(G, dtype=jnp.int32)[:, None]
+    buf = jnp.zeros((G, E, C, d), x.dtype).at[g_ix, e_f, p_f].add(upd)
+    buf = constrain(buf, ("pod", "data"), None, None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, params["experts"]["w_in"])
+    if "w_gate" in params["experts"]:
+        h = act(h) * jnp.einsum("gecd,edf->gecf", buf, params["experts"]["w_gate"])
+    else:
+        h = act(h)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["experts"]["w_out"])
+    out_buf = constrain(out_buf, ("pod", "data"), None, None, None)
+
+    gathered = out_buf[g_ix, e_f, p_f]                              # (G,S*K,d)
+    gathered = gathered.reshape(G, S, K, d)
+    gathered = gathered * (gates * keep).astype(gathered.dtype)[..., None]
+    y = gathered.sum(axis=2) * jnp.asarray(m.routed_scale, x.dtype)
+
+    if "shared" in params:
+        y = y + _ffn_apply(params["shared"], x, act)
+
+    me = probs.mean((0, 1))                                         # (E,)
+    ce = onehot.astype(jnp.float32).mean((0, 1)) / K                # frac of assignments
+    aux = {
+        "moe_aux_loss": m.router_aux_weight * E * jnp.sum(me * ce),
+        "moe_z_loss": 1e-3 * jnp.mean(jax.nn.logsumexp(logits, -1) ** 2),
+        "moe_drop_frac": 1.0 - keep.astype(jnp.float32).mean(),
+    }
+    return y, aux

@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> [gate branch (GeLU), recurrent branch: conv1d -> RG-LRU] ->
+elementwise product -> output projection.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_r x_t + b_r)          recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill uses an associative scan over the sequence (log-depth on TPU);
+decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+_C = 8.0  # Griffin's fixed scalar
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a ~ uniform(0.9, 0.999)^c-ish (Griffin appendix)
+    u = jax.random.uniform(ks[4], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^{-1}(-log u / c)
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype),      # recurrent branch in-proj
+        "w_y": dense_init(ks[1], d, w, dtype),      # gate branch in-proj
+        "conv_w": jax.random.normal(ks[2], (r.d_conv, w), dtype) * 0.1,
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": dense_init(ks[3], w, w, dtype),
+        "b_r": jnp.zeros((w,), dtype),
+        "w_i": dense_init(ks[5], w, w, dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _conv(x, w, b, state):
+    K = w.shape[0]
+    B, S, W = x.shape
+    if state is None:
+        ctx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, i:i + S] * w[i] for i in range(K)) + b
+    return y, ctx[:, -(K - 1):]
+
+
+def _rglru_scan(params, x, h0):
+    """x: (B,S,W) fp32; h0: (B,W) fp32. Returns (y, h_final)."""
+    r = jax.nn.sigmoid(x @ params["w_r"].astype(jnp.float32) + params["b_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x @ params["w_i"].astype(jnp.float32) + params["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r               # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+    # h_t = a_t h_{t-1} + g_t  via associative scan on (a, g)
+    def combine(l, r_):
+        a1, g1 = l
+        a2, g2 = r_
+        return a1 * a2, g1 * a2 + g2
+    a_s, g_s = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = a_s * h0[:, None, :] + g_s
+    return h, h[:, -1]
+
+
+def rglru_mixer(params, cfg, x, state=None, *, decode: bool = False):
+    """state = {"conv": (B,K-1,W), "rec": (B,W)}. Returns (y, new_state)."""
+    xr = x @ params["w_x"]
+    gate = jax.nn.gelu(x @ params["w_y"])
+    conv_state = state["conv"] if state is not None else None
+    xr, new_conv = _conv(xr, params["conv_w"], params["conv_b"], conv_state)
+    h0 = (state["rec"].astype(jnp.float32) if state is not None
+          else jnp.zeros((x.shape[0], xr.shape[-1]), jnp.float32))
+    if decode and x.shape[1] == 1:
+        xf = xr.astype(jnp.float32)
+        r = jax.nn.sigmoid(xf @ params["w_r"].astype(jnp.float32) + params["b_r"].astype(jnp.float32))
+        i = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32) + params["b_i"].astype(jnp.float32))
+        log_a = -_C * jax.nn.softplus(params["lam"]) * r
+        a = jnp.exp(log_a)
+        h = a * h0[:, None] + jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) * (i * xf)
+        y, h_fin = h, h[:, -1]
+    else:
+        y, h_fin = _rglru_scan(params, xr.astype(jnp.float32), h0)
+    out = (y.astype(x.dtype) * gate) @ params["w_out"]
+    new_state = ({"conv": new_conv, "rec": h_fin}
+                 if (state is not None or decode) else None)
+    return out, new_state
+
+
+def init_rglru_state(cfg, batch, dtype=jnp.float32):
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, r.d_conv - 1, w), dtype),
+            "rec": jnp.zeros((batch, w), jnp.float32)}

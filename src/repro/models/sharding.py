@@ -1,0 +1,93 @@
+"""Mesh context + activation sharding constraints.
+
+Models are written mesh-agnostically: they call ``constrain(x, *axes)`` with
+*logical* axis names; if no mesh is active (CPU unit tests) this is a no-op.
+Axis names that are missing from the active mesh, or that do not divide the
+corresponding dimension, are dropped — so the same model code lowers on a
+1-device CPU, a 16x16 pod and a 2x16x16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+# logical -> mesh axes. "batch" expands to every data-parallel mesh axis.
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+EXPERT_AXIS = "model"
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _ACTIVE_MESH
+    prev, _ACTIVE_MESH = _ACTIVE_MESH, mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _ACTIVE_MESH = prev
+
+
+AxisLike = Union[None, str, Tuple[str, ...]]
+
+
+def _resolve_axis(mesh: Mesh, axis: AxisLike, dim: int) -> AxisLike:
+    """Drop mesh axes that are absent or do not divide ``dim``."""
+    if axis is None:
+        return None
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    kept = []
+    size = 1
+    for n in names:
+        if n not in mesh.axis_names:
+            continue
+        nsz = mesh.shape[n]
+        if dim % (size * nsz) != 0:
+            continue
+        kept.append(n)
+        size *= nsz
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else tuple(kept)
+
+
+def resolve_spec(mesh: Mesh, spec: Sequence[AxisLike], shape: Sequence[int]) -> P:
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    return P(*[_resolve_axis(mesh, a, d) for a, d in zip(axes, shape)])
+
+
+def constrain(x, *spec: AxisLike):
+    """with_sharding_constraint with logical axes; no-op without a mesh."""
+    mesh = _ACTIVE_MESH
+    if mesh is None or len(mesh.devices.ravel()) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve_spec(mesh, spec, x.shape)))
+
+
+def batch_spec() -> Tuple[str, ...]:
+    return BATCH_AXES
+
+
+def named(spec: Sequence[AxisLike], shape: Sequence[int]) -> Optional[NamedSharding]:
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(mesh, spec, shape))

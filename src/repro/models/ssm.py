@@ -1,0 +1,200 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Prefill/train: chunked SSD — quadratic attention-like math inside chunks of
+``chunk_size`` tokens, linear recurrence across chunks (lax.scan).  Decode:
+O(1) recurrent state update.  The per-chunk einsum block is the compute
+hot-spot and has a Pallas TPU kernel (``repro.kernels.ssd``); this module is
+the XLA path and the numerical reference.
+
+Layout: d_inner = expand*d_model, heads H = d_inner/head_dim P, groups G
+(B/C shared across H/G heads), state N = d_state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+from .sharding import constrain
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.ngroups * s.d_state
+    return d_in, nheads, conv_dim
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 5)
+    # fused input projection: [z (gate), x, B, C, dt]
+    zxbcdt = 2 * d_in + 2 * s.ngroups * s.d_state + H
+    dt = jnp.exp(jax.random.uniform(ks[1], (H,)) *
+                 (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return {
+        "w_in": dense_init(ks[0], d, zxbcdt, dtype),
+        "conv_w": (jax.random.normal(ks[2], (s.d_conv, conv_dim), dtype) * 0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "out_norm": jnp.zeros((d_in,), dtype),
+        "w_out": dense_init(ks[3], d_in, d, dtype),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv; returns (y, new_state). xBC: (B,S,Cd)."""
+    K = conv_w.shape[0]
+    B, S, Cd = xBC.shape
+    if conv_state is None:
+        ctx = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    y = sum(ctx[:, i:i + S] * conv_w[i] for i in range(K)) + conv_b
+    new_state = ctx[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, Cd), xBC.dtype)
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(x):
+    """x: (..., Q). Returns (..., Q, Q) lower-tri cumulative sums
+    seg[i,j] = sum_{j<k<=i} x[k] (i>=j), -inf above diagonal."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None,
+                use_kernel: bool = False):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      softplus'd step sizes
+    A:  (H,)           negative decay rates
+    Bm: (B, S, G, N)   input mats;  Cm: (B, S, G, N) output mats
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+    rep = H // G
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, G, N)
+    Cc = Cm.reshape(Bsz, nc, Q, G, N)
+    dA = dtc * A  # (B,nc,Q,H)  negative
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y_diag, chunk_states = kops.ssd_chunk(xc, dtc, dA, dA_cs, Bc, Cc)
+    else:
+        # intra-chunk ("diagonal") output
+        L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # (B,nc,H,Q,Q)
+        CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)           # (B,nc,G,Q,Q)
+        CB = jnp.repeat(CB, rep, axis=2)                        # -> H
+        scores = CB * L
+        y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores, dtc, xc)
+        # per-chunk end states (B repeated to heads — do NOT sum over groups)
+        decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # (B,nc,Q,H)
+        Br = jnp.repeat(Bc, rep, axis=3)                        # (B,nc,Q,H,N)
+        chunk_states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                                  Br, dtc * decay_to_end, xc)   # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                    # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        cd, cs = inp                                             # (B,H), (B,H,P,N)
+        h_new = h * cd[..., None, None] + cs
+        return h_new, h                                          # emit state *entering* chunk
+
+    _, h_prev = jax.lax.scan(step, init_state.astype(jnp.float32),
+                             (chunk_decay.transpose(1, 0, 2),
+                              chunk_states.transpose(1, 0, 2, 3, 4).astype(jnp.float32)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,P,N)
+    final_state = (h_prev[:, -1] * chunk_decay[:, -1][..., None, None]
+                   + chunk_states[:, -1].astype(jnp.float32))
+
+    # inter-chunk ("off-diagonal") output
+    state_decay = jnp.exp(dA_cs)                                  # decay from chunk start
+    Cr = jnp.repeat(Cc, rep, axis=3)                              # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cr,
+                       h_prev.astype(Cr.dtype), state_decay.astype(Cr.dtype))
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, final_state
+
+
+def ssm_mixer(params, cfg, x, state=None, *, decode: bool = False,
+              use_kernel: bool = False):
+    """Full Mamba-2 block mixer.  state = {"conv": (B,K-1,Cd), "ssm": (B,H,P,N)}.
+
+    Returns (y, new_state).  When state is None (training), no state is
+    returned-updated (final state discarded).
+    """
+    s = cfg.ssm
+    d_in, H, conv_dim = _dims(cfg)
+    G, N, P = s.ngroups, s.d_state, s.head_dim
+    Bsz, S, _ = x.shape
+    proj = x @ params["w_in"]
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:d_in + conv_dim]
+    dt_raw = proj[..., d_in + conv_dim:]
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"], conv_state)
+    xs = xBC[..., :d_in].reshape(Bsz, S, H, P)
+    Bm = xBC[..., d_in:d_in + G * N].reshape(Bsz, S, G, N)
+    Cm = xBC[..., d_in + G * N:].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                          # (H,)
+
+    if decode and S == 1:
+        h0 = state["ssm"].astype(jnp.float32)                    # (B,H,P,N)
+        dt1 = dt[:, 0]                                           # (B,H)
+        dA = jnp.exp(dt1 * A)                                    # (B,H)
+        Br = jnp.repeat(Bm[:, 0], H // G, axis=1)                # (B,H,N)
+        Bx = jnp.einsum("bhn,bh,bhp->bhpn",
+                        Br.astype(jnp.float32), dt1,
+                        xs[:, 0].astype(jnp.float32))
+        h1 = h0 * dA[..., None, None] + Bx
+        Cr = jnp.repeat(Cm[:, 0], H // G, axis=1)                # (B,H,N)
+        y = jnp.einsum("bhn,bhpn->bhp", Cr.astype(jnp.float32), h1)
+        y = y[:, None]                                           # (B,1,H,P)
+        new_ssm = h1
+    else:
+        init = state["ssm"] if state is not None else None
+        y, new_ssm = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk_size,
+                                 init_state=init, use_kernel=use_kernel)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], cfg.rms_eps)
+    out = y @ params["w_out"]
+    new_state = {"conv": new_conv, "ssm": new_ssm} if (state is not None or decode) else None
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in, H, conv_dim = _dims(cfg)
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32)}

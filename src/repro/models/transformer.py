@@ -1,0 +1,307 @@
+"""Config-driven transformer family: init + train/prefill/decode passes.
+
+Production details:
+  * scan-over-layers: homogeneous layer cycles are stacked and driven by
+    ``lax.scan`` (small HLO, fast compile at 94-layer scale); heterogeneous
+    prefix/tail layers run as plain Python loops.
+  * remat: each scanned cycle is wrapped in ``jax.checkpoint`` for training.
+  * the same ``step`` function serves prefill (S tokens), speculative
+    verification (S = gamma+1, returns all logits) and decode (S = 1).
+  * enc-dec (audio) and VLM wrappers are integrated: stub frontends provide
+    precomputed frame/patch embeddings (DESIGN.md carve-out), a learned
+    projector maps them into the decoder's embedding space.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import encode_cross_kv, init_attention, attn_train, cross_attn
+from .blocks import block_cached, block_train, ffn_apply, init_block, init_ffn
+from .cache import CacheSpec, LayerCacheSpec, build_cache_spec, init_layer_cache
+from .common import dense_init, embed_init, rms_norm, softcap
+from .config import ModelConfig
+from .sharding import constrain
+
+
+# ------------------------------------------------------------ grouping
+
+@dataclass(frozen=True)
+class LayerGrouping:
+    prefix: Tuple[int, ...]
+    scan_start: int
+    n_cycles: int
+    period: int
+    tail: Tuple[int, ...]
+
+
+def layer_grouping(cfg: ModelConfig) -> LayerGrouping:
+    P = len(cfg.block_pattern)
+    start = 0
+    if cfg.moe is not None and cfg.moe.dense_layers:
+        start = max(cfg.moe.dense_layers) + 1
+    n_cycles = max((cfg.num_layers - start) // P, 0)
+    if n_cycles < 2 or not cfg.scan_layers:   # unrolled
+        return LayerGrouping(tuple(range(cfg.num_layers)), cfg.num_layers, 0, P, ())
+    tail_start = start + n_cycles * P
+    return LayerGrouping(tuple(range(start)), start, n_cycles, P,
+                         tuple(range(tail_start, cfg.num_layers)))
+
+
+# ------------------------------------------------------------ init
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    g = layer_grouping(cfg)
+    keys = jax.random.split(key, 8)
+    cross = cfg.is_encdec
+    p: dict = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+               "final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+
+    lkeys = jax.random.split(keys[2], cfg.num_layers)
+    layers = {"prefix": [init_block(lkeys[i], cfg, i, cross=cross, dtype=dtype)
+                         for i in g.prefix],
+              "tail": [init_block(lkeys[i], cfg, i, cross=cross, dtype=dtype)
+                       for i in g.tail]}
+    if g.n_cycles:
+        def init_cycle(ck):
+            cks = jax.random.split(ck, g.period)
+            return {str(j): init_block(cks[j], cfg, g.scan_start + j,
+                                       cross=cross, dtype=dtype)
+                    for j in range(g.period)}
+        layers["stack"] = jax.vmap(init_cycle)(
+            jax.random.split(keys[3], g.n_cycles))
+    else:
+        layers["stack"] = None
+    p["layers"] = layers
+
+    if cfg.is_encdec:
+        e = cfg.encdec
+        ekeys = jax.random.split(keys[4], e.num_encoder_layers + 1)
+        p["enc_proj"] = dense_init(ekeys[0], e.frontend_dim, cfg.d_model, dtype)
+        enc_cfg = cfg.replace(block_pattern=("attn",), moe=None)
+        p["encoder"] = {
+            "layers": [init_block(ekeys[i + 1], enc_cfg, i, dtype=dtype)
+                       for i in range(e.num_encoder_layers)],
+            "final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.vision is not None:
+        v = cfg.vision
+        h = v.projector_hidden or v.vit_dim * 4
+        vk = jax.random.split(keys[5], 2)
+        p["vis_proj"] = {"w1": dense_init(vk[0], v.vit_dim, h, dtype),
+                         "w2": dense_init(vk[1], h, cfg.d_model, dtype)}
+    return p
+
+
+# ------------------------------------------------------------ embed/head
+
+def embed_tokens(params, cfg, tokens):
+    x = params["embed"][tokens]
+    return x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+
+
+def project_vision(params, patch_embeds):
+    h = jax.nn.gelu(patch_embeds @ params["vis_proj"]["w1"])
+    return h @ params["vis_proj"]["w2"]
+
+
+def logits_fn(params, cfg, hidden):
+    w = params["lm_head"] if "lm_head" in params else params["embed"].T
+    logits = hidden @ w
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return softcap(logits, cfg.logits_softcap)
+
+
+# ------------------------------------------------------------ encoder
+
+def encode(params, cfg, frame_embeds, impl: str = "auto"):
+    """Audio/enc-dec encoder over stub frontend embeddings (B, T, F)."""
+    x = frame_embeds @ params["enc_proj"]
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    enc_cfg = cfg.replace(block_pattern=("attn",), moe=None)
+    causal = cfg.encdec.encoder_is_causal
+    for i, lp in enumerate(params["encoder"]["layers"]):
+        h = rms_norm(x, lp["norm1"], cfg.rms_eps)
+        h = attn_train(lp["mixer"], enc_cfg, h, positions, causal=causal, impl=impl)
+        x = x + h
+        h = rms_norm(x, lp["norm2"], cfg.rms_eps)
+        x = x + ffn_apply(lp["ffn"], enc_cfg, h)
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.rms_eps)
+
+
+# ------------------------------------------------------------ train pass
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
+                   frame_embeds=None, impl: str = "auto", remat: bool = True):
+    """Full-sequence causal pass. Returns (hidden (B,S',d), aux_loss scalar).
+
+    S' = S (+ num_patches for VLM). Loss masking over patch positions is the
+    caller's job (``training.losses``)."""
+    g = layer_grouping(cfg)
+    x = embed_tokens(params, cfg, tokens)
+    if patch_embeds is not None:
+        x = jnp.concatenate([project_vision(params, patch_embeds).astype(x.dtype), x], axis=1)
+    x = constrain(x, ("pod", "data"), None, None)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_out = encode(params, cfg, frame_embeds, impl) if frame_embeds is not None else None
+
+    aux_total = jnp.zeros((), jnp.float32)
+    seq_spec = ("model",) if cfg.seq_shard_activations else (None,)
+
+    def run_block(lp, idx, x):
+        # residual stream sequence-sharded between blocks (Megatron-SP style):
+        # the remat-saved per-layer input shrinks by the model-axis size.
+        x = constrain(x, ("pod", "data"), *seq_spec)
+        x, aux = block_train(lp, cfg, idx, x, positions, enc_out=enc_out, impl=impl)
+        a = sum(v for k, v in aux.items() if k.endswith("loss"))
+        return x, jnp.asarray(a, jnp.float32)
+
+    for i, lp in zip(g.prefix, params["layers"]["prefix"]):
+        x, a = run_block(lp, i, x)
+        aux_total += a
+
+    if g.n_cycles:
+        def cycle(x, cp):
+            a_c = jnp.zeros((), jnp.float32)
+            for j in range(g.period):
+                x, a = run_block(cp[str(j)], g.scan_start + j, x)
+                a_c += a
+            return x, a_c
+        body = jax.checkpoint(cycle) if remat else cycle
+        x, a_cyc = jax.lax.scan(body, x, params["layers"]["stack"])
+        aux_total += a_cyc.sum()
+
+    for i, lp in zip(g.tail, params["layers"]["tail"]):
+        x, a = run_block(lp, i, x)
+        aux_total += a
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, aux_total
+
+
+# ------------------------------------------------------------ cached step
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    spec = build_cache_spec(cfg, max_len)
+    g = layer_grouping(cfg)
+
+    def mk(i):
+        return init_layer_cache(cfg, spec.layers[i], batch, dtype)
+
+    layers = {"prefix": [mk(i) for i in g.prefix],
+              "tail": [mk(i) for i in g.tail],
+              "stack": None}
+    if g.n_cycles:
+        one_cycle = {str(j): mk(g.scan_start + j) for j in range(g.period)}
+        layers["stack"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (g.n_cycles,) + a.shape), one_cycle)
+    cache = {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+    if cfg.is_encdec:
+        cache["cross"] = None  # filled by prefill(enc_out=...)
+    return cache, spec
+
+
+def _init_cross(params, cfg, enc_out):
+    g = layer_grouping(cfg)
+    cross = {"prefix": [encode_cross_kv(params["layers"]["prefix"][k]["cross"], cfg, enc_out)
+                        for k in range(len(g.prefix))],
+             "tail": [encode_cross_kv(params["layers"]["tail"][k]["cross"], cfg, enc_out)
+                      for k in range(len(g.tail))],
+             "stack": None}
+    if g.n_cycles:
+        cross["stack"] = jax.vmap(
+            lambda cp: {str(j): encode_cross_kv(cp[str(j)]["cross"], cfg, enc_out)
+                        for j in range(g.period)}
+        )(params["layers"]["stack"])
+    return cross
+
+
+def step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
+         patch_embeds=None, frame_embeds=None, all_logits: bool = False,
+         impl: str = "auto", remat: bool = False):
+    """Advance the model by S tokens against the cache.
+
+    Serves prefill (S large), speculative verification (S = gamma+1,
+    ``all_logits=True``) and decode (S = 1).
+    Returns (logits, new_cache): logits (B,S,V) if all_logits else (B,1,V).
+    """
+    g = layer_grouping(cfg)
+    pos0 = cache["pos"]
+    x = embed_tokens(params, cfg, tokens)
+    if patch_embeds is not None:
+        x = jnp.concatenate([project_vision(params, patch_embeds).astype(x.dtype), x], axis=1)
+    x = constrain(x, ("pod", "data"), None, None)
+
+    if frame_embeds is not None:
+        enc_out = encode(params, cfg, frame_embeds, impl)
+        cache = {**cache, "cross": _init_cross(params, cfg, enc_out)}
+    cross = cache.get("cross")
+
+    layers = cache["layers"]
+    new_layers = {"prefix": [], "tail": [], "stack": None}
+
+    for k, i in enumerate(g.prefix):
+        x, lc = block_cached(params["layers"]["prefix"][k], cfg, i, x, pos0,
+                             layers["prefix"][k], spec.layers[i],
+                             cross_kv=None if cross is None else cross["prefix"][k],
+                             impl=impl)
+        new_layers["prefix"].append(lc)
+
+    if g.n_cycles:
+        def cycle(x, xs):
+            if cross is not None:
+                cp, cc, cx = xs
+            else:
+                (cp, cc), cx = xs, None
+            new_cc = {}
+            for j in range(g.period):
+                idx = g.scan_start + j
+                x, lc = block_cached(cp[str(j)], cfg, idx, x, pos0, cc[str(j)],
+                                     spec.layers[idx],
+                                     cross_kv=None if cx is None else cx[str(j)],
+                                     impl=impl)
+                new_cc[str(j)] = lc
+            return x, new_cc
+        body = jax.checkpoint(cycle) if remat else cycle
+        xs = ((params["layers"]["stack"], layers["stack"], cross["stack"])
+              if cross is not None else
+              (params["layers"]["stack"], layers["stack"]))
+        x, new_stack = jax.lax.scan(body, x, xs)
+        new_layers["stack"] = new_stack
+
+    for k, i in enumerate(g.tail):
+        x, lc = block_cached(params["layers"]["tail"][k], cfg, i, x, pos0,
+                             layers["tail"][k], spec.layers[i],
+                             cross_kv=None if cross is None else cross["tail"][k],
+                             impl=impl)
+        new_layers["tail"].append(lc)
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if not all_logits:
+        x = x[:, -1:]
+    logits = logits_fn(params, cfg, x)
+    S_new = tokens.shape[1] + (0 if patch_embeds is None else patch_embeds.shape[1])
+    new_cache = {**cache, "pos": pos0 + S_new, "layers": new_layers}
+    return logits, new_cache
+
+
+# ------------------------------------------------------------ confidence API
+
+def prefill(params, cfg, tokens, cache, spec, **kw):
+    return step(params, cfg, tokens, cache, spec, all_logits=False, **kw)
+
+
+def decode_step(params, cfg, token, cache, spec, **kw):
+    assert token.shape[1] == 1
+    return step(params, cfg, token, cache, spec, all_logits=False, **kw)
+
+
+def verify_chunk(params, cfg, tokens, cache, spec, **kw):
+    return step(params, cfg, tokens, cache, spec, all_logits=True, **kw)

@@ -1,0 +1,120 @@
+"""Batched serving engine: continuous batching at the session level.
+
+Each request owns its own cache pair (stream); all streams share ONE jit
+cache (identical shapes) and ONE TapOut controller — the bandit is online
+across requests, exactly the paper's deployment setting (the policy adapts
+as the prompt distribution shifts).
+
+The scheduler interleaves at draft-session granularity: every scheduler
+tick runs one draft+verify session for the next unfinished stream
+(round-robin), so a long generation cannot starve the queue.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.controller import Controller
+from repro.core.engine import GenResult, ModelBundle, SpecEngine
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    submitted_at: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class Response:
+    request_id: int
+    result: GenResult
+    latency_s: float
+    queue_delay_s: float
+
+
+class SpecServer:
+    def __init__(self, draft: ModelBundle, target: ModelBundle,
+                 controller: Controller, *, max_len: int = 2048,
+                 max_concurrency: int = 8, temperature: float = 0.0,
+                 greedy: bool = True, seed: int = 0):
+        self.engine = SpecEngine(draft, target, controller, max_len=max_len,
+                                 temperature=temperature, greedy=greedy,
+                                 seed=seed)
+        self.max_concurrency = max_concurrency
+        self.queue: deque = deque()
+        self.active: Dict[int, dict] = {}   # request_id -> stream state
+        self.requests: Dict[int, Request] = {}
+        self.responses: List[Response] = []
+        self._next_id = 0
+        self._rr: deque = deque()           # round-robin order of active ids
+
+    # ------------------------------------------------------------- api
+    def submit(self, prompt: List[int], max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        req = Request(rid, prompt, max_new_tokens, eos_id)
+        self.requests[rid] = req
+        self.queue.append(rid)
+        return rid
+
+    def step(self) -> Optional[int]:
+        """One scheduler tick: admit + run one session. Returns the finished
+        request id if a stream completed this tick."""
+        # admit
+        while self.queue and len(self.active) < self.max_concurrency:
+            rid = self.queue.popleft()
+            req = self.requests[rid]
+            st = self.engine.start_stream(req.prompt)
+            st["started_at"] = time.perf_counter()
+            self.active[rid] = st
+            self._rr.append(rid)
+        if not self._rr:
+            return None
+        rid = self._rr.popleft()
+        st = self.active[rid]
+        req = self.requests[rid]
+        st = self.engine.session_step(st, req.eos_id)
+        self.active[rid] = st
+        res: GenResult = st["res"]
+        if st["done"] or res.new_tokens >= req.max_new_tokens:
+            now = time.perf_counter()
+            res.wall_time_s = now - st["started_at"]
+            self.responses.append(Response(
+                rid, res, latency_s=now - req.submitted_at,
+                queue_delay_s=st["started_at"] - req.submitted_at))
+            del self.active[rid]
+            return rid
+        self._rr.append(rid)
+        return None
+
+    def run_until_drained(self, max_ticks: int = 1_000_000) -> List[Response]:
+        ticks = 0
+        while (self.queue or self.active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.responses
+
+    # ------------------------------------------------------------- stats
+    def throughput_stats(self) -> dict:
+        if not self.responses:
+            return {}
+        toks = sum(r.result.new_tokens for r in self.responses)
+        cost = sum(r.result.modeled_cost for r in self.responses)
+        wall = sum(r.result.wall_time_s for r in self.responses)
+        acc = sum(r.result.total_accepted for r in self.responses)
+        drf = sum(r.result.total_drafted for r in self.responses)
+        return {
+            "n_requests": len(self.responses),
+            "total_new_tokens": toks,
+            "modeled_cost_per_token": cost / max(toks, 1),
+            "wall_s_per_token": wall / max(toks, 1),
+            "accept_rate": acc / max(drf, 1),
+            "mean_latency_s": sum(r.latency_s for r in self.responses)
+                               / len(self.responses),
+        }

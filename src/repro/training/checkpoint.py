@@ -1,0 +1,54 @@
+"""Pytree checkpointing: npz payload + json tree structure. No deps."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, metadata: dict = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    for p, leaf in flat:
+        k = _path_str(p)
+        keys.append(k)
+        arrays[k] = np.asarray(leaf)
+    np.savez_compressed(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump({"keys": keys, "treedef": str(treedef),
+                   "metadata": metadata or {}}, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    payload = np.load(path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        k = _path_str(p)
+        arr = payload[k]
+        assert arr.shape == tuple(np.shape(leaf)), (k, arr.shape, np.shape(leaf))
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+def checkpoint_exists(path: str) -> bool:
+    return os.path.exists(path + ".npz") and os.path.exists(path + ".json")

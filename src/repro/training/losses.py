@@ -1,0 +1,45 @@
+"""Sequence-chunked cross-entropy: never materializes (B, S, V) logits.
+
+For the big-vocab assigned architectures (vocab up to 256k), full-sequence
+logits at train_4k would be ~0.5 TB; we scan over sequence chunks and
+compute logits + CE per chunk (the logits stay (B, chunk, V), sharded
+vocab-over-model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cross_entropy_with_logits
+from repro.models.transformer import logits_fn
+
+
+def chunked_ce_loss(params, cfg, hidden, labels, mask=None, chunk: int = 512):
+    """hidden (B,S,d), labels (B,S) -> mean CE over valid positions."""
+    B, S, _ = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        m = jnp.pad(mask if mask is not None else jnp.ones((B, S), bool),
+                    ((0, 0), (0, pad)))
+    else:
+        m = mask if mask is not None else jnp.ones((B, S), bool)
+    n = hidden.shape[1] // chunk
+    hs = hidden.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = m.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, l, mm = xs
+        logits = logits_fn(params, cfg, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mm.astype(jnp.float32)
+        return (tot + nll.sum(), cnt + mm.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

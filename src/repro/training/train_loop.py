@@ -1,0 +1,96 @@
+"""Jitted train step + host training loop."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import forward_hidden
+from .losses import chunked_ce_loss
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+
+def make_train_step(cfg, opt_cfg: OptConfig, *, impl: str = "auto",
+                    remat: bool = True, ce_chunk: int = 512,
+                    compute_dtype=None, microbatches: int = 1,
+                    donate: bool = True) -> Callable:
+    """Returns jitted (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch: {"tokens": (B,S) int32, "labels": (B,S) int32,
+            optional "patch_embeds" / "frame_embeds" / "mask"}.
+    compute_dtype: bf16 mixed-precision forward (params stay f32 masters).
+    microbatches: grad-accumulation over B/microbatches slices (scan) — cuts
+    the activation/MoE working set at the cost of re-gathering FSDP-sharded
+    weights per microbatch (§Perf iteration knob).
+    """
+
+    def loss_fn(params, batch):
+        if compute_dtype is not None:
+            params = jax.tree.map(
+                lambda p: p.astype(compute_dtype)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+        extras = {k: batch[k] for k in ("patch_embeds", "frame_embeds")
+                  if k in batch}
+        hidden, aux = forward_hidden(params, cfg, batch["tokens"],
+                                     impl=impl, remat=remat, **extras)
+        if cfg.vision is not None and "patch_embeds" in batch:
+            hidden = hidden[:, batch["patch_embeds"].shape[1]:]
+        ce = chunked_ce_loss(params, cfg, hidden, batch["labels"],
+                             mask=batch.get("mask"), chunk=ce_chunk)
+        return ce + aux, (ce, aux)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            (_, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            def slice_mb(x):
+                B = x.shape[0]
+                assert B % microbatches == 0, (B, microbatches)
+                return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+            mbs = jax.tree.map(slice_mb, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                g_acc, ce_acc, aux_acc = carry
+                (_, (ce, aux)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_acc, g)
+                return (g_acc, ce_acc + ce, aux_acc + aux), None
+
+            (grads, ce, aux), _ = jax.lax.scan(
+                acc, (zero, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            ce, aux = ce / microbatches, aux / microbatches
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": ce, "aux_loss": aux, **om}
+        return params, opt_state, metrics
+
+    if not donate:
+        return train_step            # raw fn (dry-run wraps it with shardings)
+    return jax.jit(train_step, donate_argnums=(0, 1))
+
+
+def train(cfg, params, batches: Iterator, opt_cfg: OptConfig, *,
+          steps: int, log_every: int = 50, impl: str = "auto",
+          remat: bool = True, callback=None) -> Dict:
+    step_fn = make_train_step(cfg, opt_cfg, impl=impl, remat=remat)
+    opt_state = init_opt_state(params)
+    history = []
+    t0 = time.perf_counter()
+    for s in range(steps):
+        x, y = next(batches)
+        batch = {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if s % log_every == 0 or s == steps - 1:
+            m = {k: float(v) for k, v in m.items()}
+            m["step"] = s
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(m)
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,51 @@
+import os
+import sys
+
+# Smoke tests and benches must see the single real CPU device — the 512-device
+# XLA flag belongs ONLY to launch/dryrun.py (run as a separate process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models import transformer as T
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _free_jit_executables_between_modules():
+    """The CPU LLVM JIT arena is finite: 133 tests' compiled executables
+    accumulate and eventually fail with 'Cannot allocate memory' /
+    'Failed to materialize symbols'. Dropping jax's compilation caches
+    between test modules keeps the arena bounded."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_pair():
+    """(draft_bundle, target_bundle) of small dense models (random init)."""
+    from repro.core import ModelBundle
+    V = 61
+    tcfg = ModelConfig(name="tgt", arch_type="dense", num_layers=4, d_model=128,
+                       num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=V)
+    dcfg = ModelConfig(name="drf", arch_type="dense", num_layers=2, d_model=64,
+                       num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=V)
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    return ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+
+
+def ar_greedy_decode(params, cfg, prompt, n, max_len=256):
+    """Target-only greedy decoding reference."""
+    cache, spec = T.init_cache(cfg, 1, max_len, jnp.float32)
+    seq = list(prompt)
+    lg, cache = T.step(params, cfg, jnp.asarray([seq], jnp.int32), cache, spec)
+    for _ in range(n):
+        t = int(jnp.argmax(lg[0, -1]))
+        seq.append(t)
+        lg, cache = T.step(params, cfg, jnp.asarray([[t]], jnp.int32), cache, spec)
+    return seq

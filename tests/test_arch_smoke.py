@@ -1,0 +1,122 @@
+"""Per assigned architecture: instantiate the REDUCED same-family variant and
+run one forward + one train step + one decode step on CPU; assert output
+shapes and no NaNs.  (Full configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, smoke_config
+from repro.launch.specs import SHAPES
+from repro.models import transformer as T
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+def _batch_for(cfg, B=2, S=16, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+    }
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    extras = {}
+    if cfg.vision is not None:
+        extras["patch_embeds"] = jax.random.normal(
+            rng, (B, cfg.vision.num_patches, cfg.vision.vit_dim))
+    if cfg.is_encdec:
+        extras["frame_embeds"] = jax.random.normal(
+            rng, (B, cfg.encdec.frontend_len, cfg.encdec.frontend_dim))
+    batch.update(extras)
+    return batch, extras
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_shapes(arch):
+    cfg = smoke_config(arch)
+    assert cfg.num_layers <= max(2, len(cfg.block_pattern))
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch, extras = _batch_for(cfg)
+    h, aux = T.forward_hidden(params, cfg, batch["tokens"], remat=False,
+                              **extras)
+    logits = T.logits_fn(params, cfg, h)
+    B, S = batch["tokens"].shape
+    extra_seq = cfg.vision.num_patches if cfg.vision is not None else 0
+    assert logits.shape == (B, S + extra_seq, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch, _ = _batch_for(cfg)
+    step = make_train_step(cfg, OptConfig(lr=1e-3, total_steps=10),
+                           remat=False, donate=False)
+    params2, opt2, m = jax.jit(step)(params, init_opt_state(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["loss"]) > 0
+    # params actually changed
+    l0 = jax.tree.leaves(params)[0]
+    l1 = jax.tree.leaves(params2)[0]
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch, extras = _batch_for(cfg, B=1, S=8)
+    cache, spec = T.init_cache(cfg, 1, 64, jnp.float32)
+    lg, cache = T.step(params, cfg, batch["tokens"], cache, spec, **extras)
+    for _ in range(3):
+        tok = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
+        lg, cache = T.step(params, cfg, tok, cache, spec)
+    assert lg.shape == (1, 1, cfg.vocab_size)
+    assert not np.isnan(np.asarray(lg, np.float32)).any()
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 102400),
+        "gemma-2b": (18, 2048, 8, 1, 256000),
+        "qwen3-4b": (36, 2560, 32, 8, 151936),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 256000),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 151936),
+        "mamba2-1.3b": (48, 2048, 1, 1, 50280),
+        "qwen2.5-3b": (36, 2048, 16, 2, 151936),
+        "internvl2-26b": (48, 6144, 48, 8, 92553),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 256206),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 200064),
+    }
+    for arch, (L, d, H, kv, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+                cfg.num_kv_heads, cfg.vocab_size) == (L, d, H, kv, V), arch
+        assert cfg.source
+
+
+def test_extra_config_details():
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.mla.kv_lora_rank == 512 and ds.moe.top_k == 6
+    assert ds.moe.num_shared_experts == 2
+    q3 = get_config("qwen3-moe-235b-a22b")
+    assert q3.moe.num_experts == 128 and q3.moe.top_k == 8
+    assert get_config("qwen2.5-3b").qkv_bias
+    assert get_config("qwen3-4b").qk_norm
+    rg = get_config("recurrentgemma-2b")
+    assert rg.block_pattern == ("rglru", "rglru", "local") and rg.window == 2048
+    mb = get_config("mamba2-1.3b")
+    assert mb.ssm.d_state == 128 and mb.is_attention_free
+    assert get_config("gemma-2b").resolved_head_dim == 256
+    assert get_config("seamless-m4t-large-v2").is_encdec
+    assert get_config("internvl2-26b").vision is not None
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"] == dict(seq_len=4096, batch=256, kind="train")
+    assert SHAPES["prefill_32k"] == dict(seq_len=32768, batch=32, kind="prefill")
+    assert SHAPES["decode_32k"] == dict(seq_len=32768, batch=128, kind="decode")
+    assert SHAPES["long_500k"] == dict(seq_len=524288, batch=1, kind="decode")

@@ -1,0 +1,92 @@
+"""Bandit algorithm unit tests: convergence, posterior updates, bank."""
+import numpy as np
+import pytest
+
+from repro.core.bandits import (BanditBank, EpsilonGreedy, ThompsonBeta,
+                                ThompsonGaussian, UCB1, UCBTuned, make_bandit)
+
+
+def _run(bandit, means, steps=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    pulls = np.zeros(len(means), int)
+    for _ in range(steps):
+        a = bandit.select()
+        r = float(rng.random() < means[a])
+        bandit.update(a, r)
+        pulls[a] += 1
+    return pulls
+
+
+@pytest.mark.parametrize("cls", [UCB1, UCBTuned, ThompsonBeta, EpsilonGreedy])
+def test_identifies_best_arm(cls):
+    means = [0.2, 0.5, 0.8]
+    b = cls(3, seed=1)
+    pulls = _run(b, means)
+    assert pulls[2] > 0.6 * pulls.sum()
+    assert np.argmax(b.arm_values) == 2
+
+
+def test_ucb1_plays_all_arms_first():
+    b = UCB1(4)
+    seen = set()
+    for _ in range(4):
+        a = b.select()
+        seen.add(a)
+        b.update(a, 0.5)
+    assert seen == {0, 1, 2, 3}
+
+
+def test_ucb1_exploration_bonus_decreases():
+    b = UCB1(2)
+    for _ in range(100):
+        b.update(0, 0.5)
+    b.update(1, 0.4)
+    # arm 1 has a huge bonus (1 pull) -> selected despite lower mean
+    assert b.select() == 1
+
+
+def test_gaussian_ts_posterior_concentrates():
+    b = ThompsonGaussian(2, seed=0, noise_var=0.05)
+    for _ in range(200):
+        b.update(0, 0.9)
+        b.update(1, 0.1)
+    sel = [b.select() for _ in range(50)]
+    assert np.mean(np.array(sel) == 0) > 0.95
+    assert abs(b.arm_values[0] - 0.9) < 0.05
+
+
+def test_beta_ts_updates():
+    b = ThompsonBeta(2, seed=0)
+    b.update(0, 1.0)
+    b.update(0, 1.0)
+    b.update(1, 0.0)
+    assert b.alpha[0] == 3.0 and b.beta[0] == 1.0
+    assert b.alpha[1] == 1.0 and b.beta[1] == 2.0
+
+
+def test_variance_tracking():
+    b = UCBTuned(1)
+    data = [0.1, 0.9, 0.5, 0.3, 0.7]
+    for r in data:
+        b.update(0, r)
+    assert abs(b.variance(0) - np.var(data)) < 1e-9
+    assert abs(b.means[0] - np.mean(data)) < 1e-12
+
+
+def test_bandit_bank_positions_independent():
+    bank = BanditBank(4, lambda s: UCB1(3, s))
+    for _ in range(60):
+        arms = bank.select_all()
+        assert arms.shape == (4,)
+        # position 0 always rewarded on arm 1, position 3 on arm 2
+        bank.update(0, int(arms[0]), 1.0 if arms[0] == 1 else 0.0)
+        bank.update(3, int(arms[3]), 1.0 if arms[3] == 2 else 0.0)
+    assert np.argmax(bank.arm_values[0]) == 1
+    assert np.argmax(bank.arm_values[3]) == 2
+
+
+def test_make_bandit_registry():
+    for k in ["ucb1", "ucb_tuned", "ts_beta", "ts_gaussian", "eps_greedy"]:
+        assert make_bandit(k, 3).n_arms == 3
+    with pytest.raises(KeyError):
+        make_bandit("nope", 3)

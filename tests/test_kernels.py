@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+ops.FORCE_INTERPRET = True
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("B,H,G,Sq,Sk,D", [
+    (1, 2, 1, 64, 64, 64),
+    (2, 4, 2, 130, 130, 64),     # padding path
+    (1, 8, 1, 96, 96, 128),      # MQA, MXU-aligned head dim
+    (2, 4, 4, 33, 70, 32),       # MHA, ragged
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, G, Sq, Sk, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, G, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, G, Sk, D), dtype)
+    qpos = jnp.arange(Sq, dtype=jnp.int32) + (Sk - Sq)
+    kpos = jnp.arange(Sk, dtype=jnp.int32)
+    out = ops.flash_attention(q, k, v, qpos, kpos, block_q=64, block_k=64)
+    exp = ref.flash_attention_ref(q, k, v, qpos, kpos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_window():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32))
+    k = jax.random.normal(ks[1], (1, 1, 64, 32))
+    v = jax.random.normal(ks[2], (1, 1, 64, 32))
+    pos = jnp.arange(64, dtype=jnp.int32)
+    out = ops.flash_attention(q, k, v, pos, pos, window=8, block_q=32, block_k=32)
+    exp = ref.flash_attention_ref(q, k, v, pos, pos, window=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("B,H,G,L,D,valid", [
+    (1, 2, 1, 256, 64, 256),
+    (2, 4, 2, 300, 64, 200),     # ragged + invalid slots
+    (1, 8, 8, 128, 128, 100),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, G, L, D, valid, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, G, L, D), dtype)
+    v = jax.random.normal(ks[2], (B, G, L, D), dtype)
+    kpos = jnp.where(jnp.arange(L) < valid, jnp.arange(L), -1).astype(jnp.int32)
+    out = ops.decode_attention(q, k, v, jnp.int32(valid - 1), kpos, block_l=128)
+    exp = ref.decode_attention_ref(q, k, v, valid - 1, kpos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_ring_semantics():
+    """Stale ring slots (future positions) must be masked out."""
+    B, H, G, L, D = 1, 1, 1, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    kpos = jnp.arange(L, dtype=jnp.int32)
+    # query at pos 40: slots 41.. are "stale future" entries
+    out = ops.decode_attention(q, k, v, jnp.int32(40), kpos, block_l=32)
+    exp = ref.decode_attention_ref(q, k[:, :, :41], v[:, :, :41], 40,
+                                   kpos[:41])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("B,NC,Q,H,P,G,N", [
+    (1, 2, 16, 2, 32, 1, 16),
+    (2, 3, 16, 4, 32, 2, 16),    # grouped B/C
+    (1, 1, 64, 8, 64, 1, 128),   # mamba2-like dims
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_chunk_sweep(B, NC, Q, H, P, G, N, dtype):
+    kk = jax.random.split(jax.random.PRNGKey(4), 5)
+    xc = jax.random.normal(kk[0], (B, NC, Q, H, P), dtype)
+    dtc = jax.nn.softplus(jax.random.normal(kk[1], (B, NC, Q, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(kk[2], (H,)))
+    dA = dtc.astype(jnp.float32) * A
+    dA_cs = jnp.cumsum(dA, axis=2)
+    Bc = jax.random.normal(kk[3], (B, NC, Q, G, N), dtype)
+    Cc = jax.random.normal(kk[4], (B, NC, Q, G, N), dtype)
+    yk, stk = ops.ssd_chunk(xc, dtc, dA, dA_cs, Bc, Cc)
+    yr, sr = ref.ssd_chunk_ref(xc.astype(jnp.float32), dtc.astype(jnp.float32),
+                               dA, dA_cs, Bc.astype(jnp.float32),
+                               Cc.astype(jnp.float32))
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), **tol)
+    np.testing.assert_allclose(np.asarray(stk), np.asarray(sr), **tol)
+
+
+def test_ssd_kernel_inside_model_path():
+    """ssd_chunked(use_kernel=True) == XLA path on full scan."""
+    from repro.models.ssm import ssd_chunked
+    kk = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(kk[0], (2, 48, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(kk[1], (2, 48, 4)))
+    A = -jnp.exp(jax.random.normal(kk[2], (4,)))
+    Bm = jax.random.normal(kk[3], (2, 48, 2, 16))
+    Cm = jax.random.normal(kk[4], (2, 48, 2, 16))
+    y1, s1 = ssd_chunked(x, dt, A, Bm, Cm, 16, use_kernel=False)
+    y2, s2 = ssd_chunked(x, dt, A, Bm, Cm, 16, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-4)

@@ -1,0 +1,117 @@
+"""Hypothesis property tests over the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandits import UCB1, ThompsonBeta, UCBTuned
+from repro.core.rewards import r_blend, r_simple
+from repro.core.arms import update_adaedl_lambda
+from repro.data.tokenizer import ByteTokenizer
+
+
+# ------------------------------------------------------------- bandits
+
+@given(st.lists(st.tuples(st.integers(0, 4), st.floats(0, 1)), min_size=1,
+                max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_bandit_state_invariants(updates):
+    b = UCB1(5)
+    for arm, r in updates:
+        b.update(arm, r)
+    assert b.t == len(updates)
+    assert b.counts.sum() == len(updates)
+    assert np.all(b.means >= -1e-9) and np.all(b.means <= 1 + 1e-9)
+    for a in range(5):
+        assert 0 <= b.variance(a) <= 0.25 + 1e-6 or b.counts[a] < 2
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 1)), min_size=3,
+                max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_beta_ts_posterior_consistent(updates):
+    b = ThompsonBeta(3)
+    for arm, r in updates:
+        b.update(arm, float(r))
+    # posterior mean = (1 + successes) / (2 + pulls)
+    for a in range(3):
+        succ = sum(r for arm, r in updates if arm == a)
+        n = sum(1 for arm, _ in updates if arm == a)
+        assert abs(b.arm_values[a] - (1 + succ) / (2 + n)) < 1e-9
+
+
+@given(st.integers(1, 64), st.integers(0, 64), st.integers(1, 128))
+@settings(max_examples=100, deadline=None)
+def test_reward_bounds_and_monotonicity(n_drafted_raw, m_raw, gamma):
+    # engine invariant: m <= n_drafted <= gamma_max
+    n_drafted = min(n_drafted_raw, gamma)
+    m = min(m_raw, n_drafted)
+    for fn in (r_simple, r_blend):
+        r = fn(m, n_drafted, gamma)
+        assert -1e-9 <= r <= 1 + 1e-9
+    # blend is monotone in accepted count
+    if m + 1 <= n_drafted:
+        assert r_blend(m + 1, n_drafted, gamma) >= r_blend(m, n_drafted, gamma)
+    # r_simple ignores n_drafted entirely (incomplete proxy, paper 4.1.2)
+    assert r_simple(m, n_drafted, gamma) == r_simple(m, n_drafted * 2, gamma)
+
+
+@given(st.floats(0, 1), st.floats(0, 1), st.integers(0, 32), st.integers(1, 32))
+@settings(max_examples=100, deadline=None)
+def test_adaedl_lambda_stays_bounded(lam, ema, n_acc_raw, n_drafted):
+    n_acc = min(n_acc_raw, n_drafted)
+    lam2, ema2 = update_adaedl_lambda(lam, ema, n_acc, n_drafted)
+    assert 0.0 <= lam2 <= 1.0
+    assert 0.0 <= ema2 <= 1.0
+
+
+# ------------------------------------------------------------- tokenizer
+
+@given(st.text(max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_tokenizer_roundtrip(s):
+    tok = ByteTokenizer()
+    ids = tok.encode(s, bos=True, eos=True)
+    assert ids[0] == tok.BOS and ids[-1] == tok.EOS
+    assert tok.decode(ids) == s.encode("utf-8", errors="replace").decode(
+        "utf-8", errors="replace")
+    assert all(0 <= i < tok.vocab_size for i in ids)
+
+
+# ------------------------------------------------------------- MoE routing
+
+@given(st.integers(1, 4), st.integers(2, 16), st.data())
+@settings(max_examples=20, deadline=None)
+def test_moe_dispatch_positions_unique(G, S, data):
+    """No two kept (token,k) assignments share an (expert, slot)."""
+    import jax, jax.numpy as jnp
+    from repro.models import ModelConfig, MoEConfig
+    from repro.models.moe import init_moe, moe_ffn
+    E = data.draw(st.sampled_from([2, 4]))
+    cfg = ModelConfig(name="p", arch_type="moe", num_layers=1, d_model=16,
+                      num_heads=1, num_kv_heads=1, d_ff=32, vocab_size=11,
+                      moe=MoEConfig(num_experts=E, top_k=min(2, E),
+                                    d_expert=16, capacity_factor=1.0))
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(data.draw(st.integers(0, 100))),
+                          (G, S, 16))
+    y, aux = moe_ffn(params, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert 0.0 <= float(aux["moe_drop_frac"]) <= 1.0
+
+
+# ------------------------------------------------------------- masking rule
+
+@given(st.integers(0, 100), st.lists(st.integers(-1, 120), min_size=1,
+                                     max_size=64), st.integers(0, 16))
+@settings(max_examples=100, deadline=None)
+def test_attention_mask_rule(qpos, kpos_list, window):
+    """Position-based mask: valid, causal, windowed — matches the spec."""
+    import jax.numpy as jnp
+    from repro.models.attention import _mask
+    qp = jnp.asarray([qpos], jnp.int32)
+    kp = jnp.asarray(kpos_list, jnp.int32)
+    m = np.asarray(_mask(qp, kp, window, causal=True))[0]
+    for i, k in enumerate(kpos_list):
+        expect = (k >= 0) and (k <= qpos) and (window == 0 or qpos - k < window)
+        assert m[i] == expect

@@ -1,0 +1,53 @@
+"""SpecDec++ classifier baseline: training, calibration, controller use."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FixedArm, ModelBundle, SpecEngine
+from repro.core.controller import Controller
+from repro.core.specdecpp import (STOP_THRESHOLD, classifier_logit,
+                                  collect_from_traces, init_classifier,
+                                  make_specdecpp_arm, train_classifier)
+
+
+def test_classifier_learns_separable_rule():
+    rng = np.random.default_rng(0)
+    n = 2000
+    X = rng.normal(size=(n, 6)).astype(np.float32)
+    y = (X[:, 1] > 0.3).astype(np.float32)       # "high sqrt-entropy -> reject"
+    params, losses = train_classifier(X, y, steps=400)
+    pred = np.asarray(jax.nn.sigmoid(classifier_logit(params, jnp.asarray(X)))) > 0.5
+    acc = (pred == y).mean()
+    assert acc > 0.9, acc
+    assert losses[-1] < losses[0]
+
+
+def test_collect_from_traces():
+    traces = [
+        {"signals": np.ones((4, 6), np.float32), "n_drafted": 4, "n_accepted": 2},
+        {"signals": np.zeros((3, 6), np.float32), "n_drafted": 2, "n_accepted": 2},
+    ]
+    X, y = collect_from_traces(traces)
+    assert X.shape == (6, 6)
+    np.testing.assert_array_equal(y, [0, 0, 1, 1, 0, 0])
+
+
+def test_specdecpp_arm_in_engine(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    params = init_classifier(jax.random.PRNGKey(0))
+    arm = make_specdecpp_arm(params)
+
+    class SpecDecPPController(Controller):
+        name = "specdecpp"
+
+        def __init__(self, gamma_max):
+            super().__init__([arm], gamma_max)
+
+        def begin(self):
+            return np.zeros((self.gamma_max,), np.int32)
+
+    eng = SpecEngine(draft, target, SpecDecPPController(6), max_len=128)
+    r = eng.generate([1, 5, 9, 13], 12)
+    assert r.new_tokens >= 12
+    for s in r.sessions:
+        assert 1 <= s.n_drafted <= 6
