@@ -1,0 +1,147 @@
+"""Batched serving throughput: tokens/s and latency vs. concurrency B.
+
+The headline claim of the continuous-batching scheduler: serving the SAME
+request set at B=4 yields strictly higher measured tokens/s than draining
+it sequentially at B=1 (the target model verifies 4 streams per forward,
+amortizing per-tick dispatch overhead — the speculative-decoding bandwidth
+argument, now across streams instead of within one).
+
+Uses a random-init tiny pair (throughput only needs the hot path, not
+acceptance quality) sized so a tick is DISPATCH-dominated — on a few-core
+CPU host a large per-tick forward is compute-bound and batching cannot
+amortize anything, which would measure the machine, not the scheduler.
+One warmup drain per B keeps jit compilation out of the timed region, and
+each B reports the best of ``repeats`` drains to damp scheduler noise.
+``--smoke`` runs a seconds-scale config for CI and writes the JSON
+artifact ``artifacts/bench/serving_batch_smoke.json``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _tiny_pair(n_layers_t=4, d_model_t=128, n_layers_d=2, d_model_d=64, V=61):
+    import jax
+    from repro.core import ModelBundle
+    from repro.models import ModelConfig
+    from repro.models import transformer as T
+    tcfg = ModelConfig(name="srv_tgt", arch_type="dense",
+                       num_layers=n_layers_t, d_model=d_model_t, num_heads=4,
+                       num_kv_heads=2, d_ff=2 * d_model_t, vocab_size=V)
+    dcfg = ModelConfig(name="srv_drf", arch_type="dense",
+                       num_layers=n_layers_d, d_model=d_model_d, num_heads=2,
+                       num_kv_heads=1, d_ff=2 * d_model_d, vocab_size=V)
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    return ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+
+
+def _workload(n_requests: int, seed: int = 0) -> List[List[int]]:
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    # mixed prompt lengths exercise per-stream positions in the batch
+    return [rng.integers(1, 60, size=int(rng.integers(4, 24))).tolist()
+            for _ in range(n_requests)]
+
+
+def _serve(draft, target, prompts, *, batch_size: int, max_new: int,
+           gamma_max: int, max_len: int, seed: int = 0,
+           repeats: int = 2) -> dict:
+    from repro.core import make_controller
+    from repro.serving.engine import SpecServer
+
+    def drain(server, reqs):
+        for p in reqs:
+            server.submit(p, max_new)
+        t0 = time.perf_counter()
+        server.run_until_drained()
+        return time.perf_counter() - t0
+
+    # warmup drain: compiles the batched session program for this B plus
+    # both prefill shapes (chunk + single; the long prompt covers the chunk)
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=gamma_max, seed=seed)
+    srv = SpecServer(draft, target, ctrl, max_len=max_len,
+                     max_concurrency=batch_size, seed=seed)
+    warm = [list(range(1, 40))] + prompts[:min(batch_size, len(prompts)) - 1]
+    drain(srv, warm)
+    srv.responses.clear()
+
+    best = None
+    for _ in range(max(repeats, 1)):
+        wall = drain(srv, prompts)
+        stats = srv.throughput_stats()
+        srv.responses.clear()
+        stats["batch_size"] = batch_size
+        stats["wall_s"] = wall
+        stats["tokens_per_s"] = stats["total_new_tokens"] / max(wall, 1e-9)
+        if best is None or stats["tokens_per_s"] > best["tokens_per_s"]:
+            best = stats
+    return best
+
+
+def run(quick: bool = False, smoke: bool = False,
+        batch_sizes: Optional[List[int]] = None) -> dict:
+    from benchmarks.common import save_json
+
+    if smoke:
+        cfg = dict(n_requests=4, max_new=8, gamma_max=4, max_len=128)
+        batch_sizes = batch_sizes or [1, 2]
+        draft, target = _tiny_pair(n_layers_t=2, d_model_t=64,
+                                   n_layers_d=1, d_model_d=32)
+    elif quick:
+        cfg = dict(n_requests=8, max_new=24, gamma_max=4, max_len=256)
+        batch_sizes = batch_sizes or [1, 2, 4]
+        draft, target = _tiny_pair(n_layers_t=2, d_model_t=64,
+                                   n_layers_d=1, d_model_d=32)
+    else:
+        cfg = dict(n_requests=16, max_new=48, gamma_max=4, max_len=256)
+        batch_sizes = batch_sizes or [1, 2, 4, 8]
+        draft, target = _tiny_pair(n_layers_t=2, d_model_t=64,
+                                   n_layers_d=1, d_model_d=32)
+
+    prompts = _workload(cfg["n_requests"])
+    rows = {}
+    for B in batch_sizes:
+        rows[B] = _serve(draft, target, prompts, batch_size=B,
+                         max_new=cfg["max_new"], gamma_max=cfg["gamma_max"],
+                         max_len=cfg["max_len"])
+        print(f"  B={B}: {rows[B]['tokens_per_s']:.1f} tok/s  "
+              f"p50={rows[B]['p50_latency_s']:.3f}s  "
+              f"p95={rows[B]['p95_latency_s']:.3f}s", file=sys.stderr)
+
+    base = rows[min(batch_sizes)]["tokens_per_s"]
+    b_claim = 4 if 4 in rows else max(batch_sizes)
+    payload = {
+        "config": cfg,
+        "batch_sizes": batch_sizes,
+        "results": {str(b): rows[b] for b in batch_sizes},
+        # headline: B=4 batched vs draining the same workload at B=1
+        "claim_batched_beats_sequential":
+            bool(rows[b_claim]["tokens_per_s"] > base),
+        "speedup_vs_b1": {str(b): rows[b]["tokens_per_s"] / max(base, 1e-9)
+                          for b in batch_sizes},
+    }
+    save_json("serving_batch_smoke" if smoke else "serving_batch", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI config")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    payload = run(quick=args.quick, smoke=args.smoke)
+    ok = payload["claim_batched_beats_sequential"]
+    print(f"claim_batched_beats_sequential={ok}")
+    # --smoke is an artifact-producing CI exercise of the serving path; a
+    # seconds-scale timing comparison on a noisy shared runner must not
+    # gate the build.  Only full runs turn the claim into the exit code.
+    sys.exit(0 if (ok or args.smoke) else 1)

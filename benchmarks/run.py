@@ -11,6 +11,7 @@ artifacts/bench/.
   table4_specdecpp    Table 4  trained SpecDec++ vs bandits
   table5_specbench    Table 5  SpecBench across pairs
   a2_more_arms        App. A.2 small vs multi-threshold arm pool
+  serving_batch       —        batched serving tokens/s + latency vs B
   kernels_micro       —        kernel/XLA-path microbench
   roofline            §Roofline collation from the dry-run artifacts
 """
@@ -31,8 +32,9 @@ def main() -> int:
     args = ap.parse_args()
 
     from . import (bench_arm_values, bench_entropy, bench_kernels, bench_main,
-                   bench_more_arms, bench_reward, bench_specbench,
-                   bench_specdecpp, bench_ucb_variants, roofline_table)
+                   bench_more_arms, bench_reward, bench_serving_batch,
+                   bench_specbench, bench_specdecpp, bench_ucb_variants,
+                   roofline_table)
 
     def derived_fmt(d):
         keys = [k for k in d if k.startswith("claim_")]
@@ -48,6 +50,7 @@ def main() -> int:
         "table4_specdecpp": (bench_specdecpp.run, derived_fmt),
         "table5_specbench": (bench_specbench.run, derived_fmt),
         "a2_more_arms": (bench_more_arms.run, derived_fmt),
+        "serving_batch": (bench_serving_batch.run, derived_fmt),
         "fig5_6_arm_values": (bench_arm_values.run, lambda d: ";".join(
             f"{k}_spearman={d[k]['spearman_values_vs_speedup']:.2f}"
             for k in d)),

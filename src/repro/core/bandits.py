@@ -6,7 +6,16 @@ nothing and keeps the policies interpretable (arm values are plain numpy).
 
 Implemented: UCB1, UCB-Tuned (Auer et al. 2002), Thompson Sampling with
 Beta-Bernoulli (token-level binary rewards) and Gaussian (sequence-level
-continuous rewards) posteriors, plus epsilon-greedy as an extra baseline.
+continuous rewards) posteriors, EXP3 (adversarial), plus epsilon-greedy as
+an extra baseline.
+
+Batched serving contract: one scheduler tick produces B observations at
+once, so every bandit supports ``select_batch(n)`` / ``update_batch(arms,
+rewards)``.  Batched updates are ORDER-INDEPENDENT: the result is a pure
+function of (pre-batch state, multiset of observations) — selection
+probabilities / posteriors are computed once from the pre-batch state and
+the statistics merge uses Chan's parallel algorithm, so stream index within
+a tick carries no information.
 """
 from __future__ import annotations
 
@@ -37,6 +46,30 @@ class Bandit:
         self.means[arm] += d / self.counts[arm]
         self.m2[arm] += d * (reward - self.means[arm])
 
+    def select_batch(self, n: int) -> np.ndarray:
+        """n arm indices for one batched tick, all drawn against the
+        PRE-batch state (stochastic policies diversify via sampling;
+        deterministic ones may repeat — see UCB1's fantasy-pull override)."""
+        return np.array([self.select() for _ in range(n)], np.int32)
+
+    def update_batch(self, arms, rewards) -> None:
+        """Merge a tick's observations; order-independent (Chan's parallel
+        mean/M2 merge per arm, grouped by arm index)."""
+        arms = np.asarray(arms, np.int64)
+        rewards = np.asarray(rewards, np.float64)
+        for a in np.unique(arms):
+            rs = rewards[arms == a]
+            nb = rs.size
+            mb = rs.mean()
+            m2b = float(((rs - mb) ** 2).sum())
+            na = int(self.counts[a])
+            d = mb - self.means[a]
+            n = na + nb
+            self.means[a] += d * nb / n
+            self.m2[a] += m2b + d * d * na * nb / n
+            self.counts[a] = n
+        self.t += arms.size
+
     def variance(self, arm: int) -> float:
         if self.counts[arm] < 2:
             return 0.25
@@ -59,6 +92,23 @@ class UCB1(Bandit):
         t = max(self.t, 1)
         bonus = np.sqrt(2.0 * math.log(t) / self.counts)
         return int(np.argmax(self.means + bonus))
+
+    def select_batch(self, n: int) -> np.ndarray:
+        # fantasy pulls: deterministic UCB would hand every stream the same
+        # arm; incrementing a pseudo-count per pick diversifies the batch
+        # while staying a pure function of the pre-batch state.
+        counts = self.counts.astype(np.float64).copy()
+        picks = np.empty(n, np.int32)
+        for j in range(n):
+            zero = np.flatnonzero(counts == 0)
+            if zero.size:
+                a = int(zero[0])
+            else:
+                bonus = np.sqrt(2.0 * math.log(max(self.t + j, 1)) / counts)
+                a = int(np.argmax(self.means + bonus))
+            picks[j] = a
+            counts[a] += 1.0
+        return picks
 
 
 class UCBTuned(Bandit):
@@ -89,6 +139,13 @@ class ThompsonBeta(Bandit):
         super().update(arm, reward)
         self.alpha[arm] += reward
         self.beta[arm] += 1.0 - reward
+
+    def update_batch(self, arms, rewards) -> None:
+        Bandit.update_batch(self, arms, rewards)
+        arms = np.asarray(arms, np.int64)
+        rewards = np.asarray(rewards, np.float64)
+        np.add.at(self.alpha, arms, rewards)
+        np.add.at(self.beta, arms, 1.0 - rewards)
 
     @property
     def arm_values(self) -> np.ndarray:
@@ -125,6 +182,46 @@ class ThompsonGaussian(Bandit):
         return np.array([self._posterior(a)[0] for a in range(self.n_arms)])
 
 
+class EXP3(Bandit):
+    """EXP3 (Auer et al. 2002b): adversarial bandit over rewards in [0, 1].
+
+    Batched updates use the selection distribution frozen at the start of
+    the tick for the importance weights; the per-observation multiplicative
+    weight updates then commute, so the batch is order-independent."""
+
+    def __init__(self, n_arms: int, seed: int = 0, gamma: float = 0.1):
+        super().__init__(n_arms, seed)
+        self.gamma = gamma
+        self.log_w = np.zeros(n_arms, np.float64)
+
+    def probs(self) -> np.ndarray:
+        w = np.exp(self.log_w - self.log_w.max())
+        w /= w.sum()
+        return (1.0 - self.gamma) * w + self.gamma / self.n_arms
+
+    def select(self) -> int:
+        return int(self.rng.choice(self.n_arms, p=self.probs()))
+
+    def select_batch(self, n: int) -> np.ndarray:
+        return self.rng.choice(self.n_arms, size=n, p=self.probs()).astype(np.int32)
+
+    def update(self, arm: int, reward: float) -> None:
+        self.update_batch(np.array([arm]), np.array([reward]))
+
+    def update_batch(self, arms, rewards) -> None:
+        p = self.probs()                      # pre-batch state: commutes
+        arms = np.asarray(arms, np.int64)
+        rewards = np.asarray(rewards, np.float64)
+        xhat = np.clip(rewards, 0.0, 1.0) / p[arms]
+        np.add.at(self.log_w, arms, self.gamma * xhat / self.n_arms)
+        self.log_w -= self.log_w.max()        # keep exp() in range
+        Bandit.update_batch(self, arms, rewards)
+
+    @property
+    def arm_values(self) -> np.ndarray:
+        return self.probs()
+
+
 class EpsilonGreedy(Bandit):
     def __init__(self, n_arms: int, seed: int = 0, eps: float = 0.1):
         super().__init__(n_arms, seed)
@@ -148,8 +245,15 @@ class BanditBank:
     def select_all(self) -> np.ndarray:
         return np.array([b.select() for b in self.bandits], np.int32)
 
+    def select_all_batch(self, n: int) -> np.ndarray:
+        """(n, positions) arm matrix for one batched tick."""
+        return np.stack([b.select_batch(n) for b in self.bandits], axis=1)
+
     def update(self, position: int, arm: int, reward: float) -> None:
         self.bandits[position].update(arm, reward)
+
+    def update_batch(self, position: int, arms, rewards) -> None:
+        self.bandits[position].update_batch(arms, rewards)
 
     @property
     def arm_values(self) -> np.ndarray:
@@ -158,5 +262,6 @@ class BanditBank:
 
 def make_bandit(kind: str, n_arms: int, seed: int = 0) -> Bandit:
     kinds = {"ucb1": UCB1, "ucb_tuned": UCBTuned, "ts_beta": ThompsonBeta,
-             "ts_gaussian": ThompsonGaussian, "eps_greedy": EpsilonGreedy}
+             "ts_gaussian": ThompsonGaussian, "eps_greedy": EpsilonGreedy,
+             "exp3": EXP3}
     return kinds[kind](n_arms, seed)

@@ -4,6 +4,14 @@ A controller owns (a) the arm pool handed to the jitted draft loop and
 (b) the host-side policy state (bandit values, AdaEDL lambda).  The engine
 asks ``begin()`` for per-position arm indices before each drafting session
 and reports ``update(...)`` after verification.
+
+Batched serving: ``begin_batch(n)`` returns an (n, gamma_max) arm matrix
+(one row per concurrent stream) and ``update_batch(arm_mat, n_drafted,
+n_accepted)`` consumes the tick's n observations at once.  Updates are
+order-independent across the streams of a tick (the bandit merges the
+observation multiset against its pre-tick state), so slot index carries no
+information and the online policy is reproducible under scheduler
+reordering.
 """
 from __future__ import annotations
 
@@ -50,8 +58,34 @@ class Controller:
         self.history.append({"n_drafted": n_drafted, "n_accepted": n_accepted,
                              "arm_values": self.arm_values})
 
+    # -- batched engine API -------------------------------------------
+    def begin_batch(self, n: int) -> np.ndarray:
+        """(n, gamma_max) arm indices, one row per concurrent stream."""
+        return np.stack([self.begin() for _ in range(n)])
+
+    def update_batch(self, arm_mat: np.ndarray, n_drafted: np.ndarray,
+                     n_accepted: np.ndarray) -> None:
+        """Consume one tick's n observations (order-independent).
+
+        AdaEDL's lambda sees the tick's pooled accept rate (one EMA step per
+        tick, not per stream — the threshold is a tick-rate quantity)."""
+        arm_mat = np.asarray(arm_mat)
+        nd = np.asarray(n_drafted, np.int64)
+        na = np.asarray(n_accepted, np.int64)
+        self.lam, self._accept_ema = update_adaedl_lambda(
+            self.lam, self._accept_ema, int(na.sum()), int(nd.sum()))
+        self._observe_batch(arm_mat, nd, na)
+        self.history.append({"n_drafted": int(nd.sum()),
+                             "n_accepted": int(na.sum()),
+                             "batch": int(nd.size),
+                             "arm_values": self.arm_values})
+
     def _observe(self, arm_per_pos, n_drafted, n_accepted) -> None:
         pass
+
+    def _observe_batch(self, arm_mat, n_drafted, n_accepted) -> None:
+        for i in range(n_drafted.size):
+            self._observe(arm_mat[i], int(n_drafted[i]), int(n_accepted[i]))
 
     @property
     def arm_values(self) -> Optional[np.ndarray]:
@@ -77,12 +111,25 @@ class TapOutSequence(Controller):
         self._current = self.bandit.select()
         return np.full((self.gamma_max,), self._current, np.int32)
 
-    def _observe(self, arm_per_pos, n_drafted, n_accepted):
+    def begin_batch(self, n: int) -> np.ndarray:
+        picks = self.bandit.select_batch(n)
+        return np.broadcast_to(picks[:, None].astype(np.int32),
+                               (n, self.gamma_max)).copy()
+
+    def _reward(self, n_accepted: int, n_drafted: int) -> float:
         if self.reward_fn is REWARDS["blend"]:
-            r = self.reward_fn(n_accepted, n_drafted, self.gamma_max, self.alpha)
-        else:
-            r = self.reward_fn(n_accepted, n_drafted, self.gamma_max)
-        self.bandit.update(self._current, r)
+            return self.reward_fn(n_accepted, n_drafted, self.gamma_max,
+                                  self.alpha)
+        return self.reward_fn(n_accepted, n_drafted, self.gamma_max)
+
+    def _observe(self, arm_per_pos, n_drafted, n_accepted):
+        self.bandit.update(int(arm_per_pos[0]),
+                           self._reward(n_accepted, n_drafted))
+
+    def _observe_batch(self, arm_mat, n_drafted, n_accepted):
+        rewards = np.array([self._reward(int(a), int(d))
+                            for a, d in zip(n_accepted, n_drafted)])
+        self.bandit.update_batch(arm_mat[:, 0], rewards)
 
     @property
     def arm_values(self) -> np.ndarray:
@@ -107,10 +154,21 @@ class TapOutToken(Controller):
         self._assignment = self.bank.select_all()
         return self._assignment
 
+    def begin_batch(self, n: int) -> np.ndarray:
+        return self.bank.select_all_batch(n).astype(np.int32)
+
     def _observe(self, arm_per_pos, n_drafted, n_accepted):
         for i in range(int(n_drafted)):
             self.bank.update(i, int(arm_per_pos[i]),
                              1.0 if i < n_accepted else 0.0)
+
+    def _observe_batch(self, arm_mat, n_drafted, n_accepted):
+        for i in range(self.gamma_max):
+            mask = n_drafted > i
+            if not mask.any():
+                continue
+            self.bank.update_batch(i, arm_mat[mask, i],
+                                   (n_accepted[mask] > i).astype(np.float64))
 
     @property
     def arm_values(self) -> np.ndarray:
@@ -155,6 +213,9 @@ def make_controller(kind: str, gamma_max: int, seed: int = 0, **kw) -> Controlle
                               kw.get("pool"), seed)
     if kind == "tapout_seq_ts":
         return TapOutSequence(gamma_max, "ts_gaussian", kw.get("reward", "blend"),
+                              kw.get("pool"), seed)
+    if kind == "tapout_seq_exp3":
+        return TapOutSequence(gamma_max, "exp3", kw.get("reward", "blend"),
                               kw.get("pool"), seed)
     if kind == "tapout_token_ucb1":
         return TapOutToken(gamma_max, "ucb1", kw.get("pool"), seed)

@@ -21,7 +21,8 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.cache import rollback
 from .controller import Controller
-from .spec_decode import draft_session, verify_session
+from .spec_decode import (draft_session, draft_session_batched,
+                          verify_session, verify_session_batched)
 
 
 @dataclass
@@ -75,7 +76,33 @@ class GenResult:
         return self.total_accepted / n if n else 0.0
 
 
-class SpecEngine:
+class _StepMixin:
+    """Shared cache-advance plumbing for the single-stream and batched
+    engines (both expose .draft/.target bundles and .dspec/.tspec)."""
+
+    def _jit_step(self, which: str, length: int, all_logits: bool = False):
+        key = (which, length, all_logits)
+        if key not in self._step_cache:
+            bundle = self.draft if which == "draft" else self.target
+            spec = self.dspec if which == "draft" else self.tspec
+
+            @jax.jit
+            def fn(params, tokens, cache):
+                return T.step(params, bundle.cfg, tokens, cache, spec,
+                              all_logits=all_logits)
+            self._step_cache[key] = fn
+        return self._step_cache[key]
+
+    def _advance(self, which: str, params, cache, tokens: np.ndarray):
+        """Feed ``tokens`` (1, L) through the model, return new cache."""
+        if tokens.shape[1] == 0:
+            return cache
+        fn = self._jit_step(which, tokens.shape[1])
+        _, cache = fn(params, jnp.asarray(tokens, jnp.int32), cache)
+        return cache
+
+
+class SpecEngine(_StepMixin):
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: Controller, *, max_len: int = 2048,
                  temperature: float = 0.0, greedy: bool = True,
@@ -96,27 +123,6 @@ class SpecEngine:
         self.target_cheap = self.tspec.cheap_rollback
 
     # -------------------------------------------------------- helpers
-    def _jit_step(self, which: str, length: int, all_logits: bool):
-        key = (which, length, all_logits)
-        if key not in self._step_cache:
-            bundle = self.draft if which == "draft" else self.target
-            spec = self.dspec if which == "draft" else self.tspec
-
-            @jax.jit
-            def fn(params, tokens, cache):
-                return T.step(params, bundle.cfg, tokens, cache, spec,
-                              all_logits=all_logits)
-            self._step_cache[key] = fn
-        return self._step_cache[key]
-
-    def _advance(self, which: str, params, cache, tokens: np.ndarray):
-        """Feed ``tokens`` (1, L) through the model, return new cache."""
-        if tokens.shape[1] == 0:
-            return cache
-        fn = self._jit_step(which, tokens.shape[1], False)
-        _, cache = fn(params, jnp.asarray(tokens, jnp.int32), cache)
-        return cache
-
     def _next_rng(self):
         self.rng, k = jax.random.split(self.rng)
         return k
@@ -223,3 +229,244 @@ class SpecEngine:
 def autoregressive_baseline_cost(n_tokens: int, target: ModelBundle) -> float:
     """Modeled cost of plain target-only decoding."""
     return n_tokens * target.cost_per_token
+
+
+# ===================================================================== batched
+
+def _tree_get_slot(tree, s: int):
+    """Extract lane ``s`` from a slot-stacked cache pytree."""
+    return jax.tree.map(lambda a: a[s], tree)
+
+
+def _tree_set_slot(tree, s: int, lane):
+    """Write lane ``s`` of a slot-stacked cache pytree (functional)."""
+    return jax.tree.map(lambda big, one: big.at[s].set(one), tree, lane)
+
+
+class BatchedSpecEngine(_StepMixin):
+    """Fixed-B slot engine: ONE jitted draft/verify program serves B streams.
+
+    Per-slot B=1 caches are stacked on a leading slot axis, so every lane
+    carries its own ``pos`` scalar and per-layer position arrays — streams
+    at different sequence positions coexist in one program.  A tick runs one
+    draft+verify session for every active slot at once; finished/empty
+    slots ride along masked (outputs zeroed on device, cache lanes
+    reconciled by the batched rollback below).
+
+    Rollback after a tick:
+      * pointer caches (attention/MLA): one vectorized write of the (B,)
+        ``pos`` vector — stale K/V rows carry future positions and are
+        masked by attention's ``kpos <= qpos`` rule (same invariant as the
+        single-stream engine, now per lane);
+      * recurrent caches (mamba2/rglru): restore the whole pre-tick
+        snapshot (free in functional JAX), then re-advance each active lane
+        by its accepted tokens (per-lane recompute — sequential state has
+        no pointer to rewind).
+
+    The batched session program compiles ONCE per (B, gamma_max); admission
+    into a free slot never recompiles it (prefill uses chunked feeds of at
+    most two shapes, see ``_prefill``).
+    """
+
+    def __init__(self, draft: ModelBundle, target: ModelBundle,
+                 controller: Controller, *, batch_size: int = 4,
+                 max_len: int = 2048, temperature: float = 0.0,
+                 greedy: bool = True, cache_dtype=jnp.float32, seed: int = 0,
+                 prefill_chunk: int = 16):
+        assert batch_size >= 1
+        self.draft, self.target = draft, target
+        self.controller = controller
+        self.gamma_max = controller.gamma_max
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+        self.greedy = greedy
+        self.cache_dtype = cache_dtype
+        self.prefill_chunk = prefill_chunk
+        self.rng = jax.random.PRNGKey(seed)
+        self.collect_traces = False
+        self._step_cache: Dict[tuple, callable] = {}
+
+        dc1, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype)
+        tc1, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype)
+        self.draft_cheap = self.dspec.cheap_rollback
+        self.target_cheap = self.tspec.cheap_rollback
+        self._fresh_dcache, self._fresh_tcache = dc1, tc1
+        stack = lambda c: jax.tree.map(
+            lambda a: jnp.stack([a] * batch_size), c)
+        self.dcaches = stack(dc1)
+        self.tcaches = stack(tc1)
+
+        B = batch_size
+        self.slots: List[Optional[dict]] = [None] * B
+        # host mirrors of each lane's cache "pos" (invariant: len(seq)-1
+        # for target, len(seq)-2 for pointer-rollback draft caches)
+        self._dpos = np.zeros(B, np.int64)
+        self._tpos = np.zeros(B, np.int64)
+
+    # -------------------------------------------------------- helpers
+    def _prefill(self, which: str, params, cache, tokens: List[int]):
+        """Advance a fresh B=1 cache by ``tokens`` using chunked feeds, so
+        prefill compiles at most two shapes (chunk + single) instead of one
+        program per prompt length."""
+        toks = np.asarray(tokens, np.int32)[None]
+        C = self.prefill_chunk
+        n_chunks = toks.shape[1] // C
+        for i in range(n_chunks):
+            cache = self._advance(which, params, cache, toks[:, i * C:(i + 1) * C])
+        for j in range(n_chunks * C, toks.shape[1]):
+            cache = self._advance(which, params, cache, toks[:, j:j + 1])
+        return cache
+
+    def _next_rng(self, n: int = 1):
+        keys = jax.random.split(self.rng, n + 1)
+        self.rng = keys[0]
+        return keys[1:]
+
+    # -------------------------------------------------------- slots
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([s is not None and not s["done"] for s in self.slots])
+
+    def open_stream(self, slot: int, prompt: List[int],
+                    eos_id: Optional[int] = None) -> dict:
+        """Prefill ``prompt`` into a free slot; the stream participates in
+        every subsequent ``session_step_batch`` until closed."""
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        assert len(prompt) >= 2, "need >= 2 prompt tokens"
+        seq = list(prompt)
+        pre = seq[:-1]                       # invariant: pos = len(seq) - 1
+        dcache = self._prefill("draft", self.draft.params,
+                               self._fresh_dcache, pre)
+        tcache = self._prefill("target", self.target.params,
+                               self._fresh_tcache, pre)
+        self.dcaches = _tree_set_slot(self.dcaches, slot, dcache)
+        self.tcaches = _tree_set_slot(self.tcaches, slot, tcache)
+        self._dpos[slot] = len(pre)
+        self._tpos[slot] = len(pre)
+        st = {"seq": seq, "res": GenResult(tokens=seq, prompt_len=len(prompt)),
+              "done": False, "eos_id": eos_id}
+        self.slots[slot] = st
+        return st
+
+    def close_stream(self, slot: int) -> dict:
+        """Release a slot (its cache lane is dead until the next admission)."""
+        st = self.slots[slot]
+        assert st is not None
+        self.slots[slot] = None
+        self._dpos[slot] = 0
+        self._tpos[slot] = 0
+        return st
+
+    # -------------------------------------------------------- tick
+    def session_step_batch(self) -> List[int]:
+        """Run one draft/verify session for every active slot in one
+        batched program.  Returns the slots that were active this tick."""
+        B, g = self.batch_size, self.gamma_max
+        active = self.active_mask()
+        act_idx = np.flatnonzero(active)
+        if act_idx.size == 0:
+            return []
+        c_d = self.draft.cost_per_token
+        c_t = self.target.cost_per_token
+        L = np.array([len(self.slots[s]["seq"]) if self.slots[s] else 0
+                      for s in range(B)], np.int64)
+
+        # ---- controller: per-stream arm rows (inactive rows are arm 0)
+        arm_mat = np.zeros((B, g), np.int32)
+        arm_mat[act_idx] = self.controller.begin_batch(act_idx.size)
+
+        # ---- assemble per-stream inputs
+        n_in = 2 if self.draft_cheap else 1
+        in_toks = np.zeros((B, n_in), np.int32)
+        last_toks = np.zeros((B, 1), np.int32)
+        for s in act_idx:
+            seq = self.slots[s]["seq"]
+            in_toks[s] = seq[-n_in:]
+            last_toks[s, 0] = seq[-1]
+
+        if self.draft_cheap:
+            dpos_in = np.where(active, L - 2, self._dpos)
+            dcaches_in = {**self.dcaches,
+                          "pos": jnp.asarray(dpos_in, jnp.int32)}
+            dsnap = None
+        else:
+            dsnap = self.dcaches
+            dcaches_in = self.dcaches
+        tsnap = None if self.target_cheap else self.tcaches
+
+        keys = self._next_rng(2 * B)
+        active_dev = jnp.asarray(active)
+
+        dres = draft_session_batched(
+            self.draft.params, self.draft.cfg, self.dspec, dcaches_in,
+            jnp.asarray(in_toks), arm_mat, jnp.float32(self.controller.lam),
+            keys[:B], active_dev, arms=self.controller.arms, gamma_max=g,
+            temperature=self.temperature, n_prompt_tokens=n_in)
+        vres = verify_session_batched(
+            self.target.params, self.target.cfg, self.tspec, self.tcaches,
+            jnp.asarray(last_toks), dres.tokens, dres.n_drafted, dres.qprobs,
+            keys[B:], active_dev, gamma_max=g, temperature=self.temperature,
+            greedy=self.greedy)
+
+        nd = np.asarray(dres.n_drafted)
+        m = np.asarray(vres.n_accepted)
+        out_all = np.asarray(vres.out_tokens)
+        if self.collect_traces:
+            sig_all = np.asarray(dres.signals)
+            ent_all = np.asarray(dres.entropies)
+
+        # ---- per-stream output assembly + accounting
+        feeds = {}
+        for s in act_idx:
+            st = self.slots[s]
+            seq, res = st["seq"], st["res"]
+            out = out_all[s, :m[s] + 1].tolist()
+            feeds[s] = np.asarray([seq[-1:] + out[:-1]], np.int32)
+            seq.extend(out)
+            res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
+                                             int(arm_mat[s, 0])))
+            res.modeled_cost += int(nd[s]) * c_d + c_t + (n_in - 1) * c_d
+            if self.collect_traces:
+                res.traces.append({
+                    "signals": sig_all[s], "entropies": ent_all[s],
+                    "n_drafted": int(nd[s]), "n_accepted": int(m[s]),
+                    "position_base": 0})
+            eos = st["eos_id"]
+            if eos is not None and eos in out:
+                seq[:] = seq[:len(seq) - len(out) + out.index(eos) + 1]
+                st["done"] = True
+            if len(seq) + g + 2 >= self.max_len:
+                st["done"] = True
+
+        # ---- batched cache maintenance
+        def readvance(which, params, snap):
+            # snapshot rollback: inactive lanes keep the pre-tick snapshot,
+            # active lanes are re-advanced by their accepted tokens, and the
+            # batch is restacked ONCE (not one full-tree copy per lane)
+            lanes = []
+            for s in range(B):
+                lane = _tree_get_slot(snap, s)
+                if active[s]:
+                    lane = self._advance(which, params, lane, feeds[s])
+                lanes.append(lane)
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
+
+        if self.target_cheap:
+            self._tpos = np.where(active, L + m, self._tpos)
+            self.tcaches = rollback(vres.cache, self._tpos)
+        else:
+            self.tcaches = readvance("target", self.target.params, tsnap)
+            self._tpos = np.where(active, L + m, self._tpos)
+        if self.draft_cheap:
+            self._dpos = np.where(active, L + m - 1, self._dpos)
+            self.dcaches = rollback(dres.cache, self._dpos)
+        else:
+            self.dcaches = readvance("draft", self.draft.params, dsnap)
+            self._dpos = np.where(active, L + m, self._dpos)
+
+        # ---- one order-independent batched bandit update for the tick
+        self.controller.update_batch(arm_mat[act_idx], nd[act_idx], m[act_idx])
+        return act_idx.tolist()

@@ -8,6 +8,19 @@ sequence assembly run on host between sessions.
 
 Cache invariant used throughout: ``cache["pos"] == len(generated_seq) - 1``
 — the final token of the sequence has not been fed to the model yet.
+
+Two entry points per primitive:
+
+* ``draft_session`` / ``verify_session`` — the single-stream programs
+  (leading dim B over LOCKSTEP rows sharing one cache position).
+* ``draft_session_batched`` / ``verify_session_batched`` — ONE jitted
+  program serving B independent streams at different sequence positions:
+  the single-stream core is ``vmap``-ped over a leading stream axis
+  (stacked caches carry per-stream ``pos``), with per-stream arm indices,
+  per-stream RNG and a per-stream ``active`` mask.  Outputs of inactive
+  (finished/empty) slots are zeroed on device so the host never has to
+  special-case them; their cache lanes are reconciled by the engine's
+  batched rollback.
 """
 from __future__ import annotations
 
@@ -52,21 +65,11 @@ def _probs(logits, temperature: float):
 
 # ------------------------------------------------------------------ draft
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("cfg", "spec", "gamma_max", "temperature", "arms",
-                     "n_prompt_tokens"))
-def draft_session(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
-                  lam, rng, *, arms: Tuple[Arm, ...], gamma_max: int,
-                  temperature: float = 0.0, n_prompt_tokens: int = 2):
-    """Draft up to gamma_max tokens with bandit-selected dynamic stopping.
-
-    in_tokens: (B, n_prompt_tokens) — the last token(s) of the accepted
-      sequence (2 for pointer-rollback caches, 1 for recompute caches).
-    arm_per_pos: (gamma_max,) int32 — arm index per draft position
-      (sequence-level bandits broadcast one arm; token-level vary).
-    lam: AdaEDL online threshold (scalar, host-updated between sessions).
-    """
+def _draft_core(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
+                lam, rng, *, arms: Tuple[Arm, ...], gamma_max: int,
+                temperature: float = 0.0):
+    """Single-stream drafting core (traced; see ``draft_session`` for the
+    jitted wrapper and ``draft_session_batched`` for the vmapped one)."""
     B = in_tokens.shape[0]
     V = cfg.vocab_size
     arm_fns = tuple(a.fn for a in arms)
@@ -130,24 +133,63 @@ def draft_session(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
     return DraftResult(tbuf, n_drafted, qbuf, cache, ebuf, sbuf)
 
 
-# ------------------------------------------------------------------ verify
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec", "gamma_max", "temperature", "arms",
+                     "n_prompt_tokens"))
+def draft_session(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
+                  lam, rng, *, arms: Tuple[Arm, ...], gamma_max: int,
+                  temperature: float = 0.0, n_prompt_tokens: int = 2):
+    """Draft up to gamma_max tokens with bandit-selected dynamic stopping.
+
+    in_tokens: (B, n_prompt_tokens) — the last token(s) of the accepted
+      sequence (2 for pointer-rollback caches, 1 for recompute caches).
+    arm_per_pos: (gamma_max,) int32 — arm index per draft position
+      (sequence-level bandits broadcast one arm; token-level vary).
+    lam: AdaEDL online threshold (scalar, host-updated between sessions).
+    """
+    return _draft_core(params, cfg, spec, cache, in_tokens, arm_per_pos, lam,
+                       rng, arms=arms, gamma_max=gamma_max,
+                       temperature=temperature)
+
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "spec", "gamma_max", "temperature", "greedy"))
-def verify_session(params, cfg, spec: CacheSpec, cache, last_token, drafted,
-                   n_drafted, qprobs, rng, *, gamma_max: int,
-                   temperature: float = 0.0, greedy: bool = True):
-    """Verify drafted tokens with the target model in one forward pass.
+    static_argnames=("cfg", "spec", "gamma_max", "temperature", "arms",
+                     "n_prompt_tokens"))
+def draft_session_batched(params, cfg, spec: CacheSpec, caches, in_tokens,
+                          arm_mat, lam, rngs, active, *,
+                          arms: Tuple[Arm, ...], gamma_max: int,
+                          temperature: float = 0.0, n_prompt_tokens: int = 2):
+    """One jitted program drafting for B independent streams.
 
-    last_token: (B, 1) final accepted token (not yet fed to target).
-    drafted: (B, gamma_max); n_drafted: (B,); qprobs: (B, gamma_max, V).
-
-    Greedy mode: accept while draft token == target argmax. Stochastic mode:
-    exact speculative sampling — accept with prob min(1, p/q), resample the
-    first rejection from norm(max(p-q, 0)) so the output distribution equals
-    the target model's.
+    caches: pytree of per-stream caches stacked on a leading stream axis
+      (each lane is a B=1 cache, so per-stream ``pos`` comes for free).
+    in_tokens: (B, n_prompt_tokens); arm_mat: (B, gamma_max) PER-STREAM arm
+      indices; rngs: (B, 2) per-stream PRNG keys; active: (B,) bool mask —
+      outputs of inactive lanes are zeroed (n_drafted == 0).
+    Returns DraftResult with tokens (B, gamma_max) padded to gamma_max.
     """
+    def lane(cache, toks, arm_row, rng):
+        r = _draft_core(params, cfg, spec, cache, toks[None, :], arm_row,
+                        lam, rng, arms=arms, gamma_max=gamma_max,
+                        temperature=temperature)
+        return DraftResult(r.tokens[0], r.n_drafted[0], r.qprobs[0], r.cache,
+                           r.entropies[0], r.signals[0])
+
+    r = jax.vmap(lane)(caches, in_tokens, arm_mat, rngs)
+    n_drafted = jnp.where(active, r.n_drafted, 0)
+    tokens = jnp.where(active[:, None], r.tokens, 0)
+    return DraftResult(tokens, n_drafted, r.qprobs, r.cache, r.entropies,
+                       r.signals)
+
+
+# ------------------------------------------------------------------ verify
+
+def _verify_core(params, cfg, spec: CacheSpec, cache, last_token, drafted,
+                 n_drafted, qprobs, rng, *, gamma_max: int,
+                 temperature: float = 0.0, greedy: bool = True):
+    """Single-stream verification core (traced; see ``verify_session``)."""
     B = last_token.shape[0]
     inp = jnp.concatenate([last_token, drafted], axis=1)       # (B, gamma+1)
     logits, cache = T.step(params, cfg, inp, cache, spec, all_logits=True)
@@ -195,3 +237,52 @@ def verify_session(params, cfg, spec: CacheSpec, cache, last_token, drafted,
     out = jnp.concatenate([out, jnp.zeros((B, 1), jnp.int32)], axis=1)
     out = out.at[jnp.arange(B), m].set(repl)
     return VerifyResult(m, out, m + 1, cache)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec", "gamma_max", "temperature", "greedy"))
+def verify_session(params, cfg, spec: CacheSpec, cache, last_token, drafted,
+                   n_drafted, qprobs, rng, *, gamma_max: int,
+                   temperature: float = 0.0, greedy: bool = True):
+    """Verify drafted tokens with the target model in one forward pass.
+
+    last_token: (B, 1) final accepted token (not yet fed to target).
+    drafted: (B, gamma_max); n_drafted: (B,); qprobs: (B, gamma_max, V).
+
+    Greedy mode: accept while draft token == target argmax. Stochastic mode:
+    exact speculative sampling — accept with prob min(1, p/q), resample the
+    first rejection from norm(max(p-q, 0)) so the output distribution equals
+    the target model's.
+    """
+    return _verify_core(params, cfg, spec, cache, last_token, drafted,
+                        n_drafted, qprobs, rng, gamma_max=gamma_max,
+                        temperature=temperature, greedy=greedy)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec", "gamma_max", "temperature", "greedy"))
+def verify_session_batched(params, cfg, spec: CacheSpec, caches, last_tokens,
+                           drafted, n_drafted, qprobs, rngs, active, *,
+                           gamma_max: int, temperature: float = 0.0,
+                           greedy: bool = True):
+    """One jitted program verifying B independent streams.
+
+    caches: stacked per-stream target caches (leading stream axis);
+    last_tokens: (B, 1); drafted: (B, gamma_max); n_drafted: (B,);
+    qprobs: (B, gamma_max, V); rngs: (B, 2); active: (B,) bool.
+    Inactive lanes come in with n_drafted == 0 and leave with
+    n_accepted == n_out == 0 and zeroed out_tokens.
+    """
+    def lane(cache, last, drf, nd, qp, rng):
+        r = _verify_core(params, cfg, spec, cache, last[None, :], drf[None],
+                         nd[None], qp[None], rng, gamma_max=gamma_max,
+                         temperature=temperature, greedy=greedy)
+        return VerifyResult(r.n_accepted[0], r.out_tokens[0], r.n_out[0],
+                            r.cache)
+
+    r = jax.vmap(lane)(caches, last_tokens, drafted, n_drafted, qprobs, rngs)
+    m = jnp.where(active, r.n_accepted, 0)
+    out = jnp.where(active[:, None], r.out_tokens, 0)
+    return VerifyResult(m, out, jnp.where(active, r.n_out, 0), r.cache)

@@ -1,13 +1,34 @@
-"""Batched serving engine: continuous batching at the session level.
+"""Continuous-batching serving engine over ``BatchedSpecEngine``.
 
-Each request owns its own cache pair (stream); all streams share ONE jit
-cache (identical shapes) and ONE TapOut controller — the bandit is online
-across requests, exactly the paper's deployment setting (the policy adapts
-as the prompt distribution shifts).
+Scheduler model
+---------------
+The server owns a fixed pool of ``max_concurrency`` slots backed by ONE
+slot-stacked cache pair and ONE jitted batched draft/verify program
+(compiled once per (B, gamma_max) — admission never recompiles it).
 
-The scheduler interleaves at draft-session granularity: every scheduler
-tick runs one draft+verify session for the next unfinished stream
-(round-robin), so a long generation cannot starve the queue.
+* **Admission**: every tick begins by prefilling queued requests into free
+  slots (FIFO) until the pool is full; an admitted request generates in
+  that same tick's batched session.  In-flight streams are never paused.
+* **Slot reuse**: when a stream finishes (EOS / token budget / max_len) its
+  slot is released at the end of the tick and the next queued request takes
+  it over — the lane's stale cache contents are fully overwritten by the
+  admission prefill.
+* **Active-mask semantics**: a tick always runs the full fixed-B program;
+  slots that are empty (or finished mid-tick) ride along with their lane
+  masked — their device outputs are zeroed (``n_drafted == n_accepted ==
+  0``), their bandit observations are dropped, and their cache lanes are
+  reconciled by the engine's batched rollback, so a masked slot can never
+  perturb its neighbors.
+
+All streams share ONE TapOut controller — the bandit is online across
+requests, exactly the paper's deployment setting.  Each tick yields one
+batch of per-stream (arms, n_drafted, n_accepted) observations, consumed by
+``controller.update_batch`` as an ORDER-INDEPENDENT merge against the
+pre-tick bandit state (slot index carries no information).
+
+Per-request accounting: queue delay (submit -> admission), latency
+(submit -> completion) and per-stream session stats are recorded on the
+``Response``; ``throughput_stats`` aggregates tokens/s and p50/p95 latency.
 """
 from __future__ import annotations
 
@@ -16,8 +37,10 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.core.controller import Controller
-from repro.core.engine import GenResult, ModelBundle, SpecEngine
+from repro.core.engine import BatchedSpecEngine, GenResult, ModelBundle
 
 
 @dataclass
@@ -42,60 +65,72 @@ class SpecServer:
                  controller: Controller, *, max_len: int = 2048,
                  max_concurrency: int = 8, temperature: float = 0.0,
                  greedy: bool = True, seed: int = 0):
-        self.engine = SpecEngine(draft, target, controller, max_len=max_len,
-                                 temperature=temperature, greedy=greedy,
-                                 seed=seed)
+        self.engine = BatchedSpecEngine(
+            draft, target, controller, batch_size=max_concurrency,
+            max_len=max_len, temperature=temperature, greedy=greedy,
+            seed=seed)
         self.max_concurrency = max_concurrency
         self.queue: deque = deque()
-        self.active: Dict[int, dict] = {}   # request_id -> stream state
         self.requests: Dict[int, Request] = {}
         self.responses: List[Response] = []
         self._next_id = 0
-        self._rr: deque = deque()           # round-robin order of active ids
+        self._slot_rid: Dict[int, int] = {}      # slot -> request_id
+        self._slot_started: Dict[int, float] = {}
 
     # ------------------------------------------------------------- api
     def submit(self, prompt: List[int], max_new_tokens: int,
                eos_id: Optional[int] = None) -> int:
         rid = self._next_id
         self._next_id += 1
-        req = Request(rid, prompt, max_new_tokens, eos_id)
-        self.requests[rid] = req
+        self.requests[rid] = Request(rid, prompt, max_new_tokens, eos_id)
         self.queue.append(rid)
         return rid
 
-    def step(self) -> Optional[int]:
-        """One scheduler tick: admit + run one session. Returns the finished
-        request id if a stream completed this tick."""
-        # admit
-        while self.queue and len(self.active) < self.max_concurrency:
+    @property
+    def active(self) -> Dict[int, dict]:
+        """request_id -> live stream state (monitoring view)."""
+        return {rid: self.engine.slots[slot]
+                for slot, rid in self._slot_rid.items()}
+
+    def _admit(self) -> None:
+        for slot in self.engine.free_slots():
+            if not self.queue:
+                break
             rid = self.queue.popleft()
             req = self.requests[rid]
-            st = self.engine.start_stream(req.prompt)
-            st["started_at"] = time.perf_counter()
-            self.active[rid] = st
-            self._rr.append(rid)
-        if not self._rr:
-            return None
-        rid = self._rr.popleft()
-        st = self.active[rid]
-        req = self.requests[rid]
-        st = self.engine.session_step(st, req.eos_id)
-        self.active[rid] = st
-        res: GenResult = st["res"]
-        if st["done"] or res.new_tokens >= req.max_new_tokens:
-            now = time.perf_counter()
-            res.wall_time_s = now - st["started_at"]
-            self.responses.append(Response(
-                rid, res, latency_s=now - req.submitted_at,
-                queue_delay_s=st["started_at"] - req.submitted_at))
-            del self.active[rid]
-            return rid
-        self._rr.append(rid)
-        return None
+            self.engine.open_stream(slot, req.prompt, req.eos_id)
+            self._slot_rid[slot] = rid
+            self._slot_started[slot] = time.perf_counter()
+
+    def step(self) -> List[int]:
+        """One scheduler tick: admit, run one batched session across all
+        active slots, release finished slots.  Returns the request ids that
+        completed this tick (several streams can finish in one tick)."""
+        self._admit()
+        if not self._slot_rid:
+            return []
+        self.engine.session_step_batch()
+        finished: List[int] = []
+        for slot in list(self._slot_rid):
+            st = self.engine.slots[slot]
+            rid = self._slot_rid[slot]
+            req = self.requests[rid]
+            res: GenResult = st["res"]
+            if st["done"] or res.new_tokens >= req.max_new_tokens:
+                now = time.perf_counter()
+                started = self._slot_started.pop(slot)
+                res.wall_time_s = now - started
+                self.responses.append(Response(
+                    rid, res, latency_s=now - req.submitted_at,
+                    queue_delay_s=started - req.submitted_at))
+                self.engine.close_stream(slot)
+                del self._slot_rid[slot]
+                finished.append(rid)
+        return finished
 
     def run_until_drained(self, max_ticks: int = 1_000_000) -> List[Response]:
         ticks = 0
-        while (self.queue or self.active) and ticks < max_ticks:
+        while (self.queue or self._slot_rid) and ticks < max_ticks:
             self.step()
             ticks += 1
         return self.responses
@@ -109,12 +144,14 @@ class SpecServer:
         wall = sum(r.result.wall_time_s for r in self.responses)
         acc = sum(r.result.total_accepted for r in self.responses)
         drf = sum(r.result.total_drafted for r in self.responses)
+        lats = np.array([r.latency_s for r in self.responses])
         return {
             "n_requests": len(self.responses),
             "total_new_tokens": toks,
             "modeled_cost_per_token": cost / max(toks, 1),
             "wall_s_per_token": wall / max(toks, 1),
             "accept_rate": acc / max(drf, 1),
-            "mean_latency_s": sum(r.latency_s for r in self.responses)
-                               / len(self.responses),
+            "mean_latency_s": float(lats.mean()),
+            "p50_latency_s": float(np.percentile(lats, 50)),
+            "p95_latency_s": float(np.percentile(lats, 95)),
         }

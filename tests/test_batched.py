@@ -1,0 +1,200 @@
+"""Batched multi-stream speculative decoding: exact per-stream equivalence
+with single-stream runs, masked-slot isolation, and order-independent
+batched bandit updates."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ModelBundle, SpecEngine, make_controller
+from repro.core.bandits import EXP3, UCB1, ThompsonBeta, make_bandit
+from repro.core.engine import BatchedSpecEngine
+from repro.models import ModelConfig, RGLRUConfig
+from repro.models import transformer as T
+
+# three streams at DIFFERENT sequence positions (unequal prompt lengths)
+PROMPTS = [[1, 5, 9, 13],
+           [2, 6, 10, 14, 18, 22, 26],
+           [3, 7, 11, 15, 19, 23, 27, 31, 35, 39, 43]]
+
+
+def _drain_batched(eng: BatchedSpecEngine, prompts, max_new):
+    """Open one slot per prompt, tick until every stream produced max_new."""
+    final = [None] * len(prompts)
+    for i, p in enumerate(prompts):
+        eng.open_stream(i, p)
+    for _ in range(500):
+        for i in range(len(prompts)):
+            st = eng.slots[i]
+            if st is not None and (st["done"]
+                                   or st["res"].new_tokens >= max_new):
+                final[i] = eng.close_stream(i)
+        if all(f is not None for f in final):
+            break
+        eng.session_step_batch()
+    return final
+
+
+def test_batched_matches_three_single_stream_runs(tiny_dense_pair):
+    """B=3 streams at different positions == three B=1 greedy runs."""
+    draft, target = tiny_dense_pair
+    max_new = 24
+    refs = []
+    for p in PROMPTS:
+        ctrl = make_controller("fixed_svip", gamma_max=6, seed=0)
+        eng1 = SpecEngine(draft, target, ctrl, max_len=256)
+        refs.append(eng1.generate(p, max_new).tokens)
+    ctrl = make_controller("fixed_svip", gamma_max=6, seed=0)
+    engB = BatchedSpecEngine(draft, target, ctrl, batch_size=3, max_len=256)
+    states = _drain_batched(engB, PROMPTS, max_new)
+    for st, ref in zip(states, refs):
+        n = min(len(ref), len(st["seq"]))
+        assert st["seq"][:n] == ref[:n]
+        assert st["res"].new_tokens >= max_new
+
+
+def test_batched_matches_single_recurrent_family():
+    """Snapshot-rollback (recurrent draft) batched == single-stream."""
+    V = 61
+    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=96,
+                       num_heads=2, num_kv_heads=1, d_ff=192, vocab_size=V)
+    dcfg = ModelConfig(name="d", arch_type="hybrid", num_layers=2, d_model=64,
+                       num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=V,
+                       block_pattern=("rglru", "local"), window=16,
+                       rglru=RGLRUConfig(lru_width=64))
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    prompts = PROMPTS[:2]
+    max_new = 12
+    refs = []
+    for p in prompts:
+        eng1 = SpecEngine(draft, target,
+                          make_controller("fixed_svip", gamma_max=4, seed=0),
+                          max_len=128)
+        refs.append(eng1.generate(p, max_new).tokens)
+    engB = BatchedSpecEngine(draft, target,
+                             make_controller("fixed_svip", gamma_max=4, seed=0),
+                             batch_size=2, max_len=128)
+    assert not engB.draft_cheap and engB.target_cheap
+    states = _drain_batched(engB, prompts, max_new)
+    for st, ref in zip(states, refs):
+        n = min(len(ref), len(st["seq"]))
+        assert st["seq"][:n] == ref[:n]
+
+
+def test_masked_slot_never_perturbs_neighbors(tiny_dense_pair):
+    """A slot that finishes (and later one that joins) must not change a
+    neighbor's tokens or inject bandit observations."""
+    draft, target = tiny_dense_pair
+    max_new = 30
+    ref_ctrl = make_controller("fixed_svip", gamma_max=6, seed=0)
+    ref = SpecEngine(draft, target, ref_ctrl, max_len=256).generate(
+        PROMPTS[0], max_new).tokens
+
+    ctrl = make_controller("fixed_svip", gamma_max=6, seed=0)
+    eng = BatchedSpecEngine(draft, target, ctrl, batch_size=2, max_len=256)
+    eng.open_stream(0, PROMPTS[0])
+    eng.open_stream(1, PROMPTS[1])
+    sessions = 0
+    for tick in range(200):
+        st0 = eng.slots[0]
+        if st0["res"].new_tokens >= max_new:
+            break
+        # kill the neighbor after 2 ticks -> slot 1 is masked from then on
+        if tick == 2 and eng.slots[1] is not None:
+            eng.close_stream(1)
+        # re-admit a different stream mid-flight -> slot reuse next to slot 0
+        if tick == 5 and eng.slots[1] is None:
+            eng.open_stream(1, PROMPTS[2])
+        sessions += len(eng.session_step_batch())
+    n = min(len(ref), len(st0["seq"]))
+    assert st0["seq"][:n] == ref[:n]
+    # masked slots contributed no sessions: history counts only active slots
+    assert sum(h["batch"] for h in ctrl.history) == sessions
+
+
+def test_batched_outputs_masked_for_inactive(tiny_dense_pair):
+    """Inactive lanes leave the device with zeroed outputs."""
+    draft, target = tiny_dense_pair
+    ctrl = make_controller("fixed_svip", gamma_max=6, seed=0)
+    eng = BatchedSpecEngine(draft, target, ctrl, batch_size=3, max_len=256)
+    eng.open_stream(1, PROMPTS[0])          # only the middle slot is live
+    active = eng.active_mask()
+    assert active.tolist() == [False, True, False]
+    eng.session_step_batch()
+    st = eng.slots[1]
+    assert st["res"].sessions[0].n_drafted >= 1
+    # neighbors untouched on host: no state, positions still zero
+    assert eng.slots[0] is None and eng.slots[2] is None
+    assert eng._tpos[0] == 0 and eng._tpos[2] == 0
+
+
+# ------------------------------------------------------- batched bandits
+
+def test_bandit_update_batch_order_independent():
+    arms = np.array([0, 2, 1, 2, 0, 1, 1])
+    rewards = np.array([0.1, 0.9, 0.4, 0.8, 0.3, 0.5, 0.6])
+    perm = np.random.default_rng(0).permutation(arms.size)
+    for kind in ("ucb1", "ucb_tuned", "ts_beta", "ts_gaussian", "exp3"):
+        a = make_bandit(kind, 3, seed=0)
+        b = make_bandit(kind, 3, seed=0)
+        a.update_batch(arms, rewards)
+        b.update_batch(arms[perm], rewards[perm])
+        np.testing.assert_allclose(a.means, b.means)
+        np.testing.assert_allclose(a.m2, b.m2)
+        np.testing.assert_array_equal(a.counts, b.counts)
+        np.testing.assert_allclose(a.arm_values, b.arm_values)
+
+
+def test_bandit_update_batch_matches_sequential_stats():
+    arms = [0, 1, 1, 2, 0]
+    rewards = [0.2, 0.9, 0.7, 0.1, 0.4]
+    a, b = UCB1(3), UCB1(3)
+    a.update_batch(arms, rewards)
+    for arm, r in zip(arms, rewards):
+        b.update(arm, r)
+    np.testing.assert_allclose(a.means, b.means)
+    np.testing.assert_allclose(a.m2, b.m2, atol=1e-12)
+    assert a.t == b.t
+
+
+def test_ucb1_select_batch_diversifies():
+    b = UCB1(3)
+    picks = b.select_batch(3)
+    assert set(picks.tolist()) == {0, 1, 2}   # unplayed arms covered first
+    for arm in (0, 1, 2):                     # symmetric state: plain select()
+        b.update(arm, 0.5)                    # would hand every stream arm 0
+    picks = b.select_batch(3)
+    assert set(picks.tolist()) == {0, 1, 2}   # fantasy pulls spread the batch
+
+
+def test_thompson_beta_batch_posterior():
+    b = ThompsonBeta(2, seed=0)
+    b.update_batch([0, 0, 1], [1.0, 1.0, 0.0])
+    assert b.alpha[0] == 3.0 and b.beta[0] == 1.0
+    assert b.alpha[1] == 1.0 and b.beta[1] == 2.0
+
+
+def test_exp3_converges_to_best_arm():
+    b = EXP3(3, seed=0, gamma=0.2)
+    rng = np.random.default_rng(1)
+    means = [0.2, 0.8, 0.4]
+    for _ in range(300):
+        picks = b.select_batch(4)
+        b.update_batch(picks, (rng.random(4) < np.take(means, picks)))
+    assert int(np.argmax(b.arm_values)) == 1
+
+
+def test_controller_update_batch_equals_merged_observations(tiny_dense_pair):
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=6, seed=0)
+    arm_mat = ctrl.begin_batch(3)
+    assert arm_mat.shape == (3, 6)
+    ctrl.update_batch(arm_mat, np.array([4, 2, 6]), np.array([3, 1, 6]))
+    assert ctrl.bandit.t == 3
+    assert ctrl.history[-1]["batch"] == 3
+    tok = make_controller("tapout_token_ucb1", gamma_max=5, seed=0)
+    mat = tok.begin_batch(4)
+    assert mat.shape == (4, 5)
+    tok.update_batch(mat, np.array([5, 3, 0, 2]), np.array([5, 1, 0, 0]))
+    # position-0 bandit saw one observation per stream that drafted >= 1
+    assert tok.bank.bandits[0].t == 3

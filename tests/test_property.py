@@ -1,6 +1,8 @@
 """Hypothesis property tests over the system's invariants."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bandits import UCB1, ThompsonBeta, UCBTuned

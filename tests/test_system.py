@@ -6,6 +6,9 @@ import numpy as np
 import pytest
 
 from conftest import ar_greedy_decode
+
+# trains two models + compiles full engines: excluded from the fast CI lane
+pytestmark = pytest.mark.slow
 from repro.configs.registry import paper_pair
 from repro.core import ModelBundle, SpecEngine, StaticGamma, make_controller
 from repro.data.synthetic import DATASET_MIX, SyntheticCorpus
