@@ -2,7 +2,9 @@ from .arms import Arm, arm_by_name, default_pool, multi_threshold_pool
 from .bandits import make_bandit, BanditBank
 from .controller import (Controller, FixedArm, StaticGamma, TapOutSequence,
                          TapOutToken, make_controller)
-from .engine import BatchedSpecEngine, GenResult, ModelBundle, SpecEngine
+from .engine import (BatchedSpecEngine, GenResult, ModelBundle,
+                     PagedSpecEngine, SpecEngine)
 from .rewards import r_blend, r_simple
 from .spec_decode import (draft_session, draft_session_batched,
-                          verify_session, verify_session_batched)
+                          draft_session_paged, verify_session,
+                          verify_session_batched, verify_session_paged)

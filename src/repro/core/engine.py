@@ -19,10 +19,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
-from repro.models.cache import rollback
+from repro.models.cache import (POOL_LEAF_KEYS, BlockAllocator, PoolExhausted,
+                                paged_rollback, rollback)
 from .controller import Controller
 from .spec_decode import (draft_session, draft_session_batched,
-                          verify_session, verify_session_batched)
+                          draft_session_paged, verify_session,
+                          verify_session_batched, verify_session_paged)
 
 
 @dataclass
@@ -470,3 +472,371 @@ class BatchedSpecEngine(_StepMixin):
         # ---- one order-independent batched bandit update for the tick
         self.controller.update_batch(arm_mat[act_idx], nd[act_idx], m[act_idx])
         return act_idx.tolist()
+
+
+# ===================================================================== paged
+
+_POOL_KEYS = POOL_LEAF_KEYS
+
+
+def _path_keys(path):
+    return [getattr(p, "key", None) for p in path]
+
+
+class PagedSpecEngine:
+    """Paged slot engine: B streams share global KV block pools.
+
+    Where ``BatchedSpecEngine`` stacks one dense ``max_len`` cache per slot
+    (memory = B x max_len x layers whether or not a stream uses it), this
+    engine owns ONE block pool per attention layer plus per-stream block
+    tables and lengths (``models/cache.py``).  Consequences:
+
+      * pool memory is sized by ``pool_tokens`` — independent of both B and
+        ``max_len`` — so concurrency is no longer capped by the dense
+        worst-case allocation;
+      * rollback after a tick is ONE per-stream length truncation for every
+        attention/MLA layer at once (``paged_rollback``) — no per-kind
+        special cases (recurrent layers keep snapshot-recompute, which the
+        paged layout leaves untouched);
+      * admission reserves physical blocks for a request's worst case
+        (prompt + budget + draft overshoot) up front, so a running stream
+        can never hit pool exhaustion mid-flight; ``can_admit`` lets the
+        scheduler backpressure instead of admitting.
+
+    The batched draft/verify programs are BATCH-NATIVE (not vmapped — the
+    shared pool forbids per-lane functional writes) and compile once per
+    (B, gamma_max); admission/release only change table/length DATA, never
+    shapes, so a request joining the running batch never recompiles.
+    Masked lanes write into the reserved trash block 0.
+    """
+
+    def __init__(self, draft: ModelBundle, target: ModelBundle,
+                 controller: Controller, *, batch_size: int = 4,
+                 max_len: int = 2048, block_size: int = 64,
+                 pool_tokens: Optional[int] = None,
+                 temperature: float = 0.0, greedy: bool = True,
+                 cache_dtype=jnp.float32, seed: int = 0,
+                 prefill_chunk: int = 16):
+        assert batch_size >= 1
+        self.draft, self.target = draft, target
+        self.controller = controller
+        self.gamma_max = controller.gamma_max
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.block_size = block_size
+        self.pool_tokens = pool_tokens or batch_size * max_len
+        self.temperature = temperature
+        self.greedy = greedy
+        self.cache_dtype = cache_dtype
+        self.prefill_chunk = prefill_chunk
+        self.rng = jax.random.PRNGKey(seed)
+        self.collect_traces = False
+        self._step_cache: Dict[tuple, callable] = {}
+
+        B = batch_size
+        self.dcache, self.dspec = T.init_paged_cache(
+            draft.cfg, B, max_len, block_size=block_size,
+            pool_tokens=self.pool_tokens, dtype=cache_dtype)
+        self.tcache, self.tspec = T.init_paged_cache(
+            target.cfg, B, max_len, block_size=block_size,
+            pool_tokens=self.pool_tokens, dtype=cache_dtype)
+        self.draft_cheap = self.dspec.cheap_rollback
+        self.target_cheap = self.tspec.cheap_rollback
+        self.dalloc = BlockAllocator(self.dspec.num_blocks,
+                                     self.dspec.max_blocks, B)
+        self.talloc = BlockAllocator(self.tspec.num_blocks,
+                                     self.tspec.max_blocks, B)
+
+        self.slots: List[Optional[dict]] = [None] * B
+        self._dlen = np.zeros(B, np.int64)   # host mirrors of device lengths
+        self._tlen = np.zeros(B, np.int64)
+
+    # -------------------------------------------------------- plumbing
+    def _next_rng(self, n: int = 1):
+        keys = jax.random.split(self.rng, n + 1)
+        self.rng = keys[0]
+        return keys[1:]
+
+    def _jit_paged_step(self, which: str):
+        # one wrapper per model; jax.jit specializes it per token shape
+        if which not in self._step_cache:
+            bundle = self.draft if which == "draft" else self.target
+            spec = self.dspec if which == "draft" else self.tspec
+
+            @jax.jit
+            def fn(params, tokens, cache):
+                return T.paged_step(params, bundle.cfg, tokens, cache, spec)
+            self._step_cache[which] = fn
+        return self._step_cache[which]
+
+    def _lane_view(self, cache, slot: int):
+        """Single-lane view: pools stay global, per-stream leaves sliced."""
+        def f(path, a):
+            keys = _path_keys(path)
+            if keys[-1] in _POOL_KEYS:
+                return a
+            ax = 1 if keys[0] == "stack" else 0
+            return jax.lax.slice_in_dim(a, slot, slot + 1, axis=ax)
+        layers = jax.tree_util.tree_map_with_path(f, cache["layers"])
+        return {"lengths": cache["lengths"][slot:slot + 1],
+                "tables": cache["tables"][slot:slot + 1], "layers": layers}
+
+    def _merge_lane(self, cache, lane, slot: int):
+        """Fold a lane view back: pools replace wholesale (the lane program
+        updated them in place), per-stream leaves write lane ``slot``."""
+        def f(path, big, one):
+            keys = _path_keys(path)
+            if keys[-1] in _POOL_KEYS:
+                return one
+            ax = 1 if keys[0] == "stack" else 0
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, one.astype(big.dtype), slot, axis=ax)
+        layers = jax.tree_util.tree_map_with_path(f, cache["layers"],
+                                                  lane["layers"])
+        return {**cache,
+                "lengths": cache["lengths"].at[slot].set(lane["lengths"][0]),
+                "layers": layers}
+
+    def _advance_lane(self, which: str, cache, slot: int,
+                      tokens: np.ndarray):
+        """Feed ``tokens`` (1, L) through lane ``slot`` against the pool."""
+        if tokens.shape[1] == 0:
+            return cache
+        bundle = self.draft if which == "draft" else self.target
+        fn = self._jit_paged_step(which)
+        lane = self._lane_view(cache, slot)
+        _, lane = fn(bundle.params, jnp.asarray(tokens, jnp.int32), lane)
+        return self._merge_lane(cache, lane, slot)
+
+    def _reset_lane_state(self, cache, slot: int):
+        """Zero lane ``slot``'s PER-STREAM leaves (recurrent conv/ssm/rec
+        state).  Pools need no reset — a reused slot's stale rows are dead
+        under the ``p < length`` mask — but recurrent state is integrated,
+        not indexed, so a reused slot would otherwise prefill on top of the
+        previous stream's final hidden state."""
+        def f(path, a):
+            keys = _path_keys(path)
+            if keys[-1] in _POOL_KEYS:
+                return a
+            ax = 1 if keys[0] == "stack" else 0
+            zeros = jnp.zeros_like(jax.lax.slice_in_dim(a, slot, slot + 1,
+                                                        axis=ax))
+            return jax.lax.dynamic_update_slice_in_dim(a, zeros, slot, axis=ax)
+        return {**cache, "layers": jax.tree_util.tree_map_with_path(
+            f, cache["layers"])}
+
+    def _prefill_lane(self, which: str, cache, slot: int, tokens: List[int]):
+        toks = np.asarray(tokens, np.int32)[None]
+        C = self.prefill_chunk
+        n_chunks = toks.shape[1] // C
+        for i in range(n_chunks):
+            cache = self._advance_lane(which, cache, slot,
+                                       toks[:, i * C:(i + 1) * C])
+        for j in range(n_chunks * C, toks.shape[1]):
+            cache = self._advance_lane(which, cache, slot, toks[:, j:j + 1])
+        return cache
+
+    # -------------------------------------------------------- slots
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([s is not None and not s["done"] for s in self.slots])
+
+    def reserve_blocks_for(self, reserve_tokens: int) -> int:
+        """Physical blocks a request with this worst-case length needs."""
+        need = min(reserve_tokens, self.max_len)
+        return self.dalloc.blocks_for(need, self.block_size)
+
+    def can_admit(self, reserve_tokens: int) -> bool:
+        n = self.reserve_blocks_for(reserve_tokens)
+        return (self.dalloc.can_allocate(n) and self.talloc.can_allocate(n)
+                and bool(self.free_slots()))
+
+    def open_stream(self, slot: int, prompt: List[int],
+                    eos_id: Optional[int] = None,
+                    reserve_tokens: Optional[int] = None) -> dict:
+        """Admit a stream: reserve blocks, prefill the prompt into its pages.
+
+        ``reserve_tokens`` is the worst-case sequence length this request
+        can reach (prompt + new-token budget + gamma slack); default is
+        ``max_len`` (dense-equivalent reservation).  Raises
+        ``PoolExhausted`` when the pool cannot cover it — callers should
+        check ``can_admit`` first and backpressure.
+        """
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        assert len(prompt) >= 2, "need >= 2 prompt tokens"
+        assert len(prompt) + self.gamma_max + 2 <= self.max_len, \
+            "prompt cannot fit a single session within max_len"
+        need = self.reserve_blocks_for(reserve_tokens or self.max_len)
+        if not (self.dalloc.can_allocate(need)
+                and self.talloc.can_allocate(need)):
+            raise PoolExhausted(f"{need} blocks unavailable for admission")
+        self.dalloc.allocate(slot, need)
+        self.talloc.allocate(slot, need)
+        seq = list(prompt)
+        pre = seq[:-1]                       # invariant: length = len(seq) - 1
+        self.dcache = {**self.dcache,
+                       "tables": jnp.asarray(self.dalloc.tables),
+                       "lengths": self.dcache["lengths"].at[slot].set(0)}
+        self.tcache = {**self.tcache,
+                       "tables": jnp.asarray(self.talloc.tables),
+                       "lengths": self.tcache["lengths"].at[slot].set(0)}
+        if not self.draft_cheap:
+            self.dcache = self._reset_lane_state(self.dcache, slot)
+        if not self.target_cheap:
+            self.tcache = self._reset_lane_state(self.tcache, slot)
+        self.dcache = self._prefill_lane("draft", self.dcache, slot, pre)
+        self.tcache = self._prefill_lane("target", self.tcache, slot, pre)
+        self._dlen[slot] = len(pre)
+        self._tlen[slot] = len(pre)
+        st = {"seq": seq, "res": GenResult(tokens=seq, prompt_len=len(prompt)),
+              "done": False, "eos_id": eos_id}
+        self.slots[slot] = st
+        return st
+
+    def close_stream(self, slot: int) -> dict:
+        """Release a slot: blocks return to the pool, its table row points
+        at the trash block again."""
+        st = self.slots[slot]
+        assert st is not None
+        self.slots[slot] = None
+        self.dalloc.release(slot)
+        self.talloc.release(slot)
+        self._dlen[slot] = 0
+        self._tlen[slot] = 0
+        self.dcache = {**self.dcache,
+                       "tables": jnp.asarray(self.dalloc.tables),
+                       "lengths": self.dcache["lengths"].at[slot].set(0)}
+        self.tcache = {**self.tcache,
+                       "tables": jnp.asarray(self.talloc.tables),
+                       "lengths": self.tcache["lengths"].at[slot].set(0)}
+        return st
+
+    # -------------------------------------------------------- tick
+    def session_step_batch(self) -> List[int]:
+        """One batched draft/verify session across every active slot."""
+        B, g = self.batch_size, self.gamma_max
+        active = self.active_mask()
+        act_idx = np.flatnonzero(active)
+        if act_idx.size == 0:
+            return []
+        c_d = self.draft.cost_per_token
+        c_t = self.target.cost_per_token
+        L = np.array([len(self.slots[s]["seq"]) if self.slots[s] else 0
+                      for s in range(B)], np.int64)
+
+        arm_mat = np.zeros((B, g), np.int32)
+        arm_mat[act_idx] = self.controller.begin_batch(act_idx.size)
+
+        n_in = 2 if self.draft_cheap else 1
+        in_toks = np.zeros((B, n_in), np.int32)
+        last_toks = np.zeros((B, 1), np.int32)
+        for s in act_idx:
+            seq = self.slots[s]["seq"]
+            in_toks[s] = seq[-n_in:]
+            last_toks[s, 0] = seq[-1]
+
+        if self.draft_cheap:
+            # O(1) paged rollback INTO the session: truncate each active
+            # lane to L-2 and refeed the last two tokens (same invariant
+            # as the dense pointer-rollback path)
+            dlen_in = np.where(active, L - 2, self._dlen)
+            dcache_in = paged_rollback(self.dcache, dlen_in)
+            dsnap = None
+        else:
+            dsnap = self.dcache
+            dcache_in = self.dcache
+        tsnap = None if self.target_cheap else self.tcache
+
+        keys = self._next_rng(2 * B)
+        active_dev = jnp.asarray(active)
+
+        dres = draft_session_paged(
+            self.draft.params, self.draft.cfg, self.dspec, dcache_in,
+            jnp.asarray(in_toks), jnp.asarray(arm_mat),
+            jnp.float32(self.controller.lam), keys[:B], active_dev,
+            arms=self.controller.arms, gamma_max=g,
+            temperature=self.temperature, n_prompt_tokens=n_in)
+        vres = verify_session_paged(
+            self.target.params, self.target.cfg, self.tspec, self.tcache,
+            jnp.asarray(last_toks), dres.tokens, dres.n_drafted, dres.qprobs,
+            keys[B:], active_dev, gamma_max=g, temperature=self.temperature,
+            greedy=self.greedy)
+
+        nd = np.asarray(dres.n_drafted)
+        m = np.asarray(vres.n_accepted)
+        out_all = np.asarray(vres.out_tokens)
+        if self.collect_traces:
+            sig_all = np.asarray(dres.signals)
+            ent_all = np.asarray(dres.entropies)
+
+        feeds = {}
+        for s in act_idx:
+            st = self.slots[s]
+            seq, res = st["seq"], st["res"]
+            out = out_all[s, :m[s] + 1].tolist()
+            feeds[s] = np.asarray([seq[-1:] + out[:-1]], np.int32)
+            seq.extend(out)
+            res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
+                                             int(arm_mat[s, 0])))
+            res.modeled_cost += int(nd[s]) * c_d + c_t + (n_in - 1) * c_d
+            if self.collect_traces:
+                res.traces.append({
+                    "signals": sig_all[s], "entropies": ent_all[s],
+                    "n_drafted": int(nd[s]), "n_accepted": int(m[s]),
+                    "position_base": 0})
+            eos = st["eos_id"]
+            if eos is not None and eos in out:
+                seq[:] = seq[:len(seq) - len(out) + out.index(eos) + 1]
+                st["done"] = True
+            if len(seq) + g + 2 >= self.max_len:
+                st["done"] = True
+
+        # ---- rollback: ONE length truncation per model (all layer kinds)
+        if self.target_cheap:
+            self._tlen = np.where(active, L + m, self._tlen)
+            self.tcache = paged_rollback(vres.cache, self._tlen)
+        else:
+            self.tcache = self._readvance("target", tsnap, active, feeds)
+            self._tlen = np.where(active, L + m, self._tlen)
+        if self.draft_cheap:
+            self._dlen = np.where(active, L + m - 1, self._dlen)
+            self.dcache = paged_rollback(dres.cache, self._dlen)
+        else:
+            self.dcache = self._readvance("draft", dsnap, active, feeds)
+            self._dlen = np.where(active, L + m, self._dlen)
+
+        self.controller.update_batch(arm_mat[act_idx], nd[act_idx], m[act_idx])
+        return act_idx.tolist()
+
+    def _readvance(self, which: str, snap, active, feeds):
+        """Snapshot-recompute for recurrent state: restore the pre-tick
+        cache, re-feed each active lane's accepted tokens.  (The refeed
+        also rewrites those lanes' pool rows — with identical values, since
+        positions and tokens are identical.)"""
+        cache = snap
+        for s in np.flatnonzero(active):
+            cache = self._advance_lane(which, cache, int(s), feeds[int(s)])
+        return cache
+
+    # -------------------------------------------------------- stats
+    def pool_stats(self) -> dict:
+        def pool_bytes(cache):
+            total = 0
+            def f(path, a):
+                nonlocal total
+                if _path_keys(path)[-1] in _POOL_KEYS:
+                    total += a.size * a.dtype.itemsize
+                return a
+            jax.tree_util.tree_map_with_path(f, cache["layers"])
+            return total
+        return {
+            "block_size": self.block_size,
+            "pool_tokens": self.pool_tokens,
+            "num_blocks": self.dspec.num_blocks,
+            "cache_pool_bytes": pool_bytes(self.dcache) + pool_bytes(self.tcache),
+            "blocks_in_use": self.dalloc.blocks_in_use + self.talloc.blocks_in_use,
+            "peak_blocks_in_use": (self.dalloc.peak_in_use
+                                   + self.talloc.peak_in_use),
+        }

@@ -21,6 +21,19 @@ Two entry points per primitive:
   (finished/empty) slots are zeroed on device so the host never has to
   special-case them; their cache lanes are reconciled by the engine's
   batched rollback.
+
+And a third pair for the PAGED cache (``models/cache.py``):
+
+* ``draft_session_paged`` / ``verify_session_paged`` — BATCH-NATIVE cores
+  over the shared block pool.  vmap cannot serve here: every lane writes
+  into ONE pool (its own pages), and per-lane functional updates of a
+  shared buffer do not compose under vmap.  Instead the model step itself
+  is batched (``transformer.paged_step``: per-stream positions via block
+  tables + lengths), the per-stream arm dispatch evaluates every arm on
+  the batch and selects per row (what vmap-of-``lax.switch`` lowers to
+  anyway), and sampling uses per-row PRNG keys.  Inactive lanes are forced
+  ``stopped`` from step 0 and their writes land in the reserved trash
+  block, so a masked lane can never touch a neighbor's pages.
 """
 from __future__ import annotations
 
@@ -184,6 +197,98 @@ def draft_session_batched(params, cfg, spec: CacheSpec, caches, in_tokens,
                        r.signals)
 
 
+def _split_rows(rngs):
+    """(B, 2) keys -> (next (B, 2), use (B, 2))."""
+    ks = jax.vmap(jax.random.split)(rngs)
+    return ks[:, 0], ks[:, 1]
+
+
+def _sample_rows(logits, rngs, temperature: float):
+    """Per-row sampling with per-row keys (matches the vmapped lanes)."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(lambda lg, k: jax.random.categorical(
+        k, lg / temperature, axis=-1))(logits, rngs).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec", "gamma_max", "temperature", "arms",
+                     "n_prompt_tokens"))
+def draft_session_paged(params, cfg, spec, cache, in_tokens, arm_mat, lam,
+                        rngs, active, *, arms: Tuple[Arm, ...],
+                        gamma_max: int, temperature: float = 0.0,
+                        n_prompt_tokens: int = 2):
+    """Batch-native drafting over the paged cache (see module docstring).
+
+    cache: paged cache pytree ({"lengths", "tables", "layers"}); in_tokens:
+    (B, n_prompt_tokens); arm_mat: (B, gamma_max); rngs: (B, 2); active:
+    (B,) bool.  Semantics match ``draft_session_batched`` lane for lane:
+    inactive rows leave with n_drafted == 0 and zeroed tokens.
+    """
+    B = in_tokens.shape[0]
+    V = cfg.vocab_size
+    arm_fns = tuple(a.fn for a in arms)
+    rows = jnp.arange(B)
+
+    logits, cache = T.paged_step(params, cfg, in_tokens, cache, spec)
+    rngs, k0 = _split_rows(rngs)
+    probs0 = _probs(logits[:, -1], temperature)
+    sig_probs0 = _probs(logits[:, -1], 1.0)
+    tok0 = _sample_rows(logits[:, -1], k0, temperature)
+
+    tokens_buf = jnp.zeros((B, gamma_max), jnp.int32)
+    qprobs_buf = jnp.zeros((B, gamma_max, V), jnp.float32)
+    ent_buf = jnp.zeros((B, gamma_max), jnp.float32)
+    sig_buf = jnp.zeros((B, gamma_max, SIGNAL_VECTOR_DIM), jnp.float32)
+    written = jnp.zeros((B, gamma_max), jnp.int32)
+
+    def eval_stop(i, sig_probs, prev_ent):
+        sig = signals_from_probs(sig_probs, prev_ent, lam, i)
+        sig["prev_sqrt_entropy"] = jnp.where(
+            i == 0, sig["sqrt_entropy"], sig["prev_sqrt_entropy"])
+        per_arm = jnp.stack([fn(sig) for fn in arm_fns])       # (A, B)
+        arm_i = jax.lax.dynamic_index_in_dim(arm_mat, i, 1, keepdims=False)
+        return per_arm[arm_i, rows], sig["sqrt_entropy"], signal_vector(sig)
+
+    stop0, ent0, sv0 = eval_stop(0, sig_probs0, jnp.zeros((B,), jnp.float32))
+    stop0 = stop0 | ~active                   # masked lanes never draft on
+    tokens_buf = tokens_buf.at[:, 0].set(tok0)
+    qprobs_buf = qprobs_buf.at[:, 0].set(probs0)
+    ent_buf = ent_buf.at[:, 0].set(ent0)
+    sig_buf = sig_buf.at[:, 0].set(sv0)
+    written = written.at[:, 0].set(1)
+
+    def cond(state):
+        i, _, _, _, _, stopped, _, _, _, _, _ = state
+        return (i < gamma_max) & ~jnp.all(stopped)
+
+    def body(state):
+        i, tok, prev_ent, tbuf, qbuf, stopped, ebuf, sbuf, wrt, cache, rngs = state
+        logits, cache = T.paged_step(params, cfg, tok[:, None], cache, spec)
+        rngs, k = _split_rows(rngs)
+        probs = _probs(logits[:, -1], temperature)
+        sig_probs = _probs(logits[:, -1], 1.0)
+        nxt = _sample_rows(logits[:, -1], k, temperature)
+        stop_i, ent_i, sv_i = eval_stop(i, sig_probs, prev_ent)
+        tbuf = tbuf.at[:, i].set(jnp.where(stopped, tbuf[:, i], nxt))
+        qbuf = qbuf.at[:, i].set(jnp.where(stopped[:, None], qbuf[:, i], probs))
+        ebuf = ebuf.at[:, i].set(jnp.where(stopped, ebuf[:, i], ent_i))
+        sbuf = sbuf.at[:, i].set(jnp.where(stopped[:, None], sbuf[:, i], sv_i))
+        wrt = wrt.at[:, i].set(jnp.where(stopped, wrt[:, i], 1))
+        stopped = stopped | stop_i
+        return (i + 1, nxt, ent_i, tbuf, qbuf, stopped, ebuf, sbuf, wrt, cache, rngs)
+
+    state = (jnp.int32(1), tok0, ent0, tokens_buf, qprobs_buf, stop0,
+             ent_buf, sig_buf, written, cache, rngs)
+    _, _, _, tbuf, qbuf, _, ebuf, sbuf, wrt, cache, _ = jax.lax.while_loop(
+        cond, body, state)
+
+    n_drafted = jnp.where(active, jnp.sum(wrt, axis=1), 0)
+    tokens = jnp.where(active[:, None], tbuf, 0)
+    return DraftResult(tokens, n_drafted, qbuf, cache, ebuf, sbuf)
+
+
 # ------------------------------------------------------------------ verify
 
 def _verify_core(params, cfg, spec: CacheSpec, cache, last_token, drafted,
@@ -286,3 +391,65 @@ def verify_session_batched(params, cfg, spec: CacheSpec, caches, last_tokens,
     m = jnp.where(active, r.n_accepted, 0)
     out = jnp.where(active[:, None], r.out_tokens, 0)
     return VerifyResult(m, out, jnp.where(active, r.n_out, 0), r.cache)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "spec", "gamma_max", "temperature", "greedy"))
+def verify_session_paged(params, cfg, spec, cache, last_tokens, drafted,
+                         n_drafted, qprobs, rngs, active, *, gamma_max: int,
+                         temperature: float = 0.0, greedy: bool = True):
+    """Batch-native verification over the paged cache.
+
+    One ``paged_step`` forward serves every stream at its own position;
+    acceptance/resampling mirror ``_verify_core`` with per-row PRNG keys.
+    Inactive lanes (n_drafted == 0) leave with zeroed outputs; their cache
+    writes land in the trash block.
+    """
+    B = last_tokens.shape[0]
+    inp = jnp.concatenate([last_tokens, drafted], axis=1)       # (B, g+1)
+    logits, cache = T.paged_step(params, cfg, inp, cache, spec, all_logits=True)
+    pprobs = _probs(logits, temperature)
+
+    idx = jnp.arange(gamma_max)
+    in_draft = idx[None, :] < n_drafted[:, None]
+    p_of_draft = jnp.take_along_axis(
+        pprobs[:, :gamma_max], drafted[..., None], axis=-1)[..., 0]
+    q_of_draft = jnp.take_along_axis(
+        qprobs, drafted[..., None], axis=-1)[..., 0]
+
+    if greedy:
+        tgt_argmax = jnp.argmax(logits[:, :gamma_max], axis=-1).astype(jnp.int32)
+        accept = (drafted == tgt_argmax) & in_draft
+    else:
+        rngs, k_acc = _split_rows(rngs)
+        u = jax.vmap(lambda k: jax.random.uniform(k, (gamma_max,)))(k_acc)
+        ratio = p_of_draft / jnp.maximum(q_of_draft, 1e-20)
+        accept = (u < jnp.minimum(ratio, 1.0)) & in_draft
+
+    acc_prefix = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+    m = jnp.sum(acc_prefix, axis=1)
+
+    p_at_m = jnp.take_along_axis(pprobs, m[:, None, None], axis=1)[:, 0]
+    q_at_m = jnp.take_along_axis(
+        jnp.concatenate([qprobs, jnp.zeros((B, 1, qprobs.shape[-1]))], axis=1),
+        m[:, None, None], axis=1)[:, 0]
+    rejected_inside = m < n_drafted
+    if greedy:
+        repl = jnp.argmax(p_at_m, axis=-1).astype(jnp.int32)
+    else:
+        resid = jnp.maximum(p_at_m - q_at_m, 0.0)
+        resid_sum = resid.sum(-1, keepdims=True)
+        resid = jnp.where(resid_sum > 1e-20,
+                          resid / jnp.maximum(resid_sum, 1e-20), p_at_m)
+        dist = jnp.where(rejected_inside[:, None], resid, p_at_m)
+        rngs, k_r = _split_rows(rngs)
+        repl = jax.vmap(lambda d, k: jax.random.categorical(
+            k, jnp.log(jnp.maximum(d, 1e-30))))(dist, k_r).astype(jnp.int32)
+
+    out = jnp.where(idx[None, :] < m[:, None], drafted, 0)
+    out = jnp.concatenate([out, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    out = out.at[jnp.arange(B), m].set(repl)
+    m = jnp.where(active, m, 0)
+    out = jnp.where(active[:, None], out, 0)
+    return VerifyResult(m, out, jnp.where(active, m + 1, 0), cache)

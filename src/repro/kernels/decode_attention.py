@@ -1,13 +1,24 @@
-"""Pallas TPU flash-decode kernel: single-token query vs a long KV cache.
+"""Pallas TPU flash-decode kernels: single-token query vs a long KV cache.
 
 Decode attention is memory-bound (the entire KV cache streams HBM->VMEM
-once); the kernel tiles the cache length L into MXU-aligned blocks and keeps
-the online-softmax stats in VMEM scratch across the L sweep.  Ring-buffer
-caches are handled by the same position-validity mask used everywhere else
-(slots with kpos < 0 or kpos > qpos are dead).
+once); the kernels tile the cache length into MXU-aligned blocks and keep
+the online-softmax stats in VMEM scratch across the sweep.
 
-Layouts: q (B, H, D) one query per head; k, v (B, G, L, D); kpos (L,);
-qpos scalar int32 (current absolute position). -> (B, H, D).
+``decode_attention`` reads a dense per-stream cache (ring-buffer slots are
+handled by the position-validity mask: kpos < 0 or kpos > qpos is dead).
+
+``paged_decode_attention`` reads the PAGED layout: one global block pool
+shared by all streams plus a per-stream block table.  The table and lengths
+ride in as SCALAR-PREFETCH operands (``PrefetchScalarGridSpec``) so the
+BlockSpec index map can steer each grid step's HBM->VMEM DMA straight to
+``tables[b, ib]`` — the kernel never materializes a gathered per-stream
+view.  Positions are contiguous per stream, so masking degenerates to
+``kpos <= lengths[b] - 1`` (+ the optional sliding window).
+
+Layouts: q (B, H, D) one query per head.
+  dense: k, v (B, G, L, D); kpos (L,); qpos scalar int32.
+  paged: kpool, vpool (N, bs, G, D); tables (B, MB) int32; lengths (B,).
+Both -> (B, H, D).
 """
 from __future__ import annotations
 
@@ -45,7 +56,9 @@ def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
 
     m_prev = m_ref[0]
     m_new = jnp.maximum(m_prev, s.max())
-    p = jnp.exp(s - m_new)                            # (bl,)
+    # re-mask: if every slot so far is masked, m_new == NEG_INF and
+    # exp(s - m_new) == 1 would poison l/acc
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)      # (bl,)
     corr = jnp.exp(m_prev - m_new)
     l_ref[0] = l_ref[0] * corr + p.sum()
     acc_ref[...] = (acc_ref[...] * corr +
@@ -97,4 +110,96 @@ def decode_attention(q, k, v, qpos, kpos, *, window: int = 0,
         ],
         interpret=interpret,
     )(qpos_arr, kpos, q[:, :, None, :].reshape(B, H, D), k, v)
+    return out
+
+
+# ------------------------------------------------------------------ paged
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                  bs: int, nmb: int):
+    b = pl.program_id(0)
+    i_b = pl.program_id(2)                       # logical block index
+
+    @pl.when(i_b == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)             # (1, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (bs, D)
+    qp = lengths_ref[b] - 1                      # query = last stored token
+    kp = i_b * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * scale  # (bl,)
+    mask = kp <= qp                              # contiguous: validity==causal
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    # explicit re-mask: a FULLY masked block (empty lane, lengths == 0) has
+    # m_new == NEG_INF, so exp(s - m_new) == 1 would poison l/acc
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + p.sum()
+    acc_ref[...] = (acc_ref[...] * corr +
+                    jax.lax.dot_general(p[None, :], v, (((1,), (0,)), ((), ()))))
+    m_ref[0] = m_new
+
+    @pl.when(i_b == nmb - 1)
+    def _finalize():
+        l = l_ref[0]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, 0] = out[0].astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, kpool, vpool, tables, lengths, *,
+                           window: int = 0, interpret: bool = False):
+    """q (B,H,D); kpool/vpool (N,bs,G,D); tables (B,MB) int32 physical block
+    ids (0 = the reserved trash block for unallocated entries); lengths (B,)
+    valid tokens per stream (query position = lengths-1). -> (B,H,D).
+
+    The grid sweeps every table slot; out-of-length slots resolve to block 0
+    whose rows are fully masked, so the sweep is correct for ragged lengths
+    and for post-rollback states (rows past the truncated length are live in
+    HBM but dead under the mask).
+    """
+    B, H, D = q.shape
+    N, bs, G, _ = kpool.shape
+    MB = tables.shape[1]
+    assert H % G == 0 and vpool.shape == kpool.shape
+    assert lengths.shape == (B,) and tables.shape == (B, MB)
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, ib, tbl, ln: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ib, tbl, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, window=window,
+                          bs=bs, nmb=MB),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      q.reshape(B, H, D), kpool, vpool)
     return out

@@ -44,6 +44,13 @@ def decode_attention(q, k, v, qpos, kpos, *, window: int = 0,
                                 block_l=block_l, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_decode_attention(q, kpool, vpool, tables, lengths, *,
+                           window: int = 0):
+    return _da.paged_decode_attention(q, kpool, vpool, tables, lengths,
+                                      window=window, interpret=_interpret())
+
+
 @jax.jit
 def ssd_chunk(xc, dtc, dA, dA_cs, Bc, Cc):
     # the cumulative form dA_cs carries everything the kernel needs

@@ -36,6 +36,27 @@ def decode_attention_ref(q, k, v, qpos, kpos, *, window: int = 0):
     return out[:, :, 0]
 
 
+def paged_decode_attention_ref(q, kpool, vpool, tables, lengths, *,
+                               window: int = 0):
+    """q (B,H,D); kpool/vpool (N,bs,G,D); tables (B,MB); lengths (B,).
+    Gathers each stream's logical view and reuses the dense decode oracle."""
+    N, bs, G, D = kpool.shape
+    B, MB = tables.shape
+    rows = (tables[:, :, None] * bs +
+            jnp.arange(bs)[None, None, :]).reshape(B, MB * bs)
+    kg = kpool.reshape(N * bs, G, D)[rows]          # (B, L, G, D)
+    vg = vpool.reshape(N * bs, G, D)[rows]
+    outs = []
+    for b in range(B):
+        L = int(lengths[b])
+        kpos = jnp.where(jnp.arange(MB * bs) < L, jnp.arange(MB * bs), -1)
+        outs.append(decode_attention_ref(
+            q[b:b + 1], kg[b:b + 1].transpose(0, 2, 1, 3),
+            vg[b:b + 1].transpose(0, 2, 1, 3), L - 1,
+            kpos.astype(jnp.int32), window=window)[0])
+    return jnp.stack(outs)
+
+
 def _segsum(x):
     Q = x.shape[-1]
     cs = jnp.cumsum(x, axis=-1)

@@ -247,6 +247,90 @@ def attn_cached(params, cfg, x, pos0, cache_layer, *, window: int = 0,
     return out @ params["wo"], cache_layer
 
 
+# ------------------------------------------------------------ paged path
+
+def paged_write(pool, new, tables, lengths):
+    """Scatter S new per-stream rows into the global block pool.
+
+    pool (N, bs, ...); new (B, S, ...); tables (B, MB); lengths (B,) tokens
+    already stored per stream.  Stream b's token at logical position p lands
+    in physical row ``tables[b, p // bs] * bs + p % bs``.  Lanes whose table
+    row is all-zero (masked/empty slots) write into the trash block 0; the
+    allocator never hands block 0 to a stream, so those writes cannot leak
+    into a neighbor's pages.
+    """
+    N, bs = pool.shape[0], pool.shape[1]
+    B, S = new.shape[:2]
+    MB = tables.shape[1]
+    offs = lengths[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    blk = offs // bs
+    phys = jnp.take_along_axis(tables, jnp.clip(blk, 0, MB - 1), axis=1)
+    # beyond-table overflow goes to the TRASH block, never a live one —
+    # wrapping into tables[b, MB-1] would silently corrupt the stream's
+    # own newest rows (engines assert lengths stay within max_len)
+    phys = jnp.where(blk < MB, phys, 0)                          # (B, S)
+    rows = phys * bs + offs % bs                                 # (B, S)
+    flat = pool.reshape((N * bs,) + pool.shape[2:])
+    flat = flat.at[rows.reshape(-1)].set(
+        new.reshape((B * S,) + new.shape[2:]).astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def gather_pages(pool, tables):
+    """Materialize each stream's logical view (B, MB*bs, ...) of the pool.
+
+    This is the XLA gather path (CPU/correctness); the Pallas kernel
+    ``kernels.decode_attention.paged_decode_attention`` streams blocks via
+    the table instead of materializing the view.
+    """
+    N, bs = pool.shape[0], pool.shape[1]
+    B, MB = tables.shape
+    rows = (tables[:, :, None] * bs +
+            jnp.arange(bs, dtype=jnp.int32)[None, None, :]).reshape(B, MB * bs)
+    flat = pool.reshape((N * bs,) + pool.shape[2:])
+    return flat[rows]                                            # (B, MB*bs, ...)
+
+
+def paged_kpos(lengths, length: int):
+    """(B, length) logical key positions, -1 past each stream's length.
+    Paged layouts are contiguous per stream, so position == row index."""
+    idx = jnp.arange(length, dtype=jnp.int32)[None, :]
+    return jnp.where(idx < lengths[:, None], idx, -1)
+
+
+def sdpa_lanes(q, k, v, qpos, kpos, *, window: int = 0, causal: bool = True,
+               logits_softcap: float = 0.0, impl: str = "auto"):
+    """``sdpa`` with PER-LANE positions: qpos (B, Sq), kpos (B, Sk).
+
+    Batched serving has every lane at its own sequence position, so the
+    shared-position ``sdpa`` cannot serve it; each lane runs the same
+    single-stream kernel under vmap (identical shapes -> one program).
+    """
+    lane = functools.partial(sdpa, window=window, causal=causal,
+                             logits_softcap=logits_softcap, impl=impl)
+    return jax.vmap(lambda q1, k1, v1, qp, kp:
+                    lane(q1[None], k1[None], v1[None], qp, kp)[0])(
+                        q, k, v, qpos, kpos)
+
+
+def attn_paged(params, cfg, x, layer_cache, tables, lengths, *,
+               window: int = 0, impl: str = "auto"):
+    """Paged prefill/decode step: S new tokens per stream, each stream at
+    its own position ``lengths[b]``. Returns (out, new_layer_cache)."""
+    B, S, _ = x.shape
+    positions = lengths[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    q, k, v = qkv_proj(params, cfg, x, positions)
+    layer_cache = {"k": paged_write(layer_cache["k"], k, tables, lengths),
+                   "v": paged_write(layer_cache["v"], v, tables, lengths)}
+    kg = gather_pages(layer_cache["k"], tables).astype(q.dtype)
+    vg = gather_pages(layer_cache["v"], tables).astype(q.dtype)
+    kpos = paged_kpos(lengths + S, kg.shape[1])
+    out = sdpa_lanes(q, kg, vg, positions, kpos, window=window,
+                     logits_softcap=cfg.logits_softcap, impl=impl)
+    out = out.reshape(B, S, -1)
+    return out @ params["wo"], layer_cache
+
+
 # ------------------------------------------------------- cross-attention
 
 def cross_attn(params, cfg, x, enc, enc_mask=None, impl: str = "auto"):

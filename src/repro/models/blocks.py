@@ -4,9 +4,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .attention import attn_cached, attn_train, cross_attn, encode_cross_kv, init_attention
+from .attention import (attn_cached, attn_paged, attn_train, cross_attn,
+                        encode_cross_kv, init_attention)
 from .common import activation_fn, dense_init, rms_norm
-from .mla import init_mla, mla_cached, mla_train
+from .mla import init_mla, mla_cached, mla_paged, mla_train
 from .moe import init_moe, moe_ffn
 from .rglru import init_rglru, rglru_mixer
 from .sharding import constrain
@@ -88,6 +89,36 @@ def block_train(params, cfg, layer_idx: int, x, positions, *, enc_out=None,
             h = ffn_apply(params["ffn"], cfg, h)
         x = x + h
     return x, aux
+
+
+def block_paged(params, cfg, layer_idx: int, x, layer_cache, tables, lengths,
+                spec, *, impl: str = "auto"):
+    """Paged cached step: attention kinds go through the block-table pools,
+    recurrent kinds keep their per-stream state (batch-native already).
+    Returns (x, new_layer_cache)."""
+    kind = cfg.block_kind(layer_idx)
+    decode = x.shape[1] == 1
+    h = rms_norm(x, params["norm1"], cfg.rms_eps)
+    if kind in ("attn", "local"):
+        h, layer_cache = attn_paged(params["mixer"], cfg, h, layer_cache,
+                                    tables, lengths, window=spec.window,
+                                    impl=impl)
+    elif kind == "mla":
+        h, layer_cache = mla_paged(params["mixer"], cfg, h, layer_cache,
+                                   tables, lengths, impl=impl)
+    elif kind == "mamba2":
+        h, layer_cache = ssm_mixer(params["mixer"], cfg, h, layer_cache, decode=decode)
+    elif kind == "rglru":
+        h, layer_cache = rglru_mixer(params["mixer"], cfg, h, layer_cache, decode=decode)
+    x = x + h
+    if "ffn" in params:
+        h = rms_norm(x, params["norm2"], cfg.rms_eps)
+        if cfg.is_moe_layer(layer_idx):
+            h, _ = moe_ffn(params["ffn"], cfg, h, capacity_factor=2.0)
+        else:
+            h = ffn_apply(params["ffn"], cfg, h)
+        x = x + h
+    return x, layer_cache
 
 
 def block_cached(params, cfg, layer_idx: int, x, pos0, layer_cache, spec,

@@ -1,6 +1,6 @@
-"""Decode-state (KV / recurrent) cache.
+"""Decode-state (KV / recurrent) cache: dense slot caches AND the paged pool.
 
-A cache is a pytree:
+Dense cache (single stream / slot-stacked lanes) is a pytree:
     {"pos": int32 scalar (tokens consumed so far),
      "layers": {"prefix": [...], "stack": stacked-or-None, "tail": [...]},
      "cross": optional per-decoder-layer encoder KV (enc-dec only)}
@@ -16,11 +16,30 @@ jitted code can branch on them at trace time.  Rollback for attention-style
 caches is O(1) (reset "pos"; stale slots carry future positions and are
 masked out).  Recurrent layers need recompute-from-snapshot — the engine
 keeps the pre-draft cache value (free in functional JAX) instead.
+
+Paged cache (batched serving) replaces the per-slot ``max_len`` buffers with
+ONE global block pool per layer plus per-stream block tables:
+
+    {"lengths": (B,) int32   — valid tokens per stream,
+     "tables":  (B, MB) int32 — logical block -> physical block id,
+     "layers":  attn {"k","v": (N, bs, G, D)}; mla {"ckv": (N, bs, R),
+                "krope": (N, bs, Dr)}; recurrent entries unchanged (B, ...)}
+
+Logical position ``p`` of stream ``b`` lives at physical row
+``tables[b, p // bs] * bs + p % bs``.  Positions are contiguous per stream,
+so the position-validity mask degenerates to ``p < lengths[b]`` and rollback
+is a per-stream LENGTH TRUNCATION — no cache-kind special cases, no stale
+future slots.  ``BlockAllocator`` (host-side free list) hands physical
+blocks to streams at admission and reclaims them at release; physical block
+0 is a reserved TRASH block every empty table row points at, so masked
+batch lanes write garbage there instead of into a neighbor's pages.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
+
+import numpy as np
 
 import jax.numpy as jnp
 
@@ -28,6 +47,11 @@ from .config import ModelConfig
 
 RING_SLACK = 256  # extra slots so multi-token (verify) steps never clobber
                   # keys still inside another in-flight query's window
+
+# cache-leaf keys that live in the GLOBAL paged pool (no per-stream axis);
+# everything else in a paged cache's layers is per-stream state. Shared by
+# the engine's lane plumbing and the bench's memory accounting.
+POOL_LEAF_KEYS = frozenset({"k", "v", "ckv", "krope"})
 
 
 @dataclass(frozen=True)
@@ -42,6 +66,13 @@ class LayerCacheSpec:
 class CacheSpec:
     layers: Tuple[LayerCacheSpec, ...]
     max_len: int
+    # paged layout (0/False = dense). ``num_blocks`` counts PHYSICAL blocks
+    # including the reserved trash block 0; ``max_blocks`` is the per-stream
+    # table width = ceil(max_len / block_size).
+    paged: bool = False
+    block_size: int = 0
+    num_blocks: int = 0
+    max_blocks: int = 0
 
     @property
     def cheap_rollback(self) -> bool:
@@ -93,3 +124,133 @@ def init_layer_cache(cfg: ModelConfig, spec: LayerCacheSpec, batch: int,
 def rollback(cache, new_pos):
     """O(1) pointer rollback (valid for attention/MLA-only stacks)."""
     return {**cache, "pos": jnp.asarray(new_pos, jnp.int32)}
+
+
+# ===================================================================== paged
+
+def build_paged_cache_spec(cfg: ModelConfig, max_len: int, *,
+                           block_size: int = 64,
+                           pool_tokens: Optional[int] = None) -> CacheSpec:
+    """Paged layout for ``cfg``: attn/local/mla layers share one block table
+    per stream; every logical position is stored (windowed layers mask
+    instead of ring-wrapping — freeing out-of-window blocks is future work).
+    ``pool_tokens`` sizes the GLOBAL pool shared by every stream; the
+    default (``max_len``) backs roughly one full-length stream — batched
+    callers must size it themselves (``transformer.init_paged_cache``
+    defaults to ``batch * max_len``, the dense-equivalent capacity)."""
+    pool_tokens = max_len if pool_tokens is None else pool_tokens
+    max_blocks = -(-max_len // block_size)
+    num_blocks = -(-pool_tokens // block_size) + 1          # +1: trash block 0
+    specs = []
+    for i in range(cfg.num_layers):
+        kind = cfg.block_kind(i)
+        if kind in ("attn", "mla"):
+            specs.append(LayerCacheSpec(kind, max_len, False, 0))
+        elif kind == "local":
+            specs.append(LayerCacheSpec("attn", max_len, False, cfg.window or 4096))
+        elif kind in ("mamba2", "rglru"):
+            specs.append(LayerCacheSpec(kind))
+        else:
+            raise ValueError(kind)
+    return CacheSpec(tuple(specs), max_len, paged=True, block_size=block_size,
+                     num_blocks=num_blocks, max_blocks=max_blocks)
+
+
+def init_paged_layer_cache(cfg: ModelConfig, spec: LayerCacheSpec,
+                           cache_spec: CacheSpec, batch: int,
+                           dtype=jnp.bfloat16):
+    """One layer's slice of the paged cache: a GLOBAL pool for attention
+    kinds (no batch axis — streams share it via the block table), the usual
+    per-stream state for recurrent kinds."""
+    N, bs = cache_spec.num_blocks, cache_spec.block_size
+    if spec.kind == "attn":
+        hd = cfg.resolved_head_dim
+        return {"k": jnp.zeros((N, bs, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((N, bs, cfg.num_kv_heads, hd), dtype)}
+    if spec.kind == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((N, bs, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((N, bs, m.qk_rope_head_dim), dtype)}
+    return init_layer_cache(cfg, spec, batch, dtype)
+
+
+def paged_rollback(cache, new_lengths):
+    """O(1) paged rollback: truncate per-stream lengths. Rows past the new
+    length are logically dead (the ``p < length`` mask) and will be
+    overwritten in place when the stream grows again — identical physical
+    rows, no copy, no per-kind special case."""
+    return {**cache, "lengths": jnp.asarray(new_lengths, jnp.int32)}
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+class BlockAllocator:
+    """Host-side physical-block allocator for one paged pool.
+
+    Invariants (asserted by tests):
+      * block 0 (trash) is never handed out;
+      * a physical block belongs to at most one slot at a time;
+      * ``free + in_use == num_blocks - 1`` at all times;
+      * table rows of unallocated logical blocks point at the trash block.
+    """
+
+    def __init__(self, num_blocks: int, max_blocks: int, batch: int):
+        assert num_blocks >= 2, "need at least one non-trash block"
+        self.num_blocks = num_blocks
+        self.max_blocks = max_blocks
+        self.batch = batch
+        self.free: List[int] = list(range(num_blocks - 1, 0, -1))  # LIFO
+        self.owned: List[List[int]] = [[] for _ in range(batch)]
+        self.tables = np.zeros((batch, max_blocks), np.int32)
+        self.peak_in_use = 0
+
+    # ------------------------------------------------------------ queries
+    @property
+    def blocks_in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self.free)
+
+    def blocks_for(self, n_tokens: int, block_size: int) -> int:
+        return min(-(-max(n_tokens, 1) // block_size), self.max_blocks)
+
+    def can_allocate(self, n_blocks: int) -> bool:
+        return n_blocks <= len(self.free)
+
+    # ------------------------------------------------------------ mutation
+    def allocate(self, slot: int, n_blocks: int) -> np.ndarray:
+        """Reserve ``n_blocks`` physical blocks for ``slot``; returns the
+        updated table row. Raises ``PoolExhausted`` if the free list is
+        short (callers backpressure instead of admitting)."""
+        n_blocks = min(n_blocks, self.max_blocks)
+        assert not self.owned[slot], f"slot {slot} already holds blocks"
+        if n_blocks > len(self.free):
+            raise PoolExhausted(
+                f"need {n_blocks} blocks, {len(self.free)} free")
+        blocks = [self.free.pop() for _ in range(n_blocks)]
+        self.owned[slot] = blocks
+        row = self.tables[slot]
+        row[:] = 0
+        row[:n_blocks] = blocks
+        self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+        return row
+
+    def truncate(self, slot: int, keep_tokens: int, block_size: int) -> int:
+        """Free whole blocks past ``keep_tokens`` (preemption / shrink);
+        returns how many were released. Per-tick speculative rollback does
+        NOT call this — reserved capacity makes rollback a pure length
+        write — but release-on-close and preemption do."""
+        keep = self.blocks_for(keep_tokens, block_size) if keep_tokens > 0 else 0
+        released = 0
+        while len(self.owned[slot]) > keep:
+            blk = self.owned[slot].pop()
+            self.tables[slot, len(self.owned[slot])] = 0
+            self.free.append(blk)
+            released += 1
+        return released
+
+    def release(self, slot: int) -> int:
+        """Return every block owned by ``slot`` to the free list."""
+        n = self.truncate(slot, 0, 1)
+        self.tables[slot, :] = 0
+        return n

@@ -110,6 +110,42 @@ def write_mla_cache(cache_layer, c_kv, k_rope, pos0, ring: bool):
     return {"ckv": cc, "krope": cr, "pos": sp}
 
 
+def mla_paged(params, cfg, x, cache_layer, tables, lengths, *,
+              impl: str = "auto"):
+    """Paged cached step (absorbed formulation) against latent block pools.
+
+    cache_layer: {"ckv": (N, bs, R), "krope": (N, bs, Dr)} global pools;
+    tables (B, MB); lengths (B,).  Per-stream positions are contiguous, so
+    the mask is simply ``row < lengths[b] + S`` and causal vs. the query.
+    """
+    from .attention import gather_pages, paged_kpos, paged_write
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    positions = lengths[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    cache_layer = {
+        "ckv": paged_write(cache_layer["ckv"], c_kv, tables, lengths),
+        "krope": paged_write(cache_layer["krope"], k_rope, tables, lengths)}
+    ckv = gather_pages(cache_layer["ckv"], tables).astype(x.dtype)    # (B, L, R)
+    krope = gather_pages(cache_layer["krope"], tables).astype(x.dtype)
+    kpos = paged_kpos(lengths + S, ckv.shape[1])                      # (B, L)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    scores = (jnp.einsum("bshr,blr->bhsl", q_c, ckv) +
+              jnp.einsum("bshr,blr->bhsl", q_rope, krope)).astype(jnp.float32)
+    scores = scores / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= positions[:, :, None])
+    scores = jnp.where(mask[:, None], scores, NEG_INF)                # (B,H,S,L)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask.any(-1)[:, None, :, None], p, 0.0)
+    o_c = jnp.einsum("bhsl,blr->bshr", p.astype(ckv.dtype), ckv)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", o_c, w_uv)
+    return out.reshape(B, S, -1) @ params["wo"], cache_layer
+
+
 def mla_cached(params, cfg, x, pos0, cache_layer, *, ring: bool = False,
                impl: str = "auto"):
     """Cached step via the absorbed formulation (S is small: 1..gamma)."""

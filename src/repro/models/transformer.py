@@ -21,8 +21,11 @@ import jax
 import jax.numpy as jnp
 
 from .attention import encode_cross_kv, init_attention, attn_train, cross_attn
-from .blocks import block_cached, block_train, ffn_apply, init_block, init_ffn
-from .cache import CacheSpec, LayerCacheSpec, build_cache_spec, init_layer_cache
+from .blocks import (block_cached, block_paged, block_train, ffn_apply,
+                     init_block, init_ffn)
+from .cache import (CacheSpec, LayerCacheSpec, build_cache_spec,
+                    build_paged_cache_spec, init_layer_cache,
+                    init_paged_layer_cache)
 from .common import dense_init, embed_init, rms_norm, softcap
 from .config import ModelConfig
 from .sharding import constrain
@@ -289,6 +292,94 @@ def step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
     logits = logits_fn(params, cfg, x)
     S_new = tokens.shape[1] + (0 if patch_embeds is None else patch_embeds.shape[1])
     new_cache = {**cache, "pos": pos0 + S_new, "layers": new_layers}
+    return logits, new_cache
+
+
+# ------------------------------------------------------------ paged step
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     block_size: int = 64, pool_tokens: Optional[int] = None,
+                     dtype=jnp.bfloat16):
+    """Paged decode cache: one global block pool per attention layer plus
+    per-stream (tables, lengths). Recurrent layers keep (B, ...) state.
+    ``pool_tokens`` defaults to ``batch * max_len`` — the dense engine's
+    capacity — so the refactor is drop-in; serving passes less to decouple
+    memory from worst-case per-slot buffers."""
+    assert not cfg.is_encdec and cfg.vision is None, \
+        "paged cache serves decoder-only LM stacks"
+    spec = build_paged_cache_spec(cfg, max_len, block_size=block_size,
+                                  pool_tokens=pool_tokens or batch * max_len)
+    g = layer_grouping(cfg)
+
+    def mk(i):
+        return init_paged_layer_cache(cfg, spec.layers[i], spec, batch, dtype)
+
+    layers = {"prefix": [mk(i) for i in g.prefix],
+              "tail": [mk(i) for i in g.tail],
+              "stack": None}
+    if g.n_cycles:
+        one_cycle = {str(j): mk(g.scan_start + j) for j in range(g.period)}
+        layers["stack"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (g.n_cycles,) + a.shape), one_cycle)
+    cache = {"lengths": jnp.zeros((batch,), jnp.int32),
+             "tables": jnp.zeros((batch, spec.max_blocks), jnp.int32),
+             "layers": layers}
+    return cache, spec
+
+
+def paged_step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
+               all_logits: bool = False, impl: str = "auto"):
+    """Advance B independent streams by S tokens against the paged cache.
+
+    Unlike ``step`` (one shared ``pos`` scalar) every stream writes at its
+    own ``lengths[b]`` and attends through its own block-table row, so ONE
+    jitted program serves lanes at arbitrary sequence positions — and the
+    pool is shared, which a vmap-of-single-stream formulation cannot express
+    (per-lane writes to one buffer do not compose under vmap).
+    Returns (logits, new_cache); new_cache has ``lengths + S``.
+    """
+    assert spec.paged
+    g = layer_grouping(cfg)
+    lengths, tables = cache["lengths"], cache["tables"]
+    x = embed_tokens(params, cfg, tokens)
+    x = constrain(x, ("pod", "data"), None, None)
+
+    layers = cache["layers"]
+    new_layers = {"prefix": [], "tail": [], "stack": None}
+
+    for k, i in enumerate(g.prefix):
+        x, lc = block_paged(params["layers"]["prefix"][k], cfg, i, x,
+                            layers["prefix"][k], tables, lengths,
+                            spec.layers[i], impl=impl)
+        new_layers["prefix"].append(lc)
+
+    if g.n_cycles:
+        def cycle(x, xs):
+            cp, cc = xs
+            new_cc = {}
+            for j in range(g.period):
+                idx = g.scan_start + j
+                x, lc = block_paged(cp[str(j)], cfg, idx, x, cc[str(j)],
+                                    tables, lengths, spec.layers[idx],
+                                    impl=impl)
+                new_cc[str(j)] = lc
+            return x, new_cc
+        x, new_stack = jax.lax.scan(
+            cycle, x, (params["layers"]["stack"], layers["stack"]))
+        new_layers["stack"] = new_stack
+
+    for k, i in enumerate(g.tail):
+        x, lc = block_paged(params["layers"]["tail"][k], cfg, i, x,
+                            layers["tail"][k], tables, lengths,
+                            spec.layers[i], impl=impl)
+        new_layers["tail"].append(lc)
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if not all_logits:
+        x = x[:, -1:]
+    logits = logits_fn(params, cfg, x)
+    new_cache = {**cache, "lengths": lengths + tokens.shape[1],
+                 "layers": new_layers}
     return logits, new_cache
 
 

@@ -1,14 +1,22 @@
-"""Continuous-batching serving engine over ``BatchedSpecEngine``.
+"""Continuous-batching serving engine over ``BatchedSpecEngine`` (dense
+slot-stacked caches) or ``PagedSpecEngine`` (global block pools + per-stream
+block tables, ``paged=True``).
 
 Scheduler model
 ---------------
 The server owns a fixed pool of ``max_concurrency`` slots backed by ONE
-slot-stacked cache pair and ONE jitted batched draft/verify program
-(compiled once per (B, gamma_max) — admission never recompiles it).
+cache pair and ONE jitted batched draft/verify program (compiled once per
+(B, gamma_max) — admission never recompiles it).
 
 * **Admission**: every tick begins by prefilling queued requests into free
   slots (FIFO) until the pool is full; an admitted request generates in
   that same tick's batched session.  In-flight streams are never paused.
+  Paged mode is additionally BLOCK-AWARE: admission reserves the request's
+  worst-case KV blocks (prompt + token budget + draft overshoot) from the
+  shared pool, and when the head-of-queue request cannot be covered the
+  scheduler BACKPRESSURES — the request stays queued (FIFO order intact)
+  until completions release enough blocks.  Reserving worst-case up front
+  means a running stream can never hit pool exhaustion mid-flight.
 * **Slot reuse**: when a stream finishes (EOS / token budget / max_len) its
   slot is released at the end of the tick and the next queued request takes
   it over — the lane's stale cache contents are fully overwritten by the
@@ -40,7 +48,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.controller import Controller
-from repro.core.engine import BatchedSpecEngine, GenResult, ModelBundle
+from repro.core.engine import (BatchedSpecEngine, GenResult, ModelBundle,
+                               PagedSpecEngine)
 
 
 @dataclass
@@ -64,11 +73,24 @@ class SpecServer:
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: Controller, *, max_len: int = 2048,
                  max_concurrency: int = 8, temperature: float = 0.0,
-                 greedy: bool = True, seed: int = 0):
-        self.engine = BatchedSpecEngine(
-            draft, target, controller, batch_size=max_concurrency,
-            max_len=max_len, temperature=temperature, greedy=greedy,
-            seed=seed)
+                 greedy: bool = True, seed: int = 0, paged: bool = False,
+                 block_size: int = 64, pool_tokens: Optional[int] = None):
+        if paged:
+            # pool_tokens sizes KV memory independently of B x max_len: with
+            # short requests the SAME byte budget admits more concurrent
+            # streams than the dense engine's worst-case per-slot buffers
+            self.engine = PagedSpecEngine(
+                draft, target, controller, batch_size=max_concurrency,
+                max_len=max_len, block_size=block_size,
+                pool_tokens=pool_tokens, temperature=temperature,
+                greedy=greedy, seed=seed)
+        else:
+            self.engine = BatchedSpecEngine(
+                draft, target, controller, batch_size=max_concurrency,
+                max_len=max_len, temperature=temperature, greedy=greedy,
+                seed=seed)
+        self.paged = paged
+        self.gamma_max = controller.gamma_max
         self.max_concurrency = max_concurrency
         self.queue: deque = deque()
         self.requests: Dict[int, Request] = {}
@@ -76,6 +98,8 @@ class SpecServer:
         self._next_id = 0
         self._slot_rid: Dict[int, int] = {}      # slot -> request_id
         self._slot_started: Dict[int, float] = {}
+        self.backpressure_events = 0
+        self.peak_concurrency = 0
 
     # ------------------------------------------------------------- api
     def submit(self, prompt: List[int], max_new_tokens: int,
@@ -92,13 +116,28 @@ class SpecServer:
         return {rid: self.engine.slots[slot]
                 for slot, rid in self._slot_rid.items()}
 
+    def _reserve_tokens(self, req: Request) -> int:
+        """Worst-case sequence length of a request: prompt + budget + the
+        draft's maximum overshoot within one session."""
+        return len(req.prompt) + req.max_new_tokens + self.gamma_max + 2
+
     def _admit(self) -> None:
         for slot in self.engine.free_slots():
             if not self.queue:
                 break
-            rid = self.queue.popleft()
+            rid = self.queue[0]
             req = self.requests[rid]
-            self.engine.open_stream(slot, req.prompt, req.eos_id)
+            if self.paged and not self.engine.can_admit(self._reserve_tokens(req)):
+                # backpressure: head-of-queue request stays queued (FIFO
+                # preserved) until completed streams release blocks
+                self.backpressure_events += 1
+                break
+            self.queue.popleft()
+            if self.paged:
+                self.engine.open_stream(slot, req.prompt, req.eos_id,
+                                        reserve_tokens=self._reserve_tokens(req))
+            else:
+                self.engine.open_stream(slot, req.prompt, req.eos_id)
             self._slot_rid[slot] = rid
             self._slot_started[slot] = time.perf_counter()
 
@@ -109,6 +148,7 @@ class SpecServer:
         self._admit()
         if not self._slot_rid:
             return []
+        self.peak_concurrency = max(self.peak_concurrency, len(self._slot_rid))
         self.engine.session_step_batch()
         finished: List[int] = []
         for slot in list(self._slot_rid):
@@ -145,7 +185,7 @@ class SpecServer:
         acc = sum(r.result.total_accepted for r in self.responses)
         drf = sum(r.result.total_drafted for r in self.responses)
         lats = np.array([r.latency_s for r in self.responses])
-        return {
+        stats = {
             "n_requests": len(self.responses),
             "total_new_tokens": toks,
             "modeled_cost_per_token": cost / max(toks, 1),
@@ -154,4 +194,9 @@ class SpecServer:
             "mean_latency_s": float(lats.mean()),
             "p50_latency_s": float(np.percentile(lats, 50)),
             "p95_latency_s": float(np.percentile(lats, 95)),
+            "peak_concurrency": self.peak_concurrency,
+            "backpressure_events": self.backpressure_events,
         }
+        if self.paged:
+            stats.update(self.engine.pool_stats())
+        return stats

@@ -1,0 +1,86 @@
+"""Fast smoke for the example entry points: each example's ``main`` runs
+end to end against a tiny random-init pair, so interface drift between the
+examples and the library (engine/server/controller signatures) breaks CI
+instead of users.  Heavy pieces (trained checkpoints, big configs, long
+generations) are monkeypatched down to seconds-scale equivalents — the
+point is exercising the example's own code path, not its quality."""
+import importlib.util
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load_example(name):
+    path = os.path.join(ROOT, "examples", f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"examples_{name}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def tiny_trained_pair(tiny_dense_pair):
+    """Stand-in for ``benchmarks.common.trained_pair`` (which trains for
+    minutes): the session-scoped random-init pair with unit costs."""
+    draft, target = tiny_dense_pair
+    def fake(name, **kw):
+        return draft, target
+    return fake
+
+
+def test_quickstart_main(monkeypatch, tiny_trained_pair):
+    mod = _load_example("quickstart")
+    monkeypatch.setattr(mod, "trained_pair", tiny_trained_pair)
+    real_make = mod.make_controller
+    monkeypatch.setattr(mod, "make_controller",
+                        lambda kind, gamma_max=16, **kw:
+                        real_make(kind, gamma_max=4, **kw))
+    real_engine = mod.SpecEngine
+    class TinyEngine(real_engine):
+        def __init__(self, draft, target, controller, **kw):
+            kw["max_len"] = 160
+            super().__init__(draft, target, controller, **kw)
+        def generate(self, prompt, max_new_tokens, eos_id=None):
+            return super().generate(prompt[:8], min(max_new_tokens, 8), eos_id)
+    monkeypatch.setattr(mod, "SpecEngine", TinyEngine)
+    mod.main()
+
+
+def test_serve_tapout_main(monkeypatch, tiny_trained_pair, capsys):
+    mod = _load_example("serve_tapout")
+    monkeypatch.setattr(mod, "trained_pair", tiny_trained_pair)
+    real_make = mod.make_controller
+    monkeypatch.setattr(mod, "make_controller",
+                        lambda kind, gamma_max=16, **kw:
+                        real_make(kind, gamma_max=4, **kw))
+    real_static = mod.StaticGamma
+    monkeypatch.setattr(mod, "StaticGamma",
+                        lambda gamma, **kw: real_static(gamma=3, **kw))
+    real_server = mod.SpecServer
+    class TinyServer(real_server):
+        def __init__(self, draft, target, controller, **kw):
+            kw["max_len"] = 160
+            kw["max_concurrency"] = 2
+            super().__init__(draft, target, controller, **kw)
+    monkeypatch.setattr(mod, "SpecServer", TinyServer)
+    monkeypatch.setattr(sys, "argv",
+                        ["serve_tapout.py", "--requests", "2", "--max-new", "6"])
+    mod.main()
+    out = capsys.readouterr().out
+    assert "modeled speedup over Static-6" in out
+
+
+def test_arch_spec_decode_main(monkeypatch, capsys):
+    mod = _load_example("arch_spec_decode")
+    monkeypatch.setattr(sys, "argv",
+                        ["arch_spec_decode.py", "--arch", "qwen3-4b",
+                         "--max-new", "6"])
+    real_make = mod.make_controller
+    monkeypatch.setattr(mod, "make_controller",
+                        lambda kind, gamma_max=16, **kw:
+                        real_make(kind, gamma_max=3, **kw))
+    mod.main()
+    assert "tokens" in capsys.readouterr().out.lower()

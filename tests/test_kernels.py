@@ -80,6 +80,121 @@ def test_decode_attention_ring_semantics():
                                atol=5e-5, rtol=5e-5)
 
 
+def _random_paged_layout(rng, B, N, bs, MB):
+    """Non-overlapping random tables (block 0 = trash) + ragged lengths."""
+    perm = rng.permutation(np.arange(1, N))
+    tables = np.zeros((B, MB), np.int32)
+    lengths = np.zeros((B,), np.int32)
+    pi = 0
+    for b in range(B):
+        # bound by the blocks still unclaimed in the pool, not just MB
+        max_tok = min(MB, len(perm) - pi) * bs
+        L = int(rng.integers(1, max_tok)) if max_tok > 1 else 1
+        nb = -(-L // bs)
+        tables[b, :nb] = perm[pi:pi + nb]
+        pi += nb
+        lengths[b] = L
+    return tables, lengths
+
+
+@pytest.mark.parametrize("B,H,G,N,bs,MB,D,window", [
+    (2, 4, 2, 9, 16, 4, 64, 0),
+    (3, 2, 1, 17, 8, 6, 32, 0),      # MQA, small blocks
+    (2, 8, 8, 9, 16, 4, 128, 0),     # MHA, MXU-aligned head dim
+    (2, 4, 2, 9, 16, 4, 64, 12),     # sliding window
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(B, H, G, N, bs, MB, D, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kpool = jax.random.normal(ks[1], (N, bs, G, D), dtype)
+    vpool = jax.random.normal(ks[2], (N, bs, G, D), dtype)
+    tables, lengths = _random_paged_layout(np.random.default_rng(0), B, N, bs, MB)
+    out = ops.paged_decode_attention(q, kpool, vpool, jnp.asarray(tables),
+                                     jnp.asarray(lengths), window=window)
+    exp = ref.paged_decode_attention_ref(q, kpool, vpool, jnp.asarray(tables),
+                                         jnp.asarray(lengths), window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_paged_decode_matches_dense_decode():
+    """Paged kernel == dense decode kernel on the same logical cache."""
+    B, H, G, bs, MB, D = 2, 4, 2, 16, 4, 64
+    N = B * MB + 1
+    L = MB * bs
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    lengths = np.array([37, 55], np.int32)
+    # pack each stream's logical rows into disjoint pool blocks
+    tables = np.zeros((B, MB), np.int32)
+    kpool = np.zeros((N, bs, G, D), np.float32)
+    vpool = np.zeros((N, bs, G, D), np.float32)
+    nxt = 1
+    for b in range(B):
+        for mb in range(MB):
+            tables[b, mb] = nxt
+            kpool[nxt] = np.asarray(k[b, :, mb * bs:(mb + 1) * bs]).transpose(1, 0, 2)
+            vpool[nxt] = np.asarray(v[b, :, mb * bs:(mb + 1) * bs]).transpose(1, 0, 2)
+            nxt += 1
+    out = ops.paged_decode_attention(q, jnp.asarray(kpool), jnp.asarray(vpool),
+                                     jnp.asarray(tables), jnp.asarray(lengths))
+    for b in range(B):
+        kpos = jnp.where(jnp.arange(L) < lengths[b], jnp.arange(L), -1)
+        exp = ops.decode_attention(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                   jnp.int32(lengths[b] - 1),
+                                   kpos.astype(jnp.int32), block_l=32)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(exp[0]),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def test_paged_decode_empty_lane_outputs_zero():
+    """lengths == 0 (a masked/empty serving lane): every block is fully
+    masked, so the kernel must emit zeros — not the mean of the trash rows
+    (regression: exp(s - NEG_INF_max) == 1 poisoned the softmax sums)."""
+    B, H, G, N, bs, MB, D = 2, 2, 1, 5, 8, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kpool = jax.random.normal(ks[1], (N, bs, G, D))
+    vpool = jax.random.normal(ks[2], (N, bs, G, D))
+    tables = np.asarray([[0, 0], [1, 2]], np.int32)
+    lengths = jnp.asarray([0, 9], jnp.int32)
+    out = ops.paged_decode_attention(q, kpool, vpool, jnp.asarray(tables),
+                                     lengths)
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    exp = ref.paged_decode_attention_ref(q, kpool, vpool, jnp.asarray(tables),
+                                         lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_paged_decode_post_rollback_state():
+    """Rows past a truncated length are live in HBM but dead to attention:
+    truncating lengths must equal never having written the tail."""
+    B, H, G, N, bs, MB, D = 1, 2, 1, 7, 8, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kpool = jax.random.normal(ks[1], (N, bs, G, D))
+    vpool = jax.random.normal(ks[2], (N, bs, G, D))
+    tables = np.asarray([[3, 1, 4, 2]], np.int32)
+    full = ops.paged_decode_attention(q, kpool, vpool, jnp.asarray(tables),
+                                      jnp.asarray([20], jnp.int32))
+    # corrupt the rows past position 20 -> must not change the output
+    flat_k, flat_v = np.array(kpool), np.array(vpool)
+    for p in range(20, MB * bs):
+        blk, off = tables[0, p // bs], p % bs
+        flat_k[blk, off] = 1e3
+        flat_v[blk, off] = -1e3
+    rolled = ops.paged_decode_attention(q, jnp.asarray(flat_k),
+                                        jnp.asarray(flat_v),
+                                        jnp.asarray(tables),
+                                        jnp.asarray([20], jnp.int32))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(rolled),
+                               atol=5e-5, rtol=5e-5)
+
+
 @pytest.mark.parametrize("B,NC,Q,H,P,G,N", [
     (1, 2, 16, 2, 32, 1, 16),
     (2, 3, 16, 4, 32, 2, 16),    # grouped B/C

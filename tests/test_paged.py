@@ -1,0 +1,329 @@
+"""Paged KV-cache subsystem: block allocator invariants, token-for-token
+equivalence of the paged engine with the dense path, masked-slot/block-reuse
+isolation, O(1) length-truncation rollback, and block-aware serving
+admission with backpressure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ModelBundle, SpecEngine, make_controller
+from repro.core.engine import BatchedSpecEngine, PagedSpecEngine
+from repro.models import MLAConfig, ModelConfig, RGLRUConfig
+from repro.models import transformer as T
+from repro.models.cache import BlockAllocator, PoolExhausted
+from repro.serving.engine import SpecServer
+
+PROMPTS = [[1, 5, 9, 13],
+           [2, 6, 10, 14, 18, 22, 26],
+           [3, 7, 11, 15, 19, 23, 27, 31, 35, 39, 43],
+           [4, 8, 12, 16, 20]]
+
+
+# --------------------------------------------------------------- allocator
+
+def test_allocator_invariants():
+    a = BlockAllocator(num_blocks=9, max_blocks=6, batch=3)
+    assert a.blocks_in_use == 0
+    row = a.allocate(0, 3)
+    assert a.blocks_in_use == 3 and a.peak_in_use == 3
+    assert 0 not in row[:3], "trash block must never be handed out"
+    assert (row[3:] == 0).all(), "unallocated table entries point at trash"
+    a.allocate(1, 4)
+    assert a.blocks_in_use == 7
+    # no block belongs to two slots
+    assert not set(a.owned[0]) & set(a.owned[1])
+    with pytest.raises(PoolExhausted):
+        a.allocate(2, 2)                      # only 1 of 8 usable blocks left
+    assert a.blocks_in_use == 7, "failed allocation must not leak"
+    a.release(1)
+    assert a.blocks_in_use == 3
+    assert (a.tables[1] == 0).all()
+    a.allocate(2, 5)                          # released blocks are reusable
+    assert a.blocks_in_use == 8 and a.peak_in_use == 8
+
+
+def test_allocator_truncate_frees_tail_blocks():
+    a = BlockAllocator(num_blocks=9, max_blocks=8, batch=1)
+    a.allocate(0, 6)
+    released = a.truncate(0, keep_tokens=33, block_size=16)  # keep 3 blocks
+    assert released == 3
+    assert len(a.owned[0]) == 3 and a.blocks_in_use == 3
+    assert (a.tables[0][3:] == 0).all() and (a.tables[0][:3] != 0).all()
+
+
+def test_paged_rollback_is_length_truncation_only():
+    """Rollback must not touch pool contents — only the lengths vector."""
+    from repro.models.cache import paged_rollback
+    cfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=17)
+    cache, spec = T.init_paged_cache(cfg, 2, 64, block_size=8,
+                                     dtype=jnp.float32)
+    rolled = paged_rollback(cache, np.array([3, 7]))
+    assert rolled["layers"] is cache["layers"]      # same pytree, no copy
+    assert rolled["tables"] is cache["tables"]
+    np.testing.assert_array_equal(np.asarray(rolled["lengths"]), [3, 7])
+
+
+# --------------------------------------------------------------- equivalence
+
+def _drain(eng, prompts, max_new, reserve=None):
+    final = [None] * len(prompts)
+    for i, p in enumerate(prompts):
+        if isinstance(eng, PagedSpecEngine):
+            eng.open_stream(i, p, reserve_tokens=reserve)
+        else:
+            eng.open_stream(i, p)
+    for _ in range(500):
+        for i in range(len(prompts)):
+            st = eng.slots[i]
+            if st is not None and (st["done"]
+                                   or st["res"].new_tokens >= max_new):
+                final[i] = eng.close_stream(i)
+        if all(f is not None for f in final):
+            break
+        eng.session_step_batch()
+    return final
+
+
+def test_paged_matches_single_stream_and_dense_batched(tiny_dense_pair):
+    """B=4 paged generation == B=4 dense batched == 4 single-stream runs,
+    token for token (the ISSUE's headline acceptance criterion)."""
+    draft, target = tiny_dense_pair
+    max_new = 20
+    refs = []
+    for p in PROMPTS:
+        ctrl = make_controller("fixed_svip", gamma_max=4, seed=0)
+        refs.append(SpecEngine(draft, target, ctrl,
+                               max_len=256).generate(p, max_new).tokens)
+    dense = BatchedSpecEngine(draft, target,
+                              make_controller("fixed_svip", gamma_max=4, seed=0),
+                              batch_size=4, max_len=256)
+    dense_states = _drain(dense, PROMPTS, max_new)
+    paged = PagedSpecEngine(draft, target,
+                            make_controller("fixed_svip", gamma_max=4, seed=0),
+                            batch_size=4, max_len=256, block_size=16)
+    paged_states = _drain(paged, PROMPTS, max_new)
+    for pst, dst, ref in zip(paged_states, dense_states, refs):
+        n = min(len(ref), len(pst["seq"]))
+        assert pst["seq"][:n] == ref[:n]
+        nd = min(len(dst["seq"]), len(pst["seq"]))
+        assert pst["seq"][:nd] == dst["seq"][:nd]
+        assert pst["res"].new_tokens >= max_new
+    # every stream's blocks were returned on close
+    assert paged.dalloc.blocks_in_use == 0
+    assert paged.talloc.blocks_in_use == 0
+
+
+def test_paged_matches_single_recurrent_family():
+    """Snapshot-recompute (recurrent draft) over the paged target pool."""
+    V = 61
+    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=96,
+                       num_heads=2, num_kv_heads=1, d_ff=192, vocab_size=V)
+    dcfg = ModelConfig(name="d", arch_type="hybrid", num_layers=2, d_model=64,
+                       num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=V,
+                       block_pattern=("rglru", "local"), window=16,
+                       rglru=RGLRUConfig(lru_width=64))
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    prompts = PROMPTS[:2]
+    max_new = 12
+    refs = []
+    for p in prompts:
+        eng1 = SpecEngine(draft, target,
+                          make_controller("fixed_svip", gamma_max=4, seed=0),
+                          max_len=128)
+        refs.append(eng1.generate(p, max_new).tokens)
+    eng = PagedSpecEngine(draft, target,
+                          make_controller("fixed_svip", gamma_max=4, seed=0),
+                          batch_size=2, max_len=128, block_size=16)
+    assert not eng.draft_cheap and eng.target_cheap
+    states = _drain(eng, prompts, max_new)
+    for st, ref in zip(states, refs):
+        n = min(len(ref), len(st["seq"]))
+        assert st["seq"][:n] == ref[:n]
+
+
+def test_paged_matches_single_stream_mla():
+    """MLA latent pools (ckv/krope block tables, absorbed attention) —
+    the ISSUE's acceptance criterion names attention/MLA-only configs."""
+    V = 61
+    mla = MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                    qk_rope_head_dim=8, v_head_dim=16)
+    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=V,
+                       block_pattern=("mla",), mla=mla)
+    dcfg = ModelConfig(name="d", arch_type="dense", num_layers=1, d_model=32,
+                       num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=V,
+                       block_pattern=("mla",), mla=mla)
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    prompts = PROMPTS[:2]
+    max_new = 12
+    refs = []
+    for p in prompts:
+        refs.append(SpecEngine(draft, target,
+                               make_controller("fixed_svip", gamma_max=4,
+                                               seed=0),
+                               max_len=128).generate(p, max_new).tokens)
+    eng = PagedSpecEngine(draft, target,
+                          make_controller("fixed_svip", gamma_max=4, seed=0),
+                          batch_size=2, max_len=128, block_size=16)
+    assert eng.draft_cheap and eng.target_cheap
+    states = _drain(eng, prompts, max_new)
+    for st, ref in zip(states, refs):
+        n = min(len(ref), len(st["seq"]))
+        assert st["seq"][:n] == ref[:n]
+
+
+def test_paged_masked_slot_and_block_reuse_isolation(tiny_dense_pair):
+    """A neighbor slot that finishes, releases its BLOCKS back to the pool,
+    and is replaced by a new stream (which re-allocates those same physical
+    blocks) must never perturb slot 0's tokens."""
+    draft, target = tiny_dense_pair
+    max_new = 24
+    ref = SpecEngine(draft, target,
+                     make_controller("fixed_svip", gamma_max=4, seed=0),
+                     max_len=256).generate(PROMPTS[0], max_new).tokens
+    ctrl = make_controller("fixed_svip", gamma_max=4, seed=0)
+    eng = PagedSpecEngine(draft, target, ctrl, batch_size=2, max_len=256,
+                          block_size=16)
+    eng.open_stream(0, PROMPTS[0])
+    eng.open_stream(1, PROMPTS[1])
+    sessions = 0
+    for tick in range(200):
+        st0 = eng.slots[0]
+        if st0["res"].new_tokens >= max_new:
+            break
+        if tick == 2 and eng.slots[1] is not None:
+            eng.close_stream(1)               # blocks go back to the pool
+        if tick == 5 and eng.slots[1] is None:
+            eng.open_stream(1, PROMPTS[2])    # new stream reuses them
+        sessions += len(eng.session_step_batch())
+    n = min(len(ref), len(st0["seq"]))
+    assert st0["seq"][:n] == ref[:n]
+    assert sum(h["batch"] for h in ctrl.history) == sessions
+
+
+def test_paged_outputs_masked_for_inactive(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    ctrl = make_controller("fixed_svip", gamma_max=4, seed=0)
+    eng = PagedSpecEngine(draft, target, ctrl, batch_size=3, max_len=256,
+                          block_size=16)
+    eng.open_stream(1, PROMPTS[0])
+    assert eng.active_mask().tolist() == [False, True, False]
+    eng.session_step_batch()
+    assert eng.slots[1]["res"].sessions[0].n_drafted >= 1
+    assert eng.slots[0] is None and eng.slots[2] is None
+    assert eng._tlen[0] == 0 and eng._tlen[2] == 0
+    # empty lanes own no blocks and their table rows point at trash
+    assert not eng.talloc.owned[0] and not eng.talloc.owned[2]
+    assert (np.asarray(eng.tcache["tables"])[[0, 2]] == 0).all()
+
+
+def test_paged_slot_reuse_resets_recurrent_state():
+    """A reused slot must prefill from ZERO recurrent state, not the
+    previous stream's final hidden state (regression: pool rows are masked
+    by length, but conv/ssm/rec state is integrated and needs an explicit
+    reset on admission).  Asserted at the state level — after re-admission
+    the lane's recurrent leaves must be bit-identical to a fresh engine's —
+    and at the token level."""
+    V = 61
+    tcfg = ModelConfig(name="t", arch_type="hybrid", num_layers=2, d_model=64,
+                       num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=V,
+                       block_pattern=("rglru", "attn"),
+                       rglru=RGLRUConfig(lru_width=64))
+    dcfg = ModelConfig(name="d", arch_type="dense", num_layers=1, d_model=32,
+                       num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=V)
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    max_new = 10
+
+    from repro.models.cache import POOL_LEAF_KEYS
+
+    def recurrent_leaves(eng):
+        out = []
+        def f(path, a):
+            if getattr(path[-1], "key", None) not in POOL_LEAF_KEYS:
+                out.append(np.asarray(a))
+            return a
+        jax.tree_util.tree_map_with_path(f, eng.tcache["layers"])
+        return out
+
+    def mk():
+        return PagedSpecEngine(draft, target,
+                               make_controller("fixed_svip", gamma_max=3,
+                                               seed=0),
+                               batch_size=1, max_len=128, block_size=16)
+
+    fresh = mk()
+    assert not fresh.target_cheap
+    fresh.open_stream(0, PROMPTS[1])
+    want = recurrent_leaves(fresh)
+
+    reused = mk()
+    _drain(reused, [PROMPTS[0]], max_new)      # pollute slot 0's state
+    reused.open_stream(0, PROMPTS[1])          # re-admit into slot 0
+    got = recurrent_leaves(reused)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+    ref = SpecEngine(draft, target,
+                     make_controller("fixed_svip", gamma_max=3, seed=0),
+                     max_len=128).generate(PROMPTS[1], max_new).tokens
+    for _ in range(200):
+        s = reused.slots[0]
+        if s["done"] or s["res"].new_tokens >= max_new:
+            break
+        reused.session_step_batch()
+    seq = reused.slots[0]["seq"]
+    n = min(len(ref), len(seq))
+    assert seq[:n] == ref[:n]
+
+
+# --------------------------------------------------------------- serving
+
+def test_paged_server_backpressures_and_drains(tiny_dense_pair):
+    """With a pool too small for the full batch width, admission must
+    re-queue instead of admitting — and still drain every request."""
+    draft, target = tiny_dense_pair
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=4, seed=0)
+    srv = SpecServer(draft, target, ctrl, max_len=256, max_concurrency=4,
+                     paged=True, block_size=16, pool_tokens=96)
+    prompts = [[1 + i, 5, 9, 13] for i in range(6)]
+    ids = [srv.submit(p, 10) for p in prompts]
+    responses = srv.run_until_drained(max_ticks=500)
+    assert len(responses) == 6
+    assert {r.request_id for r in responses} == set(ids)
+    for r in responses:
+        assert r.result.new_tokens >= 10
+    stats = srv.throughput_stats()
+    assert stats["backpressure_events"] > 0
+    assert stats["peak_concurrency"] < 4        # the pool, not B, was binding
+    assert stats["blocks_in_use"] == 0          # all blocks returned
+    assert stats["peak_blocks_in_use"] > 0
+
+
+def test_paged_server_matches_dense_server(tiny_dense_pair):
+    """Same workload through the dense and the paged server: identical
+    tokens per request (greedy), so the refactor is behavior-preserving."""
+    draft, target = tiny_dense_pair
+    prompts = [[1, 5, 9, 13], [2, 6, 10, 14], [3, 7, 11, 15]]
+
+    def run(paged):
+        ctrl = make_controller("fixed_svip", gamma_max=4, seed=0)
+        srv = SpecServer(draft, target, ctrl, max_len=256, max_concurrency=2,
+                         paged=paged, block_size=16)
+        for p in prompts:
+            srv.submit(p, 12)
+        srv.run_until_drained(max_ticks=500)
+        return {r.request_id: r.result.tokens for r in srv.responses}
+
+    dense, paged = run(False), run(True)
+    assert dense.keys() == paged.keys()
+    for rid in dense:
+        n = min(len(dense[rid]), len(paged[rid]))
+        assert dense[rid][:n] == paged[rid][:n]

@@ -102,6 +102,79 @@ def test_moe_dispatch_positions_unique(G, S, data):
     assert 0.0 <= float(aux["moe_drop_frac"]) <= 1.0
 
 
+# ------------------------------------------------------------- paged cache
+
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_paged_kernel_matches_dense_reference(data):
+    """Paged flash-decode == dense reference for arbitrary ragged lengths,
+    shuffled block tables, sliding windows, and post-rollback states
+    (lengths truncated below the rows actually written)."""
+    import jax, jax.numpy as jnp
+    from repro.kernels import ops, ref
+    ops.FORCE_INTERPRET = True
+    B = data.draw(st.integers(1, 3), label="B")
+    G = data.draw(st.sampled_from([1, 2]), label="G")
+    H = G * data.draw(st.sampled_from([1, 2]), label="rep")
+    bs = data.draw(st.sampled_from([4, 8]), label="bs")
+    MB = data.draw(st.integers(2, 4), label="MB")
+    D = 16
+    window = data.draw(st.sampled_from([0, 0, 5]), label="window")
+    N = B * MB + 1
+    ks = jax.random.split(jax.random.PRNGKey(data.draw(
+        st.integers(0, 1000), label="seed")), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kpool = jax.random.normal(ks[1], (N, bs, G, D))
+    vpool = jax.random.normal(ks[2], (N, bs, G, D))
+    # shuffled, non-overlapping tables; ragged lengths simulate rollback:
+    # every allocated row exists in the pool, lengths may sit mid-block
+    perm = np.random.default_rng(
+        data.draw(st.integers(0, 1000), label="perm")).permutation(
+            np.arange(1, N))
+    tables = np.zeros((B, MB), np.int32)
+    lengths = np.zeros((B,), np.int32)
+    pi = 0
+    for b in range(B):
+        lengths[b] = data.draw(st.integers(1, MB * bs), label=f"len{b}")
+        nb = -(-int(lengths[b]) // bs)
+        tables[b, :nb] = perm[pi:pi + nb]
+        pi += nb
+    out = ops.paged_decode_attention(q, kpool, vpool, jnp.asarray(tables),
+                                     jnp.asarray(lengths), window=window)
+    exp = ref.paged_decode_attention_ref(q, kpool, vpool, jnp.asarray(tables),
+                                         jnp.asarray(lengths), window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+@given(st.lists(st.tuples(st.integers(1, 48), st.integers(0, 1)),
+                min_size=1, max_size=12),
+       st.integers(2, 12), st.integers(4, 16))
+@settings(max_examples=50, deadline=None)
+def test_allocator_conservation_under_churn(events, num_blocks_x, bs):
+    """Arbitrary admit/release churn conserves blocks, never double-books
+    a physical block, and never hands out the trash block."""
+    from repro.models.cache import BlockAllocator, PoolExhausted
+    num_blocks = num_blocks_x
+    a = BlockAllocator(num_blocks=num_blocks, max_blocks=8, batch=4)
+    live = set()
+    for tokens, kill in events:
+        slot = tokens % 4
+        if slot in live and kill:
+            a.release(slot)
+            live.discard(slot)
+        elif slot not in live:
+            try:
+                a.allocate(slot, a.blocks_for(tokens, bs))
+                live.add(slot)
+            except PoolExhausted:
+                pass
+        owned = [b for s in range(4) for b in a.owned[s]]
+        assert 0 not in owned
+        assert len(owned) == len(set(owned))          # no double-booking
+        assert len(a.free) + len(owned) == num_blocks - 1
+
+
 # ------------------------------------------------------------- masking rule
 
 @given(st.integers(0, 100), st.lists(st.integers(-1, 120), min_size=1,
