@@ -123,7 +123,7 @@ def _serve(draft, target, prompts, *, batch_size: int, max_new: int,
 
 def run(quick: bool = False, smoke: bool = False,
         batch_sizes: Optional[List[int]] = None) -> dict:
-    from benchmarks.common import save_json
+    from benchmarks.common import record_serving_bench, save_json
 
     if smoke:
         cfg = dict(n_requests=4, max_new=8, gamma_max=4, max_len=128)
@@ -190,6 +190,18 @@ def run(quick: bool = False, smoke: bool = False,
     save_json(f"serving_batch_paged{suffix}",
               {"config": cfg, "paged": paged,
                "dense_claim_row": rows[b_claim]})
+    record_serving_bench(f"serving_batch{suffix}", {
+        "tokens_per_s": {str(b): rows[b]["tokens_per_s"] for b in batch_sizes},
+        "p95_latency_s": {str(b): rows[b]["p95_latency_s"]
+                          for b in batch_sizes},
+        "speedup_vs_b1": payload["speedup_vs_b1"],
+        "claim_batched_beats_sequential":
+            payload["claim_batched_beats_sequential"],
+        "paged": {"tokens_per_s": paged["tokens_per_s"],
+                  "peak_concurrency": paged["peak_concurrency"],
+                  "cache_pool_bytes": paged["cache_pool_bytes"],
+                  "claim_paged_admits_more": paged["claim_paged_admits_more"]},
+    })
     return payload
 
 

@@ -247,6 +247,33 @@ def save_json(name: str, payload) -> str:
     return p
 
 
+BENCH_SERVING_PATH = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json"))
+
+
+def record_serving_bench(bench: str, summary: dict) -> str:
+    """Append one serving-bench run's summary to the repo-root
+    ``BENCH_serving.json`` so the perf trajectory is recorded ACROSS PRs
+    (the file is committed; CI fails the lint lane if it is gitignored and
+    the bench-smoke job if a run did not write it).  Entries are appended,
+    never rewritten — the git history of this file IS the trajectory."""
+    doc = {"runs": []}
+    if os.path.exists(BENCH_SERVING_PATH):
+        try:
+            with open(BENCH_SERVING_PATH) as f:
+                doc = json.load(f)
+        except (ValueError, OSError):
+            doc = {"runs": []}
+    doc.setdefault("runs", []).append({
+        "bench": bench,
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "summary": summary,
+    })
+    with open(BENCH_SERVING_PATH, "w") as f:
+        json.dump(doc, f, indent=2, default=float)
+    return BENCH_SERVING_PATH
+
+
 def fmt_table(rows: List[dict], cols: List[str]) -> str:
     widths = [max(len(c), *(len(f"{r.get(c, '')}") for r in rows)) for c in cols]
     lines = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]

@@ -1,10 +1,13 @@
-from .arms import Arm, arm_by_name, default_pool, multi_threshold_pool
+from .arms import (Arm, ShapeArm, arm_by_name, chain_shape, default_pool,
+                   default_shape_pool, multi_threshold_pool, tree_shape)
 from .bandits import make_bandit, BanditBank
-from .controller import (Controller, FixedArm, StaticGamma, TapOutSequence,
-                         TapOutToken, make_controller)
+from .controller import (Controller, FixedArm, FixedShape, StaticGamma,
+                         TapOutSequence, TapOutToken, TapOutTreeSequence,
+                         make_controller)
 from .engine import (BatchedSpecEngine, GenResult, ModelBundle,
-                     PagedSpecEngine, SpecEngine)
+                     PagedSpecEngine, SpecEngine, TreeSpecEngine)
 from .rewards import r_blend, r_simple
 from .spec_decode import (draft_session, draft_session_batched,
                           draft_session_paged, verify_session,
                           verify_session_batched, verify_session_paged)
+from .tree import TreeSpec, binary, chain, from_branching, wide

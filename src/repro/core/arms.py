@@ -166,6 +166,44 @@ def arm_by_name(name: str, threshold: float = None) -> Arm:
     return Arm(name, makers[name](h), h)
 
 
+# ------------------------------------------------------------ shape arms
+
+@dataclass(frozen=True)
+class ShapeArm:
+    """A SPECULATION-SHAPE arm for the tree meta-bandit: either a linear
+    chain governed by one of the parameter-free stop rules above, or a
+    static draft-tree topology (``core.tree.TreeSpec``).  The TapOut
+    meta-algorithm is unchanged — the shape is just another arm chosen
+    from observed reward, no hand-tuned thresholds added."""
+    name: str
+    kind: str                      # "chain" | "tree"
+    stop: Optional[Arm] = None     # chain: dynamic stop rule
+    tree: Optional[object] = None  # tree: TreeSpec (hashable)
+
+    def __post_init__(self):
+        assert (self.kind == "chain") == (self.stop is not None)
+        assert (self.kind == "tree") == (self.tree is not None)
+
+
+def chain_shape(stop: Arm) -> ShapeArm:
+    return ShapeArm(f"chain_{stop.name}", "chain", stop=stop)
+
+
+def tree_shape(tree) -> ShapeArm:
+    return ShapeArm(f"tree_{tree.name}", "tree", tree=tree)
+
+
+def default_shape_pool(gamma_max: int = 8) -> List[ShapeArm]:
+    """Chain arms (the paper pool's rules, unchanged) + tree topologies
+    sized so no tree drafts more than ~2x gamma_max nodes."""
+    from . import tree as _t
+    shapes = [chain_shape(a) for a in default_pool()]
+    trees = [_t.binary(3), _t.wide(4, max(2, min(4, gamma_max // 2))),
+             _t.from_branching((4, 2, 1))]
+    shapes += [tree_shape(t) for t in trees if t.n_nodes <= 2 * gamma_max + 8]
+    return shapes
+
+
 def update_adaedl_lambda(lam: float, accept_rate_ema: float, n_acc: int,
                          n_drafted: int, *, beta1=None, beta2=None, eps=None,
                          alpha_target=None) -> Tuple[float, float]:

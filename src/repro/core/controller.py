@@ -20,8 +20,9 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .arms import (ADAEDL_DEFAULTS, Arm, arm_by_name, default_pool,
-                   multi_threshold_pool, update_adaedl_lambda)
+from .arms import (ADAEDL_DEFAULTS, Arm, ShapeArm, arm_by_name,
+                   default_pool, default_shape_pool, multi_threshold_pool,
+                   update_adaedl_lambda)
 from .bandits import Bandit, BanditBank, make_bandit
 from .rewards import REWARDS
 
@@ -175,6 +176,96 @@ class TapOutToken(Controller):
         return self.bank.arm_values
 
 
+class TapOutTreeSequence(Controller):
+    """Sequence-level TapOut over SPECULATION SHAPES: the meta-bandit's
+    arms are (chain x stop-rule) AND static tree topologies, so chain-vs-
+    tree — and which tree — is learned online from observed reward, with
+    no new thresholds (the TapOut principle extended to the *shape* of a
+    speculation step).
+
+    The engine asks ``begin_shape()`` before a session and reports
+    ``update_shape(shape_idx, n_drafted, n_accepted)`` after verification;
+    chain shapes reuse the inherited chain-controller surface (``begin`` /
+    ``update``) so the drafting program's arm pool stays the deduplicated
+    stop-rule tuple.  Default reward is ``simple`` = m / gamma_max — the
+    accepted-tokens-per-verify-pass objective both shapes compete on
+    (``blend`` would penalize trees for their per-node acceptance rate,
+    which is low by construction).
+    """
+
+    def __init__(self, gamma_max: int, bandit: str = "ucb1",
+                 reward: str = "simple",
+                 shapes: Optional[List[ShapeArm]] = None, seed: int = 0,
+                 alpha: float = 0.5):
+        shapes = list(shapes or default_shape_pool(gamma_max))
+        # deduplicated stop-rule pool for the jitted chain drafting program
+        stops: List[Arm] = []
+        for s in shapes:
+            if s.kind == "chain" and s.stop not in stops:
+                stops.append(s.stop)
+        super().__init__(stops or [never_stop_arm()], gamma_max, seed)
+        self.shapes = tuple(shapes)
+        self.name = f"tapout_tree_{bandit}_{reward}"
+        if bandit in ("ts", "ts_gaussian"):
+            bandit = "ts_gaussian"
+        self.bandit = make_bandit(bandit, len(self.shapes), seed)
+        self.reward_fn = REWARDS[reward]
+        self.alpha = alpha
+        self._current = 0
+
+    def stop_arm_index(self, shape_idx: int) -> int:
+        """Index of a chain shape's stop rule within ``self.arms``."""
+        return self.arms.index(self.shapes[shape_idx].stop)
+
+    # -- engine API ---------------------------------------------------
+    def begin_shape(self) -> int:
+        self._current = int(self.bandit.select())
+        return self._current
+
+    def _reward(self, n_accepted: int, n_drafted: int) -> float:
+        if self.reward_fn is REWARDS["blend"]:
+            return self.reward_fn(n_accepted, n_drafted, self.gamma_max,
+                                  self.alpha)
+        return self.reward_fn(n_accepted, n_drafted, self.gamma_max)
+
+    def update_shape(self, shape_idx: int, n_drafted: int,
+                     n_accepted: int) -> None:
+        # AdaEDL's lambda tracks a CHAIN accept rate; a tree session's
+        # per-node rate (m / n_nodes) is low by construction and would
+        # drag the EMA — and therefore the adaedl chain arm's stop
+        # threshold — as a function of how often tree arms are pulled
+        if self.shapes[shape_idx].kind == "chain":
+            self.lam, self._accept_ema = update_adaedl_lambda(
+                self.lam, self._accept_ema, n_accepted, n_drafted)
+        self.bandit.update(shape_idx, self._reward(n_accepted, n_drafted))
+        self.history.append({"n_drafted": n_drafted, "n_accepted": n_accepted,
+                             "shape": self.shapes[shape_idx].name,
+                             "arm_values": self.arm_values})
+
+    # chain-controller surface (unused by the tree engine, kept total)
+    def begin(self) -> np.ndarray:
+        return np.zeros((self.gamma_max,), np.int32)
+
+    @property
+    def arm_values(self) -> np.ndarray:
+        return self.bandit.arm_values
+
+    @property
+    def shape_pulls(self) -> np.ndarray:
+        return self.bandit.counts.copy()
+
+
+class FixedShape(TapOutTreeSequence):
+    """A single speculation shape (chain-vs-tree per-shape baselines)."""
+
+    def __init__(self, gamma_max: int, shape: ShapeArm, seed: int = 0):
+        super().__init__(gamma_max, "ucb1", "simple", [shape], seed)
+        self.name = f"fixed_shape_{shape.name}"
+
+    def begin_shape(self) -> int:
+        return 0
+
+
 class FixedArm(Controller):
     """A single (possibly tuned) heuristic — the paper's baselines."""
 
@@ -221,4 +312,12 @@ def make_controller(kind: str, gamma_max: int, seed: int = 0, **kw) -> Controlle
         return TapOutToken(gamma_max, "ucb1", kw.get("pool"), seed)
     if kind == "tapout_token_ts":
         return TapOutToken(gamma_max, "ts_beta", kw.get("pool"), seed)
+    if kind == "tapout_tree_ucb1":
+        return TapOutTreeSequence(gamma_max, "ucb1",
+                                  kw.get("reward", "simple"),
+                                  kw.get("shapes"), seed)
+    if kind == "tapout_tree_exp3":
+        return TapOutTreeSequence(gamma_max, "exp3",
+                                  kw.get("reward", "simple"),
+                                  kw.get("shapes"), seed)
     raise ValueError(kind)

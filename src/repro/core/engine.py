@@ -21,10 +21,11 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.cache import (POOL_LEAF_KEYS, BlockAllocator, PoolExhausted,
                                 paged_rollback, rollback)
-from .controller import Controller
-from .spec_decode import (draft_session, draft_session_batched,
+from .controller import Controller, TapOutTreeSequence
+from .spec_decode import (_probs, draft_session, draft_session_batched,
                           draft_session_paged, verify_session,
                           verify_session_batched, verify_session_paged)
+from .tree import TreeSpec, verify_walk
 
 
 @dataclass
@@ -231,6 +232,350 @@ class SpecEngine(_StepMixin):
 def autoregressive_baseline_cost(n_tokens: int, target: ModelBundle) -> float:
     """Modeled cost of plain target-only decoding."""
     return n_tokens * target.cost_per_token
+
+
+# ===================================================================== tree
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _tree_forward(params, cfg, spec, cache, tokens, depths, mask, nodes):
+    return T.tree_step(params, cfg, tokens, cache, spec, depths, mask, nodes)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def _tree_commit(cfg, spec, cache, nodes, path, n_commit):
+    return T.commit_tree_path(cfg, cache, spec, nodes, path, n_commit)
+
+
+class TreeSpecEngine(_StepMixin):
+    """Host-driven engine whose speculation step can be a TREE.
+
+    The controller (``TapOutTreeSequence``) picks a speculation SHAPE per
+    session: a chain + stop rule (the existing jitted chain primitives run
+    unchanged) or a static ``TreeSpec`` topology.  A tree session:
+
+      1. refeeds the sequence suffix through the draft model (the chain
+         path's cache invariant), then expands the tree LEVEL BY LEVEL —
+         each level is one jitted ``tree_step`` whose nodes attend the
+         cache plus their carried ancestors under the ancestor mask; child
+         tokens come from the parent's predictive distribution (top-k in
+         greedy mode, i.i.d. samples in stochastic mode);
+      2. verifies the whole tree in ONE target forward: the verify feed is
+         ``[last committed token] + nodes`` (so the root distribution rides
+         along exactly like the chain verifier's last-token feed);
+      3. walks the LONGEST ACCEPTED PATH (``tree.verify_walk``) — greedy
+         argmax matching, or SpecInfer-style recursive rejection with
+         residual-distribution sampling at the divergence node;
+      4. commits ONLY the accepted path: ``commit_tree_path`` scatters the
+         path's K/V rows into the (dense or paged) cache and the usual
+         O(1) pointer / length-truncation rollback does the rest.  Neither
+         drafting nor verification ever writes an uncommitted row.
+
+    Works on dense caches and (``paged=True``) on B=1 paged caches whose
+    single stream owns the whole pool.  Requires attention/MLA-only stacks
+    (recurrent state cannot fork per branch) with non-ring buffers.
+    """
+
+    def __init__(self, draft: ModelBundle, target: ModelBundle,
+                 controller: TapOutTreeSequence, *, max_len: int = 2048,
+                 temperature: float = 0.0, greedy: bool = True,
+                 cache_dtype=jnp.float32, seed: int = 0, paged: bool = False,
+                 block_size: int = 64):
+        self.draft, self.target = draft, target
+        self.controller = controller
+        self.gamma_max = controller.gamma_max
+        self.max_len = max_len
+        self.temperature = temperature
+        self.greedy = greedy
+        self.cache_dtype = cache_dtype
+        self.paged = paged
+        self.block_size = block_size
+        self.rng = jax.random.PRNGKey(seed)
+        self._host_rng = np.random.default_rng(seed)
+        self.collect_traces = False
+        self._step_cache: Dict[tuple, callable] = {}
+        if paged:
+            _, self.dspec = T.init_paged_cache(
+                draft.cfg, 1, max_len, block_size=block_size,
+                pool_tokens=max_len, dtype=cache_dtype)
+            _, self.tspec = T.init_paged_cache(
+                target.cfg, 1, max_len, block_size=block_size,
+                pool_tokens=max_len, dtype=cache_dtype)
+        else:
+            _, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype)
+            _, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype)
+        for spec, cfg in ((self.dspec, draft.cfg), (self.tspec, target.cfg)):
+            assert spec.cheap_rollback, \
+                "tree speculation requires attn/mla-only stacks"
+            assert all(not l.ring for l in spec.layers), \
+                "tree speculation requires non-ring caches (max_len within " \
+                "the full-cache budget)"
+        self._max_overshoot = max(
+            self.gamma_max,
+            max((s.tree.max_depth + 1 for s in controller.shapes
+                 if s.kind == "tree"), default=0))
+
+    # -------------------------------------------------------- plumbing
+    def _next_rng(self):
+        self.rng, k = jax.random.split(self.rng)
+        return k
+
+    def _fresh_cache(self, which: str):
+        bundle = self.draft if which == "draft" else self.target
+        if self.paged:
+            cache, spec = T.init_paged_cache(
+                bundle.cfg, 1, self.max_len, block_size=self.block_size,
+                pool_tokens=self.max_len, dtype=self.cache_dtype)
+            # single stream owns the whole pool: identity block table
+            tbl = np.arange(1, spec.max_blocks + 1, dtype=np.int32)[None]
+            return {**cache, "tables": jnp.asarray(tbl)}
+        cache, _ = T.init_cache(bundle.cfg, 1, self.max_len, self.cache_dtype)
+        return cache
+
+    def _rollback(self, cache, n: int):
+        return paged_rollback(cache, [n]) if self.paged else rollback(cache, n)
+
+    def _feed(self, which: str, cache, tokens: List[int]):
+        """Advance by ``tokens``, returning (last-token logits, cache)."""
+        key = (which, "feed", len(tokens), self.paged)
+        if key not in self._step_cache:
+            bundle = self.draft if which == "draft" else self.target
+            spec = self.dspec if which == "draft" else self.tspec
+            step = T.paged_step if self.paged else T.step
+
+            @jax.jit
+            def fn(params, toks, cache):
+                return step(params, bundle.cfg, toks, cache, spec)
+            self._step_cache[key] = fn
+        bundle = self.draft if which == "draft" else self.target
+        return self._step_cache[key](bundle.params,
+                                     jnp.asarray([tokens], jnp.int32), cache)
+
+    def _prefill(self, which: str, cache, tokens: List[int],
+                 chunk: int = 16):
+        toks = list(tokens)
+        n_chunks = len(toks) // chunk
+        for i in range(n_chunks):
+            _, cache = self._feed(which, cache, toks[i * chunk:(i + 1) * chunk])
+        for j in range(n_chunks * chunk, len(toks)):
+            _, cache = self._feed(which, cache, toks[j:j + 1])
+        return cache
+
+    # -------------------------------------------------------- streams
+    def start_stream(self, prompt: List[int]) -> dict:
+        assert len(prompt) >= 2, "need >= 2 prompt tokens"
+        assert len(prompt) + self._max_overshoot + 2 <= self.max_len
+        seq = list(prompt)
+        res = GenResult(tokens=seq, prompt_len=len(prompt))
+        dcache = self._prefill("draft", self._fresh_cache("draft"), seq[:-1])
+        tcache = self._prefill("target", self._fresh_cache("target"), seq[:-1])
+        return {"seq": seq, "res": res, "dcache": dcache, "tcache": tcache,
+                "done": False}
+
+    # -------------------------------------------------------- sessions
+    def _chain_session(self, state: dict, stop_idx: int):
+        """One chain draft/verify session (the existing jitted primitives,
+        dense or paged-B=1, with the shape's stop rule broadcast)."""
+        seq = state["seq"]
+        L = len(seq)
+        g = self.gamma_max
+        arm_per_pos = np.full((g,), stop_idx, np.int32)
+        lam = jnp.float32(self.controller.lam)
+        if self.paged:
+            dcache_in = self._rollback(state["dcache"], L - 2)
+            active = jnp.asarray([True])
+            dres = draft_session_paged(
+                self.draft.params, self.draft.cfg, self.dspec, dcache_in,
+                jnp.asarray([seq[-2:]], jnp.int32), jnp.asarray(arm_per_pos[None]),
+                lam, self._next_rng()[None], active,
+                arms=self.controller.arms, gamma_max=g,
+                temperature=self.temperature)
+            vres = verify_session_paged(
+                self.target.params, self.target.cfg, self.tspec,
+                state["tcache"], jnp.asarray([seq[-1:]], jnp.int32),
+                dres.tokens, dres.n_drafted, dres.qprobs,
+                self._next_rng()[None], active, gamma_max=g,
+                temperature=self.temperature, greedy=self.greedy)
+        else:
+            dcache_in = self._rollback(state["dcache"], L - 2)
+            dres = draft_session(
+                self.draft.params, self.draft.cfg, self.dspec, dcache_in,
+                jnp.asarray([seq[-2:]], jnp.int32), jnp.asarray(arm_per_pos),
+                lam, self._next_rng(), arms=self.controller.arms, gamma_max=g,
+                temperature=self.temperature)
+            vres = verify_session(
+                self.target.params, self.target.cfg, self.tspec,
+                state["tcache"], jnp.asarray([seq[-1:]], jnp.int32),
+                dres.tokens, dres.n_drafted, dres.qprobs, self._next_rng(),
+                gamma_max=g, temperature=self.temperature, greedy=self.greedy)
+        n_drafted = int(dres.n_drafted[0])
+        m = int(vres.n_accepted[0])
+        out = np.asarray(vres.out_tokens[0, :m + 1]).tolist()
+        state["dcache"] = self._rollback(dres.cache, L + m - 1)
+        state["tcache"] = self._rollback(vres.cache, L + m)
+        cost = (n_drafted + 1) * self.draft.cost_per_token \
+            + self.target.cost_per_token
+        return n_drafted, m, out, cost
+
+    def _tree_session(self, state: dict, tree: TreeSpec):
+        """One tree draft/verify session (see class docstring)."""
+        seq = state["seq"]
+        L = len(seq)
+        cfg_d, cfg_t = self.draft.cfg, self.target.cfg
+        Tn = tree.n_nodes
+        temp = self.temperature
+        greedy_draft = self.greedy or temp == 0.0
+
+        # ---- draft: refeed suffix, then expand level by level
+        dcache = self._rollback(state["dcache"], L - 2)
+        lg, dcache = self._feed("draft", dcache, seq[-2:])
+        parent_dist = {-1: np.asarray(_probs(lg[0, -1], temp))}
+        # greedy sibling RANKING uses raw logits: at temperature 0 the
+        # sampling distribution's non-top-1 entries underflow to exactly
+        # 0.0 and argsort would tie-break the tail arbitrarily, collapsing
+        # every multi-branch tree to its top-1 path
+        parent_rank = {-1: np.asarray(lg[0, -1], np.float32)}
+        tokens = np.zeros(Tn, np.int64)
+        qdist = np.zeros((Tn, cfg_d.vocab_size), np.float32)
+        anc = tree.ancestor_mask
+        nodes = T.init_tree_nodes(cfg_d, 1)
+        fed = 0
+        for level in tree.levels:
+            for p in ({-1} if fed == 0 else
+                      dict.fromkeys(tree.parents[i] for i in level)):
+                dist = parent_dist[p]
+                cands = tree.roots if p == -1 else tree.children[p]
+                if greedy_draft:
+                    picks = np.argsort(parent_rank[p])[::-1][:len(cands)]
+                else:
+                    picks = self._host_rng.choice(
+                        dist.size, size=len(cands), p=dist / dist.sum())
+                for node, tok in zip(cands, picks):
+                    tokens[node] = int(tok)
+                    qdist[node] = dist
+            lvl = list(level)
+            # draft pointer sits at L after the refeed, so a node's
+            # position is pointer + its depth (roots at L, etc.)
+            lg_lvl, nodes = _tree_forward(
+                self.draft.params, cfg_d, self.dspec, dcache,
+                jnp.asarray([tokens[lvl]], jnp.int32),
+                jnp.asarray(tree.depths[lvl], jnp.int32),
+                jnp.asarray(anc[np.ix_(lvl, range(fed + len(lvl)))]),
+                nodes)
+            fed += len(lvl)
+            if fed < Tn:                 # leaves' dists are never expanded
+                probs_lvl = np.asarray(_probs(lg_lvl[0], temp))
+                lg_np = np.asarray(lg_lvl[0], np.float32)
+                for j, node in enumerate(lvl):
+                    parent_dist[node] = probs_lvl[j]
+                    parent_rank[node] = lg_np[j]
+
+        # ---- verify: [last token] + tree in ONE target pass
+        vtokens = np.concatenate([[seq[-1]], tokens])
+        lg_v, tnodes = _tree_forward(
+            self.target.params, cfg_t, self.tspec, state["tcache"],
+            jnp.asarray([vtokens], jnp.int32),
+            jnp.asarray(tree.verify_depths, jnp.int32),
+            jnp.asarray(tree.verify_mask), T.init_tree_nodes(cfg_t, 1))
+        p_node = np.asarray(_probs(lg_v[0], temp))
+
+        # ---- longest accepted path + residual sampling at divergence
+        path, repl = verify_walk(tree, tokens, qdist, p_node,
+                                 greedy=self.greedy, rng=self._host_rng)
+        m = len(path)
+        out = [int(tokens[i]) for i in path] + [int(repl)]
+
+        # ---- commit ONLY the accepted path, O(1) rollback
+        P_t = 1 + tree.max_depth
+        vpath = np.zeros(P_t, np.int32)
+        vpath[:m + 1] = [0] + [1 + i for i in path]
+        tcache = _tree_commit(cfg_t, self.tspec, state["tcache"], tnodes,
+                              jnp.asarray(vpath), m + 1)
+        state["tcache"] = self._rollback(tcache, L + m)
+        P_d = tree.max_depth
+        dpath = np.zeros(P_d, np.int32)
+        dpath[:m] = path
+        dcache = _tree_commit(cfg_d, self.dspec, dcache, nodes,
+                              jnp.asarray(dpath), m)
+        state["dcache"] = self._rollback(dcache, L + m - 1)
+        cost = (Tn + 1) * self.draft.cost_per_token \
+            + self.target.cost_per_token
+        return Tn, m, out, cost
+
+    def session_step(self, state: dict, eos_id: Optional[int] = None) -> dict:
+        """Run ONE shape-bandit session on a stream."""
+        seq, res = state["seq"], state["res"]
+        shape_idx = self.controller.begin_shape()
+        shape = self.controller.shapes[shape_idx]
+        if shape.kind == "tree":
+            n_drafted, m, out, cost = self._tree_session(state, shape.tree)
+        else:
+            n_drafted, m, out, cost = self._chain_session(
+                state, self.controller.stop_arm_index(shape_idx))
+        seq.extend(out)
+        self.controller.update_shape(shape_idx, n_drafted, m)
+        res.sessions.append(SessionStats(n_drafted, m, shape_idx))
+        res.modeled_cost += cost
+        if eos_id is not None and eos_id in out:
+            seq[:] = seq[:len(seq) - len(out) + out.index(eos_id) + 1]
+            state["done"] = True
+        if len(seq) + self._max_overshoot + 2 >= self.max_len:
+            state["done"] = True
+        return state
+
+    # -------------------------------------------------------- generate
+    def generate(self, prompt: List[int], max_new_tokens: int,
+                 eos_id: Optional[int] = None) -> GenResult:
+        t0 = time.perf_counter()
+        state = self.start_stream(prompt)
+        res = state["res"]
+        while not state["done"] and res.new_tokens < max_new_tokens:
+            state = self.session_step(state, eos_id)
+        res.wall_time_s = time.perf_counter() - t0
+        return res
+
+
+class TreeSlotEngine(TreeSpecEngine):
+    """Slot facade over the tree engine for ``SpecServer(tree=...)``.
+
+    B per-slot stream states (each with its own single-stream cache pair)
+    share ONE shape bandit, online across requests — the TapOut deployment
+    setting with tree shapes in the arm pool.  A tick runs one session per
+    active slot (a host loop over the jitted per-shape programs; a fused
+    batched tree session is future work — topologies differ per slot, so
+    it needs per-shape program pools like the chain engines').
+    """
+
+    def __init__(self, draft: ModelBundle, target: ModelBundle,
+                 controller: TapOutTreeSequence, *, batch_size: int = 4,
+                 **kw):
+        super().__init__(draft, target, controller, **kw)
+        self.batch_size = batch_size
+        self.slots: List[Optional[dict]] = [None] * batch_size
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def open_stream(self, slot: int, prompt: List[int],
+                    eos_id: Optional[int] = None) -> dict:
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        st = self.start_stream(prompt)
+        st["eos_id"] = eos_id
+        self.slots[slot] = st
+        return st
+
+    def close_stream(self, slot: int) -> dict:
+        st = self.slots[slot]
+        assert st is not None
+        self.slots[slot] = None
+        return st
+
+    def session_step_batch(self) -> List[int]:
+        acted: List[int] = []
+        for s, st in enumerate(self.slots):
+            if st is not None and not st["done"]:
+                self.session_step(st, st.get("eos_id"))
+                acted.append(s)
+        return acted
 
 
 # ===================================================================== batched

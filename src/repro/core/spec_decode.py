@@ -78,39 +78,39 @@ def _probs(logits, temperature: float):
 
 # ------------------------------------------------------------------ draft
 
-def _draft_core(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
-                lam, rng, *, arms: Tuple[Arm, ...], gamma_max: int,
-                temperature: float = 0.0):
-    """Single-stream drafting core (traced; see ``draft_session`` for the
-    jitted wrapper and ``draft_session_batched`` for the vmapped one)."""
-    B = in_tokens.shape[0]
-    V = cfg.vocab_size
-    arm_fns = tuple(a.fn for a in arms)
+def _run_draft_loop(step_fn, eval_stop, split_fn, sample_fn, cache,
+                    in_tokens, rng, *, B: int, V: int, gamma_max: int,
+                    temperature: float, force_stop=None):
+    """THE dynamic-stop drafting loop, shared by every session flavor.
 
+    The dense single-stream core, its vmapped batched wrapper and the
+    batch-native paged core all run this exact body; they differ only in
+    the injected callables:
+
+      step_fn(tokens, cache) -> (logits, cache)     model advance
+      eval_stop(i, sig_probs, prev_ent)
+          -> (stop (B,), ent (B,), sigvec (B, 6))   arm dispatch
+      split_fn(rng) -> (rng, key)                    PRNG split
+      sample_fn(logits, key) -> (B,) int32           token sampling
+      force_stop: (B,) bool — lanes forced stopped from step 0 (masked
+          paged lanes; their writes land in the trash block).
+    """
     # feed the known suffix; logits for the first drafted token
-    logits, cache = T.step(params, cfg, in_tokens, cache, spec)
-    rng, k0 = jax.random.split(rng)
+    logits, cache = step_fn(in_tokens, cache)
+    rng, k0 = split_fn(rng)
     probs0 = _probs(logits[:, -1], temperature)
     sig_probs0 = _probs(logits[:, -1], 1.0)   # signals use the raw dist
-    tok0 = _sample(logits[:, -1], k0, temperature)
+    tok0 = sample_fn(logits[:, -1], k0)
 
     tokens_buf = jnp.zeros((B, gamma_max), jnp.int32)
     qprobs_buf = jnp.zeros((B, gamma_max, V), jnp.float32)
     ent_buf = jnp.zeros((B, gamma_max), jnp.float32)
+    sig_buf = jnp.zeros((B, gamma_max, SIGNAL_VECTOR_DIM), jnp.float32)
     written = jnp.zeros((B, gamma_max), jnp.int32)
 
-    def eval_stop(i, sig_probs, prev_ent):
-        sig = signals_from_probs(sig_probs, prev_ent, lam, i)
-        # SVIP-Difference needs a previous step; define diff = 0 at i == 0
-        sig["prev_sqrt_entropy"] = jnp.where(
-            i == 0, sig["sqrt_entropy"], sig["prev_sqrt_entropy"])
-        per_arm = jax.lax.switch(arm_per_pos[i],
-                                 [lambda s=s: s(sig) for s in arm_fns])
-        return per_arm, sig["sqrt_entropy"], signal_vector(sig)
-
-    sig_buf = jnp.zeros((B, gamma_max, SIGNAL_VECTOR_DIM), jnp.float32)
-
     stop0, ent0, sv0 = eval_stop(0, sig_probs0, jnp.zeros((B,), jnp.float32))
+    if force_stop is not None:
+        stop0 = stop0 | force_stop
     tokens_buf = tokens_buf.at[:, 0].set(tok0)
     qprobs_buf = qprobs_buf.at[:, 0].set(probs0)
     ent_buf = ent_buf.at[:, 0].set(ent0)
@@ -123,11 +123,11 @@ def _draft_core(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
 
     def body(state):
         i, tok, prev_ent, tbuf, qbuf, stopped, ebuf, sbuf, wrt, cache, rng = state
-        logits, cache = T.step(params, cfg, tok[:, None], cache, spec)
-        rng, k = jax.random.split(rng)
+        logits, cache = step_fn(tok[:, None], cache)
+        rng, k = split_fn(rng)
         probs = _probs(logits[:, -1], temperature)
         sig_probs = _probs(logits[:, -1], 1.0)
-        nxt = _sample(logits[:, -1], k, temperature)
+        nxt = sample_fn(logits[:, -1], k)
         stop_i, ent_i, sv_i = eval_stop(i, sig_probs, prev_ent)
         tbuf = tbuf.at[:, i].set(jnp.where(stopped, tbuf[:, i], nxt))
         qbuf = qbuf.at[:, i].set(jnp.where(stopped[:, None], qbuf[:, i], probs))
@@ -144,6 +144,38 @@ def _draft_core(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
 
     n_drafted = jnp.sum(wrt, axis=1)
     return DraftResult(tbuf, n_drafted, qbuf, cache, ebuf, sbuf)
+
+
+def _signals_with_diff_fix(sig_probs, prev_ent, lam, i):
+    """Per-token signal dict; SVIP-Difference needs a previous step, so the
+    diff is defined as 0 at i == 0."""
+    sig = signals_from_probs(sig_probs, prev_ent, lam, i)
+    sig["prev_sqrt_entropy"] = jnp.where(
+        i == 0, sig["sqrt_entropy"], sig["prev_sqrt_entropy"])
+    return sig
+
+
+def _draft_core(params, cfg, spec: CacheSpec, cache, in_tokens, arm_per_pos,
+                lam, rng, *, arms: Tuple[Arm, ...], gamma_max: int,
+                temperature: float = 0.0):
+    """Single-stream drafting core (traced; see ``draft_session`` for the
+    jitted wrapper and ``draft_session_batched`` for the vmapped one).
+    Arm dispatch is ``lax.switch`` on the (shared) per-position arm index."""
+    arm_fns = tuple(a.fn for a in arms)
+
+    def eval_stop(i, sig_probs, prev_ent):
+        sig = _signals_with_diff_fix(sig_probs, prev_ent, lam, i)
+        per_arm = jax.lax.switch(arm_per_pos[i],
+                                 [lambda s=s: s(sig) for s in arm_fns])
+        return per_arm, sig["sqrt_entropy"], signal_vector(sig)
+
+    return _run_draft_loop(
+        lambda toks, c: T.step(params, cfg, toks, c, spec),
+        eval_stop,
+        lambda r: tuple(jax.random.split(r)),
+        lambda lg, k: _sample(lg, k, temperature),
+        cache, in_tokens, rng, B=in_tokens.shape[0], V=cfg.vocab_size,
+        gamma_max=gamma_max, temperature=temperature)
 
 
 @functools.partial(
@@ -224,81 +256,58 @@ def draft_session_paged(params, cfg, spec, cache, in_tokens, arm_mat, lam,
     cache: paged cache pytree ({"lengths", "tables", "layers"}); in_tokens:
     (B, n_prompt_tokens); arm_mat: (B, gamma_max); rngs: (B, 2); active:
     (B,) bool.  Semantics match ``draft_session_batched`` lane for lane:
-    inactive rows leave with n_drafted == 0 and zeroed tokens.
+    inactive rows leave with n_drafted == 0 and zeroed tokens.  Same loop
+    body as the dense core (``_run_draft_loop``); per-stream arms evaluate
+    every arm on the batch and select per row (what vmap-of-``lax.switch``
+    lowers to anyway), sampling uses per-row PRNG keys.
     """
     B = in_tokens.shape[0]
-    V = cfg.vocab_size
     arm_fns = tuple(a.fn for a in arms)
     rows = jnp.arange(B)
 
-    logits, cache = T.paged_step(params, cfg, in_tokens, cache, spec)
-    rngs, k0 = _split_rows(rngs)
-    probs0 = _probs(logits[:, -1], temperature)
-    sig_probs0 = _probs(logits[:, -1], 1.0)
-    tok0 = _sample_rows(logits[:, -1], k0, temperature)
-
-    tokens_buf = jnp.zeros((B, gamma_max), jnp.int32)
-    qprobs_buf = jnp.zeros((B, gamma_max, V), jnp.float32)
-    ent_buf = jnp.zeros((B, gamma_max), jnp.float32)
-    sig_buf = jnp.zeros((B, gamma_max, SIGNAL_VECTOR_DIM), jnp.float32)
-    written = jnp.zeros((B, gamma_max), jnp.int32)
-
     def eval_stop(i, sig_probs, prev_ent):
-        sig = signals_from_probs(sig_probs, prev_ent, lam, i)
-        sig["prev_sqrt_entropy"] = jnp.where(
-            i == 0, sig["sqrt_entropy"], sig["prev_sqrt_entropy"])
+        sig = _signals_with_diff_fix(sig_probs, prev_ent, lam, i)
         per_arm = jnp.stack([fn(sig) for fn in arm_fns])       # (A, B)
         arm_i = jax.lax.dynamic_index_in_dim(arm_mat, i, 1, keepdims=False)
         return per_arm[arm_i, rows], sig["sqrt_entropy"], signal_vector(sig)
 
-    stop0, ent0, sv0 = eval_stop(0, sig_probs0, jnp.zeros((B,), jnp.float32))
-    stop0 = stop0 | ~active                   # masked lanes never draft on
-    tokens_buf = tokens_buf.at[:, 0].set(tok0)
-    qprobs_buf = qprobs_buf.at[:, 0].set(probs0)
-    ent_buf = ent_buf.at[:, 0].set(ent0)
-    sig_buf = sig_buf.at[:, 0].set(sv0)
-    written = written.at[:, 0].set(1)
+    r = _run_draft_loop(
+        lambda toks, c: T.paged_step(params, cfg, toks, c, spec),
+        eval_stop,
+        _split_rows,
+        lambda lg, k: _sample_rows(lg, k, temperature),
+        cache, in_tokens, rngs, B=B, V=cfg.vocab_size, gamma_max=gamma_max,
+        temperature=temperature,
+        force_stop=~active)               # masked lanes never draft on
 
-    def cond(state):
-        i, _, _, _, _, stopped, _, _, _, _, _ = state
-        return (i < gamma_max) & ~jnp.all(stopped)
-
-    def body(state):
-        i, tok, prev_ent, tbuf, qbuf, stopped, ebuf, sbuf, wrt, cache, rngs = state
-        logits, cache = T.paged_step(params, cfg, tok[:, None], cache, spec)
-        rngs, k = _split_rows(rngs)
-        probs = _probs(logits[:, -1], temperature)
-        sig_probs = _probs(logits[:, -1], 1.0)
-        nxt = _sample_rows(logits[:, -1], k, temperature)
-        stop_i, ent_i, sv_i = eval_stop(i, sig_probs, prev_ent)
-        tbuf = tbuf.at[:, i].set(jnp.where(stopped, tbuf[:, i], nxt))
-        qbuf = qbuf.at[:, i].set(jnp.where(stopped[:, None], qbuf[:, i], probs))
-        ebuf = ebuf.at[:, i].set(jnp.where(stopped, ebuf[:, i], ent_i))
-        sbuf = sbuf.at[:, i].set(jnp.where(stopped[:, None], sbuf[:, i], sv_i))
-        wrt = wrt.at[:, i].set(jnp.where(stopped, wrt[:, i], 1))
-        stopped = stopped | stop_i
-        return (i + 1, nxt, ent_i, tbuf, qbuf, stopped, ebuf, sbuf, wrt, cache, rngs)
-
-    state = (jnp.int32(1), tok0, ent0, tokens_buf, qprobs_buf, stop0,
-             ent_buf, sig_buf, written, cache, rngs)
-    _, _, _, tbuf, qbuf, _, ebuf, sbuf, wrt, cache, _ = jax.lax.while_loop(
-        cond, body, state)
-
-    n_drafted = jnp.where(active, jnp.sum(wrt, axis=1), 0)
-    tokens = jnp.where(active[:, None], tbuf, 0)
-    return DraftResult(tokens, n_drafted, qbuf, cache, ebuf, sbuf)
+    n_drafted = jnp.where(active, r.n_drafted, 0)
+    tokens = jnp.where(active[:, None], r.tokens, 0)
+    return DraftResult(tokens, n_drafted, r.qprobs, r.cache, r.entropies,
+                       r.signals)
 
 
 # ------------------------------------------------------------------ verify
 
-def _verify_core(params, cfg, spec: CacheSpec, cache, last_token, drafted,
-                 n_drafted, qprobs, rng, *, gamma_max: int,
-                 temperature: float = 0.0, greedy: bool = True):
-    """Single-stream verification core (traced; see ``verify_session``)."""
-    B = last_token.shape[0]
-    inp = jnp.concatenate([last_token, drafted], axis=1)       # (B, gamma+1)
-    logits, cache = T.step(params, cfg, inp, cache, spec, all_logits=True)
-    # logits[:, j] is the target dist for position j+1 of inp = drafted[:, j]
+def _accept_and_outputs(logits, drafted, n_drafted, qprobs, rng, *,
+                        gamma_max: int, temperature: float, greedy: bool,
+                        split_fn, uniform_fn, categorical_fn):
+    """THE chain accept-loop, shared by the dense and paged verifiers.
+
+    logits (B, gamma+1, V) from the ``[last_token] + drafted`` feed —
+    logits[:, j] is the target dist for drafted[:, j].  Greedy mode accepts
+    while draft == target argmax; stochastic mode is exact speculative
+    sampling — accept with prob min(1, p/q), resample the first rejection
+    from norm(max(p - q, 0)).  PRNG handling is injected: the dense path
+    splits one key, the paged path per-row key vectors — draw ORDER is
+    identical so each flavor's stream is reproducible.
+
+      split_fn(rng) -> (rng, key); uniform_fn(key) -> (B, gamma_max) in
+      [0,1); categorical_fn(dist (B, V), key) -> (B,) int32 samples.
+
+    Returns (m, out) — accepted length and the (B, gamma_max+1) output
+    buffer holding accepted tokens + the replacement/bonus token at m.
+    """
+    B = drafted.shape[0]
     pprobs = _probs(logits, temperature)                        # (B, g+1, V)
 
     idx = jnp.arange(gamma_max)
@@ -312,8 +321,8 @@ def _verify_core(params, cfg, spec: CacheSpec, cache, last_token, drafted,
         tgt_argmax = jnp.argmax(logits[:, :gamma_max], axis=-1).astype(jnp.int32)
         accept = (drafted == tgt_argmax) & in_draft
     else:
-        rng, k_acc = jax.random.split(rng)
-        u = jax.random.uniform(k_acc, (B, gamma_max))
+        rng, k_acc = split_fn(rng)
+        u = uniform_fn(k_acc)
         ratio = p_of_draft / jnp.maximum(q_of_draft, 1e-20)
         accept = (u < jnp.minimum(ratio, 1.0)) & in_draft
 
@@ -335,12 +344,29 @@ def _verify_core(params, cfg, spec: CacheSpec, cache, last_token, drafted,
         resid_sum = resid.sum(-1, keepdims=True)
         resid = jnp.where(resid_sum > 1e-20, resid / jnp.maximum(resid_sum, 1e-20), p_at_m)
         dist = jnp.where(rejected_inside[:, None], resid, p_at_m)
-        rng, k_r = jax.random.split(rng)
-        repl = jax.random.categorical(k_r, jnp.log(jnp.maximum(dist, 1e-30))).astype(jnp.int32)
+        rng, k_r = split_fn(rng)
+        repl = categorical_fn(dist, k_r)
 
     out = jnp.where(idx[None, :] < m[:, None], drafted, 0)
     out = jnp.concatenate([out, jnp.zeros((B, 1), jnp.int32)], axis=1)
     out = out.at[jnp.arange(B), m].set(repl)
+    return m, out
+
+
+def _verify_core(params, cfg, spec: CacheSpec, cache, last_token, drafted,
+                 n_drafted, qprobs, rng, *, gamma_max: int,
+                 temperature: float = 0.0, greedy: bool = True):
+    """Single-stream verification core (traced; see ``verify_session``)."""
+    B = last_token.shape[0]
+    inp = jnp.concatenate([last_token, drafted], axis=1)       # (B, gamma+1)
+    logits, cache = T.step(params, cfg, inp, cache, spec, all_logits=True)
+    m, out = _accept_and_outputs(
+        logits, drafted, n_drafted, qprobs, rng,
+        gamma_max=gamma_max, temperature=temperature, greedy=greedy,
+        split_fn=lambda r: tuple(jax.random.split(r)),
+        uniform_fn=lambda k: jax.random.uniform(k, (B, gamma_max)),
+        categorical_fn=lambda d, k: jax.random.categorical(
+            k, jnp.log(jnp.maximum(d, 1e-30))).astype(jnp.int32))
     return VerifyResult(m, out, m + 1, cache)
 
 
@@ -402,54 +428,21 @@ def verify_session_paged(params, cfg, spec, cache, last_tokens, drafted,
     """Batch-native verification over the paged cache.
 
     One ``paged_step`` forward serves every stream at its own position;
-    acceptance/resampling mirror ``_verify_core`` with per-row PRNG keys.
-    Inactive lanes (n_drafted == 0) leave with zeroed outputs; their cache
-    writes land in the trash block.
+    the accept-loop is the SAME ``_accept_and_outputs`` body as the dense
+    verifier, with per-row PRNG keys injected.  Inactive lanes (n_drafted
+    == 0) leave with zeroed outputs; their cache writes land in the trash
+    block.
     """
-    B = last_tokens.shape[0]
     inp = jnp.concatenate([last_tokens, drafted], axis=1)       # (B, g+1)
     logits, cache = T.paged_step(params, cfg, inp, cache, spec, all_logits=True)
-    pprobs = _probs(logits, temperature)
-
-    idx = jnp.arange(gamma_max)
-    in_draft = idx[None, :] < n_drafted[:, None]
-    p_of_draft = jnp.take_along_axis(
-        pprobs[:, :gamma_max], drafted[..., None], axis=-1)[..., 0]
-    q_of_draft = jnp.take_along_axis(
-        qprobs, drafted[..., None], axis=-1)[..., 0]
-
-    if greedy:
-        tgt_argmax = jnp.argmax(logits[:, :gamma_max], axis=-1).astype(jnp.int32)
-        accept = (drafted == tgt_argmax) & in_draft
-    else:
-        rngs, k_acc = _split_rows(rngs)
-        u = jax.vmap(lambda k: jax.random.uniform(k, (gamma_max,)))(k_acc)
-        ratio = p_of_draft / jnp.maximum(q_of_draft, 1e-20)
-        accept = (u < jnp.minimum(ratio, 1.0)) & in_draft
-
-    acc_prefix = jnp.cumprod(accept.astype(jnp.int32), axis=1)
-    m = jnp.sum(acc_prefix, axis=1)
-
-    p_at_m = jnp.take_along_axis(pprobs, m[:, None, None], axis=1)[:, 0]
-    q_at_m = jnp.take_along_axis(
-        jnp.concatenate([qprobs, jnp.zeros((B, 1, qprobs.shape[-1]))], axis=1),
-        m[:, None, None], axis=1)[:, 0]
-    rejected_inside = m < n_drafted
-    if greedy:
-        repl = jnp.argmax(p_at_m, axis=-1).astype(jnp.int32)
-    else:
-        resid = jnp.maximum(p_at_m - q_at_m, 0.0)
-        resid_sum = resid.sum(-1, keepdims=True)
-        resid = jnp.where(resid_sum > 1e-20,
-                          resid / jnp.maximum(resid_sum, 1e-20), p_at_m)
-        dist = jnp.where(rejected_inside[:, None], resid, p_at_m)
-        rngs, k_r = _split_rows(rngs)
-        repl = jax.vmap(lambda d, k: jax.random.categorical(
-            k, jnp.log(jnp.maximum(d, 1e-30))))(dist, k_r).astype(jnp.int32)
-
-    out = jnp.where(idx[None, :] < m[:, None], drafted, 0)
-    out = jnp.concatenate([out, jnp.zeros((B, 1), jnp.int32)], axis=1)
-    out = out.at[jnp.arange(B), m].set(repl)
+    m, out = _accept_and_outputs(
+        logits, drafted, n_drafted, qprobs, rngs,
+        gamma_max=gamma_max, temperature=temperature, greedy=greedy,
+        split_fn=_split_rows,
+        uniform_fn=jax.vmap(lambda k: jax.random.uniform(k, (gamma_max,))),
+        categorical_fn=lambda d, k: jax.vmap(
+            lambda d1, k1: jax.random.categorical(
+                k1, jnp.log(jnp.maximum(d1, 1e-30))))(d, k).astype(jnp.int32))
     m = jnp.where(active, m, 0)
     out = jnp.where(active[:, None], out, 0)
     return VerifyResult(m, out, jnp.where(active, m + 1, 0), cache)

@@ -1,0 +1,247 @@
+"""Tree speculation: static draft-tree topologies + longest-accepted-path
+verification.
+
+A ``TreeSpec`` encodes a speculation tree as a parent-index array in level
+(BFS) order: node ``i`` hangs off ``parents[i]`` (``-1`` = child of the last
+committed token).  Every derived quantity the engines and kernels need is
+precomputed once per topology and cached on the (frozen, hashable) spec:
+
+  * ``depths``        — node depth (root = 0); node position = pos0 + depth.
+  * ``levels``        — node-index tuples per depth (contiguous, in node
+                        order, because specs are level-ordered).
+  * ``ancestor_mask`` — (T, T) bool, ``mask[i, j]`` iff node ``j`` is ``i``
+                        itself or an ancestor of ``i``.  This is the
+                        attention visibility rule INSIDE the tree (siblings
+                        share RoPE positions, so positional causal masking
+                        cannot separate them — the explicit mask can).
+  * ``verify_mask`` / ``verify_depths`` — the (1+T)-node extension that
+                        prepends the last committed token as node 0 (an
+                        ancestor of everything), so one target forward
+                        yields the root distribution AND every node's
+                        distribution — the tree analog of the chain
+                        verifier's ``[last_token] + drafted`` feed.
+
+Verification (``verify_walk``) picks the LONGEST ACCEPTED PATH from the
+root:  greedy mode accepts the unique child matching the target argmax at
+each step (so greedy tree decoding reproduces target-only greedy decoding
+exactly, as chain speculation does); stochastic mode runs SpecInfer-style
+recursive rejection over the sibling set — accept child ``c`` with prob
+``min(1, p(x_c)/q(x_c))``, else deduct ``q`` from the residual and try the
+next sibling — and samples the replacement token at the divergence node
+from the final residual, so the output distribution equals the target
+model's when siblings are drawn i.i.d. from the draft distribution (which
+``TreeSpecEngine`` does in stochastic mode; greedy mode uses top-k).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TreeSpec:
+    """Static speculation-tree topology (hashable -> jit static arg)."""
+
+    parents: Tuple[int, ...]   # parents[i] in [-1, i); level (BFS) order
+    name: str = "tree"
+
+    def __post_init__(self):
+        assert len(self.parents) >= 1, "empty tree"
+        depths: List[int] = []
+        for i, p in enumerate(self.parents):
+            assert -1 <= p < i, f"parents[{i}]={p} must be in [-1, {i})"
+            d = 0 if p == -1 else depths[p] + 1
+            # level order: depths non-decreasing in node order, so each
+            # level occupies a contiguous node-index range
+            assert not depths or d >= depths[-1], "not level-ordered"
+            depths.append(d)
+
+    # ------------------------------------------------------------ derived
+    @property
+    def n_nodes(self) -> int:
+        return len(self.parents)
+
+    @functools.cached_property
+    def depths(self) -> np.ndarray:
+        """(T,) int32 node depths (roots = 0)."""
+        d = np.zeros(self.n_nodes, np.int32)
+        for i, p in enumerate(self.parents):
+            d[i] = 0 if p == -1 else d[p] + 1
+        return d
+
+    @property
+    def max_depth(self) -> int:
+        """Longest root-to-leaf path length in TOKENS (depth+1)."""
+        return int(self.depths.max()) + 1
+
+    @functools.cached_property
+    def levels(self) -> Tuple[Tuple[int, ...], ...]:
+        """Node indices per depth; contiguous ranges for level-ordered specs."""
+        out: List[List[int]] = [[] for _ in range(self.max_depth)]
+        for i, d in enumerate(self.depths):
+            out[int(d)].append(i)
+        return tuple(tuple(l) for l in out)
+
+    @functools.cached_property
+    def children(self) -> Tuple[Tuple[int, ...], ...]:
+        """children[i] = nodes whose parent is i (sibling order = node order)."""
+        out: List[List[int]] = [[] for _ in range(self.n_nodes)]
+        for i, p in enumerate(self.parents):
+            if p >= 0:
+                out[p].append(i)
+        return tuple(tuple(c) for c in out)
+
+    @property
+    def roots(self) -> Tuple[int, ...]:
+        return tuple(i for i, p in enumerate(self.parents) if p == -1)
+
+    @functools.cached_property
+    def ancestor_mask(self) -> np.ndarray:
+        """(T, T) bool: mask[i, j] iff j == i or j is an ancestor of i."""
+        T = self.n_nodes
+        m = np.eye(T, dtype=bool)
+        for i, p in enumerate(self.parents):
+            if p >= 0:
+                m[i] |= m[p]
+        return m
+
+    # ----------------------------------------------- verify extension
+    @functools.cached_property
+    def verify_depths(self) -> np.ndarray:
+        """(1+T,) depths with the last committed token prepended at depth 0
+        (tree nodes shift to depth+1); node position = (pos0 - 1) + depth."""
+        return np.concatenate([[0], self.depths + 1]).astype(np.int32)
+
+    @functools.cached_property
+    def verify_mask(self) -> np.ndarray:
+        """(1+T, 1+T) ancestor mask of the verify feed: node 0 (the last
+        committed token) is an ancestor of every tree node."""
+        T = self.n_nodes
+        m = np.zeros((T + 1, T + 1), dtype=bool)
+        m[:, 0] = True
+        m[1:, 1:] = self.ancestor_mask
+        return m
+
+    # ------------------------------------------------------------ misc
+    def __str__(self) -> str:
+        return f"TreeSpec({self.name}, T={self.n_nodes}, D={self.max_depth})"
+
+
+# ------------------------------------------------------------- templates
+
+@functools.lru_cache(maxsize=None)
+def chain(depth: int) -> TreeSpec:
+    """Linear chain of ``depth`` nodes — the degenerate tree whose greedy
+    run is token-identical to the chain engine at static gamma = depth."""
+    assert depth >= 1
+    return TreeSpec(tuple(range(-1, depth - 1)), name=f"chain{depth}")
+
+
+@functools.lru_cache(maxsize=None)
+def from_branching(branching: Tuple[int, ...], name: Optional[str] = None) -> TreeSpec:
+    """branching[d] children per level-(d-1) node (branching[0] roots)."""
+    assert len(branching) >= 1 and all(b >= 1 for b in branching)
+    parents: List[int] = [-1] * branching[0]
+    prev = list(range(branching[0]))
+    for b in branching[1:]:
+        cur = []
+        for p in prev:
+            for _ in range(b):
+                cur.append(len(parents))
+                parents.append(p)
+        prev = cur
+    nm = name or "b" + "x".join(str(b) for b in branching)
+    return TreeSpec(tuple(parents), name=nm)
+
+
+def binary(depth: int) -> TreeSpec:
+    """Full binary tree: 2^(d+1) - 2 nodes at depth d levels."""
+    return from_branching((2,) * depth, name=f"binary{depth}")
+
+
+def wide(k: int, depth: int) -> TreeSpec:
+    """k independent chains of length ``depth`` (top-k at the root only)."""
+    return from_branching((k,) + (1,) * (depth - 1), name=f"wide{k}x{depth}")
+
+
+# ------------------------------------------------------- verification
+
+def _norm_residual(p: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """norm(max(p - q, 0)); falls back to p when the residual vanishes."""
+    r = np.maximum(p - q, 0.0)
+    s = r.sum()
+    return r / s if s > 1e-20 else p
+
+
+def verify_walk(spec: TreeSpec, tokens: np.ndarray, q_node: np.ndarray,
+                p_node: np.ndarray, *, greedy: bool = True,
+                rng: Optional[np.random.Generator] = None
+                ) -> Tuple[List[int], int]:
+    """Longest-accepted-path verification (host side).
+
+    tokens: (T,) drafted token per node.
+    q_node: (T, V) the DRAFT distribution each node's token was drawn from
+      (its parent's predictive distribution).
+    p_node: (1+T, V) TARGET distributions of the verify feed — p_node[0]
+      is the root distribution (at the last committed token), p_node[1+i]
+      the distribution at tree node i.
+
+    Returns (path, replacement): ``path`` the accepted node indices root ->
+    leaf (possibly empty) and ``replacement`` the token appended after the
+    path — target argmax / residual sample at the divergence node, or the
+    bonus token when a full root-to-leaf path is accepted.
+    """
+    path: List[int] = []
+    parent = -1
+    p = p_node[0]
+    while True:
+        cands = spec.roots if parent == -1 else spec.children[parent]
+        accepted = None
+        if greedy:
+            t_star = int(np.argmax(p))
+            for c in cands:
+                if int(tokens[c]) == t_star:
+                    accepted = c
+                    break
+            if accepted is None:
+                return path, t_star
+        else:
+            assert rng is not None, "stochastic walk needs an RNG"
+            for c in cands:
+                q = q_node[c]
+                t = int(tokens[c])
+                if rng.uniform() < min(1.0, float(p[t]) / max(float(q[t]), 1e-20)):
+                    accepted = c
+                    break
+                p = _norm_residual(p, q)
+            if accepted is None:
+                return path, int(rng.choice(p.size, p=p / p.sum()))
+        path.append(accepted)
+        p = p_node[1 + accepted]
+        parent = accepted
+        if not spec.children[accepted]:        # full path accepted: bonus
+            if greedy:
+                return path, int(np.argmax(p))
+            return path, int(rng.choice(p.size, p=p / p.sum()))
+
+
+def ancestor_mask_oracle(parents: Sequence[int]) -> np.ndarray:
+    """Transitive-closure reference for ``TreeSpec.ancestor_mask`` (used by
+    the hypothesis property test): boolean matrix power of the (child ->
+    parent) edge relation, OR-ed with identity."""
+    T = len(parents)
+    edge = np.zeros((T, T), dtype=np.int64)
+    for i, p in enumerate(parents):
+        if p >= 0:
+            edge[i, p] = 1
+    closure = np.eye(T, dtype=np.int64)
+    reach = np.eye(T, dtype=np.int64)
+    for _ in range(T):
+        reach = np.minimum(reach @ edge, 1)
+        if not reach.any():
+            break
+        closure |= reach
+    return closure.astype(bool)

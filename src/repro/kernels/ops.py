@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from . import decode_attention as _da
 from . import flash_attention as _fa
 from . import ssd as _ssd
+from . import tree_attention as _ta
 
 FORCE_INTERPRET = False
 
@@ -49,6 +50,22 @@ def paged_decode_attention(q, kpool, vpool, tables, lengths, *,
                            window: int = 0):
     return _da.paged_decode_attention(q, kpool, vpool, tables, lengths,
                                       window=window, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_l"))
+def tree_attention(q, k, v, kpos, base, kt, vt, qpos, anc, *,
+                   window: int = 0, block_l: int = 512):
+    return _ta.tree_attention(q, k, v, kpos, base, kt, vt, qpos, anc,
+                              window=window, block_l=block_l,
+                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_tree_attention(q, kpool, vpool, tables, lengths, kt, vt, depths,
+                         anc, *, window: int = 0):
+    return _ta.paged_tree_attention(q, kpool, vpool, tables, lengths, kt, vt,
+                                    depths, anc, window=window,
+                                    interpret=_interpret())
 
 
 @jax.jit

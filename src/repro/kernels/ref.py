@@ -57,6 +57,56 @@ def paged_decode_attention_ref(q, kpool, vpool, tables, lengths, *,
     return jnp.stack(outs)
 
 
+def tree_attention_ref(q, k, v, kpos, base, kt, vt, qpos, anc, *,
+                       window: int = 0):
+    """Dense tree-verification oracle.
+
+    q (B,H,T,D) tree-node queries; k,v (B,G,L,D) cache; kpos (L,) stored
+    positions; base scalar — cache rows visible iff 0 <= kpos < base
+    (committed only); kt,vt (B,G,T,D) tree-node K/V; qpos (T,) node
+    positions (window only); anc (T,T) ancestor mask.  Concatenates
+    cache+tree keys and runs the naive masked softmax."""
+    B, H, T, D = q.shape
+    G = k.shape[1]
+    rep = H // G
+    kk = jnp.concatenate([k, kt], axis=2)                       # (B,G,L+T,D)
+    vv = jnp.concatenate([v, vt], axis=2)
+    kr = jnp.repeat(kk, rep, axis=1).astype(jnp.float32)
+    vr = jnp.repeat(vv, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr) / (D ** 0.5)
+    cmask = (kpos[None, :] >= 0) & (kpos[None, :] < base)       # (1, L)
+    cmask = jnp.broadcast_to(cmask, (T, kpos.shape[0]))
+    if window:
+        cmask &= (qpos[:, None] - kpos[None, :]) < window
+    mask = jnp.concatenate([cmask, jnp.asarray(anc, bool)], axis=1)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr).astype(q.dtype)
+
+
+def paged_tree_attention_ref(q, kpool, vpool, tables, lengths, kt, vt,
+                             depths, anc, *, window: int = 0):
+    """Paged tree-verification oracle: gathers each stream's logical view
+    and reuses the dense tree oracle with base = lengths[b]."""
+    N, bs, G, D = kpool.shape
+    B, MB = tables.shape
+    rows = (tables[:, :, None] * bs +
+            jnp.arange(bs)[None, None, :]).reshape(B, MB * bs)
+    kg = kpool.reshape(N * bs, G, D)[rows]                      # (B, L, G, D)
+    vg = vpool.reshape(N * bs, G, D)[rows]
+    outs = []
+    for b in range(B):
+        L = int(lengths[b])
+        kpos = jnp.where(jnp.arange(MB * bs) < L, jnp.arange(MB * bs), -1)
+        outs.append(tree_attention_ref(
+            q[b:b + 1], kg[b:b + 1].transpose(0, 2, 1, 3),
+            vg[b:b + 1].transpose(0, 2, 1, 3), kpos.astype(jnp.int32), L,
+            kt[b:b + 1], vt[b:b + 1], L + jnp.asarray(depths, jnp.int32),
+            anc, window=window)[0])
+    return jnp.stack(outs)
+
+
 def _segsum(x):
     Q = x.shape[-1]
     cs = jnp.cumsum(x, axis=-1)

@@ -1,0 +1,242 @@
+"""Pallas TPU tree-verification kernels: T tree-node queries vs cache+tree.
+
+Tree speculation verifies a whole candidate tree in ONE target pass: every
+node queries (a) the committed KV cache and (b) the other tree nodes'
+fresh K/V under an ANCESTOR mask (siblings share a RoPE position, so the
+position rule that masks the chain kernels cannot separate them — the
+explicit (T, T) mask can).  Like flash decode, the pass is memory-bound in
+the cache sweep: the kernels tile the cache length into MXU-aligned blocks
+streamed HBM->VMEM with per-query-row online-softmax stats held in VMEM
+scratch, and attend the (tiny) tree block as the final grid step.
+
+``tree_attention`` reads a DENSE cache.  Cache-row visibility is
+``0 <= kpos[s] < base`` where ``base`` is the cache pointer: tree passes
+never overwrite stale rows before attending (they write nothing), so rows
+carrying rolled-back future positions must be masked by the pointer — a
+STRICTER rule than the chain kernels' ``kpos <= qpos``.
+
+``paged_tree_attention`` reads the PAGED layout: block tables and lengths
+ride in as scalar-prefetch operands (``PrefetchScalarGridSpec``) steering
+each grid step's DMA to ``tables[b, ib]`` — the same structure as
+``decode_attention.paged_decode_attention``.  Validity degenerates to
+``kp < lengths[b]`` (committed rows only, by construction).
+
+Layouts (one query per tree node per head):
+  dense: q (B, H, T, D); k, v (B, G, L, D); kpos (L,); base () int32;
+         kt, vt (B, G, T, D); qpos (T,) node positions; anc (T, T) int32.
+  paged: q (B, H, T, D); kpool, vpool (N, bs, G, D); tables (B, MB);
+         lengths (B,); kt, vt (B, G, T, D); depths (T,); anc (T, T).
+Both -> (B, H, T, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _online_update(s, mask, v, m_ref, l_ref, acc_ref):
+    """One online-softmax accumulation step: s (T, bl) scores, mask (T, bl),
+    v (bl, D).  Scratch: m/l (T,), acc (T, D)."""
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    # re-mask: rows with every slot masked so far have m_new == NEG_INF and
+    # exp(s - m_new) == 1 would poison l/acc
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+
+def _finalize(o_ref, m_ref, l_ref, acc_ref):
+    l = l_ref[...]
+    out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+    out = jnp.where((l > 0)[:, None], out, 0.0)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def _tree_kernel(base_ref, qpos_ref, kpos_ref, anc_ref, q_ref, k_ref, v_ref,
+                 kt_ref, vt_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, window: int, bl: int, nl: int):
+    il = pl.program_id(2)
+
+    @pl.when(il == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (T, D)
+    qp = qpos_ref[...]                                # (T,)
+    base = base_ref[0]
+
+    @pl.when(il < nl)
+    def _cache_block():
+        k = k_ref[0, 0].astype(jnp.float32)           # (bl, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        kp = kpos_ref[...]                            # (bl,)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        mask = (kp[None, :] >= 0) & (kp[None, :] < base)
+        if window:
+            mask &= (qp[:, None] - kp[None, :]) < window
+        _online_update(s, mask, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(il == nl)
+    def _tree_block():
+        kt = kt_ref[0, 0].astype(jnp.float32)         # (T, D)
+        vt = vt_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ()))) * scale
+        _online_update(s, anc_ref[...] != 0, vt, m_ref, l_ref, acc_ref)
+        _finalize(o_ref, m_ref, l_ref, acc_ref)
+
+
+def tree_attention(q, k, v, kpos, base, kt, vt, qpos, anc, *,
+                   window: int = 0, block_l: int = 512,
+                   interpret: bool = False):
+    """Dense tree verification (see module docstring). -> (B, H, T, D)."""
+    B, H, T, D = q.shape
+    G, L = k.shape[1], k.shape[2]
+    assert H % G == 0
+    assert kt.shape == (B, G, T, D) and vt.shape == (B, G, T, D)
+    assert anc.shape == (T, T) and qpos.shape == (T,)
+    bl = min(block_l, L)
+    pL = (-L) % bl
+    if pL:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pL), constant_values=-1)
+    nl = k.shape[2] // bl
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_tree_kernel, scale=scale, window=window, bl=bl,
+                          nl=nl),
+        grid=(B, H, nl + 1),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, il: (0,)),
+            pl.BlockSpec((T,), lambda b, h, il: (0,)),
+            pl.BlockSpec((bl,), lambda b, h, il: (jnp.minimum(il, nl - 1),)),
+            pl.BlockSpec((T, T), lambda b, h, il: (0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, il: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bl, D),
+                         lambda b, h, il: (b, h // rep,
+                                           jnp.minimum(il, nl - 1), 0)),
+            pl.BlockSpec((1, 1, bl, D),
+                         lambda b, h, il: (b, h // rep,
+                                           jnp.minimum(il, nl - 1), 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, il: (b, h // rep, 0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, il: (b, h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, D), lambda b, h, il: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(base, jnp.int32).reshape(1), jnp.asarray(qpos, jnp.int32),
+      jnp.asarray(kpos, jnp.int32), jnp.asarray(anc, jnp.int32),
+      q, k, v, kt, vt)
+    return out
+
+
+# ------------------------------------------------------------------ paged
+
+def _paged_tree_kernel(tables_ref, lengths_ref, depths_ref, anc_ref, q_ref,
+                       k_ref, v_ref, kt_ref, vt_ref, o_ref, m_ref, l_ref,
+                       acc_ref, *, scale: float, window: int, bs: int,
+                       nmb: int):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (T, D)
+    ln = lengths_ref[b]
+
+    @pl.when(ib < nmb)
+    def _cache_block():
+        k = k_ref[0, :, 0].astype(jnp.float32)        # (bs, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        kp = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        mask = jnp.broadcast_to(kp[None, :] < ln, s.shape)
+        if window:
+            qp = ln + depths_ref[...]                 # (T,)
+            mask &= (qp[:, None] - kp[None, :]) < window
+        _online_update(s, mask, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(ib == nmb)
+    def _tree_block():
+        kt = kt_ref[0, 0].astype(jnp.float32)
+        vt = vt_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ()))) * scale
+        _online_update(s, anc_ref[...] != 0, vt, m_ref, l_ref, acc_ref)
+        _finalize(o_ref, m_ref, l_ref, acc_ref)
+
+
+def paged_tree_attention(q, kpool, vpool, tables, lengths, kt, vt, depths,
+                         anc, *, window: int = 0, interpret: bool = False):
+    """Paged tree verification: the grid sweeps every table slot (scalar-
+    prefetch DMA steering); out-of-length slots resolve to the trash block
+    whose rows are fully masked, so ragged lengths and post-rollback states
+    are handled by the same sweep. -> (B, H, T, D)."""
+    B, H, T, D = q.shape
+    N, bs, G, _ = kpool.shape
+    MB = tables.shape[1]
+    assert H % G == 0 and vpool.shape == kpool.shape
+    assert lengths.shape == (B,) and tables.shape == (B, MB)
+    assert kt.shape == (B, G, T, D) and anc.shape == (T, T)
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, MB + 1),
+        in_specs=[
+            pl.BlockSpec((T,), lambda b, h, ib, tbl, ln: (0,)),
+            pl.BlockSpec((T, T), lambda b, h, ib, tbl, ln: (0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, ib, tbl, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ib, tbl, ln:
+                         (tbl[b, jnp.minimum(ib, MB - 1)], 0, h // rep, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ib, tbl, ln:
+                         (tbl[b, jnp.minimum(ib, MB - 1)], 0, h // rep, 0)),
+            pl.BlockSpec((1, 1, T, D),
+                         lambda b, h, ib, tbl, ln: (b, h // rep, 0, 0)),
+            pl.BlockSpec((1, 1, T, D),
+                         lambda b, h, ib, tbl, ln: (b, h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, D),
+                               lambda b, h, ib, tbl, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_tree_kernel, scale=scale, window=window,
+                          bs=bs, nmb=MB),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      jnp.asarray(depths, jnp.int32), jnp.asarray(anc, jnp.int32),
+      q, kpool, vpool, kt, vt)
+    return out

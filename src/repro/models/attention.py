@@ -81,8 +81,14 @@ def _mask(qpos, kpos, window: int, causal: bool):
     return m
 
 
-def _naive_sdpa(q, k, v, qpos, kpos, window, causal, cap=0.0,
-                seq_sharded: bool = False):
+def explicit_mask_sdpa(q, k, v, mask, cap=0.0, seq_sharded: bool = False):
+    """Score-matrix attention under an EXPLICIT visibility mask.
+
+    q (B,Sq,H,D); k,v (B,Sk,G,D); mask (Sq,Sk) or (B,Sq,Sk) bool.  The
+    position-based paths derive their mask from (qpos, kpos); the tree paths
+    pass an ancestor mask that positions cannot express (siblings share a
+    RoPE position but must not see each other).
+    """
     B, Sq, H, D = q.shape
     G = k.shape[2]
     qg = q.reshape(B, Sq, G, H // G, D)
@@ -94,13 +100,21 @@ def _naive_sdpa(q, k, v, qpos, kpos, window, causal, cap=0.0,
         scores = constrain(scores, ("pod", "data"), None, None, None, "model")
     scores = scores / jnp.sqrt(D).astype(jnp.float32)
     scores = softcap(scores, cap)
-    m = _mask(qpos, kpos, window, causal)
-    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    if mask.ndim == 2:
+        mask = mask[None]
+    m = mask[:, None, None]                                  # (B,1,1,Sq,Sk)
+    scores = jnp.where(m, scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     # fully-masked rows (no valid key yet) -> zeros, not NaN
-    p = jnp.where(m.any(-1)[None, None, None, :, None], p, 0.0)
+    p = jnp.where(mask.any(-1)[:, None, None, :, None], p, 0.0)
     out = jnp.einsum("bgqst,btgd->bsgqd", p.astype(v.dtype), v)
     return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def _naive_sdpa(q, k, v, qpos, kpos, window, causal, cap=0.0,
+                seq_sharded: bool = False):
+    return explicit_mask_sdpa(q, k, v, _mask(qpos, kpos, window, causal),
+                              cap, seq_sharded=seq_sharded)
 
 
 def _flash_xla(q, k, v, qpos, kpos, window, causal, cap=0.0,
@@ -329,6 +343,105 @@ def attn_paged(params, cfg, x, layer_cache, tables, lengths, *,
                      logits_softcap=cfg.logits_softcap, impl=impl)
     out = out.reshape(B, S, -1)
     return out @ params["wo"], layer_cache
+
+
+# ------------------------------------------------------------ tree path
+
+def init_tree_nodes_attn(cfg, batch: int, dtype):
+    """Empty node-KV carry for one attention layer (0 rows; levels append)."""
+    hd = cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, 0, cfg.num_kv_heads, hd), dtype),
+            "v": jnp.zeros((batch, 0, cfg.num_kv_heads, hd), dtype)}
+
+
+def attn_tree(params, cfg, x, positions, cache_layer, prev_nodes, node_mask,
+              base, *, window: int = 0, impl: str = "auto"):
+    """Tree-node attention over ``cache + nodes`` WITHOUT cache writes.
+
+    x (B, Tc, d) current tree nodes; positions (Tc,) their absolute RoPE
+    positions (siblings share one); prev_nodes {"k","v"} (B, Tp, G, D) node
+    K/V from shallower levels (Tp = 0 on the first feed); node_mask
+    (Tc, Tp+Tc) ancestor visibility over [prev, current]; ``base`` the
+    cache pointer — only rows with stored position in [0, base) are
+    COMMITTED tokens.  The strict ``< base`` rule (vs the chain path's
+    ``<= qpos``) is load-bearing: tree passes never overwrite stale rows
+    before attending, so rows carrying rolled-back future positions must be
+    masked by the pointer, not by the query position.
+
+    Returns (out (B,Tc,d_model), nodes) with nodes = prev + current K/V.
+    """
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(params, cfg, x, positions)
+    nodes = {"k": jnp.concatenate([prev_nodes["k"].astype(k.dtype), k], axis=1),
+             "v": jnp.concatenate([prev_nodes["v"].astype(v.dtype), v], axis=1)}
+    kpos = cache_layer["pos"]
+    cmask = (kpos[None, :] >= 0) & (kpos[None, :] < base)        # (1, L)
+    if window:
+        cmask = cmask & ((positions[:, None] - kpos[None, :]) < window)
+    cmask = jnp.broadcast_to(cmask, (S, kpos.shape[0]))          # (Tc, L)
+    mask = jnp.concatenate([cmask, node_mask], axis=1)           # (Tc, L+Tn)
+    kk = jnp.concatenate([cache_layer["k"].astype(q.dtype), nodes["k"]], axis=1)
+    vv = jnp.concatenate([cache_layer["v"].astype(q.dtype), nodes["v"]], axis=1)
+    out = explicit_mask_sdpa(q, kk, vv, mask, cfg.logits_softcap)
+    return out.reshape(B, S, -1) @ params["wo"], nodes
+
+
+def attn_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
+                    prev_nodes, node_mask, *, window: int = 0,
+                    impl: str = "auto"):
+    """Paged tree-node attention: per-stream positions ``lengths[b] +
+    depths``, committed-row validity is the paged ``p < lengths`` rule (no
+    stale-row hazard — rows past the length are dead by construction).
+    Returns (out, nodes) like ``attn_tree``; the pool is NOT written.
+    """
+    B, S, _ = x.shape
+    positions = lengths[:, None].astype(jnp.int32) + depths[None, :]  # (B,Tc)
+    q, k, v = qkv_proj(params, cfg, x, positions)
+    nodes = {"k": jnp.concatenate([prev_nodes["k"].astype(k.dtype), k], axis=1),
+             "v": jnp.concatenate([prev_nodes["v"].astype(v.dtype), v], axis=1)}
+    kg = gather_pages(layer_cache["k"], tables).astype(q.dtype)
+    vg = gather_pages(layer_cache["v"], tables).astype(q.dtype)
+    kpos = paged_kpos(lengths, kg.shape[1])                      # (B, L)
+    cmask = kpos[:, None, :] >= 0                                # (B, 1, L)
+    if window:
+        cmask = cmask & ((positions[:, :, None] - kpos[:, None, :]) < window)
+    cmask = jnp.broadcast_to(cmask, (B, S, kg.shape[1]))
+    nmask = jnp.broadcast_to(node_mask[None], (B,) + node_mask.shape)
+    mask = jnp.concatenate([cmask, nmask], axis=2)
+    kk = jnp.concatenate([kg, nodes["k"]], axis=1)
+    vv = jnp.concatenate([vg, nodes["v"]], axis=1)
+    out = explicit_mask_sdpa(q, kk, vv, mask, cfg.logits_softcap)
+    return out.reshape(B, S, -1) @ params["wo"], nodes
+
+
+def commit_tree_rows_attn(cache_layer, nodes, path, n_commit, base):
+    """Scatter accepted-path node K/V into a DENSE attention cache.
+
+    path (P,) node row indices (padded past ``n_commit``); rows land at
+    slots ``base .. base+P-1``; stored positions are ``base+i`` for
+    ``i < n_commit`` and ``-1`` (never visible) for the padding rows, so a
+    fixed-width write commits a variable-length path.
+    """
+    P = path.shape[0]
+    rows_k = jnp.take(nodes["k"], path, axis=1).astype(cache_layer["k"].dtype)
+    rows_v = jnp.take(nodes["v"], path, axis=1).astype(cache_layer["v"].dtype)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_layer["k"], rows_k, base, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_layer["v"], rows_v, base, 1)
+    stored = jnp.where(jnp.arange(P) < n_commit,
+                       base + jnp.arange(P, dtype=jnp.int32), -1)
+    sp = jax.lax.dynamic_update_slice_in_dim(
+        cache_layer["pos"], stored.astype(jnp.int32), base, 0)
+    return {"k": ck, "v": cv, "pos": sp}
+
+
+def commit_tree_rows_paged_attn(layer_cache, nodes, path, tables, lengths):
+    """Scatter accepted-path node K/V into the PAGED pool at each stream's
+    current length; rows past the engine's subsequent ``lengths + n_commit``
+    truncation are dead under the ``p < length`` mask."""
+    rows_k = jnp.take(nodes["k"], path, axis=1)
+    rows_v = jnp.take(nodes["v"], path, axis=1)
+    return {"k": paged_write(layer_cache["k"], rows_k, tables, lengths),
+            "v": paged_write(layer_cache["v"], rows_v, tables, lengths)}
 
 
 # ------------------------------------------------------- cross-attention

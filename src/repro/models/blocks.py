@@ -4,10 +4,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .attention import (attn_cached, attn_paged, attn_train, cross_attn,
-                        encode_cross_kv, init_attention)
+from .attention import (attn_cached, attn_paged, attn_train, attn_tree,
+                        attn_tree_paged, cross_attn, encode_cross_kv,
+                        init_attention)
 from .common import activation_fn, dense_init, rms_norm
-from .mla import init_mla, mla_cached, mla_paged, mla_train
+from .mla import (init_mla, mla_cached, mla_paged, mla_train, mla_tree,
+                  mla_tree_paged)
 from .moe import init_moe, moe_ffn
 from .rglru import init_rglru, rglru_mixer
 from .sharding import constrain
@@ -119,6 +121,50 @@ def block_paged(params, cfg, layer_idx: int, x, layer_cache, tables, lengths,
             h = ffn_apply(params["ffn"], cfg, h)
         x = x + h
     return x, layer_cache
+
+
+def block_tree(params, cfg, layer_idx: int, x, layer_cache, layer_nodes,
+               node_mask, spec, *, pos0=None, depths=None, tables=None,
+               lengths=None, impl: str = "auto"):
+    """Tree-node step: attention/MLA attend over cache + carried node KV
+    under the ancestor mask and do NOT write the cache; recurrent kinds
+    cannot serve trees (state integrates sequentially — there is no
+    per-branch state to fork) and are rejected at engine init.
+    Dense when ``pos0`` is given (node positions = pos0 + depths), paged
+    when (tables, lengths) are.  Returns (x, new_layer_nodes)."""
+    kind = cfg.block_kind(layer_idx)
+    paged = tables is not None
+    h = rms_norm(x, params["norm1"], cfg.rms_eps)
+    if kind in ("attn", "local"):
+        if paged:
+            h, layer_nodes = attn_tree_paged(
+                params["mixer"], cfg, h, layer_cache, tables, lengths, depths,
+                layer_nodes, node_mask, window=spec.window, impl=impl)
+        else:
+            h, layer_nodes = attn_tree(
+                params["mixer"], cfg, h, pos0 + depths, layer_cache,
+                layer_nodes, node_mask, pos0, window=spec.window, impl=impl)
+    elif kind == "mla":
+        if paged:
+            h, layer_nodes = mla_tree_paged(
+                params["mixer"], cfg, h, layer_cache, tables, lengths, depths,
+                layer_nodes, node_mask, impl=impl)
+        else:
+            h, layer_nodes = mla_tree(
+                params["mixer"], cfg, h, pos0 + depths, layer_cache,
+                layer_nodes, node_mask, pos0, impl=impl)
+    else:
+        raise ValueError(f"tree speculation requires attn/mla stacks, "
+                         f"got {kind}")
+    x = x + h
+    if "ffn" in params:
+        h = rms_norm(x, params["norm2"], cfg.rms_eps)
+        if cfg.is_moe_layer(layer_idx):
+            h, _ = moe_ffn(params["ffn"], cfg, h, capacity_factor=2.0)
+        else:
+            h = ffn_apply(params["ffn"], cfg, h)
+        x = x + h
+    return x, layer_nodes
 
 
 def block_cached(params, cfg, layer_idx: int, x, pos0, layer_cache, spec,

@@ -110,6 +110,30 @@ def write_mla_cache(cache_layer, c_kv, k_rope, pos0, ring: bool):
     return {"ckv": cc, "krope": cr, "pos": sp}
 
 
+def _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope, mask):
+    """Absorbed-formulation attention against latent K: queries folded
+    through W_uk run directly on (ckv, krope) under an explicit visibility
+    ``mask`` ((S, L) shared or (B, S, L) per-lane).  Shared by the dense,
+    paged and tree cached paths.  Returns (B, S, d_model)."""
+    m = cfg.mla
+    H = cfg.num_heads
+    B, S = q_nope.shape[:2]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    scores = (jnp.einsum("bshr,blr->bhsl", q_c, ckv) +
+              jnp.einsum("bshr,blr->bhsl", q_rope, krope)).astype(jnp.float32)
+    scores = scores / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None], scores, NEG_INF)           # (B,H,S,L)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask.any(-1)[:, None, :, None], p, 0.0)
+    o_c = jnp.einsum("bhsl,blr->bshr", p.astype(ckv.dtype), ckv)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhd->bshd", o_c, w_uv)
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
 def mla_paged(params, cfg, x, cache_layer, tables, lengths, *,
               impl: str = "auto"):
     """Paged cached step (absorbed formulation) against latent block pools.
@@ -119,9 +143,7 @@ def mla_paged(params, cfg, x, cache_layer, tables, lengths, *,
     the mask is simply ``row < lengths[b] + S`` and causal vs. the query.
     """
     from .attention import gather_pages, paged_kpos, paged_write
-    m = cfg.mla
     B, S, _ = x.shape
-    H = cfg.num_heads
     positions = lengths[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)
     q_nope, q_rope = _queries(params, cfg, x, positions)
     c_kv, k_rope = _latents(params, cfg, x, positions)
@@ -131,27 +153,15 @@ def mla_paged(params, cfg, x, cache_layer, tables, lengths, *,
     ckv = gather_pages(cache_layer["ckv"], tables).astype(x.dtype)    # (B, L, R)
     krope = gather_pages(cache_layer["krope"], tables).astype(x.dtype)
     kpos = paged_kpos(lengths + S, ckv.shape[1])                      # (B, L)
-    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
-    q_c = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
-    scores = (jnp.einsum("bshr,blr->bhsl", q_c, ckv) +
-              jnp.einsum("bshr,blr->bhsl", q_rope, krope)).astype(jnp.float32)
-    scores = scores / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= positions[:, :, None])
-    scores = jnp.where(mask[:, None], scores, NEG_INF)                # (B,H,S,L)
-    p = jax.nn.softmax(scores, axis=-1)
-    p = jnp.where(mask.any(-1)[:, None, :, None], p, 0.0)
-    o_c = jnp.einsum("bhsl,blr->bshr", p.astype(ckv.dtype), ckv)
-    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
-    out = jnp.einsum("bshr,rhd->bshd", o_c, w_uv)
-    return out.reshape(B, S, -1) @ params["wo"], cache_layer
+    return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
+                            mask), cache_layer
 
 
 def mla_cached(params, cfg, x, pos0, cache_layer, *, ring: bool = False,
                impl: str = "auto"):
     """Cached step via the absorbed formulation (S is small: 1..gamma)."""
-    m = cfg.mla
     B, S, _ = x.shape
-    H = cfg.num_heads
     positions = pos0 + jnp.arange(S, dtype=jnp.int32)
     q_nope, q_rope = _queries(params, cfg, x, positions)
     c_kv, k_rope = _latents(params, cfg, x, positions)
@@ -159,17 +169,90 @@ def mla_cached(params, cfg, x, pos0, cache_layer, *, ring: bool = False,
     ckv = cache_layer["ckv"].astype(x.dtype)             # (B, L, R)
     krope = cache_layer["krope"].astype(x.dtype)         # (B, L, Dr)
     kpos = cache_layer["pos"]
-    # absorb W_uk into the queries: q_c (B,S,H,R)
-    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
-    q_c = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
-    scores = (jnp.einsum("bshr,blr->bhsl", q_c, ckv) +
-              jnp.einsum("bshr,blr->bhsl", q_rope, krope)).astype(jnp.float32)
-    scores = scores / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     mask = (kpos[None, :] >= 0) & (kpos[None, :] <= positions[:, None])
-    scores = jnp.where(mask[None, None], scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1)
-    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
-    o_c = jnp.einsum("bhsl,blr->bshr", p.astype(ckv.dtype), ckv)
-    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
-    out = jnp.einsum("bshr,rhd->bshd", o_c, w_uv)
-    return out.reshape(B, S, -1) @ params["wo"], cache_layer
+    return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
+                            mask), cache_layer
+
+
+# ------------------------------------------------------------ tree path
+
+def init_tree_nodes_mla(cfg, batch: int, dtype):
+    """Empty latent node carry for one MLA layer (0 rows; levels append)."""
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, 0, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, 0, m.qk_rope_head_dim), dtype)}
+
+
+def mla_tree(params, cfg, x, positions, cache_layer, prev_nodes, node_mask,
+             base, *, impl: str = "auto"):
+    """Tree-node MLA over ``cache latents + node latents`` without cache
+    writes; cache rows visible iff stored position < ``base`` (the pointer —
+    see ``attention.attn_tree`` for why the rule is strict), node rows
+    visible per the ancestor ``node_mask``.  Returns (out, nodes)."""
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    nodes = {"ckv": jnp.concatenate([prev_nodes["ckv"].astype(c_kv.dtype),
+                                     c_kv], axis=1),
+             "krope": jnp.concatenate([prev_nodes["krope"].astype(k_rope.dtype),
+                                       k_rope], axis=1)}
+    kpos = cache_layer["pos"]
+    cmask = (kpos[None, :] >= 0) & (kpos[None, :] < base)        # (1, L)
+    cmask = jnp.broadcast_to(cmask, (S, kpos.shape[0]))          # (Tc, L)
+    mask = jnp.concatenate([cmask, node_mask], axis=1)
+    ckv = jnp.concatenate([cache_layer["ckv"].astype(x.dtype),
+                           nodes["ckv"].astype(x.dtype)], axis=1)
+    krope = jnp.concatenate([cache_layer["krope"].astype(x.dtype),
+                             nodes["krope"].astype(x.dtype)], axis=1)
+    return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
+                            mask), nodes
+
+
+def mla_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
+                   prev_nodes, node_mask, *, impl: str = "auto"):
+    """Paged tree-node MLA: committed-row validity is ``p < lengths``; the
+    latent pool is not written.  Returns (out, nodes)."""
+    from .attention import gather_pages, paged_kpos
+    B, S, _ = x.shape
+    positions = lengths[:, None].astype(jnp.int32) + depths[None, :]
+    q_nope, q_rope = _queries(params, cfg, x, positions)
+    c_kv, k_rope = _latents(params, cfg, x, positions)
+    nodes = {"ckv": jnp.concatenate([prev_nodes["ckv"].astype(c_kv.dtype),
+                                     c_kv], axis=1),
+             "krope": jnp.concatenate([prev_nodes["krope"].astype(k_rope.dtype),
+                                       k_rope], axis=1)}
+    ckv_c = gather_pages(layer_cache["ckv"], tables).astype(x.dtype)
+    krope_c = gather_pages(layer_cache["krope"], tables).astype(x.dtype)
+    kpos = paged_kpos(lengths, ckv_c.shape[1])
+    cmask = jnp.broadcast_to(kpos[:, None, :] >= 0,              # (B, Tc, L)
+                             (B, S, ckv_c.shape[1]))
+    nmask = jnp.broadcast_to(node_mask[None], (B,) + node_mask.shape)
+    mask = jnp.concatenate([cmask, nmask], axis=2)
+    ckv = jnp.concatenate([ckv_c, nodes["ckv"].astype(x.dtype)], axis=1)
+    krope = jnp.concatenate([krope_c, nodes["krope"].astype(x.dtype)], axis=1)
+    return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
+                            mask), nodes
+
+
+def commit_tree_rows_mla(cache_layer, nodes, path, n_commit, base):
+    """Scatter accepted-path node latents into a DENSE MLA cache (fixed-P
+    write, padding rows stored at position -1 — see attention twin)."""
+    P = path.shape[0]
+    rows_c = jnp.take(nodes["ckv"], path, axis=1).astype(cache_layer["ckv"].dtype)
+    rows_r = jnp.take(nodes["krope"], path, axis=1).astype(cache_layer["krope"].dtype)
+    cc = jax.lax.dynamic_update_slice_in_dim(cache_layer["ckv"], rows_c, base, 1)
+    cr = jax.lax.dynamic_update_slice_in_dim(cache_layer["krope"], rows_r, base, 1)
+    stored = jnp.where(jnp.arange(P) < n_commit,
+                       base + jnp.arange(P, dtype=jnp.int32), -1)
+    sp = jax.lax.dynamic_update_slice_in_dim(
+        cache_layer["pos"], stored.astype(jnp.int32), base, 0)
+    return {"ckv": cc, "krope": cr, "pos": sp}
+
+
+def commit_tree_rows_paged_mla(layer_cache, nodes, path, tables, lengths):
+    """Scatter accepted-path node latents into the PAGED latent pools."""
+    from .attention import paged_write
+    rows_c = jnp.take(nodes["ckv"], path, axis=1)
+    rows_r = jnp.take(nodes["krope"], path, axis=1)
+    return {"ckv": paged_write(layer_cache["ckv"], rows_c, tables, lengths),
+            "krope": paged_write(layer_cache["krope"], rows_r, tables, lengths)}

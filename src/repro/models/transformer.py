@@ -20,9 +20,13 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import encode_cross_kv, init_attention, attn_train, cross_attn
-from .blocks import (block_cached, block_paged, block_train, ffn_apply,
-                     init_block, init_ffn)
+from .attention import (encode_cross_kv, init_attention, attn_train,
+                        cross_attn, commit_tree_rows_attn,
+                        commit_tree_rows_paged_attn, init_tree_nodes_attn)
+from .blocks import (block_cached, block_paged, block_train, block_tree,
+                     ffn_apply, init_block, init_ffn)
+from .mla import (commit_tree_rows_mla, commit_tree_rows_paged_mla,
+                  init_tree_nodes_mla)
 from .cache import (CacheSpec, LayerCacheSpec, build_cache_spec,
                     build_paged_cache_spec, init_layer_cache,
                     init_paged_layer_cache)
@@ -381,6 +385,145 @@ def paged_step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
     new_cache = {**cache, "lengths": lengths + tokens.shape[1],
                  "layers": new_layers}
     return logits, new_cache
+
+
+# ------------------------------------------------------------ tree step
+
+def init_tree_nodes(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Empty node-KV carry pytree (mirrors the cache's layer structure with
+    0 node rows per attention/MLA layer); ``tree_step`` appends each fed
+    level's K/V so deeper levels can attend their ancestors without the
+    cache ever holding uncommitted rows."""
+    g = layer_grouping(cfg)
+
+    def mk(i):
+        kind = cfg.block_kind(i)
+        if kind in ("attn", "local"):
+            return init_tree_nodes_attn(cfg, batch, dtype)
+        if kind == "mla":
+            return init_tree_nodes_mla(cfg, batch, dtype)
+        raise ValueError(f"tree speculation requires attn/mla stacks, got {kind}")
+
+    nodes = {"prefix": [mk(i) for i in g.prefix],
+             "tail": [mk(i) for i in g.tail],
+             "stack": None}
+    if g.n_cycles:
+        one = {str(j): mk(g.scan_start + j) for j in range(g.period)}
+        nodes["stack"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (g.n_cycles,) + a.shape), one)
+    return nodes
+
+
+def tree_step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec,
+              depths, node_mask, nodes, *, impl: str = "auto"):
+    """Forward Tc tree nodes against the cache WITHOUT advancing it.
+
+    tokens (B, Tc) node tokens; depths (Tc,) int32 position offsets from
+    the cache pointer (node position = pointer + depth; siblings share
+    one); node_mask (Tc, Tp+Tc) ancestor visibility over [carried nodes,
+    current nodes]; nodes = the carry from ``init_tree_nodes`` / a previous
+    level.  Cache rows are visible iff committed (dense: stored position
+    < pointer; paged: row < lengths[b]).  Works on dense AND paged caches
+    (one shared block path, dispatched on ``spec.paged``).
+
+    Returns (logits (B, Tc, V), new_nodes with Tp+Tc rows).  The caller
+    commits the accepted path afterwards with ``commit_tree_path``.
+    """
+    g = layer_grouping(cfg)
+    x = embed_tokens(params, cfg, tokens)
+    x = constrain(x, ("pod", "data"), None, None)
+    depths = jnp.asarray(depths, jnp.int32)
+    node_mask = jnp.asarray(node_mask, bool)
+    if spec.paged:
+        kw = dict(tables=cache["tables"], lengths=cache["lengths"],
+                  depths=depths)
+    else:
+        kw = dict(pos0=cache["pos"], depths=depths)
+
+    layers = cache["layers"]
+    new_nodes = {"prefix": [], "tail": [], "stack": None}
+
+    for k, i in enumerate(g.prefix):
+        x, nn = block_tree(params["layers"]["prefix"][k], cfg, i, x,
+                           layers["prefix"][k], nodes["prefix"][k], node_mask,
+                           spec.layers[i], impl=impl, **kw)
+        new_nodes["prefix"].append(nn)
+
+    if g.n_cycles:
+        def cycle(x, xs):
+            cp, cc, pn = xs
+            nns = {}
+            for j in range(g.period):
+                idx = g.scan_start + j
+                x, nn = block_tree(cp[str(j)], cfg, idx, x, cc[str(j)],
+                                   pn[str(j)], node_mask, spec.layers[idx],
+                                   impl=impl, **kw)
+                nns[str(j)] = nn
+            return x, nns
+        x, new_stack = jax.lax.scan(
+            cycle, x, (params["layers"]["stack"], layers["stack"],
+                       nodes["stack"]))
+        new_nodes["stack"] = new_stack
+
+    for k, i in enumerate(g.tail):
+        x, nn = block_tree(params["layers"]["tail"][k], cfg, i, x,
+                           layers["tail"][k], nodes["tail"][k], node_mask,
+                           spec.layers[i], impl=impl, **kw)
+        new_nodes["tail"].append(nn)
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return logits_fn(params, cfg, x), new_nodes
+
+
+def commit_tree_path(cfg: ModelConfig, cache, spec: CacheSpec, nodes, path,
+                     n_commit):
+    """Scatter ONLY the accepted path into the cache.
+
+    path (P,) int32 node-row indices into the carry (padded arbitrarily
+    past ``n_commit``); n_commit the number of real rows.  Dense: P rows
+    land at the pointer, padding rows carry stored position -1 (never
+    visible) — the caller then advances the pointer by n_commit.  Paged:
+    rows land at each stream's current length via ``paged_write`` — the
+    caller truncates lengths to ``+ n_commit`` and rows past that are dead
+    under the ``p < length`` rule.  Either way rollback stays the existing
+    O(1) pointer / length truncation.
+    """
+    g = layer_grouping(cfg)
+    path = jnp.asarray(path, jnp.int32)
+    n_commit = jnp.asarray(n_commit, jnp.int32)
+
+    def commit_layer(i, lc, nn):
+        kind = cfg.block_kind(i)
+        if spec.paged:
+            if kind in ("attn", "local"):
+                return commit_tree_rows_paged_attn(
+                    lc, nn, path, cache["tables"], cache["lengths"])
+            if kind == "mla":
+                return commit_tree_rows_paged_mla(
+                    lc, nn, path, cache["tables"], cache["lengths"])
+        else:
+            if kind in ("attn", "local"):
+                return commit_tree_rows_attn(lc, nn, path, n_commit,
+                                             cache["pos"])
+            if kind == "mla":
+                return commit_tree_rows_mla(lc, nn, path, n_commit,
+                                            cache["pos"])
+        raise ValueError(kind)
+
+    layers = cache["layers"]
+    new_layers = {
+        "prefix": [commit_layer(i, layers["prefix"][k], nodes["prefix"][k])
+                   for k, i in enumerate(g.prefix)],
+        "tail": [commit_layer(i, layers["tail"][k], nodes["tail"][k])
+                 for k, i in enumerate(g.tail)],
+        "stack": None}
+    if g.n_cycles:
+        def cyc(cc, nn):
+            return {str(j): commit_layer(g.scan_start + j, cc[str(j)],
+                                         nn[str(j)])
+                    for j in range(g.period)}
+        new_layers["stack"] = jax.vmap(cyc)(layers["stack"], nodes["stack"])
+    return {**cache, "layers": new_layers}
 
 
 # ------------------------------------------------------------ confidence API

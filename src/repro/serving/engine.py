@@ -47,9 +47,9 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.controller import Controller
+from repro.core.controller import Controller, TapOutTreeSequence
 from repro.core.engine import (BatchedSpecEngine, GenResult, ModelBundle,
-                               PagedSpecEngine)
+                               PagedSpecEngine, TreeSlotEngine)
 
 
 @dataclass
@@ -74,8 +74,20 @@ class SpecServer:
                  controller: Controller, *, max_len: int = 2048,
                  max_concurrency: int = 8, temperature: float = 0.0,
                  greedy: bool = True, seed: int = 0, paged: bool = False,
-                 block_size: int = 64, pool_tokens: Optional[int] = None):
-        if paged:
+                 block_size: int = 64, pool_tokens: Optional[int] = None,
+                 tree: bool = False):
+        if tree:
+            # tree-speculation serving: per-slot single-stream caches, ONE
+            # shape bandit (chain + tree arms) online across requests; the
+            # controller must expose the shape surface
+            assert isinstance(controller, TapOutTreeSequence), \
+                "tree serving needs a TapOutTreeSequence controller"
+            assert not paged, "tree serving uses per-slot dense caches"
+            self.engine = TreeSlotEngine(
+                draft, target, controller, batch_size=max_concurrency,
+                max_len=max_len, temperature=temperature, greedy=greedy,
+                seed=seed)
+        elif paged:
             # pool_tokens sizes KV memory independently of B x max_len: with
             # short requests the SAME byte budget admits more concurrent
             # streams than the dense engine's worst-case per-slot buffers
@@ -90,6 +102,7 @@ class SpecServer:
                 max_len=max_len, temperature=temperature, greedy=greedy,
                 seed=seed)
         self.paged = paged
+        self.tree = tree
         self.gamma_max = controller.gamma_max
         self.max_concurrency = max_concurrency
         self.queue: deque = deque()
@@ -199,4 +212,14 @@ class SpecServer:
         }
         if self.paged:
             stats.update(self.engine.pool_stats())
+        if self.tree:
+            # per-request accepted-path accounting: accepted tokens per
+            # verify pass (the tree-vs-chain objective) + the bandit's
+            # shape preferences after serving this workload
+            sessions = sum(len(r.result.sessions) for r in self.responses)
+            stats["accepted_per_verify"] = acc / max(sessions, 1)
+            ctrl = self.engine.controller
+            stats["shape_names"] = [s.name for s in ctrl.shapes]
+            stats["shape_pulls"] = ctrl.shape_pulls.tolist()
+            stats["shape_values"] = np.asarray(ctrl.arm_values).tolist()
         return stats

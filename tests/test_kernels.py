@@ -195,6 +195,122 @@ def test_paged_decode_post_rollback_state():
                                atol=5e-5, rtol=5e-5)
 
 
+# --------------------------------------------------------------- tree
+
+def _tree_fixtures(key, B, H, G, L, D, spec):
+    ks = jax.random.split(key, 5)
+    T = spec.n_nodes
+    q = jax.random.normal(ks[0], (B, H, T, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    kt = jax.random.normal(ks[3], (B, G, T, D))
+    vt = jax.random.normal(ks[4], (B, G, T, D))
+    return q, k, v, kt, vt
+
+
+@pytest.mark.parametrize("B,H,G,L,D,base,window", [
+    (1, 2, 1, 128, 64, 100, 0),
+    (2, 4, 2, 130, 64, 90, 0),       # padding path, GQA
+    (1, 8, 1, 96, 128, 96, 0),       # MQA, MXU-aligned head dim
+    (2, 4, 2, 128, 32, 100, 24),     # sliding window
+])
+@pytest.mark.parametrize("treespec", ["chain4", "binary2", "b3x2x1"])
+def test_tree_attention_sweep(B, H, G, L, D, base, window, treespec):
+    from repro.core import tree as trees
+    spec = {"chain4": trees.chain(4), "binary2": trees.binary(2),
+            "b3x2x1": trees.from_branching((3, 2, 1))}[treespec]
+    q, k, v, kt, vt = _tree_fixtures(jax.random.PRNGKey(11), B, H, G, L, D,
+                                     spec)
+    # rows base..base+9 carry stale future positions: the < base rule must
+    # mask them even though kpos <= qpos would admit them
+    kpos = jnp.where(jnp.arange(L) < base + 10, jnp.arange(L), -1).astype(jnp.int32)
+    qpos = jnp.asarray(base + spec.depths, jnp.int32)
+    anc = jnp.asarray(spec.ancestor_mask, jnp.int32)
+    out = ops.tree_attention(q, k, v, kpos, jnp.int32(base), kt, vt, qpos,
+                             anc, window=window, block_l=64)
+    exp = ref.tree_attention_ref(q, k, v, kpos, base, kt, vt, qpos, anc,
+                                 window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_tree_attention_chain_matches_flash():
+    """A chain-topology tree block == ordinary causal attention over the
+    same [cache + suffix] sequence."""
+    from repro.core import tree as trees
+    B, H, G, L, D = 1, 2, 1, 64, 32
+    spec = trees.chain(4)
+    q, k, v, kt, vt = _tree_fixtures(jax.random.PRNGKey(12), B, H, G, L, D,
+                                     spec)
+    base = 40
+    kpos = jnp.where(jnp.arange(L) < base, jnp.arange(L), -1).astype(jnp.int32)
+    qpos = jnp.asarray(base + spec.depths, jnp.int32)
+    anc = jnp.asarray(spec.ancestor_mask, jnp.int32)
+    out = ops.tree_attention(q, k, v, kpos, jnp.int32(base), kt, vt, qpos,
+                             anc, block_l=32)
+    kcat = jnp.concatenate([k[:, :, :base], kt], axis=2)
+    vcat = jnp.concatenate([v[:, :, :base], vt], axis=2)
+    exp = ref.flash_attention_ref(q, kcat, vcat, qpos,
+                                  jnp.arange(base + 4, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("B,H,G,N,bs,MB,D,window", [
+    (2, 4, 2, 9, 16, 4, 64, 0),
+    (3, 2, 1, 17, 8, 6, 32, 0),      # MQA, small blocks
+    (2, 8, 8, 9, 16, 4, 128, 0),     # MHA, MXU-aligned head dim
+    (2, 4, 2, 9, 16, 4, 64, 12),     # sliding window
+])
+@pytest.mark.parametrize("treespec", ["binary2", "wide3x2"])
+def test_paged_tree_attention_sweep(B, H, G, N, bs, MB, D, window, treespec):
+    from repro.core import tree as trees
+    spec = {"binary2": trees.binary(2), "wide3x2": trees.wide(3, 2)}[treespec]
+    T = spec.n_nodes
+    ks = jax.random.split(jax.random.PRNGKey(13), 5)
+    q = jax.random.normal(ks[0], (B, H, T, D))
+    kpool = jax.random.normal(ks[1], (N, bs, G, D))
+    vpool = jax.random.normal(ks[2], (N, bs, G, D))
+    kt = jax.random.normal(ks[3], (B, G, T, D))
+    vt = jax.random.normal(ks[4], (B, G, T, D))
+    tables, lengths = _random_paged_layout(np.random.default_rng(3), B, N, bs, MB)
+    depths = jnp.asarray(spec.depths, jnp.int32)
+    anc = jnp.asarray(spec.ancestor_mask, jnp.int32)
+    out = ops.paged_tree_attention(q, kpool, vpool, jnp.asarray(tables),
+                                   jnp.asarray(lengths), kt, vt, depths, anc,
+                                   window=window)
+    exp = ref.paged_tree_attention_ref(q, kpool, vpool, jnp.asarray(tables),
+                                       jnp.asarray(lengths), kt, vt, depths,
+                                       anc, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_paged_tree_empty_lane_attends_tree_only():
+    """lengths == 0: every cache block is masked; nodes still attend their
+    ancestors, so the output equals tree-only attention (not zeros)."""
+    from repro.core import tree as trees
+    spec = trees.chain(3)
+    B, H, G, N, bs, MB, D = 1, 2, 1, 5, 8, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(14), 5)
+    T = spec.n_nodes
+    q = jax.random.normal(ks[0], (B, H, T, D))
+    kpool = jax.random.normal(ks[1], (N, bs, G, D))
+    vpool = jax.random.normal(ks[2], (N, bs, G, D))
+    kt = jax.random.normal(ks[3], (B, G, T, D))
+    vt = jax.random.normal(ks[4], (B, G, T, D))
+    tables = jnp.zeros((1, MB), jnp.int32)
+    lengths = jnp.zeros((1,), jnp.int32)
+    depths = jnp.asarray(spec.depths, jnp.int32)
+    anc = jnp.asarray(spec.ancestor_mask, jnp.int32)
+    out = ops.paged_tree_attention(q, kpool, vpool, tables, lengths, kt, vt,
+                                   depths, anc)
+    exp = ref.flash_attention_ref(q, kt, vt, depths,
+                                  jnp.arange(T, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
 @pytest.mark.parametrize("B,NC,Q,H,P,G,N", [
     (1, 2, 16, 2, 32, 1, 16),
     (2, 3, 16, 4, 32, 2, 16),    # grouped B/C

@@ -190,3 +190,51 @@ def test_attention_mask_rule(qpos, kpos_list, window):
     for i, k in enumerate(kpos_list):
         expect = (k >= 0) and (k <= qpos) and (window == 0 or qpos - k < window)
         assert m[i] == expect
+
+
+# ------------------------------------------------------------- tree masks
+
+@st.composite
+def _parent_arrays(draw):
+    """Random level-ordered parent arrays (the TreeSpec invariant)."""
+    n_levels = draw(st.integers(1, 4))
+    widths = [draw(st.integers(1, 4)) for _ in range(n_levels)]
+    parents, prev = [], [-1]
+    for w in widths:
+        start = len(parents)
+        for _ in range(w):
+            if parents and prev != [-1]:
+                parents.append(draw(st.sampled_from(prev)))
+            else:
+                parents.append(-1)
+        prev = list(range(start, len(parents)))
+    return tuple(parents)
+
+
+@given(_parent_arrays())
+@settings(max_examples=100, deadline=None)
+def test_tree_ancestor_mask_matches_transitive_closure(parents):
+    """The incrementally-built ancestor mask equals the transitive-closure
+    oracle (boolean matrix powers of the child->parent edge relation)."""
+    from repro.core.tree import TreeSpec, ancestor_mask_oracle
+    spec = TreeSpec(parents)
+    np.testing.assert_array_equal(spec.ancestor_mask,
+                                  ancestor_mask_oracle(parents))
+    # structural invariants: diagonal, strict lower-triangularity, and
+    # each node's ancestor count == its depth
+    m = spec.ancestor_mask
+    assert m.diagonal().all()
+    assert not np.triu(m, 1).any()
+    np.testing.assert_array_equal(m.sum(1) - 1, spec.depths)
+
+
+@given(_parent_arrays())
+@settings(max_examples=50, deadline=None)
+def test_tree_verify_mask_extension(parents):
+    """Prepending the committed token preserves the ancestor relation and
+    makes node 0 a universal ancestor."""
+    from repro.core.tree import TreeSpec
+    spec = TreeSpec(parents)
+    vm = spec.verify_mask
+    assert vm[:, 0].all() and not vm[0, 1:].any()
+    np.testing.assert_array_equal(vm[1:, 1:], spec.ancestor_mask)

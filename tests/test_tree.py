@@ -1,0 +1,265 @@
+"""Tree speculation subsystem: topology invariants, chain-engine parity,
+greedy equivalence, paged parity, MLA stacks, bandit shapes, serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ar_greedy_decode
+from repro.core import (FixedShape, ModelBundle, SpecEngine, StaticGamma,
+                        TapOutTreeSequence, TreeSpecEngine, tree_shape)
+from repro.core import tree as trees
+
+from repro.models import MLAConfig, ModelConfig
+from repro.models import transformer as T
+
+PROMPT = [1, 5, 9, 13]
+
+
+# ------------------------------------------------------------- topology
+
+def test_templates_shapes():
+    c = trees.chain(5)
+    assert c.n_nodes == 5 and c.max_depth == 5
+    assert c.parents == (-1, 0, 1, 2, 3)
+    b = trees.binary(3)
+    assert b.n_nodes == 2 + 4 + 8 and b.max_depth == 3
+    w = trees.wide(4, 3)
+    assert w.n_nodes == 12 and len(w.roots) == 4
+    f = trees.from_branching((4, 2, 1))
+    assert f.n_nodes == 4 + 8 + 8
+    assert [len(l) for l in f.levels] == [4, 8, 8]
+
+
+def test_chain_mask_is_lower_triangular():
+    c = trees.chain(6)
+    np.testing.assert_array_equal(c.ancestor_mask,
+                                  np.tril(np.ones((6, 6), bool)))
+
+
+def test_verify_extension():
+    b = trees.binary(2)
+    vm = b.verify_mask
+    assert vm.shape == (7, 7)
+    assert vm[:, 0].all()                 # last committed token sees all
+    assert (b.verify_depths == np.concatenate([[0], b.depths + 1])).all()
+
+
+def test_levels_are_contiguous_node_ranges():
+    for spec in (trees.binary(3), trees.wide(3, 4),
+                 trees.from_branching((3, 2, 2))):
+        flat = [i for lvl in spec.levels for i in lvl]
+        assert flat == list(range(spec.n_nodes))
+
+
+def test_invalid_parents_rejected():
+    with pytest.raises(AssertionError):
+        trees.TreeSpec((0,))              # parent must be < index
+    with pytest.raises(AssertionError):
+        trees.TreeSpec((-1, 1))           # forward reference
+
+
+# ------------------------------------------------------------- walk
+
+def test_greedy_walk_longest_path_and_divergence():
+    spec = trees.binary(2)                # roots (0,1); children (2..5)
+    tokens = np.array([7, 3, 9, 4, 5, 6])
+    V = 12
+    p = np.zeros((7, V))
+    p[0, 3] = 1.0                         # root target argmax = 3 -> node 1
+    p[2, 5] = 1.0                         # at node 1: argmax 5 -> node 4
+    p[5, 11] = 1.0                        # at node 4 (leaf): bonus 11
+    q = np.full((6, V), 1.0 / V)
+    path, repl = trees.verify_walk(spec, tokens, q, p, greedy=True)
+    assert path == [1, 4] and repl == 11
+    # divergence: no candidate matches -> replacement = argmax
+    p[0] = 0
+    p[0, 8] = 1.0
+    path, repl = trees.verify_walk(spec, tokens, q, p, greedy=True)
+    assert path == [] and repl == 8
+
+
+def test_stochastic_walk_certain_accept():
+    """p == q at the drafted token with ratio 1 accepts surely."""
+    spec = trees.chain(2)
+    tokens = np.array([4, 6])
+    V = 8
+    q = np.zeros((2, V))
+    q[0, 4] = 1.0
+    q[1, 6] = 1.0
+    p = np.zeros((3, V))
+    p[0, 4] = 1.0
+    p[1, 6] = 1.0
+    p[2, 2] = 1.0
+    rng = np.random.default_rng(0)
+    path, repl = trees.verify_walk(spec, tokens, q, p, greedy=False, rng=rng)
+    assert path == [0, 1] and repl == 2
+
+
+# ------------------------------------------------------------- engines
+
+def test_chain_topology_matches_chain_engine(tiny_dense_pair):
+    """Acceptance criterion: a chain-topology tree run is token-identical
+    to the existing chain engine under the same seed (greedy)."""
+    draft, target = tiny_dense_pair
+    eng_t = TreeSpecEngine(draft, target,
+                           FixedShape(6, tree_shape(trees.chain(6))),
+                           max_len=256, seed=0)
+    eng_c = SpecEngine(draft, target, StaticGamma(gamma=6), max_len=256,
+                       seed=0)
+    r_t = eng_t.generate(PROMPT, 40)
+    r_c = eng_c.generate(PROMPT, 40)
+    assert r_t.tokens == r_c.tokens
+    assert [s.n_accepted for s in r_t.sessions] == \
+        [s.n_accepted for s in r_c.sessions]
+
+
+@pytest.mark.parametrize("spec", [trees.binary(3), trees.wide(4, 2),
+                                  trees.from_branching((3, 2, 1))],
+                         ids=lambda s: s.name)
+def test_tree_greedy_equivalence(spec, tiny_dense_pair):
+    """Greedy tree speculation must reproduce target-only greedy decoding
+    exactly, whatever the topology."""
+    draft, target = tiny_dense_pair
+    ref = ar_greedy_decode(target.params, target.cfg, PROMPT, 32)
+    eng = TreeSpecEngine(draft, target, FixedShape(8, tree_shape(spec)),
+                         max_len=256)
+    r = eng.generate(PROMPT, 32)
+    assert r.tokens[:len(ref)] == ref[:len(r.tokens)]
+    for s in r.sessions:
+        assert 0 <= s.n_accepted <= spec.max_depth
+        assert s.n_drafted == spec.n_nodes
+    assert r.total_accepted + len(r.sessions) == r.new_tokens
+
+
+def test_self_speculation_tree_accepts_full_depth(tiny_dense_pair):
+    """draft == target: the greedy path matches to the deepest leaf every
+    session, so accepted-per-verify == max_depth."""
+    _, target = tiny_dense_pair
+    spec = trees.binary(3)
+    eng = TreeSpecEngine(target, target, FixedShape(6, tree_shape(spec)),
+                         max_len=256)
+    r = eng.generate(PROMPT, 24)
+    assert r.mean_accepted == spec.max_depth
+
+
+def test_paged_tree_engine_matches_dense(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    spec = trees.from_branching((3, 2, 1))
+    r_d = TreeSpecEngine(draft, target, FixedShape(6, tree_shape(spec)),
+                         max_len=256).generate(PROMPT, 28)
+    r_p = TreeSpecEngine(draft, target, FixedShape(6, tree_shape(spec)),
+                         max_len=256, paged=True,
+                         block_size=16).generate(PROMPT, 28)
+    assert r_d.tokens == r_p.tokens
+
+
+def test_tree_engine_mla_stack():
+    """MLA latent tree attention (absorbed formulation) + latent commit."""
+    V = 61
+    mla = MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                    qk_rope_head_dim=8, v_head_dim=16)
+    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=V,
+                       block_pattern=("mla",), mla=mla)
+    dcfg = ModelConfig(name="d", arch_type="dense", num_layers=1, d_model=32,
+                       num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=V,
+                       block_pattern=("mla",), mla=mla)
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    ref = ar_greedy_decode(tp, tcfg, PROMPT, 20)
+    eng = TreeSpecEngine(draft, target,
+                         FixedShape(6, tree_shape(trees.binary(2))),
+                         max_len=128)
+    r = eng.generate(PROMPT, 20)
+    assert r.tokens[:len(ref)] == ref[:len(r.tokens)]
+
+
+def test_recurrent_stack_rejected():
+    from repro.models import SSMConfig
+    cfg = ModelConfig(name="s", arch_type="ssm", num_layers=2, d_model=64,
+                      num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=61,
+                      block_pattern=("mamba2",),
+                      ssm=SSMConfig(d_state=16, head_dim=32, chunk_size=8))
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    b = ModelBundle(p, cfg)
+    with pytest.raises(AssertionError):
+        TreeSpecEngine(b, b, FixedShape(4, tree_shape(trees.binary(2))),
+                       max_len=128)
+
+
+# ------------------------------------------------------------- bandit
+
+def test_shape_pool_and_bandit_runs(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    ctrl = TapOutTreeSequence(8, "ucb1", "simple", seed=0)
+    names = [s.name for s in ctrl.shapes]
+    assert any(n.startswith("chain_") for n in names)
+    assert any(n.startswith("tree_") for n in names)
+    ref = ar_greedy_decode(target.params, target.cfg, PROMPT, 40)
+    eng = TreeSpecEngine(draft, target, ctrl, max_len=256)
+    r = eng.generate(PROMPT, 40)
+    assert r.tokens[:len(ref)] == ref[:len(r.tokens)]
+    # every shape explored at least once (UCB1 round-robins first)
+    assert (ctrl.shape_pulls >= 1).sum() >= min(len(ctrl.shapes),
+                                                len(r.sessions))
+    assert ctrl.arm_values.shape == (len(ctrl.shapes),)
+
+
+def test_bandit_concentrates_on_degenerate_winner(tiny_dense_pair):
+    """Self-speculation: the binary(3) tree accepts 3/session while a
+    1-node chain accepts at most 1 — the meta-bandit must shift pulls
+    toward the tree arm."""
+    _, target = tiny_dense_pair
+    shapes = [tree_shape(trees.chain(1)), tree_shape(trees.binary(3))]
+    ctrl = TapOutTreeSequence(6, "ucb1", "simple", shapes=shapes, seed=0)
+    eng = TreeSpecEngine(target, target, ctrl, max_len=512)
+    eng.generate(PROMPT, 120)
+    assert ctrl.shape_pulls[1] > ctrl.shape_pulls[0]
+    assert ctrl.arm_values[1] > ctrl.arm_values[0]
+
+
+def test_stochastic_tree_output_distribution(tiny_dense_pair):
+    """Multi-candidate residual sampling: empirical next-token dist of the
+    tree engine ~= the target dist (the SpecInfer guarantee)."""
+    draft, target = tiny_dense_pair
+    cache, spec = T.init_cache(target.cfg, 1, 64, jnp.float32)
+    lg, _ = T.step(target.params, target.cfg,
+                   jnp.asarray([PROMPT], jnp.int32), cache, spec)
+    p_tgt = np.asarray(jax.nn.softmax(lg[0, -1]))
+    N = 150
+    eng = TreeSpecEngine(draft, target,
+                         FixedShape(4, tree_shape(trees.binary(2))),
+                         max_len=64, temperature=1.0, greedy=False, seed=0)
+    counts = np.zeros(target.cfg.vocab_size)
+    for _ in range(N):
+        r = eng.generate(PROMPT, 1)
+        counts[r.tokens[len(PROMPT)]] += 1
+    tv = 0.5 * np.abs(counts / N - p_tgt).sum()
+    assert tv < 0.3, tv
+
+
+# ------------------------------------------------------------- serving
+
+def test_tree_serving_drains_and_accounts(tiny_dense_pair):
+    from repro.serving.engine import SpecServer
+    draft, target = tiny_dense_pair
+    ctrl = TapOutTreeSequence(6, "ucb1", "simple", seed=0)
+    srv = SpecServer(draft, target, ctrl, max_len=192, max_concurrency=3,
+                     tree=True)
+    rng = np.random.default_rng(0)
+    n_req = 5
+    for _ in range(n_req):
+        srv.submit(rng.integers(1, 60, size=int(rng.integers(4, 16))).tolist(),
+                   8)
+    rs = srv.run_until_drained()
+    assert len(rs) == n_req
+    st = srv.throughput_stats()
+    assert st["n_requests"] == n_req
+    assert "accepted_per_verify" in st and st["accepted_per_verify"] >= 0
+    assert len(st["shape_pulls"]) == len(ctrl.shapes)
+    for r in rs:
+        assert r.result.new_tokens >= 8
+        for s in r.result.sessions:
+            assert 0 <= s.n_accepted <= s.n_drafted
