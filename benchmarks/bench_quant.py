@@ -1,0 +1,148 @@
+"""Quantized inference bench: bf16 vs int8-KV vs int8-draft arms.
+
+Three single-stream arms drain the SAME prompt set under the same stop
+rule, reporting accepted-per-verify and the modeled cost-per-token
+(``core.rewards``):
+
+  * ``bf16_chain``  — the baseline chain arm, full-precision everything;
+  * ``int8_kv``     — both models' KV caches stored int8 (per-row scales);
+  * ``int8_draft``  — draft weights quantized once, modeled draft cost
+                      scaled by ``precision_cost_factor("int8")``.
+
+Headline claim (``claim_quant_cheaper_per_token``): the int8-draft arm's
+modeled cost-per-token beats the bf16 chain arm — quantization shrinks the
+draft/target cost ratio ``c`` that bounds TapOut's speedup, so the same
+acceptance buys cheaper tokens.
+
+The MEMORY-CONSTRAINED SERVING row drains a multi-stream workload through
+two paged servers with the SAME ``pool_tokens`` budget: the int8-KV pool
+must come in at well under half the bytes (int8 payload + f32 per-row
+scales vs fp32 pools), i.e. ~2x the effective KV capacity per byte —
+``claim_int8_kv_shrinks_pool``.  Output parity of the int8-KV server vs
+the bf16 server is recorded alongside (``int8_kv_output_parity``).
+
+``--smoke`` runs a seconds-scale config for CI, writes
+``artifacts/bench/quant_spec_smoke.json`` and appends a summary row to the
+repo-root ``BENCH_serving.json`` (the committed perf trajectory).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _serve_paged(draft, target, prompts, *, max_new: int, gamma_max: int,
+                 max_len: int, pool_tokens: int, kv_dtype=None) -> dict:
+    """One deterministic paged drain collecting per-request OUTPUTS.
+
+    Deliberately not ``bench_serving_batch._serve``: that harness exists
+    for TIMING (warmup drain, best-of-repeats, online-bandit controller),
+    all of which is wrong for a byte-footprint + output-parity comparison
+    — this one drains once with a fixed stop rule and keeps the tokens.
+    """
+    from repro.core import make_controller
+    from repro.serving.engine import SpecServer
+    srv = SpecServer(draft, target,
+                     make_controller("fixed_svip", gamma_max=gamma_max,
+                                     seed=0),
+                     max_len=max_len, max_concurrency=4, paged=True,
+                     block_size=16, pool_tokens=pool_tokens,
+                     kv_dtype=kv_dtype)
+    for p in prompts:
+        srv.submit(p, max_new)
+    srv.run_until_drained(max_ticks=2000)
+    stats = srv.throughput_stats()
+    stats["outputs"] = {r.request_id: list(r.result.tokens)
+                       for r in srv.responses}
+    return stats
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    from benchmarks.bench_serving_batch import _tiny_pair, _workload
+    from benchmarks.common import (evaluate_method, record_serving_bench,
+                                   save_json)
+    from repro.core import make_controller
+    from repro.core.rewards import precision_cost_factor
+
+    if smoke or quick:
+        cfg = dict(n_prompts=3, max_new=16, gamma_max=4, max_len=128)
+        draft, target = _tiny_pair(n_layers_t=2, d_model_t=64,
+                                   n_layers_d=1, d_model_d=32)
+    else:
+        cfg = dict(n_prompts=8, max_new=48, gamma_max=6, max_len=256)
+        draft, target = _tiny_pair()
+
+    prompts = _workload(cfg["n_prompts"], seed=2)
+
+    # ---- single-stream precision arms under one stop rule
+    arms = {
+        "bf16_chain": {},
+        "int8_kv": {"kv_dtype": "int8"},
+        "int8_draft": {"quant_draft": True},
+    }
+    results = {}
+    for name, ekw in arms.items():
+        ctrl = make_controller("fixed_svip", gamma_max=cfg["gamma_max"],
+                               seed=0)
+        r = evaluate_method(draft, target, ctrl, prompts,
+                            max_new=cfg["max_new"], max_len=cfg["max_len"],
+                            engine_kwargs=ekw)
+        results[name] = {"m": r.m, "accept_rate": r.accept_rate,
+                         "cost_per_token": r.cost_per_token}
+        print(f"  {name}: m={r.m:.2f} accept={r.accept_rate:.2f} "
+              f"cost/token={r.cost_per_token:.3e}", file=sys.stderr)
+
+    claim_cheaper = bool(results["int8_draft"]["cost_per_token"]
+                         < results["bf16_chain"]["cost_per_token"])
+
+    # ---- memory-constrained serving: same pool_tokens, ~2x capacity/byte
+    serve_prompts = _workload(max(cfg["n_prompts"], 6), seed=3)
+    pool_tokens = 4 * cfg["max_len"]
+    srv_kw = dict(max_new=cfg["max_new"], gamma_max=cfg["gamma_max"],
+                  max_len=cfg["max_len"], pool_tokens=pool_tokens)
+    fp = _serve_paged(draft, target, serve_prompts, **srv_kw)
+    q8 = _serve_paged(draft, target, serve_prompts, kv_dtype="int8",
+                      **srv_kw)
+    parity = fp["outputs"] == q8["outputs"]
+    claim_pool = bool(q8["cache_pool_bytes"] < 0.5 * fp["cache_pool_bytes"])
+    print(f"  paged pool bytes: fp={fp['cache_pool_bytes']} "
+          f"int8={q8['cache_pool_bytes']} parity={parity}", file=sys.stderr)
+
+    payload = {
+        "config": cfg,
+        "arms": results,
+        "precision_cost_factor_int8": precision_cost_factor("int8"),
+        "claim_quant_cheaper_per_token": claim_cheaper,
+        "paged_pool_bytes": {"fp": fp["cache_pool_bytes"],
+                             "int8": q8["cache_pool_bytes"]},
+        "int8_kv_output_parity": bool(parity),
+        "claim_int8_kv_shrinks_pool": claim_pool,
+    }
+    suffix = "_smoke" if smoke else ""
+    save_json(f"quant_spec{suffix}", payload)
+    record_serving_bench(f"quant_spec{suffix}", {
+        "arms": results,
+        "claim_quant_cheaper_per_token": claim_cheaper,
+        "claim_int8_kv_shrinks_pool": claim_pool,
+        "int8_kv_output_parity": bool(parity),
+        "paged_pool_bytes": payload["paged_pool_bytes"],
+    })
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI config")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    payload = run(quick=args.quick, smoke=args.smoke)
+    ok = payload["claim_quant_cheaper_per_token"]
+    ok_pool = payload["claim_int8_kv_shrinks_pool"]
+    print(f"claim_quant_cheaper_per_token={ok}")
+    print(f"claim_int8_kv_shrinks_pool={ok_pool}")
+    sys.exit(0 if (ok and ok_pool) else 1)

@@ -16,6 +16,11 @@ server is given the SAME token budget as the dense claim-B run
 that budget (``claim_paged_admits_more``), alongside ``cache_pool_bytes``
 and ``peak_blocks_in_use``.
 
+The INT8-KV row (memory-constrained serving, docs/quantization.md) gives
+the paged server TWICE the fp row's token budget stored quantized: the
+pool must come in at no more bytes than the fp pool while sustaining at
+least its concurrency (``claim_int8_kv_doubles_capacity_per_byte``).
+
 Uses a random-init tiny pair (throughput only needs the hot path, not
 acceptance quality) sized so a tick is DISPATCH-dominated — on a few-core
 CPU host a large per-tick forward is compute-bound and batching cannot
@@ -78,7 +83,8 @@ def _dense_kv_bytes(server) -> int:
 def _serve(draft, target, prompts, *, batch_size: int, max_new: int,
            gamma_max: int, max_len: int, seed: int = 0,
            repeats: int = 2, paged: bool = False,
-           pool_tokens: int = 0, block_size: int = 16) -> dict:
+           pool_tokens: int = 0, block_size: int = 16,
+           kv_dtype=None) -> dict:
     from repro.core import make_controller
     from repro.serving.engine import SpecServer
 
@@ -95,7 +101,8 @@ def _serve(draft, target, prompts, *, batch_size: int, max_new: int,
     kw = dict(paged=True, pool_tokens=pool_tokens,
               block_size=block_size) if paged else {}
     srv = SpecServer(draft, target, ctrl, max_len=max_len,
-                     max_concurrency=batch_size, seed=seed, **kw)
+                     max_concurrency=batch_size, seed=seed,
+                     kv_dtype=kv_dtype, **kw)
     warm = [list(range(1, 40))] + prompts[:min(batch_size, len(prompts)) - 1]
     drain(srv, warm)
     srv.responses.clear()
@@ -173,6 +180,24 @@ def run(quick: bool = False, smoke: bool = False,
           f"pool={paged['cache_pool_bytes']/1e6:.1f}MB  "
           f"peak_blocks={paged['peak_blocks_in_use']}", file=sys.stderr)
 
+    # ---- memory-constrained row: the int8-KV server doubles the tokens of
+    # the SAME byte budget (2x pool_tokens lands well under the fp pool's
+    # bytes — int8 payload + f32 per-row scales vs fp32 pools), so a byte-
+    # bound deployment admits at least as many concurrent streams
+    quant = _serve(draft, target, paged_prompts, batch_size=b_paged,
+                   max_new=cfg["max_new"], gamma_max=cfg["gamma_max"],
+                   max_len=cfg["max_len"], paged=True,
+                   pool_tokens=2 * b_claim * cfg["max_len"], block_size=16,
+                   kv_dtype="int8")
+    quant["pool_tokens_vs_fp"] = 2.0
+    quant["claim_int8_kv_doubles_capacity_per_byte"] = bool(
+        quant["cache_pool_bytes"] <= paged["cache_pool_bytes"]
+        and quant["peak_concurrency"] >= paged["peak_concurrency"])
+    print(f"  paged int8-KV B={b_paged} (2x tokens of the fp budget): "
+          f"pool={quant['cache_pool_bytes']/1e6:.1f}MB vs "
+          f"fp {paged['cache_pool_bytes']/1e6:.1f}MB  "
+          f"peak_concurrency={quant['peak_concurrency']}", file=sys.stderr)
+
     payload = {
         "config": cfg,
         "batch_sizes": batch_sizes,
@@ -184,6 +209,9 @@ def run(quick: bool = False, smoke: bool = False,
                           for b in batch_sizes},
         "paged": paged,
         "claim_paged_admits_more": paged["claim_paged_admits_more"],
+        "paged_int8_kv": quant,
+        "claim_int8_kv_doubles_capacity_per_byte":
+            quant["claim_int8_kv_doubles_capacity_per_byte"],
     }
     suffix = "_smoke" if smoke else ""
     save_json(f"serving_batch{suffix}", payload)
@@ -201,6 +229,12 @@ def run(quick: bool = False, smoke: bool = False,
                   "peak_concurrency": paged["peak_concurrency"],
                   "cache_pool_bytes": paged["cache_pool_bytes"],
                   "claim_paged_admits_more": paged["claim_paged_admits_more"]},
+        "paged_int8_kv": {
+            "tokens_per_s": quant["tokens_per_s"],
+            "peak_concurrency": quant["peak_concurrency"],
+            "cache_pool_bytes": quant["cache_pool_bytes"],
+            "claim_int8_kv_doubles_capacity_per_byte":
+                quant["claim_int8_kv_doubles_capacity_per_byte"]},
     })
     return payload
 

@@ -197,9 +197,17 @@ class MethodResult:
 
 def evaluate_method(draft: ModelBundle, target: ModelBundle,
                     controller: Controller, prompts: List[List[int]], *,
-                    max_new: int = 64, max_len: int = 1024,
-                    seed: int = 0) -> MethodResult:
-    eng = SpecEngine(draft, target, controller, max_len=max_len, seed=seed)
+                    max_new: int = 64, max_len: int = 1024, seed: int = 0,
+                    engine_kwargs: Optional[Dict] = None) -> MethodResult:
+    """Drain ``prompts`` through a single-stream engine and aggregate the
+    paper metrics.  ``engine_kwargs`` reach ``SpecEngine`` directly — the
+    quantization axes (``kv_dtype="int8"``, ``quant_draft=True``) ride
+    through here so every bench compares precisions under one harness; a
+    quantized draft's cheaper ``cost_per_token``
+    (``core.rewards.precision_cost_factor``) flows into
+    ``cost_per_token`` below via the engine's modeled session cost."""
+    eng = SpecEngine(draft, target, controller, max_len=max_len, seed=seed,
+                     **(engine_kwargs or {}))
     tot_acc = tot_draft = tot_sessions = tot_new = 0
     cost = wall = 0.0
     for ids in prompts:

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Docs lane checks (stdlib only, run by CI):
+
+1. every intra-repo markdown link in README.md and docs/**/*.md resolves
+   to an existing file (anchors stripped; http(s)/mailto skipped);
+2. every page under docs/ is reachable from docs/index.md by following
+   markdown links (no orphan documentation).
+
+Exits non-zero with one line per violation.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files():
+    files = [os.path.join(REPO, "README.md")]
+    for root, _, names in os.walk(os.path.join(REPO, "docs")):
+        files += [os.path.join(root, n) for n in sorted(names)
+                  if n.endswith(".md")]
+    return [f for f in files if os.path.exists(f)]
+
+
+def links_of(path: str):
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # drop fenced code blocks — ascii diagrams are not links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return LINK_RE.findall(text)
+
+
+def resolve(src: str, target: str):
+    target = target.split("#", 1)[0]
+    if not target:
+        return None
+    return os.path.normpath(os.path.join(os.path.dirname(src), target))
+
+
+def main() -> int:
+    errors = []
+    files = md_files()
+
+    # ---- 1. intra-repo links resolve
+    graph = {f: set() for f in files}
+    for f in files:
+        for raw in links_of(f):
+            if raw.startswith(SKIP_PREFIXES):
+                continue
+            dest = resolve(f, raw)
+            if dest is None:
+                continue
+            if not os.path.exists(dest):
+                errors.append(f"{os.path.relpath(f, REPO)}: broken link "
+                              f"-> {raw}")
+            elif dest.endswith(".md"):
+                graph[f].add(dest)
+
+    # ---- 2. every docs/*.md reachable from docs/index.md
+    index = os.path.join(REPO, "docs", "index.md")
+    if not os.path.exists(index):
+        errors.append("docs/index.md is missing")
+    else:
+        seen, queue = {index}, [index]
+        while queue:
+            cur = queue.pop()
+            for dest in graph.get(cur, ()):
+                if dest not in seen:
+                    seen.add(dest)
+                    queue.append(dest)
+        for f in files:
+            if os.sep + "docs" + os.sep in f and f not in seen:
+                errors.append(f"{os.path.relpath(f, REPO)}: not reachable "
+                              f"from docs/index.md")
+
+    for e in errors:
+        print(f"::error::{e}")
+    if not errors:
+        print(f"docs ok: {len(files)} pages, all links resolve, all docs "
+              f"pages reachable from docs/index.md")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

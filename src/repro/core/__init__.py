@@ -1,13 +1,47 @@
+"""Public API of the speculative-decoding core.
+
+Stable names the docs (``docs/index.md``) point at: arm pools and shape
+arms (``arms``), bandit algorithms (``bandits``), controllers
+(``controller``), generation engines (``engine``), reward/cost models
+(``rewards``), the jitted draft/verify primitives (``spec_decode``) and
+static tree topologies (``tree``).
+"""
 from .arms import (Arm, ShapeArm, arm_by_name, chain_shape, default_pool,
-                   default_shape_pool, multi_threshold_pool, tree_shape)
+                   default_shape_pool, multi_threshold_pool, quantized_shape,
+                   shape_cost_factor, tree_shape)
 from .bandits import make_bandit, BanditBank
 from .controller import (Controller, FixedArm, FixedShape, StaticGamma,
                          TapOutSequence, TapOutToken, TapOutTreeSequence,
                          make_controller)
 from .engine import (BatchedSpecEngine, GenResult, ModelBundle,
-                     PagedSpecEngine, SpecEngine, TreeSpecEngine)
-from .rewards import r_blend, r_simple
+                     PagedSpecEngine, SpecEngine, TreeSlotEngine,
+                     TreeSpecEngine, quantized_bundle)
+from .rewards import (modeled_session_cost, precision_cost_factor, r_blend,
+                      r_cost_adjusted, r_simple)
 from .spec_decode import (draft_session, draft_session_batched,
                           draft_session_paged, verify_session,
                           verify_session_batched, verify_session_paged)
 from .tree import TreeSpec, binary, chain, from_branching, wide
+
+__all__ = [
+    # arms & shapes
+    "Arm", "ShapeArm", "arm_by_name", "chain_shape", "default_pool",
+    "default_shape_pool", "multi_threshold_pool", "quantized_shape",
+    "shape_cost_factor", "tree_shape",
+    # bandits
+    "make_bandit", "BanditBank",
+    # controllers
+    "Controller", "FixedArm", "FixedShape", "StaticGamma", "TapOutSequence",
+    "TapOutToken", "TapOutTreeSequence", "make_controller",
+    # engines
+    "BatchedSpecEngine", "GenResult", "ModelBundle", "PagedSpecEngine",
+    "SpecEngine", "TreeSlotEngine", "TreeSpecEngine", "quantized_bundle",
+    # rewards / cost model
+    "modeled_session_cost", "precision_cost_factor", "r_blend",
+    "r_cost_adjusted", "r_simple",
+    # jitted primitives
+    "draft_session", "draft_session_batched", "draft_session_paged",
+    "verify_session", "verify_session_batched", "verify_session_paged",
+    # trees
+    "TreeSpec", "binary", "chain", "from_branching", "wide",
+]

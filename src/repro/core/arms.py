@@ -172,17 +172,22 @@ def arm_by_name(name: str, threshold: float = None) -> Arm:
 class ShapeArm:
     """A SPECULATION-SHAPE arm for the tree meta-bandit: either a linear
     chain governed by one of the parameter-free stop rules above, or a
-    static draft-tree topology (``core.tree.TreeSpec``).  The TapOut
-    meta-algorithm is unchanged — the shape is just another arm chosen
-    from observed reward, no hand-tuned thresholds added."""
+    static draft-tree topology (``core.tree.TreeSpec``) — at a DRAFT
+    PRECISION (``bf16`` or ``int8`` weights, ``models/quant.py``).  The
+    TapOut meta-algorithm is unchanged — shape and precision are just
+    arm dimensions chosen from observed reward, no hand-tuned thresholds
+    added; precision additionally scales the arm's modeled cost
+    (``core.rewards.precision_cost_factor``)."""
     name: str
     kind: str                      # "chain" | "tree"
     stop: Optional[Arm] = None     # chain: dynamic stop rule
     tree: Optional[object] = None  # tree: TreeSpec (hashable)
+    precision: str = "bf16"        # draft weight precision: "bf16" | "int8"
 
     def __post_init__(self):
         assert (self.kind == "chain") == (self.stop is not None)
         assert (self.kind == "tree") == (self.tree is not None)
+        assert self.precision in ("bf16", "int8"), self.precision
 
 
 def chain_shape(stop: Arm) -> ShapeArm:
@@ -193,14 +198,45 @@ def tree_shape(tree) -> ShapeArm:
     return ShapeArm(f"tree_{tree.name}", "tree", tree=tree)
 
 
-def default_shape_pool(gamma_max: int = 8) -> List[ShapeArm]:
+def quantized_shape(shape: ShapeArm) -> ShapeArm:
+    """The int8-draft variant of a shape arm (same stop rule / topology,
+    cheaper modeled cost)."""
+    import dataclasses
+    assert shape.precision == "bf16", f"{shape.name} already quantized"
+    return dataclasses.replace(shape, name=f"{shape.name}_int8",
+                               precision="int8")
+
+
+def shape_cost_factor(shape: ShapeArm, gamma_max: int = 0) -> float:
+    """Relative modeled DRAFT cost of a shape arm: the precision factor,
+    times the tree's node count relative to ``gamma_max`` for tree arms —
+    a tree drafting 2x gamma_max nodes per session costs ~2x a full chain,
+    and the cost-adjusted reward must see that, not just the precision
+    axis.  (Chains draft a DYNAMIC number of tokens <= gamma_max; their
+    per-session cost is the baseline 1.0 — the stop rule's thrift already
+    shows up in the observed reward.)"""
+    from .rewards import precision_cost_factor
+    factor = precision_cost_factor(shape.precision)
+    if shape.kind == "tree" and gamma_max:
+        factor *= shape.tree.n_nodes / gamma_max
+    return factor
+
+
+def default_shape_pool(gamma_max: int = 8,
+                       quantized: bool = False) -> List[ShapeArm]:
     """Chain arms (the paper pool's rules, unchanged) + tree topologies
-    sized so no tree drafts more than ~2x gamma_max nodes."""
+    sized so no tree drafts more than ~2x gamma_max nodes.
+    ``quantized=True`` additionally offers every chain rule at int8 draft
+    precision (the memory-bound cost axis) — engines then hold one
+    quantized copy of the draft weights next to the bf16 copy."""
     from . import tree as _t
-    shapes = [chain_shape(a) for a in default_pool()]
+    chains = [chain_shape(a) for a in default_pool()]
+    shapes = list(chains)
     trees = [_t.binary(3), _t.wide(4, max(2, min(4, gamma_max // 2))),
              _t.from_branching((4, 2, 1))]
     shapes += [tree_shape(t) for t in trees if t.n_nodes <= 2 * gamma_max + 8]
+    if quantized:
+        shapes += [quantized_shape(s) for s in chains]
     return shapes
 
 

@@ -222,11 +222,24 @@ class TapOutTreeSequence(Controller):
         self._current = int(self.bandit.select())
         return self._current
 
-    def _reward(self, n_accepted: int, n_drafted: int) -> float:
+    def _reward(self, n_accepted: int, n_drafted: int,
+                shape_idx: Optional[int] = None) -> float:
         if self.reward_fn is REWARDS["blend"]:
             return self.reward_fn(n_accepted, n_drafted, self.gamma_max,
                                   self.alpha)
-        return self.reward_fn(n_accepted, n_drafted, self.gamma_max)
+        if self.reward_fn is REWARDS["cost"] and shape_idx is not None:
+            # cost as an arm axis (precision AND tree node count): divide by
+            # the arm's modeled draft cost relative to the pool's CHEAPEST
+            # arm (rel >= 1) — r_cost_adjusted then stays in [0, 1] with no
+            # clipping, so cheap arms never saturate
+            from .arms import shape_cost_factor
+            g = self.gamma_max
+            rel = (shape_cost_factor(self.shapes[shape_idx], g)
+                   / min(shape_cost_factor(s, g) for s in self.shapes))
+            return self.reward_fn(n_accepted, n_drafted, g, rel)
+        return REWARDS["simple"](n_accepted, n_drafted, self.gamma_max) \
+            if self.reward_fn is REWARDS["cost"] \
+            else self.reward_fn(n_accepted, n_drafted, self.gamma_max)
 
     def update_shape(self, shape_idx: int, n_drafted: int,
                      n_accepted: int) -> None:
@@ -237,7 +250,8 @@ class TapOutTreeSequence(Controller):
         if self.shapes[shape_idx].kind == "chain":
             self.lam, self._accept_ema = update_adaedl_lambda(
                 self.lam, self._accept_ema, n_accepted, n_drafted)
-        self.bandit.update(shape_idx, self._reward(n_accepted, n_drafted))
+        self.bandit.update(shape_idx,
+                           self._reward(n_accepted, n_drafted, shape_idx))
         self.history.append({"n_drafted": n_drafted, "n_accepted": n_accepted,
                              "shape": self.shapes[shape_idx].name,
                              "arm_values": self.arm_values})
@@ -320,4 +334,11 @@ def make_controller(kind: str, gamma_max: int, seed: int = 0, **kw) -> Controlle
         return TapOutTreeSequence(gamma_max, "exp3",
                                   kw.get("reward", "simple"),
                                   kw.get("shapes"), seed)
+    if kind == "tapout_tree_cost":
+        # cost-adjusted reward over a shape pool that includes int8-draft
+        # precision arms (see core/arms.default_shape_pool(quantized=True))
+        from .arms import default_shape_pool
+        shapes = kw.get("shapes") or default_shape_pool(gamma_max,
+                                                        quantized=True)
+        return TapOutTreeSequence(gamma_max, "ucb1", "cost", shapes, seed)
     raise ValueError(kind)

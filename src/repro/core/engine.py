@@ -21,7 +21,9 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.cache import (POOL_LEAF_KEYS, BlockAllocator, PoolExhausted,
                                 paged_rollback, rollback)
+from repro.models.quant import quantize_params
 from .controller import Controller, TapOutTreeSequence
+from .rewards import modeled_session_cost, precision_cost_factor
 from .spec_decode import (_probs, draft_session, draft_session_batched,
                           draft_session_paged, verify_session,
                           verify_session_batched, verify_session_paged)
@@ -38,6 +40,15 @@ class ModelBundle:
     def __post_init__(self):
         if not self.cost_per_token:
             self.cost_per_token = float(self.cfg.active_param_count())
+
+
+def quantized_bundle(bundle: ModelBundle) -> ModelBundle:
+    """An int8-weight copy of a bundle: params quantized once
+    (``models/quant.py``), modeled per-token cost scaled by the int8
+    precision factor (memory-bound decode streams ~half the bytes)."""
+    return ModelBundle(quantize_params(bundle.params), bundle.cfg,
+                       cost_per_token=bundle.cost_per_token
+                       * precision_cost_factor("int8"))
 
 
 @dataclass
@@ -106,10 +117,18 @@ class _StepMixin:
 
 
 class SpecEngine(_StepMixin):
+    """Single-stream engine.  ``kv_dtype="int8"`` stores both models' KV
+    caches quantized (``models/quant.py``); ``quant_draft=True`` swaps the
+    draft bundle for an int8-weight copy with the precision-scaled modeled
+    cost (the batched/paged/tree engines take the same two knobs)."""
+
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: Controller, *, max_len: int = 2048,
                  temperature: float = 0.0, greedy: bool = True,
-                 cache_dtype=jnp.float32, seed: int = 0):
+                 cache_dtype=jnp.float32, kv_dtype: Optional[str] = None,
+                 quant_draft: bool = False, seed: int = 0):
+        if quant_draft:
+            draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
         self.controller = controller
         self.gamma_max = controller.gamma_max
@@ -117,11 +136,14 @@ class SpecEngine(_StepMixin):
         self.temperature = temperature
         self.greedy = greedy
         self.cache_dtype = cache_dtype
+        self.kv_dtype = kv_dtype
         self.rng = jax.random.PRNGKey(seed)
         self.collect_traces = False
         self._step_cache: Dict[tuple, callable] = {}
-        _, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype)
-        _, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype)
+        _, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype,
+                                     kv_dtype=kv_dtype)
+        _, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype,
+                                     kv_dtype=kv_dtype)
         self.draft_cheap = self.dspec.cheap_rollback
         self.target_cheap = self.tspec.cheap_rollback
 
@@ -136,8 +158,10 @@ class SpecEngine(_StepMixin):
         assert len(prompt) >= 2, "need >= 2 prompt tokens"
         seq = list(prompt)
         res = GenResult(tokens=seq, prompt_len=len(prompt))
-        dcache, _ = T.init_cache(self.draft.cfg, 1, self.max_len, self.cache_dtype)
-        tcache, _ = T.init_cache(self.target.cfg, 1, self.max_len, self.cache_dtype)
+        dcache, _ = T.init_cache(self.draft.cfg, 1, self.max_len,
+                                 self.cache_dtype, kv_dtype=self.kv_dtype)
+        tcache, _ = T.init_cache(self.target.cfg, 1, self.max_len,
+                                 self.cache_dtype, kv_dtype=self.kv_dtype)
         pre = np.asarray(seq[:-1], np.int32)[None]   # invariant pos = len-1
         dcache = self._advance("draft", self.draft.params, dcache, pre)
         tcache = self._advance("target", self.target.params, tcache, pre)
@@ -207,7 +231,8 @@ class SpecEngine(_StepMixin):
                     "entropies": np.asarray(dres.entropies[0]),
                     "n_drafted": n_drafted, "n_accepted": m,
                     "position_base": 0})
-            res.modeled_cost += n_drafted * c_d + c_t + (n_in - 1) * c_d
+            res.modeled_cost += modeled_session_cost(
+                n_drafted + n_in - 1, c_d, c_t)
             if eos_id is not None and eos_id in out:
                 seq[:] = seq[:len(seq) - len(out) + out.index(eos_id) + 1]
                 state["done"] = True
@@ -278,15 +303,26 @@ class TreeSpecEngine(_StepMixin):
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: TapOutTreeSequence, *, max_len: int = 2048,
                  temperature: float = 0.0, greedy: bool = True,
-                 cache_dtype=jnp.float32, seed: int = 0, paged: bool = False,
-                 block_size: int = 64):
+                 cache_dtype=jnp.float32, kv_dtype: Optional[str] = None,
+                 quant_draft: bool = False, seed: int = 0,
+                 paged: bool = False, block_size: int = 64):
+        if quant_draft:
+            draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
+        # precision arms (ShapeArm.precision == "int8") draft with a
+        # quantized copy of the SAME draft weights — quantize once here,
+        # the shape bandit then picks precision per session like any arm
+        self._draft_variants: Dict[str, ModelBundle] = {}
+        if (not quant_draft
+                and any(s.precision == "int8" for s in controller.shapes)):
+            self._draft_variants["int8"] = quantized_bundle(draft)
         self.controller = controller
         self.gamma_max = controller.gamma_max
         self.max_len = max_len
         self.temperature = temperature
         self.greedy = greedy
         self.cache_dtype = cache_dtype
+        self.kv_dtype = kv_dtype
         self.paged = paged
         self.block_size = block_size
         self.rng = jax.random.PRNGKey(seed)
@@ -296,13 +332,15 @@ class TreeSpecEngine(_StepMixin):
         if paged:
             _, self.dspec = T.init_paged_cache(
                 draft.cfg, 1, max_len, block_size=block_size,
-                pool_tokens=max_len, dtype=cache_dtype)
+                pool_tokens=max_len, dtype=cache_dtype, kv_dtype=kv_dtype)
             _, self.tspec = T.init_paged_cache(
                 target.cfg, 1, max_len, block_size=block_size,
-                pool_tokens=max_len, dtype=cache_dtype)
+                pool_tokens=max_len, dtype=cache_dtype, kv_dtype=kv_dtype)
         else:
-            _, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype)
-            _, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype)
+            _, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype,
+                                         kv_dtype=kv_dtype)
+            _, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype,
+                                         kv_dtype=kv_dtype)
         for spec, cfg in ((self.dspec, draft.cfg), (self.tspec, target.cfg)):
             assert spec.cheap_rollback, \
                 "tree speculation requires attn/mla-only stacks"
@@ -319,34 +357,45 @@ class TreeSpecEngine(_StepMixin):
         self.rng, k = jax.random.split(self.rng)
         return k
 
+    def _draft_bundle(self, shape) -> ModelBundle:
+        """The draft weights a shape arm runs with (its precision axis)."""
+        return self._draft_variants.get(shape.precision, self.draft)
+
     def _fresh_cache(self, which: str):
         bundle = self.draft if which == "draft" else self.target
         if self.paged:
             cache, spec = T.init_paged_cache(
                 bundle.cfg, 1, self.max_len, block_size=self.block_size,
-                pool_tokens=self.max_len, dtype=self.cache_dtype)
+                pool_tokens=self.max_len, dtype=self.cache_dtype,
+                kv_dtype=self.kv_dtype)
             # single stream owns the whole pool: identity block table
             tbl = np.arange(1, spec.max_blocks + 1, dtype=np.int32)[None]
             return {**cache, "tables": jnp.asarray(tbl)}
-        cache, _ = T.init_cache(bundle.cfg, 1, self.max_len, self.cache_dtype)
+        cache, _ = T.init_cache(bundle.cfg, 1, self.max_len, self.cache_dtype,
+                                kv_dtype=self.kv_dtype)
         return cache
 
     def _rollback(self, cache, n: int):
         return paged_rollback(cache, [n]) if self.paged else rollback(cache, n)
 
-    def _feed(self, which: str, cache, tokens: List[int]):
-        """Advance by ``tokens``, returning (last-token logits, cache)."""
+    def _feed(self, which: str, cache, tokens: List[int],
+              bundle: Optional[ModelBundle] = None):
+        """Advance by ``tokens``, returning (last-token logits, cache).
+        ``bundle`` overrides the weights (precision arms feed through their
+        own draft copy); the jitted wrapper is shared — params are traced
+        arguments, so a different pytree structure just retraces."""
         key = (which, "feed", len(tokens), self.paged)
         if key not in self._step_cache:
-            bundle = self.draft if which == "draft" else self.target
+            cfg = (self.draft if which == "draft" else self.target).cfg
             spec = self.dspec if which == "draft" else self.tspec
             step = T.paged_step if self.paged else T.step
 
             @jax.jit
             def fn(params, toks, cache):
-                return step(params, bundle.cfg, toks, cache, spec)
+                return step(params, cfg, toks, cache, spec)
             self._step_cache[key] = fn
-        bundle = self.draft if which == "draft" else self.target
+        if bundle is None:
+            bundle = self.draft if which == "draft" else self.target
         return self._step_cache[key](bundle.params,
                                      jnp.asarray([tokens], jnp.int32), cache)
 
@@ -372,9 +421,11 @@ class TreeSpecEngine(_StepMixin):
                 "done": False}
 
     # -------------------------------------------------------- sessions
-    def _chain_session(self, state: dict, stop_idx: int):
+    def _chain_session(self, state: dict, stop_idx: int,
+                       draft: ModelBundle):
         """One chain draft/verify session (the existing jitted primitives,
-        dense or paged-B=1, with the shape's stop rule broadcast)."""
+        dense or paged-B=1, with the shape's stop rule broadcast; ``draft``
+        carries the shape arm's precision — bf16 or int8 weights)."""
         seq = state["seq"]
         L = len(seq)
         g = self.gamma_max
@@ -384,7 +435,7 @@ class TreeSpecEngine(_StepMixin):
             dcache_in = self._rollback(state["dcache"], L - 2)
             active = jnp.asarray([True])
             dres = draft_session_paged(
-                self.draft.params, self.draft.cfg, self.dspec, dcache_in,
+                draft.params, draft.cfg, self.dspec, dcache_in,
                 jnp.asarray([seq[-2:]], jnp.int32), jnp.asarray(arm_per_pos[None]),
                 lam, self._next_rng()[None], active,
                 arms=self.controller.arms, gamma_max=g,
@@ -398,7 +449,7 @@ class TreeSpecEngine(_StepMixin):
         else:
             dcache_in = self._rollback(state["dcache"], L - 2)
             dres = draft_session(
-                self.draft.params, self.draft.cfg, self.dspec, dcache_in,
+                draft.params, draft.cfg, self.dspec, dcache_in,
                 jnp.asarray([seq[-2:]], jnp.int32), jnp.asarray(arm_per_pos),
                 lam, self._next_rng(), arms=self.controller.arms, gamma_max=g,
                 temperature=self.temperature)
@@ -412,22 +463,23 @@ class TreeSpecEngine(_StepMixin):
         out = np.asarray(vres.out_tokens[0, :m + 1]).tolist()
         state["dcache"] = self._rollback(dres.cache, L + m - 1)
         state["tcache"] = self._rollback(vres.cache, L + m)
-        cost = (n_drafted + 1) * self.draft.cost_per_token \
-            + self.target.cost_per_token
+        cost = modeled_session_cost(n_drafted + 1, draft.cost_per_token,
+                                    self.target.cost_per_token)
         return n_drafted, m, out, cost
 
-    def _tree_session(self, state: dict, tree: TreeSpec):
+    def _tree_session(self, state: dict, tree: TreeSpec,
+                      draft: ModelBundle):
         """One tree draft/verify session (see class docstring)."""
         seq = state["seq"]
         L = len(seq)
-        cfg_d, cfg_t = self.draft.cfg, self.target.cfg
+        cfg_d, cfg_t = draft.cfg, self.target.cfg
         Tn = tree.n_nodes
         temp = self.temperature
         greedy_draft = self.greedy or temp == 0.0
 
         # ---- draft: refeed suffix, then expand level by level
         dcache = self._rollback(state["dcache"], L - 2)
-        lg, dcache = self._feed("draft", dcache, seq[-2:])
+        lg, dcache = self._feed("draft", dcache, seq[-2:], bundle=draft)
         parent_dist = {-1: np.asarray(_probs(lg[0, -1], temp))}
         # greedy sibling RANKING uses raw logits: at temperature 0 the
         # sampling distribution's non-top-1 entries underflow to exactly
@@ -456,7 +508,7 @@ class TreeSpecEngine(_StepMixin):
             # draft pointer sits at L after the refeed, so a node's
             # position is pointer + its depth (roots at L, etc.)
             lg_lvl, nodes = _tree_forward(
-                self.draft.params, cfg_d, self.dspec, dcache,
+                draft.params, cfg_d, self.dspec, dcache,
                 jnp.asarray([tokens[lvl]], jnp.int32),
                 jnp.asarray(tree.depths[lvl], jnp.int32),
                 jnp.asarray(anc[np.ix_(lvl, range(fed + len(lvl)))]),
@@ -497,8 +549,8 @@ class TreeSpecEngine(_StepMixin):
         dcache = _tree_commit(cfg_d, self.dspec, dcache, nodes,
                               jnp.asarray(dpath), m)
         state["dcache"] = self._rollback(dcache, L + m - 1)
-        cost = (Tn + 1) * self.draft.cost_per_token \
-            + self.target.cost_per_token
+        cost = modeled_session_cost(Tn + 1, draft.cost_per_token,
+                                    self.target.cost_per_token)
         return Tn, m, out, cost
 
     def session_step(self, state: dict, eos_id: Optional[int] = None) -> dict:
@@ -506,11 +558,13 @@ class TreeSpecEngine(_StepMixin):
         seq, res = state["seq"], state["res"]
         shape_idx = self.controller.begin_shape()
         shape = self.controller.shapes[shape_idx]
+        dbundle = self._draft_bundle(shape)
         if shape.kind == "tree":
-            n_drafted, m, out, cost = self._tree_session(state, shape.tree)
+            n_drafted, m, out, cost = self._tree_session(state, shape.tree,
+                                                         dbundle)
         else:
             n_drafted, m, out, cost = self._chain_session(
-                state, self.controller.stop_arm_index(shape_idx))
+                state, self.controller.stop_arm_index(shape_idx), dbundle)
         seq.extend(out)
         self.controller.update_shape(shape_idx, n_drafted, m)
         res.sessions.append(SessionStats(n_drafted, m, shape_idx))
@@ -618,9 +672,12 @@ class BatchedSpecEngine(_StepMixin):
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: Controller, *, batch_size: int = 4,
                  max_len: int = 2048, temperature: float = 0.0,
-                 greedy: bool = True, cache_dtype=jnp.float32, seed: int = 0,
-                 prefill_chunk: int = 16):
+                 greedy: bool = True, cache_dtype=jnp.float32,
+                 kv_dtype: Optional[str] = None, quant_draft: bool = False,
+                 seed: int = 0, prefill_chunk: int = 16):
         assert batch_size >= 1
+        if quant_draft:
+            draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
         self.controller = controller
         self.gamma_max = controller.gamma_max
@@ -629,13 +686,16 @@ class BatchedSpecEngine(_StepMixin):
         self.temperature = temperature
         self.greedy = greedy
         self.cache_dtype = cache_dtype
+        self.kv_dtype = kv_dtype
         self.prefill_chunk = prefill_chunk
         self.rng = jax.random.PRNGKey(seed)
         self.collect_traces = False
         self._step_cache: Dict[tuple, callable] = {}
 
-        dc1, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype)
-        tc1, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype)
+        dc1, self.dspec = T.init_cache(draft.cfg, 1, max_len, cache_dtype,
+                                       kv_dtype=kv_dtype)
+        tc1, self.tspec = T.init_cache(target.cfg, 1, max_len, cache_dtype,
+                                       kv_dtype=kv_dtype)
         self.draft_cheap = self.dspec.cheap_rollback
         self.target_cheap = self.tspec.cheap_rollback
         self._fresh_dcache, self._fresh_tcache = dc1, tc1
@@ -775,7 +835,8 @@ class BatchedSpecEngine(_StepMixin):
             seq.extend(out)
             res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
                                              int(arm_mat[s, 0])))
-            res.modeled_cost += int(nd[s]) * c_d + c_t + (n_in - 1) * c_d
+            res.modeled_cost += modeled_session_cost(
+                int(nd[s]) + n_in - 1, c_d, c_t)
             if self.collect_traces:
                 res.traces.append({
                     "signals": sig_all[s], "entropies": ent_all[s],
@@ -860,9 +921,12 @@ class PagedSpecEngine:
                  max_len: int = 2048, block_size: int = 64,
                  pool_tokens: Optional[int] = None,
                  temperature: float = 0.0, greedy: bool = True,
-                 cache_dtype=jnp.float32, seed: int = 0,
+                 cache_dtype=jnp.float32, kv_dtype: Optional[str] = None,
+                 quant_draft: bool = False, seed: int = 0,
                  prefill_chunk: int = 16):
         assert batch_size >= 1
+        if quant_draft:
+            draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
         self.controller = controller
         self.gamma_max = controller.gamma_max
@@ -873,6 +937,7 @@ class PagedSpecEngine:
         self.temperature = temperature
         self.greedy = greedy
         self.cache_dtype = cache_dtype
+        self.kv_dtype = kv_dtype
         self.prefill_chunk = prefill_chunk
         self.rng = jax.random.PRNGKey(seed)
         self.collect_traces = False
@@ -881,10 +946,12 @@ class PagedSpecEngine:
         B = batch_size
         self.dcache, self.dspec = T.init_paged_cache(
             draft.cfg, B, max_len, block_size=block_size,
-            pool_tokens=self.pool_tokens, dtype=cache_dtype)
+            pool_tokens=self.pool_tokens, dtype=cache_dtype,
+            kv_dtype=kv_dtype)
         self.tcache, self.tspec = T.init_paged_cache(
             target.cfg, B, max_len, block_size=block_size,
-            pool_tokens=self.pool_tokens, dtype=cache_dtype)
+            pool_tokens=self.pool_tokens, dtype=cache_dtype,
+            kv_dtype=kv_dtype)
         self.draft_cheap = self.dspec.cheap_rollback
         self.target_cheap = self.tspec.cheap_rollback
         self.dalloc = BlockAllocator(self.dspec.num_blocks,
@@ -1125,7 +1192,8 @@ class PagedSpecEngine:
             seq.extend(out)
             res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
                                              int(arm_mat[s, 0])))
-            res.modeled_cost += int(nd[s]) * c_d + c_t + (n_in - 1) * c_d
+            res.modeled_cost += modeled_session_cost(
+                int(nd[s]) + n_in - 1, c_d, c_t)
             if self.collect_traces:
                 res.traces.append({
                     "signals": sig_all[s], "entropies": ent_all[s],

@@ -1,5 +1,39 @@
-"""Reward formulations (Section 3.2)."""
+"""Reward formulations (Section 3.2) and the per-verify modeled cost.
+
+The cost model is roofline-style: one forward token costs a model its
+active-parameter count (``ModelBundle.cost_per_token``), and decode is
+memory-bound, so PRECISION scales that cost by the bytes actually streamed
+— int8 draft weights move roughly half the bytes of bf16, which
+``PRECISION_COST_FACTOR`` models as a 0.55x draft cost (payload halves;
+per-channel scales and the unquantized embeddings/norms keep it off the
+ideal 0.5).  ``modeled_session_cost`` is the single accounting rule every
+engine uses: a session = n draft forwards (at the draft's precision) plus
+one target verify forward.
+
+Precision thereby becomes a BANDIT COST AXIS: a quantized-draft
+``ShapeArm`` (``core/arms.py``) exposes a cheaper modeled cost per verify,
+and the cost-adjusted reward lets the TapOut meta-bandit trade acceptance
+against draft-side bytes with no new thresholds.
+"""
 from __future__ import annotations
+
+# Relative modeled cost of one DRAFT forward token by weight precision.
+PRECISION_COST_FACTOR = {"fp": 1.0, "fp32": 1.0, "bf16": 1.0, "int8": 0.55}
+
+
+def precision_cost_factor(precision: str) -> float:
+    return PRECISION_COST_FACTOR[precision]
+
+
+def modeled_session_cost(n_draft_tokens: int, cost_draft: float,
+                         cost_target: float, precision: str = "bf16") -> float:
+    """Modeled cost of ONE draft/verify session: ``n_draft_tokens`` draft
+    forwards (drafted tokens + any rollback refeeds) at the draft's
+    precision, plus one target verify forward.  Callers whose draft bundle
+    is already precision-scaled (engine-wide ``quant_draft``) pass the
+    default precision."""
+    return (n_draft_tokens * cost_draft * precision_cost_factor(precision)
+            + cost_target)
 
 
 def r_simple(n_accepted: int, n_drafted: int, gamma_max: int) -> float:
@@ -16,4 +50,16 @@ def r_blend(n_accepted: int, n_drafted: int, gamma_max: int,
             + (1.0 - alpha) * n_accepted / n_drafted)
 
 
-REWARDS = {"simple": r_simple, "blend": r_blend}
+def r_cost_adjusted(n_accepted: int, n_drafted: int, gamma_max: int,
+                    rel_cost: float = 1.0) -> float:
+    """``r_simple`` divided by the arm's modeled cost RELATIVE TO THE
+    POOL'S CHEAPEST arm (``rel_cost >= 1``, see
+    ``core.arms.shape_cost_factor``): equal acceptance at a lower modeled
+    cost earns proportionally more reward — the per-verify cost model the
+    quantized-draft arms compete on.  Normalizing against the cheapest arm
+    (not the dearest) keeps the reward in [0, 1] WITHOUT clipping, so
+    cheap arms never saturate and stay distinguishable."""
+    return r_simple(n_accepted, n_drafted, gamma_max) / max(rel_cost, 1.0)
+
+
+REWARDS = {"simple": r_simple, "blend": r_blend, "cost": r_cost_adjusted}

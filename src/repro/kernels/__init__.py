@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the decode hot paths, with pure-jnp oracles.
+
+One module per kernel family, each with a compiled TPU target validated
+against ``ref.py`` in interpret mode on CPU (``tests/test_kernels.py``):
+
+  * ``flash_attention``    — causal/windowed training & prefill attention
+  * ``decode_attention``   — flash-decode vs dense and PAGED caches, in
+                             float and INT8 (dequant-in-register) variants
+  * ``tree_attention``     — tree-verification attention (dense + paged)
+  * ``ssd``                — Mamba-2 SSD intra-chunk scan
+
+``ops.py`` holds the jitted public wrappers and the CPU-interpret
+dispatch; model code defaults to the XLA paths and reserves these for the
+hardware target.
+"""

@@ -15,10 +15,18 @@ BlockSpec index map can steer each grid step's HBM->VMEM DMA straight to
 view.  Positions are contiguous per stream, so masking degenerates to
 ``kpos <= lengths[b] - 1`` (+ the optional sliding window).
 
+The ``*_quant`` variants read INT8 K/V (``models/quant.py`` per-row-per-
+head scales) and dequantize IN REGISTER: the per-key scale multiplies the
+score after the q·k dot, the per-value scale folds into the softmax weight
+before the p·v dot — the fp K/V blocks are never materialized, so the
+HBM->VMEM traffic of this memory-bound kernel drops ~4x vs fp32 pools
+(1 byte payload + one f32 scale per row-head vs 4 bytes per element).
+
 Layouts: q (B, H, D) one query per head.
   dense: k, v (B, G, L, D); kpos (L,); qpos scalar int32.
   paged: kpool, vpool (N, bs, G, D); tables (B, MB) int32; lengths (B,).
-Both -> (B, H, D).
+  quant: payloads int8 in the same layouts; scales (B, G, L) / (N, bs, G).
+All -> (B, H, D).
 """
 from __future__ import annotations
 
@@ -113,6 +121,100 @@ def decode_attention(q, k, v, qpos, kpos, *, window: int = 0,
     return out
 
 
+# ------------------------------------------------------------ dense int8
+
+def _quant_kernel(qpos_ref, kpos_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                  nl: int):
+    i_l = pl.program_id(2)
+
+    @pl.when(i_l == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bl, D) int8 payload
+    v = v_ref[0, 0].astype(jnp.float32)               # (bl, D) int8 payload
+    ks = ks_ref[0, 0]                                 # (bl,) f32 scales
+    vs = vs_ref[0, 0]                                 # (bl,)
+    kp = kpos_ref[...]
+    qp = qpos_ref[0]
+
+    # dequant-in-register: the per-key scale multiplies the SCORE (exactly
+    # q . (k_int8 * ks) = (q . k_int8) * ks), never the K block itself
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * ks * scale
+    mask = (kp >= 0) & (kp <= qp)
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + p.sum()
+    # per-value scale folds into the softmax weight before the p . v dot
+    acc_ref[...] = (acc_ref[...] * corr + jax.lax.dot_general(
+        (p * vs)[None, :], v, (((1,), (0,)), ((), ()))))
+    m_ref[0] = m_new
+
+    @pl.when(i_l == nl - 1)
+    def _finalize():
+        l = l_ref[0]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, 0] = out[0].astype(o_ref.dtype)
+
+
+def decode_attention_quant(q, k, kscale, v, vscale, qpos, kpos, *,
+                           window: int = 0, block_l: int = 512,
+                           interpret: bool = False):
+    """q (B,H,D) float; k,v (B,G,L,D) int8; kscale,vscale (B,G,L) float32
+    per-row-per-head scales; qpos () int32; kpos (L,). -> (B,H,D) float."""
+    B, H, D = q.shape
+    G, L = k.shape[1], k.shape[2]
+    assert H % G == 0 and k.dtype == jnp.int8 and v.dtype == jnp.int8
+    assert kscale.shape == (B, G, L) and vscale.shape == (B, G, L)
+    bl = min(block_l, L)
+    pL = (-L) % bl
+    if pL:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        kscale = jnp.pad(kscale, ((0, 0), (0, 0), (0, pL)))
+        vscale = jnp.pad(vscale, ((0, 0), (0, 0), (0, pL)))
+        kpos = jnp.pad(kpos, (0, pL), constant_values=-1)
+    Lp = k.shape[2]
+    nl = Lp // bl
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+    qpos_arr = jnp.asarray(qpos, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, scale=scale, window=window, nl=nl),
+        grid=(B, H, nl),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, il: (0,)),
+            pl.BlockSpec((bl,), lambda b, h, il: (il,)),
+            pl.BlockSpec((1, 1, D), lambda b, h, il: (b, h, 0)),
+            pl.BlockSpec((1, 1, bl, D), lambda b, h, il: (b, h // rep, il, 0)),
+            pl.BlockSpec((1, 1, bl), lambda b, h, il: (b, h // rep, il)),
+            pl.BlockSpec((1, 1, bl, D), lambda b, h, il: (b, h // rep, il, 0)),
+            pl.BlockSpec((1, 1, bl), lambda b, h, il: (b, h // rep, il)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, il: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos_arr, kpos, q.reshape(B, H, D), k, kscale, v, vscale)
+    return out
+
+
 # ------------------------------------------------------------------ paged
 
 def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
@@ -202,4 +304,105 @@ def paged_decode_attention(q, kpool, vpool, tables, lengths, *,
         interpret=interpret,
     )(jnp.asarray(tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
       q.reshape(B, H, D), kpool, vpool)
+    return out
+
+
+# ------------------------------------------------------------ paged int8
+
+def _paged_quant_kernel(tables_ref, lengths_ref, q_ref, k_ref, ks_ref,
+                        v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        scale: float, window: int, bs: int, nmb: int):
+    b = pl.program_id(0)
+    i_b = pl.program_id(2)
+
+    @pl.when(i_b == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)             # (1, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (bs, D) int8 payload
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (bs, D) int8 payload
+    ks = ks_ref[0, :, 0]                         # (bs,) f32 scales
+    vs = vs_ref[0, :, 0]
+    qp = lengths_ref[b] - 1
+    kp = i_b * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0]
+
+    # dequant-in-register (see ``_quant_kernel``): scales hit the score and
+    # the softmax weight, the int8 blocks go straight into the dots
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * ks * scale
+    mask = kp <= qp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + p.sum()
+    acc_ref[...] = (acc_ref[...] * corr + jax.lax.dot_general(
+        (p * vs)[None, :], v, (((1,), (0,)), ((), ()))))
+    m_ref[0] = m_new
+
+    @pl.when(i_b == nmb - 1)
+    def _finalize():
+        l = l_ref[0]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, 0] = out[0].astype(o_ref.dtype)
+
+
+def paged_decode_attention_quant(q, kpool, kscale, vpool, vscale, tables,
+                                 lengths, *, window: int = 0,
+                                 interpret: bool = False):
+    """q (B,H,D) float; kpool/vpool (N,bs,G,D) int8; kscale/vscale
+    (N,bs,G) float32 per-row-per-head scale pools (written through the
+    same block tables as the payloads, ``models/cache.py``); tables
+    (B,MB); lengths (B,). -> (B,H,D) float.
+
+    Same scalar-prefetch DMA steering and ragged-length semantics as
+    ``paged_decode_attention``; each grid step additionally streams the
+    block's scale rows (bs * 4 bytes vs bs * D payload bytes — noise).
+    """
+    B, H, D = q.shape
+    N, bs, G, _ = kpool.shape
+    MB = tables.shape[1]
+    assert H % G == 0 and vpool.shape == kpool.shape
+    assert kpool.dtype == jnp.int8 and vpool.dtype == jnp.int8
+    assert kscale.shape == (N, bs, G) and vscale.shape == (N, bs, G)
+    assert lengths.shape == (B,) and tables.shape == (B, MB)
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, ib, tbl, ln: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep, 0)),
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ib, tbl, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_quant_kernel, scale=scale, window=window,
+                          bs=bs, nmb=MB),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(tables, jnp.int32), jnp.asarray(lengths, jnp.int32),
+      q.reshape(B, H, D), kpool, kscale, vpool, vscale)
     return out

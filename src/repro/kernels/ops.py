@@ -53,6 +53,22 @@ def paged_decode_attention(q, kpool, vpool, tables, lengths, *,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_l"))
+def decode_attention_quant(q, k, kscale, v, vscale, qpos, kpos, *,
+                           window: int = 0, block_l: int = 512):
+    return _da.decode_attention_quant(q, k, kscale, v, vscale, qpos, kpos,
+                                      window=window, block_l=block_l,
+                                      interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_decode_attention_quant(q, kpool, kscale, vpool, vscale, tables,
+                                 lengths, *, window: int = 0):
+    return _da.paged_decode_attention_quant(q, kpool, kscale, vpool, vscale,
+                                            tables, lengths, window=window,
+                                            interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_l"))
 def tree_attention(q, k, v, kpos, base, kt, vt, qpos, anc, *,
                    window: int = 0, block_l: int = 512):
     return _ta.tree_attention(q, k, v, kpos, base, kt, vt, qpos, anc,

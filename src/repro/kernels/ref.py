@@ -57,6 +57,29 @@ def paged_decode_attention_ref(q, kpool, vpool, tables, lengths, *,
     return jnp.stack(outs)
 
 
+def _dequant(qv, scale):
+    """int8 payload (..., L, D) + per-row scale (..., L) -> float32."""
+    return qv.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def decode_attention_quant_ref(q, k, kscale, v, vscale, qpos, kpos, *,
+                               window: int = 0):
+    """q (B,H,D); k,v (B,G,L,D) int8; kscale,vscale (B,G,L).  Dequantizes
+    the cache and reuses the dense decode oracle."""
+    return decode_attention_ref(q, _dequant(k, kscale), _dequant(v, vscale),
+                                qpos, kpos, window=window)
+
+
+def paged_decode_attention_quant_ref(q, kpool, kscale, vpool, vscale, tables,
+                                     lengths, *, window: int = 0):
+    """Quantized paged oracle: dequantize the pools (payload (N,bs,G,D),
+    scale (N,bs,G) — the scale already broadcasts over the head dim) and
+    reuse the float paged oracle."""
+    return paged_decode_attention_ref(q, _dequant(kpool, kscale),
+                                      _dequant(vpool, vscale),
+                                      tables, lengths, window=window)
+
+
 def tree_attention_ref(q, k, v, kpos, base, kt, vt, qpos, anc, *,
                        window: int = 0):
     """Dense tree-verification oracle.

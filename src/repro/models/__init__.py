@@ -1,12 +1,37 @@
+"""Public API of the model stack.
+
+Stable names the docs (``docs/index.md``) point at: configs (``config``),
+the config-driven transformer family and its cache constructors
+(``transformer`` — dense ``init_cache``/``step`` AND paged
+``init_paged_cache``/``paged_step``; both accept ``kv_dtype="int8"``),
+cache specs and rollback (``cache``), and int8 quantization helpers
+(``quant``).
+"""
 from .config import (EncDecConfig, MLAConfig, MoEConfig, ModelConfig,
                      RGLRUConfig, SSMConfig, VisionStubConfig)
-from .transformer import (decode_step, forward_hidden, init_cache, init_params,
-                          logits_fn, prefill, step, verify_chunk)
-from .cache import build_cache_spec, rollback
+from .transformer import (commit_tree_path, decode_step, forward_hidden,
+                          init_cache, init_paged_cache, init_params,
+                          init_tree_nodes, logits_fn, paged_step, prefill,
+                          step, tree_step, verify_chunk)
+from .cache import (BlockAllocator, CacheSpec, PoolExhausted,
+                    build_cache_spec, build_paged_cache_spec, paged_rollback,
+                    rollback)
+from .quant import (dequantize_weight, qmatmul, quantize_params,
+                    quantize_rows, quantize_weight)
 
 __all__ = [
+    # configs
     "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RGLRUConfig",
-    "EncDecConfig", "VisionStubConfig", "init_params", "init_cache",
-    "forward_hidden", "step", "prefill", "decode_step", "verify_chunk",
-    "logits_fn", "build_cache_spec", "rollback",
+    "EncDecConfig", "VisionStubConfig",
+    # transformer passes
+    "init_params", "forward_hidden", "logits_fn",
+    "step", "prefill", "decode_step", "verify_chunk",
+    "paged_step", "tree_step", "commit_tree_path", "init_tree_nodes",
+    # caches
+    "init_cache", "init_paged_cache", "build_cache_spec",
+    "build_paged_cache_spec", "CacheSpec", "rollback", "paged_rollback",
+    "BlockAllocator", "PoolExhausted",
+    # quantization
+    "quantize_params", "quantize_weight", "dequantize_weight", "qmatmul",
+    "quantize_rows",
 ]

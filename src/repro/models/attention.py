@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from .common import apply_rope, dense_init, rms_norm, softcap
+from .quant import dequantize_rows, kv_is_quantized, qmatmul, quantize_rows
 from .sharding import constrain
 
 NEG_INF = -1e30
@@ -52,9 +53,9 @@ def qkv_proj(params, cfg, x, positions=None, *, rope: bool = True):
     """Returns q (B,S,H,D), k/v (B,S,G,D); rope applied if positions given."""
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = x @ params["wq"]
-    k = x @ params["wk"]
-    v = x @ params["wv"]
+    q = qmatmul(x, params["wq"])
+    k = qmatmul(x, params["wk"])
+    v = qmatmul(x, params["wv"])
     if "bq" in params:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     q = q.reshape(B, S, cfg.num_heads, hd)
@@ -208,27 +209,52 @@ def attn_train(params, cfg, x, positions, *, window: int = 0,
     out = sdpa(q, k, v, positions, positions, window=window, causal=causal,
                logits_softcap=cfg.logits_softcap, impl=impl)
     out = out.reshape(x.shape[0], x.shape[1], -1)
-    return out @ params["wo"]
+    return qmatmul(out, params["wo"])
+
+
+def _kv_entries(cache_layer, k_new, v_new):
+    """The leaf updates a K/V write must apply: {k, v} for float caches,
+    {k, v, k_scale, v_scale} (rows quantized here) for int8 caches."""
+    if kv_is_quantized(cache_layer):
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return {"k": k_new, "v": v_new}
+
+
+def cache_kv(cache_layer, dtype):
+    """Read a dense cache layer's K/V as ``dtype`` — dequantizing int8
+    payloads against their per-row scales, a plain cast otherwise."""
+    if kv_is_quantized(cache_layer):
+        return (dequantize_rows(cache_layer["k"], cache_layer["k_scale"], dtype),
+                dequantize_rows(cache_layer["v"], cache_layer["v_scale"], dtype))
+    return cache_layer["k"].astype(dtype), cache_layer["v"].astype(dtype)
 
 
 def write_cache(cache_layer, k_new, v_new, pos0, ring: bool):
-    """Insert S new K/V rows at absolute position pos0 (traced scalar)."""
+    """Insert S new K/V rows at absolute position pos0 (traced scalar).
+    Int8 caches quantize the rows here and write scale rows alongside."""
     L = cache_layer["k"].shape[1]
     S = k_new.shape[1]
     newpos = pos0 + jnp.arange(S, dtype=jnp.int32)
+    entries = _kv_entries(cache_layer, k_new, v_new)
     if not ring:
-        ck = jax.lax.dynamic_update_slice_in_dim(cache_layer["k"], k_new.astype(cache_layer["k"].dtype), pos0, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache_layer["v"], v_new.astype(cache_layer["v"].dtype), pos0, 1)
-        sp = jax.lax.dynamic_update_slice_in_dim(cache_layer["pos"], newpos, pos0, 0)
-        return {"k": ck, "v": cv, "pos": sp}
+        out = {key: jax.lax.dynamic_update_slice_in_dim(
+                   cache_layer[key], val.astype(cache_layer[key].dtype),
+                   pos0, 1)
+               for key, val in entries.items()}
+        out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["pos"], newpos, pos0, 0)
+        return out
     if S >= L:  # only the last L tokens can survive
-        k_new, v_new, newpos = k_new[:, -L:], v_new[:, -L:], newpos[-L:]
-        S = L
+        entries = {key: val[:, -L:] for key, val in entries.items()}
+        newpos = newpos[-L:]
     slots = (newpos % L).astype(jnp.int32)
-    ck = cache_layer["k"].at[:, slots].set(k_new.astype(cache_layer["k"].dtype))
-    cv = cache_layer["v"].at[:, slots].set(v_new.astype(cache_layer["v"].dtype))
-    sp = cache_layer["pos"].at[slots].set(newpos)
-    return {"k": ck, "v": cv, "pos": sp}
+    out = {key: cache_layer[key].at[:, slots].set(
+               val.astype(cache_layer[key].dtype))
+           for key, val in entries.items()}
+    out["pos"] = cache_layer["pos"].at[slots].set(newpos)
+    return out
 
 
 def attn_cached(params, cfg, x, pos0, cache_layer, *, window: int = 0,
@@ -252,13 +278,13 @@ def attn_cached(params, cfg, x, pos0, cache_layer, *, window: int = 0,
     seq_sharded = bool(
         mesh is not None and "model" in mesh.axis_names and
         G % mesh.shape["model"] != 0 and L % mesh.shape["model"] == 0)
-    out = sdpa(q, cache_layer["k"].astype(q.dtype),
-               cache_layer["v"].astype(q.dtype), positions,
+    kk, vv = cache_kv(cache_layer, q.dtype)
+    out = sdpa(q, kk, vv, positions,
                cache_layer["pos"], window=window,
                logits_softcap=cfg.logits_softcap, impl=impl,
                seq_sharded=seq_sharded)
     out = out.reshape(B, S, -1)
-    return out @ params["wo"], cache_layer
+    return qmatmul(out, params["wo"]), cache_layer
 
 
 # ------------------------------------------------------------ paged path
@@ -305,6 +331,27 @@ def gather_pages(pool, tables):
     return flat[rows]                                            # (B, MB*bs, ...)
 
 
+def paged_write_kv(layer_cache, k_new, v_new, tables, lengths):
+    """``paged_write`` for a whole attention layer, quantizing rows first
+    when the pools are int8 (scale pools written through the same table)."""
+    entries = _kv_entries(layer_cache, k_new, v_new)
+    return {key: paged_write(layer_cache[key], val, tables, lengths)
+            for key, val in entries.items()}
+
+
+def gather_kv_pages(layer_cache, tables, dtype):
+    """Each stream's logical K/V view (B, MB*bs, G, D) as ``dtype`` —
+    gathering and dequantizing the scale pools when the payload is int8."""
+    kg = gather_pages(layer_cache["k"], tables)
+    vg = gather_pages(layer_cache["v"], tables)
+    if kv_is_quantized(layer_cache):
+        return (dequantize_rows(kg, gather_pages(layer_cache["k_scale"],
+                                                 tables), dtype),
+                dequantize_rows(vg, gather_pages(layer_cache["v_scale"],
+                                                 tables), dtype))
+    return kg.astype(dtype), vg.astype(dtype)
+
+
 def paged_kpos(lengths, length: int):
     """(B, length) logical key positions, -1 past each stream's length.
     Paged layouts are contiguous per stream, so position == row index."""
@@ -334,15 +381,13 @@ def attn_paged(params, cfg, x, layer_cache, tables, lengths, *,
     B, S, _ = x.shape
     positions = lengths[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)
     q, k, v = qkv_proj(params, cfg, x, positions)
-    layer_cache = {"k": paged_write(layer_cache["k"], k, tables, lengths),
-                   "v": paged_write(layer_cache["v"], v, tables, lengths)}
-    kg = gather_pages(layer_cache["k"], tables).astype(q.dtype)
-    vg = gather_pages(layer_cache["v"], tables).astype(q.dtype)
+    layer_cache = paged_write_kv(layer_cache, k, v, tables, lengths)
+    kg, vg = gather_kv_pages(layer_cache, tables, q.dtype)
     kpos = paged_kpos(lengths + S, kg.shape[1])
     out = sdpa_lanes(q, kg, vg, positions, kpos, window=window,
                      logits_softcap=cfg.logits_softcap, impl=impl)
     out = out.reshape(B, S, -1)
-    return out @ params["wo"], layer_cache
+    return qmatmul(out, params["wo"]), layer_cache
 
 
 # ------------------------------------------------------------ tree path
@@ -380,10 +425,11 @@ def attn_tree(params, cfg, x, positions, cache_layer, prev_nodes, node_mask,
         cmask = cmask & ((positions[:, None] - kpos[None, :]) < window)
     cmask = jnp.broadcast_to(cmask, (S, kpos.shape[0]))          # (Tc, L)
     mask = jnp.concatenate([cmask, node_mask], axis=1)           # (Tc, L+Tn)
-    kk = jnp.concatenate([cache_layer["k"].astype(q.dtype), nodes["k"]], axis=1)
-    vv = jnp.concatenate([cache_layer["v"].astype(q.dtype), nodes["v"]], axis=1)
+    kc, vc = cache_kv(cache_layer, q.dtype)
+    kk = jnp.concatenate([kc, nodes["k"]], axis=1)
+    vv = jnp.concatenate([vc, nodes["v"]], axis=1)
     out = explicit_mask_sdpa(q, kk, vv, mask, cfg.logits_softcap)
-    return out.reshape(B, S, -1) @ params["wo"], nodes
+    return qmatmul(out.reshape(B, S, -1), params["wo"]), nodes
 
 
 def attn_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
@@ -399,8 +445,7 @@ def attn_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
     q, k, v = qkv_proj(params, cfg, x, positions)
     nodes = {"k": jnp.concatenate([prev_nodes["k"].astype(k.dtype), k], axis=1),
              "v": jnp.concatenate([prev_nodes["v"].astype(v.dtype), v], axis=1)}
-    kg = gather_pages(layer_cache["k"], tables).astype(q.dtype)
-    vg = gather_pages(layer_cache["v"], tables).astype(q.dtype)
+    kg, vg = gather_kv_pages(layer_cache, tables, q.dtype)
     kpos = paged_kpos(lengths, kg.shape[1])                      # (B, L)
     cmask = kpos[:, None, :] >= 0                                # (B, 1, L)
     if window:
@@ -411,7 +456,7 @@ def attn_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
     kk = jnp.concatenate([kg, nodes["k"]], axis=1)
     vv = jnp.concatenate([vg, nodes["v"]], axis=1)
     out = explicit_mask_sdpa(q, kk, vv, mask, cfg.logits_softcap)
-    return out.reshape(B, S, -1) @ params["wo"], nodes
+    return qmatmul(out.reshape(B, S, -1), params["wo"]), nodes
 
 
 def commit_tree_rows_attn(cache_layer, nodes, path, n_commit, base):
@@ -423,15 +468,17 @@ def commit_tree_rows_attn(cache_layer, nodes, path, n_commit, base):
     fixed-width write commits a variable-length path.
     """
     P = path.shape[0]
-    rows_k = jnp.take(nodes["k"], path, axis=1).astype(cache_layer["k"].dtype)
-    rows_v = jnp.take(nodes["v"], path, axis=1).astype(cache_layer["v"].dtype)
-    ck = jax.lax.dynamic_update_slice_in_dim(cache_layer["k"], rows_k, base, 1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache_layer["v"], rows_v, base, 1)
+    rows_k = jnp.take(nodes["k"], path, axis=1)
+    rows_v = jnp.take(nodes["v"], path, axis=1)
+    entries = _kv_entries(cache_layer, rows_k, rows_v)
+    out = {key: jax.lax.dynamic_update_slice_in_dim(
+               cache_layer[key], val.astype(cache_layer[key].dtype), base, 1)
+           for key, val in entries.items()}
     stored = jnp.where(jnp.arange(P) < n_commit,
                        base + jnp.arange(P, dtype=jnp.int32), -1)
-    sp = jax.lax.dynamic_update_slice_in_dim(
+    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
         cache_layer["pos"], stored.astype(jnp.int32), base, 0)
-    return {"k": ck, "v": cv, "pos": sp}
+    return out
 
 
 def commit_tree_rows_paged_attn(layer_cache, nodes, path, tables, lengths):
@@ -440,8 +487,7 @@ def commit_tree_rows_paged_attn(layer_cache, nodes, path, tables, lengths):
     truncation are dead under the ``p < length`` mask."""
     rows_k = jnp.take(nodes["k"], path, axis=1)
     rows_v = jnp.take(nodes["v"], path, axis=1)
-    return {"k": paged_write(layer_cache["k"], rows_k, tables, lengths),
-            "v": paged_write(layer_cache["v"], rows_v, tables, lengths)}
+    return paged_write_kv(layer_cache, rows_k, rows_v, tables, lengths)
 
 
 # ------------------------------------------------------- cross-attention
@@ -453,7 +499,7 @@ def cross_attn(params, cfg, x, enc, enc_mask=None, impl: str = "auto"):
     encoder output (B, T, d) from which KV is projected (the train path)."""
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, hd)
+    q = qmatmul(x, params["wq"]).reshape(B, S, cfg.num_heads, hd)
     if not isinstance(enc, dict):
         enc = encode_cross_kv(params, cfg, enc)
     k, v = enc["k"], enc["v"]
@@ -461,7 +507,7 @@ def cross_attn(params, cfg, x, enc, enc_mask=None, impl: str = "auto"):
     qpos = jnp.zeros((S,), jnp.int32)
     kpos = jnp.zeros((T,), jnp.int32) if enc_mask is None else jnp.where(enc_mask, 0, -1)
     out = sdpa(q, k, v, qpos, kpos, causal=False, impl=impl)
-    return out.reshape(B, S, -1) @ params["wo"]
+    return qmatmul(out.reshape(B, S, -1), params["wo"])
 
 
 def encode_cross_kv(params, cfg, enc_out):

@@ -11,6 +11,7 @@ from .common import activation_fn, dense_init, rms_norm
 from .mla import (init_mla, mla_cached, mla_paged, mla_train, mla_tree,
                   mla_tree_paged)
 from .moe import init_moe, moe_ffn
+from .quant import qmatmul
 from .rglru import init_rglru, rglru_mixer
 from .sharding import constrain
 from .ssm import init_ssm, ssm_mixer
@@ -27,13 +28,13 @@ def init_ffn(key, cfg, dtype=jnp.float32):
 
 def ffn_apply(params, cfg, x):
     act = activation_fn(cfg.activation)
-    h = x @ params["w_in"]
+    h = qmatmul(x, params["w_in"])
     if "w_gate" in params:
-        h = act(h) * (x @ params["w_gate"])
+        h = act(h) * qmatmul(x, params["w_gate"])
     else:
         h = act(h)
     h = constrain(h, ("pod", "data"), None, "model")
-    return h @ params["w_out"]
+    return qmatmul(h, params["w_out"])
 
 
 def init_block(key, cfg, layer_idx: int, *, cross: bool = False,

@@ -33,6 +33,12 @@ future slots.  ``BlockAllocator`` (host-side free list) hands physical
 blocks to streams at admission and reclaims them at release; physical block
 0 is a reserved TRASH block every empty table row points at, so masked
 batch lanes write garbage there instead of into a neighbor's pages.
+
+Both layouts optionally store K/V (and MLA latents) as INT8 with per-row
+float32 scales (``kv_quant`` specs, ``models/quant.py``): payload leaves
+switch dtype and gain a ``*_scale`` sibling of the same leading shape, and
+every invariant above — pointer rollback, length truncation, trash-block
+writes — applies to the scale leaves verbatim.
 """
 from __future__ import annotations
 
@@ -50,8 +56,12 @@ RING_SLACK = 256  # extra slots so multi-token (verify) steps never clobber
 
 # cache-leaf keys that live in the GLOBAL paged pool (no per-stream axis);
 # everything else in a paged cache's layers is per-stream state. Shared by
-# the engine's lane plumbing and the bench's memory accounting.
-POOL_LEAF_KEYS = frozenset({"k", "v", "ckv", "krope"})
+# the engine's lane plumbing and the bench's memory accounting.  The
+# ``*_scale`` leaves exist only on int8-quantized caches (kv_quant specs)
+# and ride the pool exactly like their payloads.
+POOL_LEAF_KEYS = frozenset({"k", "v", "ckv", "krope",
+                            "k_scale", "v_scale", "ckv_scale",
+                            "krope_scale"})
 
 
 @dataclass(frozen=True)
@@ -73,13 +83,18 @@ class CacheSpec:
     block_size: int = 0
     num_blocks: int = 0
     max_blocks: int = 0
+    # int8 KV storage: attention/MLA payload leaves become int8 and gain a
+    # float32 per-row(-per-head) ``*_scale`` sibling (models/quant.py);
+    # recurrent state keeps the float cache dtype.
+    kv_quant: bool = False
 
     @property
     def cheap_rollback(self) -> bool:
         return all(l.kind in ("attn", "mla") for l in self.layers)
 
 
-def build_cache_spec(cfg: ModelConfig, max_len: int) -> CacheSpec:
+def build_cache_spec(cfg: ModelConfig, max_len: int, *,
+                     kv_quant: bool = False) -> CacheSpec:
     specs = []
     for i in range(cfg.num_layers):
         kind = cfg.block_kind(i)
@@ -97,21 +112,36 @@ def build_cache_spec(cfg: ModelConfig, max_len: int) -> CacheSpec:
             specs.append(LayerCacheSpec(kind))
         else:
             raise ValueError(kind)
-    return CacheSpec(tuple(specs), max_len)
+    return CacheSpec(tuple(specs), max_len, kv_quant=kv_quant)
 
 
 def init_layer_cache(cfg: ModelConfig, spec: LayerCacheSpec, batch: int,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, kv_quant: bool = False):
     if spec.kind == "attn":
         hd = cfg.resolved_head_dim
-        return {"k": jnp.zeros((batch, spec.length, cfg.num_kv_heads, hd), dtype),
-                "v": jnp.zeros((batch, spec.length, cfg.num_kv_heads, hd), dtype),
-                "pos": jnp.full((spec.length,), -1, jnp.int32)}
+        G, L = cfg.num_kv_heads, spec.length
+        if kv_quant:
+            return {"k": jnp.zeros((batch, L, G, hd), jnp.int8),
+                    "v": jnp.zeros((batch, L, G, hd), jnp.int8),
+                    "k_scale": jnp.zeros((batch, L, G), jnp.float32),
+                    "v_scale": jnp.zeros((batch, L, G), jnp.float32),
+                    "pos": jnp.full((L,), -1, jnp.int32)}
+        return {"k": jnp.zeros((batch, L, G, hd), dtype),
+                "v": jnp.zeros((batch, L, G, hd), dtype),
+                "pos": jnp.full((L,), -1, jnp.int32)}
     if spec.kind == "mla":
         m = cfg.mla
-        return {"ckv": jnp.zeros((batch, spec.length, m.kv_lora_rank), dtype),
-                "krope": jnp.zeros((batch, spec.length, m.qk_rope_head_dim), dtype),
-                "pos": jnp.full((spec.length,), -1, jnp.int32)}
+        L = spec.length
+        if kv_quant:
+            return {"ckv": jnp.zeros((batch, L, m.kv_lora_rank), jnp.int8),
+                    "krope": jnp.zeros((batch, L, m.qk_rope_head_dim),
+                                       jnp.int8),
+                    "ckv_scale": jnp.zeros((batch, L), jnp.float32),
+                    "krope_scale": jnp.zeros((batch, L), jnp.float32),
+                    "pos": jnp.full((L,), -1, jnp.int32)}
+        return {"ckv": jnp.zeros((batch, L, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, L, m.qk_rope_head_dim), dtype),
+                "pos": jnp.full((L,), -1, jnp.int32)}
     if spec.kind == "mamba2":
         from .ssm import init_ssm_state
         return init_ssm_state(cfg, batch, dtype)
@@ -130,7 +160,8 @@ def rollback(cache, new_pos):
 
 def build_paged_cache_spec(cfg: ModelConfig, max_len: int, *,
                            block_size: int = 64,
-                           pool_tokens: Optional[int] = None) -> CacheSpec:
+                           pool_tokens: Optional[int] = None,
+                           kv_quant: bool = False) -> CacheSpec:
     """Paged layout for ``cfg``: attn/local/mla layers share one block table
     per stream; every logical position is stored (windowed layers mask
     instead of ring-wrapping — freeing out-of-window blocks is future work).
@@ -153,7 +184,8 @@ def build_paged_cache_spec(cfg: ModelConfig, max_len: int, *,
         else:
             raise ValueError(kind)
     return CacheSpec(tuple(specs), max_len, paged=True, block_size=block_size,
-                     num_blocks=num_blocks, max_blocks=max_blocks)
+                     num_blocks=num_blocks, max_blocks=max_blocks,
+                     kv_quant=kv_quant)
 
 
 def init_paged_layer_cache(cfg: ModelConfig, spec: LayerCacheSpec,
@@ -161,14 +193,26 @@ def init_paged_layer_cache(cfg: ModelConfig, spec: LayerCacheSpec,
                            dtype=jnp.bfloat16):
     """One layer's slice of the paged cache: a GLOBAL pool for attention
     kinds (no batch axis — streams share it via the block table), the usual
-    per-stream state for recurrent kinds."""
+    per-stream state for recurrent kinds.  ``cache_spec.kv_quant`` pools
+    store int8 payloads plus per-row(-per-head) float32 scale pools."""
     N, bs = cache_spec.num_blocks, cache_spec.block_size
     if spec.kind == "attn":
         hd = cfg.resolved_head_dim
-        return {"k": jnp.zeros((N, bs, cfg.num_kv_heads, hd), dtype),
-                "v": jnp.zeros((N, bs, cfg.num_kv_heads, hd), dtype)}
+        G = cfg.num_kv_heads
+        if cache_spec.kv_quant:
+            return {"k": jnp.zeros((N, bs, G, hd), jnp.int8),
+                    "v": jnp.zeros((N, bs, G, hd), jnp.int8),
+                    "k_scale": jnp.zeros((N, bs, G), jnp.float32),
+                    "v_scale": jnp.zeros((N, bs, G), jnp.float32)}
+        return {"k": jnp.zeros((N, bs, G, hd), dtype),
+                "v": jnp.zeros((N, bs, G, hd), dtype)}
     if spec.kind == "mla":
         m = cfg.mla
+        if cache_spec.kv_quant:
+            return {"ckv": jnp.zeros((N, bs, m.kv_lora_rank), jnp.int8),
+                    "krope": jnp.zeros((N, bs, m.qk_rope_head_dim), jnp.int8),
+                    "ckv_scale": jnp.zeros((N, bs), jnp.float32),
+                    "krope_scale": jnp.zeros((N, bs), jnp.float32)}
         return {"ckv": jnp.zeros((N, bs, m.kv_lora_rank), dtype),
                 "krope": jnp.zeros((N, bs, m.qk_rope_head_dim), dtype)}
     return init_layer_cache(cfg, spec, batch, dtype)

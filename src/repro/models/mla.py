@@ -18,6 +18,8 @@ import jax.numpy as jnp
 
 from .attention import NEG_INF, sdpa
 from .common import apply_rope, dense_init, rms_norm
+from .quant import (dequantize_rows, kv_is_quantized, qmatmul, quantize_rows,
+                    resolve_weight)
 from .sharding import constrain
 
 
@@ -47,9 +49,10 @@ def _queries(params, cfg, x, positions):
     H = cfg.num_heads
     qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
     if m.q_lora_rank:
-        q = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.rms_eps) @ params["w_uq"]
+        q = qmatmul(rms_norm(qmatmul(x, params["w_dq"]), params["q_norm"],
+                             cfg.rms_eps), params["w_uq"])
     else:
-        q = x @ params["w_q"]
+        q = qmatmul(x, params["w_q"])
     q = q.reshape(B, S, H, qk_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
@@ -58,7 +61,7 @@ def _queries(params, cfg, x, positions):
 
 def _latents(params, cfg, x, positions):
     m = cfg.mla
-    ckv_rope = x @ params["w_dkv"]
+    ckv_rope = qmatmul(x, params["w_dkv"])
     c_kv, k_rope = jnp.split(ckv_rope, [m.kv_lora_rank], axis=-1)
     c_kv = rms_norm(c_kv, params["kv_norm"], cfg.rms_eps)
     # shared (single-"head") rope key, stored post-rotation
@@ -71,8 +74,8 @@ def _expand_kv(params, cfg, c_kv, k_rope):
     m = cfg.mla
     B, S, _ = c_kv.shape
     H = cfg.num_heads
-    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
-    v = (c_kv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    k_nope = qmatmul(c_kv, params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = qmatmul(c_kv, params["w_uv"]).reshape(B, S, H, m.v_head_dim)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(
         k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))], axis=-1)
     return k, v
@@ -87,27 +90,51 @@ def mla_train(params, cfg, x, positions, impl: str = "auto"):
     q = constrain(q, None, None, "model")
     out = sdpa(q, k, v, positions, positions, impl=impl)
     B, S = x.shape[:2]
-    return out.reshape(B, S, -1) @ params["wo"]
+    return qmatmul(out.reshape(B, S, -1), params["wo"])
+
+
+def _latent_entries(cache_layer, c_kv, k_rope):
+    """Leaf updates for a latent write: int8 caches quantize per ROW (the
+    latent has no head axis) and carry ``ckv_scale`` / ``krope_scale``."""
+    if kv_is_quantized(cache_layer, "ckv"):
+        cq, cs = quantize_rows(c_kv)
+        rq, rs = quantize_rows(k_rope)
+        return {"ckv": cq, "krope": rq, "ckv_scale": cs, "krope_scale": rs}
+    return {"ckv": c_kv, "krope": k_rope}
+
+
+def cache_latents(cache_layer, dtype):
+    """Read a dense MLA cache layer's (ckv, krope) as ``dtype``."""
+    if kv_is_quantized(cache_layer, "ckv"):
+        return (dequantize_rows(cache_layer["ckv"], cache_layer["ckv_scale"],
+                                dtype),
+                dequantize_rows(cache_layer["krope"],
+                                cache_layer["krope_scale"], dtype))
+    return cache_layer["ckv"].astype(dtype), cache_layer["krope"].astype(dtype)
 
 
 def write_mla_cache(cache_layer, c_kv, k_rope, pos0, ring: bool):
     L = cache_layer["ckv"].shape[1]
     S = c_kv.shape[1]
     newpos = pos0 + jnp.arange(S, dtype=jnp.int32)
+    entries = _latent_entries(cache_layer, c_kv, k_rope)
     if not ring:
-        cc = jax.lax.dynamic_update_slice_in_dim(
-            cache_layer["ckv"], c_kv.astype(cache_layer["ckv"].dtype), pos0, 1)
-        cr = jax.lax.dynamic_update_slice_in_dim(
-            cache_layer["krope"], k_rope.astype(cache_layer["krope"].dtype), pos0, 1)
-        sp = jax.lax.dynamic_update_slice_in_dim(cache_layer["pos"], newpos, pos0, 0)
-        return {"ckv": cc, "krope": cr, "pos": sp}
+        out = {key: jax.lax.dynamic_update_slice_in_dim(
+                   cache_layer[key], val.astype(cache_layer[key].dtype),
+                   pos0, 1)
+               for key, val in entries.items()}
+        out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["pos"], newpos, pos0, 0)
+        return out
     if S >= L:
-        c_kv, k_rope, newpos = c_kv[:, -L:], k_rope[:, -L:], newpos[-L:]
+        entries = {key: val[:, -L:] for key, val in entries.items()}
+        newpos = newpos[-L:]
     slots = (newpos % L).astype(jnp.int32)
-    cc = cache_layer["ckv"].at[:, slots].set(c_kv.astype(cache_layer["ckv"].dtype))
-    cr = cache_layer["krope"].at[:, slots].set(k_rope.astype(cache_layer["krope"].dtype))
-    sp = cache_layer["pos"].at[slots].set(newpos)
-    return {"ckv": cc, "krope": cr, "pos": sp}
+    out = {key: cache_layer[key].at[:, slots].set(
+               val.astype(cache_layer[key].dtype))
+           for key, val in entries.items()}
+    out["pos"] = cache_layer["pos"].at[slots].set(newpos)
+    return out
 
 
 def _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope, mask):
@@ -118,7 +145,11 @@ def _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope, mask):
     m = cfg.mla
     H = cfg.num_heads
     B, S = q_nope.shape[:2]
-    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    # the absorbed path folds W_uk/W_uv INTO einsums over reshaped views, so
+    # quantized variants are materialized here (per-channel dequant) instead
+    # of riding a matmul epilogue
+    w_uk = resolve_weight(params["w_uk"], q_nope.dtype).reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim)
     q_c = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
     scores = (jnp.einsum("bshr,blr->bhsl", q_c, ckv) +
               jnp.einsum("bshr,blr->bhsl", q_rope, krope)).astype(jnp.float32)
@@ -129,9 +160,24 @@ def _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope, mask):
     p = jax.nn.softmax(scores, axis=-1)
     p = jnp.where(mask.any(-1)[:, None, :, None], p, 0.0)
     o_c = jnp.einsum("bhsl,blr->bshr", p.astype(ckv.dtype), ckv)
-    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    w_uv = resolve_weight(params["w_uv"], o_c.dtype).reshape(
+        m.kv_lora_rank, H, m.v_head_dim)
     out = jnp.einsum("bshr,rhd->bshd", o_c, w_uv)
-    return out.reshape(B, S, -1) @ params["wo"]
+    return qmatmul(out.reshape(B, S, -1), params["wo"])
+
+
+def _gather_latent_pages(layer_cache, tables, dtype):
+    """Per-stream logical (ckv, krope) views of the latent pools as
+    ``dtype``, dequantizing int8 pools against their scale pools."""
+    from .attention import gather_pages
+    cg = gather_pages(layer_cache["ckv"], tables)
+    rg = gather_pages(layer_cache["krope"], tables)
+    if kv_is_quantized(layer_cache, "ckv"):
+        return (dequantize_rows(cg, gather_pages(layer_cache["ckv_scale"],
+                                                 tables), dtype),
+                dequantize_rows(rg, gather_pages(layer_cache["krope_scale"],
+                                                 tables), dtype))
+    return cg.astype(dtype), rg.astype(dtype)
 
 
 def mla_paged(params, cfg, x, cache_layer, tables, lengths, *,
@@ -142,16 +188,15 @@ def mla_paged(params, cfg, x, cache_layer, tables, lengths, *,
     tables (B, MB); lengths (B,).  Per-stream positions are contiguous, so
     the mask is simply ``row < lengths[b] + S`` and causal vs. the query.
     """
-    from .attention import gather_pages, paged_kpos, paged_write
+    from .attention import paged_kpos, paged_write
     B, S, _ = x.shape
     positions = lengths[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)
     q_nope, q_rope = _queries(params, cfg, x, positions)
     c_kv, k_rope = _latents(params, cfg, x, positions)
-    cache_layer = {
-        "ckv": paged_write(cache_layer["ckv"], c_kv, tables, lengths),
-        "krope": paged_write(cache_layer["krope"], k_rope, tables, lengths)}
-    ckv = gather_pages(cache_layer["ckv"], tables).astype(x.dtype)    # (B, L, R)
-    krope = gather_pages(cache_layer["krope"], tables).astype(x.dtype)
+    cache_layer = {key: paged_write(cache_layer[key], val, tables, lengths)
+                   for key, val in _latent_entries(cache_layer, c_kv,
+                                                   k_rope).items()}
+    ckv, krope = _gather_latent_pages(cache_layer, tables, x.dtype)
     kpos = paged_kpos(lengths + S, ckv.shape[1])                      # (B, L)
     mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= positions[:, :, None])
     return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
@@ -166,8 +211,7 @@ def mla_cached(params, cfg, x, pos0, cache_layer, *, ring: bool = False,
     q_nope, q_rope = _queries(params, cfg, x, positions)
     c_kv, k_rope = _latents(params, cfg, x, positions)
     cache_layer = write_mla_cache(cache_layer, c_kv, k_rope, pos0, ring)
-    ckv = cache_layer["ckv"].astype(x.dtype)             # (B, L, R)
-    krope = cache_layer["krope"].astype(x.dtype)         # (B, L, Dr)
+    ckv, krope = cache_latents(cache_layer, x.dtype)     # (B,L,R), (B,L,Dr)
     kpos = cache_layer["pos"]
     mask = (kpos[None, :] >= 0) & (kpos[None, :] <= positions[:, None])
     return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
@@ -200,10 +244,9 @@ def mla_tree(params, cfg, x, positions, cache_layer, prev_nodes, node_mask,
     cmask = (kpos[None, :] >= 0) & (kpos[None, :] < base)        # (1, L)
     cmask = jnp.broadcast_to(cmask, (S, kpos.shape[0]))          # (Tc, L)
     mask = jnp.concatenate([cmask, node_mask], axis=1)
-    ckv = jnp.concatenate([cache_layer["ckv"].astype(x.dtype),
-                           nodes["ckv"].astype(x.dtype)], axis=1)
-    krope = jnp.concatenate([cache_layer["krope"].astype(x.dtype),
-                             nodes["krope"].astype(x.dtype)], axis=1)
+    ckv_c, krope_c = cache_latents(cache_layer, x.dtype)
+    ckv = jnp.concatenate([ckv_c, nodes["ckv"].astype(x.dtype)], axis=1)
+    krope = jnp.concatenate([krope_c, nodes["krope"].astype(x.dtype)], axis=1)
     return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
                             mask), nodes
 
@@ -212,7 +255,7 @@ def mla_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
                    prev_nodes, node_mask, *, impl: str = "auto"):
     """Paged tree-node MLA: committed-row validity is ``p < lengths``; the
     latent pool is not written.  Returns (out, nodes)."""
-    from .attention import gather_pages, paged_kpos
+    from .attention import paged_kpos
     B, S, _ = x.shape
     positions = lengths[:, None].astype(jnp.int32) + depths[None, :]
     q_nope, q_rope = _queries(params, cfg, x, positions)
@@ -221,8 +264,7 @@ def mla_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
                                      c_kv], axis=1),
              "krope": jnp.concatenate([prev_nodes["krope"].astype(k_rope.dtype),
                                        k_rope], axis=1)}
-    ckv_c = gather_pages(layer_cache["ckv"], tables).astype(x.dtype)
-    krope_c = gather_pages(layer_cache["krope"], tables).astype(x.dtype)
+    ckv_c, krope_c = _gather_latent_pages(layer_cache, tables, x.dtype)
     kpos = paged_kpos(lengths, ckv_c.shape[1])
     cmask = jnp.broadcast_to(kpos[:, None, :] >= 0,              # (B, Tc, L)
                              (B, S, ckv_c.shape[1]))
@@ -238,15 +280,17 @@ def commit_tree_rows_mla(cache_layer, nodes, path, n_commit, base):
     """Scatter accepted-path node latents into a DENSE MLA cache (fixed-P
     write, padding rows stored at position -1 — see attention twin)."""
     P = path.shape[0]
-    rows_c = jnp.take(nodes["ckv"], path, axis=1).astype(cache_layer["ckv"].dtype)
-    rows_r = jnp.take(nodes["krope"], path, axis=1).astype(cache_layer["krope"].dtype)
-    cc = jax.lax.dynamic_update_slice_in_dim(cache_layer["ckv"], rows_c, base, 1)
-    cr = jax.lax.dynamic_update_slice_in_dim(cache_layer["krope"], rows_r, base, 1)
+    rows_c = jnp.take(nodes["ckv"], path, axis=1)
+    rows_r = jnp.take(nodes["krope"], path, axis=1)
+    entries = _latent_entries(cache_layer, rows_c, rows_r)
+    out = {key: jax.lax.dynamic_update_slice_in_dim(
+               cache_layer[key], val.astype(cache_layer[key].dtype), base, 1)
+           for key, val in entries.items()}
     stored = jnp.where(jnp.arange(P) < n_commit,
                        base + jnp.arange(P, dtype=jnp.int32), -1)
-    sp = jax.lax.dynamic_update_slice_in_dim(
+    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
         cache_layer["pos"], stored.astype(jnp.int32), base, 0)
-    return {"ckv": cc, "krope": cr, "pos": sp}
+    return out
 
 
 def commit_tree_rows_paged_mla(layer_cache, nodes, path, tables, lengths):
@@ -254,5 +298,6 @@ def commit_tree_rows_paged_mla(layer_cache, nodes, path, tables, lengths):
     from .attention import paged_write
     rows_c = jnp.take(nodes["ckv"], path, axis=1)
     rows_r = jnp.take(nodes["krope"], path, axis=1)
-    return {"ckv": paged_write(layer_cache["ckv"], rows_c, tables, lengths),
-            "krope": paged_write(layer_cache["krope"], rows_r, tables, lengths)}
+    return {key: paged_write(layer_cache[key], val, tables, lengths)
+            for key, val in _latent_entries(layer_cache, rows_c,
+                                            rows_r).items()}

@@ -1,0 +1,154 @@
+"""Int8 quantization: draft weights (quantize-once) and KV-cache rows.
+
+Two independent axes, both symmetric int8 with float32 scales (the
+TensorRT-Model-Optimizer per-channel recipe, expressed functionally):
+
+* **Weights** — ``quantize_params`` walks a parameter pytree ONCE at engine
+  init and replaces each linear weight ``w (..., d_in, d_out)`` with
+  ``{"qw": int8, "scale": (..., d_out) f32}`` where
+  ``scale[c] = max|w[:, c]| / 127`` (symmetric PER-OUTPUT-CHANNEL).
+  ``qmatmul`` then computes ``(x @ qw) * scale`` — the dequantization rides
+  the matmul epilogue, the bf16 weight matrix is never materialized.
+  Per-channel matters: one outlier column no longer clips every other
+  column's resolution, and the scale factors out of the matmul exactly
+  (``x @ (qw * scale) == (x @ qw) * scale``).
+
+* **KV rows** — caches built with ``kv_dtype="int8"`` store K/V (and MLA
+  latents) as int8 with one scale PER STORED ROW PER HEAD:
+  ``k (…, L, G, D) int8`` + ``k_scale (…, L, G) f32`` (headless latents
+  carry one scale per row).  Rows are quantized at write time
+  (``quantize_rows``) and dequantized at read time — in-register by the
+  quantized Pallas decode kernels (``kernels.decode_attention``), by a
+  gather + multiply on the XLA paths.  Per-row scales make writes purely
+  local (no running amax state to thread through jit) and keep rollback
+  semantics untouched: a dead row's scale is as dead as its payload.
+
+The roofline consequence (why the bandit cares): decode is memory-bound,
+so int8 draft weights and int8 KV each roughly halve the bytes the hot
+loop streams — ``core.rewards.precision_cost_factor`` exposes that as the
+modeled relative cost of a quantized-draft arm.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Linear-layer weight leaves eligible for int8 quantization (attention,
+# MLA and dense-FFN projections). Everything else — embeddings (table
+# lookups + tied lm_head), norms/biases (1-D), MoE expert banks (gathered
+# by index, see models/moe.py), router/shared/cross/encoder subtrees —
+# stays full precision.
+WEIGHT_QUANT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo",                      # attention projections
+    "w_in", "w_out", "w_gate",                   # dense FFN
+    "w_q", "w_dq", "w_uq", "w_dkv", "w_uk", "w_uv",  # MLA projections
+})
+
+# Subtrees ``quantize_params`` never descends into.
+SKIP_SUBTREES = frozenset({
+    "embed", "lm_head", "experts", "shared", "router",
+    "encoder", "enc_proj", "vis_proj", "cross",
+})
+
+# KV-cache leaves that carry an int8 payload when ``kv_dtype="int8"``;
+# each pairs with a ``<name>_scale`` float32 leaf.
+KV_QUANT_LEAVES = ("k", "v", "ckv", "krope")
+
+
+def scale_key(leaf: str) -> str:
+    return leaf + "_scale"
+
+
+# ------------------------------------------------------------- weights
+
+def quantize_weight(w):
+    """Symmetric per-output-channel int8: w (..., d_in, d_out) ->
+    {"qw": int8 same shape, "scale": (..., d_out) float32}."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[..., None, :]),
+                 -127, 127).astype(jnp.int8)
+    return {"qw": q, "scale": scale}
+
+
+def is_quantized(w) -> bool:
+    return isinstance(w, dict) and "qw" in w
+
+
+def dequantize_weight(qw, dtype=jnp.float32):
+    return (qw["qw"].astype(jnp.float32)
+            * qw["scale"][..., None, :]).astype(dtype)
+
+
+def resolve_weight(w, dtype=None):
+    """A plain weight matrix whichever representation ``w`` is in (for the
+    few sites that index/reshape the matrix instead of matmul-ing it)."""
+    if is_quantized(w):
+        return dequantize_weight(w, dtype or jnp.float32)
+    return w if dtype is None else w.astype(dtype)
+
+
+def qmatmul(x, w):
+    """``x @ w`` for raw OR quantized ``w`` — the single matmul entry point
+    of the model stack.  Quantized: the int8 matrix is cast to the
+    activation dtype on the fly and the per-channel scale is applied to the
+    OUTPUT (exactly equal to dequantize-then-matmul, without ever holding
+    the dequantized matrix)."""
+    if not is_quantized(w):
+        return x @ w
+    return (x @ w["qw"].astype(x.dtype)) * w["scale"].astype(x.dtype)
+
+
+def quantize_params(params):
+    """Quantize every eligible linear weight in a parameter pytree (see
+    ``WEIGHT_QUANT_KEYS`` / ``SKIP_SUBTREES``).  Returns a NEW pytree; the
+    input is untouched.  Works on unrolled layer lists and scan-stacked
+    cycles alike (the per-channel axis is -1, the reduce axis -2, whatever
+    leading stack axes exist)."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for key, val in node.items():
+                if key in SKIP_SUBTREES:
+                    out[key] = val
+                elif key in WEIGHT_QUANT_KEYS and not is_quantized(val):
+                    out[key] = quantize_weight(val)
+                else:
+                    out[key] = walk(val)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+    return walk(params)
+
+
+# ------------------------------------------------------------- KV rows
+
+def quantize_rows(x):
+    """Symmetric per-row int8 over the LAST axis: x (..., D) ->
+    (int8 (..., D), scale (...) float32).  For attention K/V the trailing
+    shape is (L, G, D) so the scale is per stored row per head; for MLA
+    latents (L, R) it is one scale per row."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def kv_is_quantized(layer_cache, leaf: str = "k") -> bool:
+    """True iff this cache layer stores ``leaf`` as int8 (trace-time
+    static — dtypes are part of the jaxpr, so jitted code branches free)."""
+    return layer_cache[leaf].dtype == jnp.int8
+
+
+__all__ = [
+    "WEIGHT_QUANT_KEYS", "SKIP_SUBTREES", "KV_QUANT_LEAVES", "scale_key",
+    "quantize_weight", "is_quantized", "dequantize_weight", "resolve_weight",
+    "qmatmul", "quantize_params",
+    "quantize_rows", "dequantize_rows", "kv_is_quantized",
+]

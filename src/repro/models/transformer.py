@@ -195,12 +195,25 @@ def forward_hidden(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
 
 # ------------------------------------------------------------ cached step
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    spec = build_cache_spec(cfg, max_len)
+def _kv_quant(kv_dtype: Optional[str]) -> bool:
+    if kv_dtype in (None, "fp", "bf16", "fp32"):
+        return False
+    if kv_dtype == "int8":
+        return True
+    raise ValueError(f"kv_dtype must be None/'fp'/'int8', got {kv_dtype!r}")
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               kv_dtype: Optional[str] = None):
+    """Dense decode cache.  ``kv_dtype``: None/"fp" store K/V in ``dtype``;
+    "int8" stores attention/MLA payloads as int8 with per-row float32
+    scales (``models/quant.py``); recurrent state always keeps ``dtype``."""
+    kv_quant = _kv_quant(kv_dtype)
+    spec = build_cache_spec(cfg, max_len, kv_quant=kv_quant)
     g = layer_grouping(cfg)
 
     def mk(i):
-        return init_layer_cache(cfg, spec.layers[i], batch, dtype)
+        return init_layer_cache(cfg, spec.layers[i], batch, dtype,
+                                kv_quant=kv_quant)
 
     layers = {"prefix": [mk(i) for i in g.prefix],
               "tail": [mk(i) for i in g.tail],
@@ -303,16 +316,19 @@ def step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                      block_size: int = 64, pool_tokens: Optional[int] = None,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, kv_dtype: Optional[str] = None):
     """Paged decode cache: one global block pool per attention layer plus
     per-stream (tables, lengths). Recurrent layers keep (B, ...) state.
     ``pool_tokens`` defaults to ``batch * max_len`` — the dense engine's
     capacity — so the refactor is drop-in; serving passes less to decouple
-    memory from worst-case per-slot buffers."""
+    memory from worst-case per-slot buffers.  ``kv_dtype="int8"`` stores
+    the pools quantized (per-row scales ride sibling pools), roughly
+    doubling the tokens a byte budget can back."""
     assert not cfg.is_encdec and cfg.vision is None, \
         "paged cache serves decoder-only LM stacks"
     spec = build_paged_cache_spec(cfg, max_len, block_size=block_size,
-                                  pool_tokens=pool_tokens or batch * max_len)
+                                  pool_tokens=pool_tokens or batch * max_len,
+                                  kv_quant=_kv_quant(kv_dtype))
     g = layer_grouping(cfg)
 
     def mk(i):

@@ -75,7 +75,14 @@ class SpecServer:
                  max_concurrency: int = 8, temperature: float = 0.0,
                  greedy: bool = True, seed: int = 0, paged: bool = False,
                  block_size: int = 64, pool_tokens: Optional[int] = None,
-                 tree: bool = False):
+                 tree: bool = False, kv_dtype: Optional[str] = None,
+                 quant_draft: bool = False):
+        # quantization knobs (docs/quantization.md) apply to every backend:
+        # kv_dtype="int8" stores both models' KV quantized — the same
+        # pool_tokens budget costs ~4x fewer bytes (fp32 pools), i.e. ~2x
+        # the effective capacity of a bf16 deployment per byte —
+        # quant_draft=True swaps the draft for int8 weights with the
+        # precision-scaled modeled cost
         if tree:
             # tree-speculation serving: per-slot single-stream caches, ONE
             # shape bandit (chain + tree arms) online across requests; the
@@ -86,7 +93,7 @@ class SpecServer:
             self.engine = TreeSlotEngine(
                 draft, target, controller, batch_size=max_concurrency,
                 max_len=max_len, temperature=temperature, greedy=greedy,
-                seed=seed)
+                kv_dtype=kv_dtype, quant_draft=quant_draft, seed=seed)
         elif paged:
             # pool_tokens sizes KV memory independently of B x max_len: with
             # short requests the SAME byte budget admits more concurrent
@@ -95,12 +102,13 @@ class SpecServer:
                 draft, target, controller, batch_size=max_concurrency,
                 max_len=max_len, block_size=block_size,
                 pool_tokens=pool_tokens, temperature=temperature,
-                greedy=greedy, seed=seed)
+                greedy=greedy, kv_dtype=kv_dtype, quant_draft=quant_draft,
+                seed=seed)
         else:
             self.engine = BatchedSpecEngine(
                 draft, target, controller, batch_size=max_concurrency,
                 max_len=max_len, temperature=temperature, greedy=greedy,
-                seed=seed)
+                kv_dtype=kv_dtype, quant_draft=quant_draft, seed=seed)
         self.paged = paged
         self.tree = tree
         self.gamma_max = controller.gamma_max

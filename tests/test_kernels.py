@@ -195,6 +195,80 @@ def test_paged_decode_post_rollback_state():
                                atol=5e-5, rtol=5e-5)
 
 
+# --------------------------------------------------------------- quantized
+
+@pytest.mark.parametrize("B,H,G,L,D,valid,window", [
+    (1, 2, 1, 256, 64, 256, 0),
+    (2, 4, 2, 300, 64, 200, 0),      # ragged + invalid slots
+    (1, 8, 8, 128, 128, 100, 0),     # MHA, MXU-aligned head dim
+    (2, 4, 2, 256, 32, 180, 24),     # sliding window
+])
+def test_decode_attention_quant_sweep(B, H, G, L, D, valid, window):
+    """Int8 dequant-in-register decode kernel vs the quantized oracle, and
+    within quantization error of the fp kernel on the same cache."""
+    from repro.models.quant import quantize_rows
+    ks = jax.random.split(jax.random.PRNGKey(21), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    kq, kscale = quantize_rows(k)
+    vq, vscale = quantize_rows(v)
+    kpos = jnp.where(jnp.arange(L) < valid, jnp.arange(L), -1).astype(jnp.int32)
+    out = ops.decode_attention_quant(q, kq, kscale, vq, vscale,
+                                     jnp.int32(valid - 1), kpos,
+                                     window=window, block_l=128)
+    exp = ref.decode_attention_quant_ref(q, kq, kscale, vq, vscale,
+                                         valid - 1, kpos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+    fp = ref.decode_attention_ref(q, k, v, valid - 1, kpos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fp),
+                               atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("B,H,G,N,bs,MB,D,window", [
+    (2, 4, 2, 9, 16, 4, 64, 0),
+    (3, 2, 1, 17, 8, 6, 32, 0),      # MQA, small blocks
+    (2, 8, 8, 9, 16, 4, 128, 0),     # MHA, MXU-aligned head dim
+    (2, 4, 2, 9, 16, 4, 64, 12),     # sliding window
+])
+def test_paged_decode_attention_quant_sweep(B, H, G, N, bs, MB, D, window):
+    """Int8 paged kernel (scalar-prefetch payload + scale pools) vs the
+    quantized paged oracle."""
+    from repro.models.quant import quantize_rows
+    ks = jax.random.split(jax.random.PRNGKey(22), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kpool = jax.random.normal(ks[1], (N, bs, G, D))
+    vpool = jax.random.normal(ks[2], (N, bs, G, D))
+    kq, kscale = quantize_rows(kpool)
+    vq, vscale = quantize_rows(vpool)
+    tables, lengths = _random_paged_layout(np.random.default_rng(4), B, N, bs, MB)
+    out = ops.paged_decode_attention_quant(
+        q, kq, kscale, vq, vscale, jnp.asarray(tables), jnp.asarray(lengths),
+        window=window)
+    exp = ref.paged_decode_attention_quant_ref(
+        q, kq, kscale, vq, vscale, jnp.asarray(tables), jnp.asarray(lengths),
+        window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_paged_decode_quant_empty_lane_outputs_zero():
+    """lengths == 0 under int8 pools: fully-masked lanes still emit zeros
+    (the re-mask guard must survive the scale multiplies)."""
+    from repro.models.quant import quantize_rows
+    B, H, G, N, bs, MB, D = 2, 2, 1, 5, 8, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kq, kscale = quantize_rows(jax.random.normal(ks[1], (N, bs, G, D)))
+    vq, vscale = quantize_rows(jax.random.normal(ks[2], (N, bs, G, D)))
+    tables = jnp.asarray([[0, 0], [1, 2]], jnp.int32)
+    lengths = jnp.asarray([0, 9], jnp.int32)
+    out = ops.paged_decode_attention_quant(q, kq, kscale, vq, vscale,
+                                           tables, lengths)
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+
+
 # --------------------------------------------------------------- tree
 
 def _tree_fixtures(key, B, H, G, L, D, spec):

@@ -175,6 +175,45 @@ def test_allocator_conservation_under_churn(events, num_blocks_x, bs):
         assert len(a.free) + len(owned) == num_blocks - 1
 
 
+# ------------------------------------------------------------- quantization
+
+@given(st.integers(0, 1000),
+       st.lists(st.integers(-3, 3), min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_weight_quant_per_channel_scale_invariance(seed, exps):
+    """Scaling output channel c by a power of two scales that channel's
+    quantization scale EXACTLY and leaves the int8 codes unchanged —
+    per-channel symmetric quantization is scale-equivariant (the reason
+    one outlier column cannot clip its neighbors)."""
+    import jax
+    from repro.models.quant import dequantize_weight, quantize_weight
+    d_out = len(exps)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (16, d_out))
+    c = np.float32(2.0) ** np.asarray(exps, np.float32)       # exact in fp
+    qw = quantize_weight(w)
+    qw_scaled = quantize_weight(w * c[None, :])
+    np.testing.assert_array_equal(np.asarray(qw_scaled["qw"]),
+                                  np.asarray(qw["qw"]))
+    np.testing.assert_allclose(np.asarray(qw_scaled["scale"]),
+                               np.asarray(qw["scale"]) * c, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dequantize_weight(qw_scaled)),
+                               np.asarray(dequantize_weight(qw)) * c[None, :],
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 1000), st.integers(1, 6), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_kv_row_quant_roundtrip_bound(seed, L, G):
+    """Int8 KV round trip is bounded by half an lsb of each row's scale,
+    for every row independently (the per-row layout's invariant)."""
+    import jax
+    from repro.models.quant import dequantize_rows, quantize_rows
+    x = jax.random.normal(jax.random.PRNGKey(seed), (L, G, 8)) * 4.0
+    q, scale = quantize_rows(x)
+    err = np.abs(np.asarray(dequantize_rows(q, scale)) - np.asarray(x))
+    assert (err <= np.asarray(scale)[..., None] / 2 + 1e-6).all()
+
+
 # ------------------------------------------------------------- masking rule
 
 @given(st.integers(0, 100), st.lists(st.integers(-1, 120), min_size=1,
