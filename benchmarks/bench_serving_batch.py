@@ -21,6 +21,16 @@ the paged server TWICE the fp row's token budget stored quantized: the
 pool must come in at no more bytes than the fp pool while sustaining at
 least its concurrency (``claim_int8_kv_doubles_capacity_per_byte``).
 
+The SHARDED rows (docs/sharding.md) serve the SAME workload on forced
+host devices at increasing device counts — ``SpecServer(mesh=
+make_host_mesh(data=n))``, one subprocess per count because the XLA
+device-count flag binds at jax init.  Tokens/s per count is recorded for
+the trajectory (virtual CPU devices: informational, not a speedup
+claim); the gating claim is that the bandit's ARM-SELECTION TRACE — every
+per-session arm id, in request order — is device-count-invariant
+(``claim_sharded_bandit_invariant``): TapOut's policy layer must not be
+able to tell how many shards served the batch.
+
 Uses a random-init tiny pair (throughput only needs the hot path, not
 acceptance quality) sized so a tick is DISPATCH-dominated — on a few-core
 CPU host a large per-tick forward is compute-bound and batching cannot
@@ -128,6 +138,80 @@ def _serve(draft, target, prompts, *, batch_size: int, max_new: int,
     return best
 
 
+# child script for the sharded rows: the forced-device-count flag binds at
+# jax init, so every device count runs in a fresh interpreter.  The mesh is
+# data-parallel (lanes sharded, bitwise numerics) so the arm trace must be
+# EXACTLY the 1-device trace — see docs/sharding.md#numerics.
+_SHARDED_CHILD = """
+import json, sys, time
+import jax
+from benchmarks.bench_serving_batch import _tiny_pair, _workload
+from repro.core import make_controller
+from repro.launch.mesh import make_host_mesh
+from repro.serving.engine import SpecServer
+
+cfg = json.loads(sys.argv[1])
+draft, target = _tiny_pair(n_layers_t=2, d_model_t=64,
+                           n_layers_d=1, d_model_d=32)
+prompts = _workload(cfg["n_requests"])
+mesh = make_host_mesh(data=cfg["devices"])
+srv = SpecServer(draft, target,
+                 make_controller("tapout_seq_ucb1",
+                                 gamma_max=cfg["gamma_max"], seed=0),
+                 max_len=cfg["max_len"], max_concurrency=cfg["batch_size"],
+                 mesh=mesh, seed=0)
+
+def drain(reqs):
+    for p in reqs:
+        srv.submit(p, cfg["max_new"])
+    t0 = time.perf_counter()
+    srv.run_until_drained()
+    return time.perf_counter() - t0
+
+drain([list(range(1, 40))] + prompts[:cfg["batch_size"] - 1])   # warmup
+srv.responses.clear()
+wall = drain(prompts)
+resp = sorted(srv.responses, key=lambda r: r.request_id)
+toks = sum(r.result.new_tokens for r in resp)
+st = srv.engine.controller.bandit.state_dict()
+print("SHARDED_ROW " + json.dumps({
+    "devices": len(jax.devices()),
+    "mesh_axes": {k: int(v) for k, v in mesh.shape.items()},
+    "wall_s": wall,
+    "tokens_per_s": toks / max(wall, 1e-9),
+    "total_new_tokens": toks,
+    "arm_trace": [[s.arm for s in r.result.sessions] for r in resp],
+    "bandit_counts": st["counts"].tolist(),
+    "bandit_t": int(st["t"]),
+}))
+"""
+
+
+def _sharded_rows(cfg: dict, batch_size: int, device_counts: List[int]):
+    """One subprocess per device count; returns the parsed rows."""
+    import json
+    import subprocess
+    from repro.launch.mesh import forced_host_env
+
+    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    rows = []
+    for n in device_counts:
+        env = forced_host_env(n)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [repo, os.path.join(repo, "src")]
+            + [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p])
+        payload = dict(cfg, devices=n, batch_size=batch_size)
+        r = subprocess.run(
+            [sys.executable, "-c", _SHARDED_CHILD, json.dumps(payload)],
+            env=env, capture_output=True, text=True, timeout=1200)
+        lines = [ln for ln in r.stdout.splitlines()
+                 if ln.startswith("SHARDED_ROW ")]
+        assert lines, (f"sharded child (devices={n}) produced no row:\n"
+                       f"{r.stdout}\n{r.stderr}")
+        rows.append(json.loads(lines[-1][len("SHARDED_ROW "):]))
+    return rows
+
+
 def run(quick: bool = False, smoke: bool = False,
         batch_sizes: Optional[List[int]] = None) -> dict:
     from benchmarks.common import record_serving_bench, save_json
@@ -198,6 +282,22 @@ def run(quick: bool = False, smoke: bool = False,
           f"fp {paged['cache_pool_bytes']/1e6:.1f}MB  "
           f"peak_concurrency={quant['peak_concurrency']}", file=sys.stderr)
 
+    # ---- sharded rows: same workload, increasing forced-host device
+    # counts; tokens/s is trajectory data, the bandit-trace invariance is
+    # the claim (data-parallel lanes -> the 1-device trace, exactly)
+    dev_counts = [1, 2] if (smoke or quick) else [1, 2, 4]
+    sharded = _sharded_rows(cfg, b_claim, dev_counts)
+    traces = [r["arm_trace"] for r in sharded]
+    counts = [r["bandit_counts"] for r in sharded]
+    claim_sharded = bool(all(t == traces[0] for t in traces[1:])
+                         and all(c == counts[0] for c in counts[1:]))
+    for r in sharded:
+        print(f"  sharded devices={r['devices']} "
+              f"(mesh {r['mesh_axes']}): {r['tokens_per_s']:.1f} tok/s  "
+              f"bandit_t={r['bandit_t']}", file=sys.stderr)
+    print(f"  claim_sharded_bandit_invariant={claim_sharded}",
+          file=sys.stderr)
+
     payload = {
         "config": cfg,
         "batch_sizes": batch_sizes,
@@ -212,6 +312,8 @@ def run(quick: bool = False, smoke: bool = False,
         "paged_int8_kv": quant,
         "claim_int8_kv_doubles_capacity_per_byte":
             quant["claim_int8_kv_doubles_capacity_per_byte"],
+        "sharded": sharded,
+        "claim_sharded_bandit_invariant": claim_sharded,
     }
     suffix = "_smoke" if smoke else ""
     save_json(f"serving_batch{suffix}", payload)
@@ -235,6 +337,11 @@ def run(quick: bool = False, smoke: bool = False,
             "cache_pool_bytes": quant["cache_pool_bytes"],
             "claim_int8_kv_doubles_capacity_per_byte":
                 quant["claim_int8_kv_doubles_capacity_per_byte"]},
+        "sharded": {
+            "tokens_per_s": {str(r["devices"]): r["tokens_per_s"]
+                             for r in sharded},
+            "bandit_t": {str(r["devices"]): r["bandit_t"] for r in sharded},
+            "claim_sharded_bandit_invariant": claim_sharded},
     })
     return payload
 
@@ -249,10 +356,13 @@ if __name__ == "__main__":
     payload = run(quick=args.quick, smoke=args.smoke)
     ok = payload["claim_batched_beats_sequential"]
     ok_paged = payload["claim_paged_admits_more"]
+    ok_sharded = payload["claim_sharded_bandit_invariant"]
     print(f"claim_batched_beats_sequential={ok}")
     print(f"claim_paged_admits_more={ok_paged}")
+    print(f"claim_sharded_bandit_invariant={ok_sharded}")
     # --smoke is an artifact-producing CI exercise of the serving path; a
     # seconds-scale TIMING comparison on a noisy shared runner must not
-    # gate the build.  The paged-admission claim is deterministic (it
-    # counts streams, not seconds) and gates every mode.
-    sys.exit(0 if ((ok or args.smoke) and ok_paged) else 1)
+    # gate the build.  The paged-admission and sharded-bandit-invariance
+    # claims are deterministic (they count streams / compare arm ids, not
+    # seconds) and gate every mode.
+    sys.exit(0 if ((ok or args.smoke) and ok_paged and ok_sharded) else 1)

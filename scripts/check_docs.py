@@ -4,7 +4,13 @@
 1. every intra-repo markdown link in README.md and docs/**/*.md resolves
    to an existing file (anchors stripped; http(s)/mailto skipped);
 2. every page under docs/ is reachable from docs/index.md by following
-   markdown links (no orphan documentation).
+   markdown links (no orphan documentation);
+3. every module under src/repro/ is mentioned by at least one docs page
+   or the README (orphan-module report): a module ``pkg/mod.py`` counts
+   as mentioned if any page contains ``pkg/mod.py`` or the dotted path
+   ``repro.pkg.mod``; a package ``pkg/__init__.py`` is covered by any
+   ``repro.pkg`` mention.  The per-module map lives in docs/index.md —
+   adding a module without documenting it fails CI.
 
 Exits non-zero with one line per violation.
 """
@@ -40,6 +46,37 @@ def resolve(src: str, target: str):
     if not target:
         return None
     return os.path.normpath(os.path.join(os.path.dirname(src), target))
+
+
+def repro_modules():
+    """Module files under src/repro, as paths relative to src/repro."""
+    root = os.path.join(REPO, "src", "repro")
+    out = []
+    for dirpath, dirnames, names in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for n in sorted(names):
+            if n.endswith(".py"):
+                out.append(os.path.relpath(os.path.join(dirpath, n), root))
+    return out
+
+
+def orphan_modules(files):
+    corpus = ""
+    for f in files:
+        with open(f, encoding="utf-8") as fh:
+            corpus += fh.read() + "\n"
+    orphans = []
+    for rel in repro_modules():
+        rel = rel.replace(os.sep, "/")
+        if rel.endswith("/__init__.py"):
+            pkg = rel[:-len("/__init__.py")].replace("/", ".")
+            mentions = (rel, f"repro.{pkg}")
+        else:
+            dotted = rel[:-3].replace("/", ".")
+            mentions = (rel, f"repro.{dotted}")
+        if not any(m in corpus for m in mentions):
+            orphans.append((rel, mentions))
+    return orphans
 
 
 def main() -> int:
@@ -78,11 +115,19 @@ def main() -> int:
                 errors.append(f"{os.path.relpath(f, REPO)}: not reachable "
                               f"from docs/index.md")
 
+    # ---- 3. orphan-module report: every src/repro module is documented
+    n_modules = len(repro_modules())
+    for rel, mentions in orphan_modules(files):
+        errors.append(f"src/repro/{rel}: not mentioned by any docs page "
+                      f"(add '{mentions[0]}' or '{mentions[1]}' to the "
+                      f"docs/index.md module map)")
+
     for e in errors:
         print(f"::error::{e}")
     if not errors:
         print(f"docs ok: {len(files)} pages, all links resolve, all docs "
-              f"pages reachable from docs/index.md")
+              f"pages reachable from docs/index.md, all {n_modules} "
+              f"src/repro modules mentioned")
     return 1 if errors else 0
 
 

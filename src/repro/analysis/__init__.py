@@ -1,0 +1,10 @@
+"""Analysis layer: roofline cost model + experiment-report generation.
+
+``roofline`` turns a compiled dry-run's ``cost_analysis()`` + HLO text
+into the three-term (compute / memory / collective) roofline used by
+``launch/dryrun.py``; ``report`` renders EXPERIMENTS.md from the dry-run
+and benchmark artifacts under ``artifacts/``.
+"""
+from repro.analysis.roofline import Roofline, build_roofline
+
+__all__ = ["Roofline", "build_roofline"]

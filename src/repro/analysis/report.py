@@ -1,10 +1,20 @@
-"""Generate EXPERIMENTS.md from dry-run + benchmark artifacts."""
+"""Generate EXPERIMENTS.md from dry-run + benchmark artifacts.
+
+Each section renders one artifact family from ``artifacts/``: the dry-run
+compile/memory results (``launch/dryrun.py``), the roofline terms
+(``analysis/roofline.py``) and the benchmark JSON payloads.  Run as
+``python -m repro.analysis.report``; missing artifacts render as empty
+sections, never errors.
+"""
 from __future__ import annotations
 
 import glob
 import json
 import os
 from collections import defaultdict
+
+__all__ = ["dryrun_section", "roofline_section", "bench_section", "build",
+           "main"]
 
 ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
 ART = os.path.join(ROOT, "artifacts")

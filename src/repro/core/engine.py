@@ -9,6 +9,7 @@ CPU wall-clock is not TPU wall-clock, DESIGN.md §6).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import time
 from dataclasses import dataclass, field
@@ -22,12 +23,98 @@ from repro.models import transformer as T
 from repro.models.cache import (POOL_LEAF_KEYS, BlockAllocator, PoolExhausted,
                                 paged_rollback, rollback)
 from repro.models.quant import quantize_params
+from repro.models.sharding import use_mesh
 from .controller import Controller, TapOutTreeSequence
 from .rewards import modeled_session_cost, precision_cost_factor
 from .spec_decode import (_probs, draft_session, draft_session_batched,
-                          draft_session_paged, verify_session,
+                          draft_session_paged, fresh_session_jits,
+                          make_sharded_sessions, verify_session,
                           verify_session_batched, verify_session_paged)
 from .tree import TreeSpec, verify_walk
+
+
+def _on_mesh(fn):
+    """Run an engine method with the engine's mesh active, so every program
+    traced inside it resolves its ``constrain`` annotations against that
+    mesh (a no-op for meshless engines)."""
+    @functools.wraps(fn)
+    def inner(self, *args, **kwargs):
+        with self._mesh_ctx():
+            return fn(self, *args, **kwargs)
+    return inner
+
+
+class _ShardingMixin:
+    """Device-placement plumbing shared by every engine.
+
+    ``mesh=None`` (the default) leaves everything exactly as before: one
+    device, module-level jitted primitives, no placement.  With a mesh the
+    engine places its params (serve-mode rules: weights resident, "model"
+    tensor-parallel only — see ``launch/shardings.py``) and its caches at
+    init, and every computation downstream of those committed arrays runs
+    on the mesh's device set.  The bandit controller needs none of this:
+    it is host-side O(arms) state fed by order-independent observation
+    merges, so the SAME controller code serves 1 device or 512.
+    """
+
+    mesh = None
+
+    def _mesh_ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return use_mesh(self.mesh)
+
+    def _place_bundles(self):
+        """Shard draft/target params over the mesh (serve-mode rules);
+        keeps the sharding pytrees for the session programs' in_shardings."""
+        self._dparams_sh = self._tparams_sh = None
+        if self.mesh is None:
+            return
+        from repro.launch.shardings import params_shardings
+        self._dparams_sh = params_shardings(self.mesh, self.draft.params,
+                                            mode="serve")
+        self._tparams_sh = params_shardings(self.mesh, self.target.params,
+                                            mode="serve")
+        self.draft = ModelBundle(
+            jax.device_put(self.draft.params, self._dparams_sh),
+            self.draft.cfg, cost_per_token=self.draft.cost_per_token)
+        self.target = ModelBundle(
+            jax.device_put(self.target.params, self._tparams_sh),
+            self.target.cfg, cost_per_token=self.target.cost_per_token)
+
+    def _place_variant(self, bundle: "ModelBundle") -> "ModelBundle":
+        """Shard an extra weight variant (e.g. an int8 draft copy)."""
+        if self.mesh is None:
+            return bundle
+        from repro.launch.shardings import params_shardings
+        sh = params_shardings(self.mesh, bundle.params, mode="serve")
+        return ModelBundle(jax.device_put(bundle.params, sh), bundle.cfg,
+                           cost_per_token=bundle.cost_per_token)
+
+    def _place_cache(self, cache, *, paged: bool = False, slots: bool = False):
+        """Place a cache pytree per the launch-layer rules (dense B=1,
+        slot-stacked, or paged-pool layout).  The sharding pytree is
+        memoized per layout — this runs on the serving hot path (admission,
+        release, canonical re-pinning after lane writes) and an engine's
+        cache structure never changes after init."""
+        if self.mesh is None:
+            return cache
+        # treedef + leaf shapes in the key: one engine places draft AND
+        # target caches (different structures/dims) through the same
+        # layout flags, and resolve_spec decisions depend on shapes
+        flat, treedef = jax.tree_util.tree_flatten(cache)
+        key = (paged, slots, treedef, tuple(a.shape for a in flat))
+        shardings = getattr(self, "_cache_sh", None)
+        if shardings is None:
+            shardings = self._cache_sh = {}
+        if key not in shardings:
+            from repro.launch.shardings import (cache_shardings,
+                                                paged_cache_shardings,
+                                                slot_cache_shardings)
+            sh_fn = (paged_cache_shardings if paged
+                     else slot_cache_shardings if slots else cache_shardings)
+            shardings[key] = sh_fn(self.mesh, cache)
+        return jax.device_put(cache, shardings[key])
 
 
 @dataclass
@@ -116,20 +203,27 @@ class _StepMixin:
         return cache
 
 
-class SpecEngine(_StepMixin):
+class SpecEngine(_StepMixin, _ShardingMixin):
     """Single-stream engine.  ``kv_dtype="int8"`` stores both models' KV
     caches quantized (``models/quant.py``); ``quant_draft=True`` swaps the
     draft bundle for an int8-weight copy with the precision-scaled modeled
-    cost (the batched/paged/tree engines take the same two knobs)."""
+    cost; ``mesh=`` places params and caches across devices
+    (docs/sharding.md) — the batched/paged/tree engines take the same
+    knobs."""
 
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: Controller, *, max_len: int = 2048,
                  temperature: float = 0.0, greedy: bool = True,
                  cache_dtype=jnp.float32, kv_dtype: Optional[str] = None,
-                 quant_draft: bool = False, seed: int = 0):
+                 quant_draft: bool = False, seed: int = 0, mesh=None):
         if quant_draft:
             draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
+        self.mesh = mesh
+        self._place_bundles()
+        self._draft_session, self._verify_session = (
+            (draft_session, verify_session) if mesh is None
+            else fresh_session_jits())
         self.controller = controller
         self.gamma_max = controller.gamma_max
         self.max_len = max_len
@@ -153,6 +247,7 @@ class SpecEngine(_StepMixin):
         return k
 
     # -------------------------------------------------------- streams
+    @_on_mesh
     def start_stream(self, prompt: List[int]) -> dict:
         """Prefill a new generation stream; returns the stream state."""
         assert len(prompt) >= 2, "need >= 2 prompt tokens"
@@ -162,12 +257,15 @@ class SpecEngine(_StepMixin):
                                  self.cache_dtype, kv_dtype=self.kv_dtype)
         tcache, _ = T.init_cache(self.target.cfg, 1, self.max_len,
                                  self.cache_dtype, kv_dtype=self.kv_dtype)
+        dcache = self._place_cache(dcache)
+        tcache = self._place_cache(tcache)
         pre = np.asarray(seq[:-1], np.int32)[None]   # invariant pos = len-1
         dcache = self._advance("draft", self.draft.params, dcache, pre)
         tcache = self._advance("target", self.target.params, tcache, pre)
         return {"seq": seq, "res": res, "dcache": dcache, "tcache": tcache,
                 "done": False}
 
+    @_on_mesh
     def session_step(self, state: dict, eos_id: Optional[int] = None) -> dict:
         """Run ONE draft/verify session on a stream (serving-layer unit)."""
         seq, res = state["seq"], state["res"]
@@ -189,7 +287,7 @@ class SpecEngine(_StepMixin):
                 dcache_in = dcache
                 in_toks = jnp.asarray([seq[-1:]], jnp.int32)
                 n_in = 1
-            dres = draft_session(
+            dres = self._draft_session(
                 self.draft.params, self.draft.cfg, self.dspec, dcache_in,
                 in_toks, jnp.asarray(arm_per_pos), jnp.float32(self.controller.lam),
                 self._next_rng(), arms=self.controller.arms, gamma_max=gamma,
@@ -199,7 +297,7 @@ class SpecEngine(_StepMixin):
             # ---- verify
             if not self.target_cheap:
                 tcache_snapshot = tcache
-            vres = verify_session(
+            vres = self._verify_session(
                 self.target.params, self.target.cfg, self.tspec, tcache,
                 jnp.asarray([seq[-1:]], jnp.int32)[:, 0:1], dres.tokens,
                 dres.n_drafted, dres.qprobs, self._next_rng(),
@@ -271,7 +369,7 @@ def _tree_commit(cfg, spec, cache, nodes, path, n_commit):
     return T.commit_tree_path(cfg, cache, spec, nodes, path, n_commit)
 
 
-class TreeSpecEngine(_StepMixin):
+class TreeSpecEngine(_StepMixin, _ShardingMixin):
     """Host-driven engine whose speculation step can be a TREE.
 
     The controller (``TapOutTreeSequence``) picks a speculation SHAPE per
@@ -305,17 +403,33 @@ class TreeSpecEngine(_StepMixin):
                  temperature: float = 0.0, greedy: bool = True,
                  cache_dtype=jnp.float32, kv_dtype: Optional[str] = None,
                  quant_draft: bool = False, seed: int = 0,
-                 paged: bool = False, block_size: int = 64):
+                 paged: bool = False, block_size: int = 64, mesh=None):
         if quant_draft:
             draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
+        self.mesh = mesh
+        self._place_bundles()
         # precision arms (ShapeArm.precision == "int8") draft with a
         # quantized copy of the SAME draft weights — quantize once here,
         # the shape bandit then picks precision per session like any arm
         self._draft_variants: Dict[str, ModelBundle] = {}
         if (not quant_draft
                 and any(s.precision == "int8" for s in controller.shapes)):
-            self._draft_variants["int8"] = quantized_bundle(draft)
+            self._draft_variants["int8"] = self._place_variant(
+                quantized_bundle(self.draft))
+        # per-engine jits when a mesh is bound (see fresh_session_jits)
+        if mesh is None:
+            self._tree_fwd, self._tree_cmt = _tree_forward, _tree_commit
+            self._draft_chain, self._verify_chain = (
+                (draft_session_paged, verify_session_paged) if paged
+                else (draft_session, verify_session))
+        else:
+            self._tree_fwd = jax.jit(_tree_forward.__wrapped__,
+                                     static_argnames=("cfg", "spec"))
+            self._tree_cmt = jax.jit(_tree_commit.__wrapped__,
+                                     static_argnames=("cfg", "spec"))
+            self._draft_chain, self._verify_chain = fresh_session_jits(
+                paged=paged)
         self.controller = controller
         self.gamma_max = controller.gamma_max
         self.max_len = max_len
@@ -370,10 +484,11 @@ class TreeSpecEngine(_StepMixin):
                 kv_dtype=self.kv_dtype)
             # single stream owns the whole pool: identity block table
             tbl = np.arange(1, spec.max_blocks + 1, dtype=np.int32)[None]
-            return {**cache, "tables": jnp.asarray(tbl)}
+            return self._place_cache({**cache, "tables": jnp.asarray(tbl)},
+                                     paged=True)
         cache, _ = T.init_cache(bundle.cfg, 1, self.max_len, self.cache_dtype,
                                 kv_dtype=self.kv_dtype)
-        return cache
+        return self._place_cache(cache)
 
     def _rollback(self, cache, n: int):
         return paged_rollback(cache, [n]) if self.paged else rollback(cache, n)
@@ -410,6 +525,7 @@ class TreeSpecEngine(_StepMixin):
         return cache
 
     # -------------------------------------------------------- streams
+    @_on_mesh
     def start_stream(self, prompt: List[int]) -> dict:
         assert len(prompt) >= 2, "need >= 2 prompt tokens"
         assert len(prompt) + self._max_overshoot + 2 <= self.max_len
@@ -434,13 +550,13 @@ class TreeSpecEngine(_StepMixin):
         if self.paged:
             dcache_in = self._rollback(state["dcache"], L - 2)
             active = jnp.asarray([True])
-            dres = draft_session_paged(
+            dres = self._draft_chain(
                 draft.params, draft.cfg, self.dspec, dcache_in,
                 jnp.asarray([seq[-2:]], jnp.int32), jnp.asarray(arm_per_pos[None]),
                 lam, self._next_rng()[None], active,
                 arms=self.controller.arms, gamma_max=g,
                 temperature=self.temperature)
-            vres = verify_session_paged(
+            vres = self._verify_chain(
                 self.target.params, self.target.cfg, self.tspec,
                 state["tcache"], jnp.asarray([seq[-1:]], jnp.int32),
                 dres.tokens, dres.n_drafted, dres.qprobs,
@@ -448,12 +564,12 @@ class TreeSpecEngine(_StepMixin):
                 temperature=self.temperature, greedy=self.greedy)
         else:
             dcache_in = self._rollback(state["dcache"], L - 2)
-            dres = draft_session(
+            dres = self._draft_chain(
                 draft.params, draft.cfg, self.dspec, dcache_in,
                 jnp.asarray([seq[-2:]], jnp.int32), jnp.asarray(arm_per_pos),
                 lam, self._next_rng(), arms=self.controller.arms, gamma_max=g,
                 temperature=self.temperature)
-            vres = verify_session(
+            vres = self._verify_chain(
                 self.target.params, self.target.cfg, self.tspec,
                 state["tcache"], jnp.asarray([seq[-1:]], jnp.int32),
                 dres.tokens, dres.n_drafted, dres.qprobs, self._next_rng(),
@@ -507,7 +623,7 @@ class TreeSpecEngine(_StepMixin):
             lvl = list(level)
             # draft pointer sits at L after the refeed, so a node's
             # position is pointer + its depth (roots at L, etc.)
-            lg_lvl, nodes = _tree_forward(
+            lg_lvl, nodes = self._tree_fwd(
                 draft.params, cfg_d, self.dspec, dcache,
                 jnp.asarray([tokens[lvl]], jnp.int32),
                 jnp.asarray(tree.depths[lvl], jnp.int32),
@@ -523,7 +639,7 @@ class TreeSpecEngine(_StepMixin):
 
         # ---- verify: [last token] + tree in ONE target pass
         vtokens = np.concatenate([[seq[-1]], tokens])
-        lg_v, tnodes = _tree_forward(
+        lg_v, tnodes = self._tree_fwd(
             self.target.params, cfg_t, self.tspec, state["tcache"],
             jnp.asarray([vtokens], jnp.int32),
             jnp.asarray(tree.verify_depths, jnp.int32),
@@ -540,19 +656,20 @@ class TreeSpecEngine(_StepMixin):
         P_t = 1 + tree.max_depth
         vpath = np.zeros(P_t, np.int32)
         vpath[:m + 1] = [0] + [1 + i for i in path]
-        tcache = _tree_commit(cfg_t, self.tspec, state["tcache"], tnodes,
+        tcache = self._tree_cmt(cfg_t, self.tspec, state["tcache"], tnodes,
                               jnp.asarray(vpath), m + 1)
         state["tcache"] = self._rollback(tcache, L + m)
         P_d = tree.max_depth
         dpath = np.zeros(P_d, np.int32)
         dpath[:m] = path
-        dcache = _tree_commit(cfg_d, self.dspec, dcache, nodes,
+        dcache = self._tree_cmt(cfg_d, self.dspec, dcache, nodes,
                               jnp.asarray(dpath), m)
         state["dcache"] = self._rollback(dcache, L + m - 1)
         cost = modeled_session_cost(Tn + 1, draft.cost_per_token,
                                     self.target.cost_per_token)
         return Tn, m, out, cost
 
+    @_on_mesh
     def session_step(self, state: dict, eos_id: Optional[int] = None) -> dict:
         """Run ONE shape-bandit session on a stream."""
         seq, res = state["seq"], state["res"]
@@ -644,7 +761,7 @@ def _tree_set_slot(tree, s: int, lane):
     return jax.tree.map(lambda big, one: big.at[s].set(one), tree, lane)
 
 
-class BatchedSpecEngine(_StepMixin):
+class BatchedSpecEngine(_StepMixin, _ShardingMixin):
     """Fixed-B slot engine: ONE jitted draft/verify program serves B streams.
 
     Per-slot B=1 caches are stacked on a leading slot axis, so every lane
@@ -674,11 +791,13 @@ class BatchedSpecEngine(_StepMixin):
                  max_len: int = 2048, temperature: float = 0.0,
                  greedy: bool = True, cache_dtype=jnp.float32,
                  kv_dtype: Optional[str] = None, quant_draft: bool = False,
-                 seed: int = 0, prefill_chunk: int = 16):
+                 seed: int = 0, prefill_chunk: int = 16, mesh=None):
         assert batch_size >= 1
         if quant_draft:
             draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
+        self.mesh = mesh
+        self._place_bundles()
         self.controller = controller
         self.gamma_max = controller.gamma_max
         self.batch_size = batch_size
@@ -698,11 +817,27 @@ class BatchedSpecEngine(_StepMixin):
                                        kv_dtype=kv_dtype)
         self.draft_cheap = self.dspec.cheap_rollback
         self.target_cheap = self.tspec.cheap_rollback
-        self._fresh_dcache, self._fresh_tcache = dc1, tc1
+        # fresh per-admission lanes live on the mesh device set too, so the
+        # prefilled lane and the stacked caches it is written into agree
+        self._fresh_dcache = self._place_cache(dc1)
+        self._fresh_tcache = self._place_cache(tc1)
         stack = lambda c: jax.tree.map(
             lambda a: jnp.stack([a] * batch_size), c)
-        self.dcaches = stack(dc1)
-        self.tcaches = stack(tc1)
+        # slot lanes shard over the ("pod","data") batch axes
+        self.dcaches = self._place_cache(stack(dc1), slots=True)
+        self.tcaches = self._place_cache(stack(tc1), slots=True)
+        self._sharded_sessions = None
+        if mesh is not None:
+            from repro.launch.shardings import slot_cache_shardings
+            self._sharded_sessions = make_sharded_sessions(
+                mesh, cfg_d=self.draft.cfg, cfg_t=self.target.cfg,
+                dspec=self.dspec, tspec=self.tspec,
+                dparams_sh=self._dparams_sh, tparams_sh=self._tparams_sh,
+                dcache_sh=slot_cache_shardings(mesh, self.dcaches),
+                tcache_sh=slot_cache_shardings(mesh, self.tcaches),
+                batch_size=batch_size, gamma_max=self.gamma_max,
+                arms=controller.arms, temperature=temperature, greedy=greedy,
+                n_prompt_tokens=2 if self.draft_cheap else 1, paged=False)
 
         B = batch_size
         self.slots: List[Optional[dict]] = [None] * B
@@ -737,6 +872,7 @@ class BatchedSpecEngine(_StepMixin):
     def active_mask(self) -> np.ndarray:
         return np.array([s is not None and not s["done"] for s in self.slots])
 
+    @_on_mesh
     def open_stream(self, slot: int, prompt: List[int],
                     eos_id: Optional[int] = None) -> dict:
         """Prefill ``prompt`` into a free slot; the stream participates in
@@ -749,8 +885,13 @@ class BatchedSpecEngine(_StepMixin):
                                self._fresh_dcache, pre)
         tcache = self._prefill("target", self.target.params,
                                self._fresh_tcache, pre)
-        self.dcaches = _tree_set_slot(self.dcaches, slot, dcache)
-        self.tcaches = _tree_set_slot(self.tcaches, slot, tcache)
+        # re-pin the canonical slot shardings: the eager lane write lets
+        # GSPMD propagate whatever layout it likes, and the sharded session
+        # program's in_shardings require the canonical one
+        self.dcaches = self._place_cache(
+            _tree_set_slot(self.dcaches, slot, dcache), slots=True)
+        self.tcaches = self._place_cache(
+            _tree_set_slot(self.tcaches, slot, tcache), slots=True)
         self._dpos[slot] = len(pre)
         self._tpos[slot] = len(pre)
         st = {"seq": seq, "res": GenResult(tokens=seq, prompt_len=len(prompt)),
@@ -768,6 +909,7 @@ class BatchedSpecEngine(_StepMixin):
         return st
 
     # -------------------------------------------------------- tick
+    @_on_mesh
     def session_step_batch(self) -> List[int]:
         """Run one draft/verify session for every active slot in one
         batched program.  Returns the slots that were active this tick."""
@@ -807,16 +949,27 @@ class BatchedSpecEngine(_StepMixin):
         keys = self._next_rng(2 * B)
         active_dev = jnp.asarray(active)
 
-        dres = draft_session_batched(
-            self.draft.params, self.draft.cfg, self.dspec, dcaches_in,
-            jnp.asarray(in_toks), arm_mat, jnp.float32(self.controller.lam),
-            keys[:B], active_dev, arms=self.controller.arms, gamma_max=g,
-            temperature=self.temperature, n_prompt_tokens=n_in)
-        vres = verify_session_batched(
-            self.target.params, self.target.cfg, self.tspec, self.tcaches,
-            jnp.asarray(last_toks), dres.tokens, dres.n_drafted, dres.qprobs,
-            keys[B:], active_dev, gamma_max=g, temperature=self.temperature,
-            greedy=self.greedy)
+        if self._sharded_sessions is not None:
+            draft_fn, verify_fn = self._sharded_sessions
+            dres = draft_fn(self.draft.params, dcaches_in,
+                            jnp.asarray(in_toks), jnp.asarray(arm_mat),
+                            jnp.float32(self.controller.lam), keys[:B],
+                            active_dev)
+            vres = verify_fn(self.target.params, self.tcaches,
+                             jnp.asarray(last_toks), dres.tokens,
+                             dres.n_drafted, dres.qprobs, keys[B:],
+                             active_dev)
+        else:
+            dres = draft_session_batched(
+                self.draft.params, self.draft.cfg, self.dspec, dcaches_in,
+                jnp.asarray(in_toks), arm_mat, jnp.float32(self.controller.lam),
+                keys[:B], active_dev, arms=self.controller.arms, gamma_max=g,
+                temperature=self.temperature, n_prompt_tokens=n_in)
+            vres = verify_session_batched(
+                self.target.params, self.target.cfg, self.tspec, self.tcaches,
+                jnp.asarray(last_toks), dres.tokens, dres.n_drafted,
+                dres.qprobs, keys[B:], active_dev, gamma_max=g,
+                temperature=self.temperature, greedy=self.greedy)
 
         nd = np.asarray(dres.n_drafted)
         m = np.asarray(vres.n_accepted)
@@ -866,13 +1019,15 @@ class BatchedSpecEngine(_StepMixin):
             self._tpos = np.where(active, L + m, self._tpos)
             self.tcaches = rollback(vres.cache, self._tpos)
         else:
-            self.tcaches = readvance("target", self.target.params, tsnap)
+            self.tcaches = self._place_cache(
+                readvance("target", self.target.params, tsnap), slots=True)
             self._tpos = np.where(active, L + m, self._tpos)
         if self.draft_cheap:
             self._dpos = np.where(active, L + m - 1, self._dpos)
             self.dcaches = rollback(dres.cache, self._dpos)
         else:
-            self.dcaches = readvance("draft", self.draft.params, dsnap)
+            self.dcaches = self._place_cache(
+                readvance("draft", self.draft.params, dsnap), slots=True)
             self._dpos = np.where(active, L + m, self._dpos)
 
         # ---- one order-independent batched bandit update for the tick
@@ -889,7 +1044,7 @@ def _path_keys(path):
     return [getattr(p, "key", None) for p in path]
 
 
-class PagedSpecEngine:
+class PagedSpecEngine(_ShardingMixin):
     """Paged slot engine: B streams share global KV block pools.
 
     Where ``BatchedSpecEngine`` stacks one dense ``max_len`` cache per slot
@@ -923,11 +1078,13 @@ class PagedSpecEngine:
                  temperature: float = 0.0, greedy: bool = True,
                  cache_dtype=jnp.float32, kv_dtype: Optional[str] = None,
                  quant_draft: bool = False, seed: int = 0,
-                 prefill_chunk: int = 16):
+                 prefill_chunk: int = 16, mesh=None):
         assert batch_size >= 1
         if quant_draft:
             draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
+        self.mesh = mesh
+        self._place_bundles()
         self.controller = controller
         self.gamma_max = controller.gamma_max
         self.batch_size = batch_size
@@ -952,12 +1109,28 @@ class PagedSpecEngine:
             target.cfg, B, max_len, block_size=block_size,
             pool_tokens=self.pool_tokens, dtype=cache_dtype,
             kv_dtype=kv_dtype)
+        # pools shard KV heads over "model" (whole block axis per shard —
+        # any table may point anywhere); tables/lengths ride the lane axes
+        self.dcache = self._place_cache(self.dcache, paged=True)
+        self.tcache = self._place_cache(self.tcache, paged=True)
         self.draft_cheap = self.dspec.cheap_rollback
         self.target_cheap = self.tspec.cheap_rollback
         self.dalloc = BlockAllocator(self.dspec.num_blocks,
                                      self.dspec.max_blocks, B)
         self.talloc = BlockAllocator(self.tspec.num_blocks,
                                      self.tspec.max_blocks, B)
+        self._sharded_sessions = None
+        if mesh is not None:
+            from repro.launch.shardings import paged_cache_shardings
+            self._sharded_sessions = make_sharded_sessions(
+                mesh, cfg_d=self.draft.cfg, cfg_t=self.target.cfg,
+                dspec=self.dspec, tspec=self.tspec,
+                dparams_sh=self._dparams_sh, tparams_sh=self._tparams_sh,
+                dcache_sh=paged_cache_shardings(mesh, self.dcache),
+                tcache_sh=paged_cache_shardings(mesh, self.tcache),
+                batch_size=batch_size, gamma_max=self.gamma_max,
+                arms=controller.arms, temperature=temperature, greedy=greedy,
+                n_prompt_tokens=2 if self.draft_cheap else 1, paged=True)
 
         self.slots: List[Optional[dict]] = [None] * B
         self._dlen = np.zeros(B, np.int64)   # host mirrors of device lengths
@@ -1065,6 +1238,7 @@ class PagedSpecEngine:
         return (self.dalloc.can_allocate(n) and self.talloc.can_allocate(n)
                 and bool(self.free_slots()))
 
+    @_on_mesh
     def open_stream(self, slot: int, prompt: List[int],
                     eos_id: Optional[int] = None,
                     reserve_tokens: Optional[int] = None) -> dict:
@@ -1098,8 +1272,10 @@ class PagedSpecEngine:
             self.dcache = self._reset_lane_state(self.dcache, slot)
         if not self.target_cheap:
             self.tcache = self._reset_lane_state(self.tcache, slot)
-        self.dcache = self._prefill_lane("draft", self.dcache, slot, pre)
-        self.tcache = self._prefill_lane("target", self.tcache, slot, pre)
+        self.dcache = self._place_cache(
+            self._prefill_lane("draft", self.dcache, slot, pre), paged=True)
+        self.tcache = self._place_cache(
+            self._prefill_lane("target", self.tcache, slot, pre), paged=True)
         self._dlen[slot] = len(pre)
         self._tlen[slot] = len(pre)
         st = {"seq": seq, "res": GenResult(tokens=seq, prompt_len=len(prompt)),
@@ -1117,15 +1293,16 @@ class PagedSpecEngine:
         self.talloc.release(slot)
         self._dlen[slot] = 0
         self._tlen[slot] = 0
-        self.dcache = {**self.dcache,
-                       "tables": jnp.asarray(self.dalloc.tables),
-                       "lengths": self.dcache["lengths"].at[slot].set(0)}
-        self.tcache = {**self.tcache,
-                       "tables": jnp.asarray(self.talloc.tables),
-                       "lengths": self.tcache["lengths"].at[slot].set(0)}
+        self.dcache = self._place_cache(
+            {**self.dcache, "tables": jnp.asarray(self.dalloc.tables),
+             "lengths": self.dcache["lengths"].at[slot].set(0)}, paged=True)
+        self.tcache = self._place_cache(
+            {**self.tcache, "tables": jnp.asarray(self.talloc.tables),
+             "lengths": self.tcache["lengths"].at[slot].set(0)}, paged=True)
         return st
 
     # -------------------------------------------------------- tick
+    @_on_mesh
     def session_step_batch(self) -> List[int]:
         """One batched draft/verify session across every active slot."""
         B, g = self.batch_size, self.gamma_max
@@ -1164,17 +1341,28 @@ class PagedSpecEngine:
         keys = self._next_rng(2 * B)
         active_dev = jnp.asarray(active)
 
-        dres = draft_session_paged(
-            self.draft.params, self.draft.cfg, self.dspec, dcache_in,
-            jnp.asarray(in_toks), jnp.asarray(arm_mat),
-            jnp.float32(self.controller.lam), keys[:B], active_dev,
-            arms=self.controller.arms, gamma_max=g,
-            temperature=self.temperature, n_prompt_tokens=n_in)
-        vres = verify_session_paged(
-            self.target.params, self.target.cfg, self.tspec, self.tcache,
-            jnp.asarray(last_toks), dres.tokens, dres.n_drafted, dres.qprobs,
-            keys[B:], active_dev, gamma_max=g, temperature=self.temperature,
-            greedy=self.greedy)
+        if self._sharded_sessions is not None:
+            draft_fn, verify_fn = self._sharded_sessions
+            dres = draft_fn(self.draft.params, dcache_in,
+                            jnp.asarray(in_toks), jnp.asarray(arm_mat),
+                            jnp.float32(self.controller.lam), keys[:B],
+                            active_dev)
+            vres = verify_fn(self.target.params, self.tcache,
+                             jnp.asarray(last_toks), dres.tokens,
+                             dres.n_drafted, dres.qprobs, keys[B:],
+                             active_dev)
+        else:
+            dres = draft_session_paged(
+                self.draft.params, self.draft.cfg, self.dspec, dcache_in,
+                jnp.asarray(in_toks), jnp.asarray(arm_mat),
+                jnp.float32(self.controller.lam), keys[:B], active_dev,
+                arms=self.controller.arms, gamma_max=g,
+                temperature=self.temperature, n_prompt_tokens=n_in)
+            vres = verify_session_paged(
+                self.target.params, self.target.cfg, self.tspec, self.tcache,
+                jnp.asarray(last_toks), dres.tokens, dres.n_drafted,
+                dres.qprobs, keys[B:], active_dev, gamma_max=g,
+                temperature=self.temperature, greedy=self.greedy)
 
         nd = np.asarray(dres.n_drafted)
         m = np.asarray(vres.n_accepted)
@@ -1211,13 +1399,15 @@ class PagedSpecEngine:
             self._tlen = np.where(active, L + m, self._tlen)
             self.tcache = paged_rollback(vres.cache, self._tlen)
         else:
-            self.tcache = self._readvance("target", tsnap, active, feeds)
+            self.tcache = self._place_cache(
+                self._readvance("target", tsnap, active, feeds), paged=True)
             self._tlen = np.where(active, L + m, self._tlen)
         if self.draft_cheap:
             self._dlen = np.where(active, L + m - 1, self._dlen)
             self.dcache = paged_rollback(dres.cache, self._dlen)
         else:
-            self.dcache = self._readvance("draft", dsnap, active, feeds)
+            self.dcache = self._place_cache(
+                self._readvance("draft", dsnap, active, feeds), paged=True)
             self._dlen = np.where(active, L + m, self._dlen)
 
         self.controller.update_batch(arm_mat[act_idx], nd[act_idx], m[act_idx])
@@ -1235,16 +1425,19 @@ class PagedSpecEngine:
 
     # -------------------------------------------------------- stats
     def pool_stats(self) -> dict:
-        def pool_bytes(cache):
+        def pool_bytes(cache, per_shard=False):
             total = 0
             def f(path, a):
                 nonlocal total
                 if _path_keys(path)[-1] in _POOL_KEYS:
-                    total += a.size * a.dtype.itemsize
+                    n = a.size
+                    if per_shard:
+                        n = int(np.prod(a.sharding.shard_shape(a.shape)))
+                    total += n * a.dtype.itemsize
                 return a
             jax.tree_util.tree_map_with_path(f, cache["layers"])
             return total
-        return {
+        stats = {
             "block_size": self.block_size,
             "pool_tokens": self.pool_tokens,
             "num_blocks": self.dspec.num_blocks,
@@ -1253,3 +1446,14 @@ class PagedSpecEngine:
             "peak_blocks_in_use": (self.dalloc.peak_in_use
                                    + self.talloc.peak_in_use),
         }
+        if self.mesh is not None:
+            # per-shard residency: the "model"-sharded pools split their
+            # bytes across tensor-parallel shards; block accounting is
+            # global (one host-side allocator feeds every shard's tables)
+            stats["mesh_devices"] = int(self.mesh.devices.size)
+            stats["mesh_axes"] = {k: int(v)
+                                  for k, v in self.mesh.shape.items()}
+            stats["cache_pool_bytes_per_shard"] = (
+                pool_bytes(self.dcache, per_shard=True)
+                + pool_bytes(self.tcache, per_shard=True))
+        return stats

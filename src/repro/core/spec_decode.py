@@ -43,10 +43,26 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import transformer as T
 from repro.models.cache import CacheSpec
+from repro.models.sharding import BATCH_AXES, constrain, resolve_spec
 from .arms import Arm, SIGNAL_VECTOR_DIM, signal_vector, signals_from_probs
+
+# static_argnames of the session primitives — shared with the per-engine
+# re-jits below so an engine can rebuild a primitive without restating them
+DRAFT_STATICS = ("cfg", "spec", "gamma_max", "temperature", "arms",
+                 "n_prompt_tokens")
+VERIFY_STATICS = ("cfg", "spec", "gamma_max", "temperature", "greedy")
+
+
+def _lane_constrain(*arrays):
+    """Pin the leading STREAM-LANE axis of flat (B, ...) session tensors to
+    the ("pod","data") batch axes.  A no-op without an active mesh; under a
+    mesh this keeps per-lane inputs/outputs resident with their lane's
+    shard instead of letting GSPMD replicate them."""
+    return tuple(constrain(a, BATCH_AXES) for a in arrays)
 
 
 class DraftResult(NamedTuple):
@@ -215,6 +231,9 @@ def draft_session_batched(params, cfg, spec: CacheSpec, caches, in_tokens,
       outputs of inactive lanes are zeroed (n_drafted == 0).
     Returns DraftResult with tokens (B, gamma_max) padded to gamma_max.
     """
+    in_tokens, arm_mat, rngs, active = _lane_constrain(in_tokens, arm_mat,
+                                                       rngs, active)
+
     def lane(cache, toks, arm_row, rng):
         r = _draft_core(params, cfg, spec, cache, toks[None, :], arm_row,
                         lam, rng, arms=arms, gamma_max=gamma_max,
@@ -225,8 +244,9 @@ def draft_session_batched(params, cfg, spec: CacheSpec, caches, in_tokens,
     r = jax.vmap(lane)(caches, in_tokens, arm_mat, rngs)
     n_drafted = jnp.where(active, r.n_drafted, 0)
     tokens = jnp.where(active[:, None], r.tokens, 0)
-    return DraftResult(tokens, n_drafted, r.qprobs, r.cache, r.entropies,
-                       r.signals)
+    tokens, n_drafted, qprobs, ent, sig = _lane_constrain(
+        tokens, n_drafted, r.qprobs, r.entropies, r.signals)
+    return DraftResult(tokens, n_drafted, qprobs, r.cache, ent, sig)
 
 
 def _split_rows(rngs):
@@ -262,6 +282,8 @@ def draft_session_paged(params, cfg, spec, cache, in_tokens, arm_mat, lam,
     lowers to anyway), sampling uses per-row PRNG keys.
     """
     B = in_tokens.shape[0]
+    in_tokens, arm_mat, rngs, active = _lane_constrain(in_tokens, arm_mat,
+                                                       rngs, active)
     arm_fns = tuple(a.fn for a in arms)
     rows = jnp.arange(B)
 
@@ -282,8 +304,9 @@ def draft_session_paged(params, cfg, spec, cache, in_tokens, arm_mat, lam,
 
     n_drafted = jnp.where(active, r.n_drafted, 0)
     tokens = jnp.where(active[:, None], r.tokens, 0)
-    return DraftResult(tokens, n_drafted, r.qprobs, r.cache, r.entropies,
-                       r.signals)
+    tokens, n_drafted, qprobs, ent, sig = _lane_constrain(
+        tokens, n_drafted, r.qprobs, r.entropies, r.signals)
+    return DraftResult(tokens, n_drafted, qprobs, r.cache, ent, sig)
 
 
 # ------------------------------------------------------------------ verify
@@ -406,6 +429,9 @@ def verify_session_batched(params, cfg, spec: CacheSpec, caches, last_tokens,
     Inactive lanes come in with n_drafted == 0 and leave with
     n_accepted == n_out == 0 and zeroed out_tokens.
     """
+    last_tokens, drafted, n_drafted, qprobs, rngs, active = _lane_constrain(
+        last_tokens, drafted, n_drafted, qprobs, rngs, active)
+
     def lane(cache, last, drf, nd, qp, rng):
         r = _verify_core(params, cfg, spec, cache, last[None, :], drf[None],
                          nd[None], qp[None], rng, gamma_max=gamma_max,
@@ -416,7 +442,8 @@ def verify_session_batched(params, cfg, spec: CacheSpec, caches, last_tokens,
     r = jax.vmap(lane)(caches, last_tokens, drafted, n_drafted, qprobs, rngs)
     m = jnp.where(active, r.n_accepted, 0)
     out = jnp.where(active[:, None], r.out_tokens, 0)
-    return VerifyResult(m, out, jnp.where(active, r.n_out, 0), r.cache)
+    m, out, n_out = _lane_constrain(m, out, jnp.where(active, r.n_out, 0))
+    return VerifyResult(m, out, n_out, r.cache)
 
 
 @functools.partial(
@@ -433,6 +460,8 @@ def verify_session_paged(params, cfg, spec, cache, last_tokens, drafted,
     == 0) leave with zeroed outputs; their cache writes land in the trash
     block.
     """
+    last_tokens, drafted, n_drafted, qprobs, rngs, active = _lane_constrain(
+        last_tokens, drafted, n_drafted, qprobs, rngs, active)
     inp = jnp.concatenate([last_tokens, drafted], axis=1)       # (B, g+1)
     logits, cache = T.paged_step(params, cfg, inp, cache, spec, all_logits=True)
     m, out = _accept_and_outputs(
@@ -445,4 +474,88 @@ def verify_session_paged(params, cfg, spec, cache, last_tokens, drafted,
                 k1, jnp.log(jnp.maximum(d1, 1e-30))))(d, k).astype(jnp.int32))
     m = jnp.where(active, m, 0)
     out = jnp.where(active[:, None], out, 0)
-    return VerifyResult(m, out, jnp.where(active, m + 1, 0), cache)
+    m, out, n_out = _lane_constrain(m, out, jnp.where(active, m + 1, 0))
+    return VerifyResult(m, out, n_out, cache)
+
+
+# ------------------------------------------------------------- sharded jits
+
+def fresh_session_jits(*, paged: bool = False):
+    """Per-engine re-jits of the single-stream (or paged batch-native)
+    session primitives, with the same static argnames as the module-level
+    ones.
+
+    A mesh-aware engine must NOT share the module-level jits: the models'
+    ``constrain`` annotations resolve against the mesh active at TRACE
+    time, and a jit's trace cache is keyed on avals only — so one engine's
+    meshless trace would be silently reused for another engine's sharded
+    call (or a mesh-bound trace would poison a single-device engine).
+    Giving each mesh-bound engine fresh jit objects keeps trace caches
+    per-placement.
+    """
+    d = draft_session_paged if paged else draft_session
+    v = verify_session_paged if paged else verify_session
+    return (jax.jit(d.__wrapped__, static_argnames=DRAFT_STATICS),
+            jax.jit(v.__wrapped__, static_argnames=VERIFY_STATICS))
+
+
+def lane_sharding(mesh, shape) -> NamedSharding:
+    """NamedSharding placing the leading stream-lane axis of ``shape`` on
+    the ("pod","data") batch axes (indivisible axes drop per
+    ``resolve_spec``, so B=1 / odd-B shapes degrade to replicated)."""
+    return NamedSharding(mesh, resolve_spec(mesh, (BATCH_AXES,), shape))
+
+
+def make_sharded_sessions(mesh, *, cfg_d, cfg_t, dspec, tspec, dparams_sh,
+                          tparams_sh, dcache_sh, tcache_sh, batch_size: int,
+                          gamma_max: int, arms: Tuple[Arm, ...],
+                          temperature: float, greedy: bool,
+                          n_prompt_tokens: int, paged: bool = False):
+    """Jit the batched (or paged batch-native) draft/verify programs with
+    explicit ``NamedSharding`` in/out shardings for one engine's
+    (B, gamma_max) deployment on ``mesh``.
+
+    Slot lanes — tokens, arm rows, PRNG keys, active masks, and every
+    per-lane output — shard over the ("pod","data") batch axes; params and
+    caches use the pytree shardings the engine placed them with
+    (``launch/shardings.py``), so the compiled program never re-lays-out
+    its resident state.  Returns ``(draft_fn, verify_fn)`` with the
+    signatures of the module-level primitives minus the static arguments
+    (closed over here).
+    """
+    B, g = batch_size, gamma_max
+    rep = NamedSharding(mesh, P())
+    lane = functools.partial(lane_sharding, mesh)
+    draft_raw = (draft_session_paged if paged else
+                 draft_session_batched).__wrapped__
+    verify_raw = (verify_session_paged if paged else
+                  verify_session_batched).__wrapped__
+
+    def draft_fn(params, caches, in_tokens, arm_mat, lam, rngs, active):
+        return draft_raw(params, cfg_d, dspec, caches, in_tokens, arm_mat,
+                         lam, rngs, active, arms=arms, gamma_max=g,
+                         temperature=temperature,
+                         n_prompt_tokens=n_prompt_tokens)
+
+    def verify_fn(params, caches, last_tokens, drafted, n_drafted, qprobs,
+                  rngs, active):
+        return verify_raw(params, cfg_t, tspec, caches, last_tokens, drafted,
+                          n_drafted, qprobs, rngs, active, gamma_max=g,
+                          temperature=temperature, greedy=greedy)
+
+    V = cfg_d.vocab_size
+    draft_jit = jax.jit(
+        draft_fn,
+        in_shardings=(dparams_sh, dcache_sh, lane((B, n_prompt_tokens)),
+                      lane((B, g)), rep, lane((B, 2)), lane((B,))),
+        out_shardings=DraftResult(
+            lane((B, g)), lane((B,)), lane((B, g, V)), dcache_sh,
+            lane((B, g)), lane((B, g, SIGNAL_VECTOR_DIM))))
+    verify_jit = jax.jit(
+        verify_fn,
+        in_shardings=(tparams_sh, tcache_sh, lane((B, 1)), lane((B, g)),
+                      lane((B,)), lane((B, g, V)), lane((B, 2)),
+                      lane((B,))),
+        out_shardings=VerifyResult(
+            lane((B,)), lane((B, g + 1)), lane((B,)), tcache_sh))
+    return draft_jit, verify_jit

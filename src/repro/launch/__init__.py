@@ -1,0 +1,36 @@
+"""Launch layer: meshes, sharding rules, abstract input specs, dry-runs.
+
+The device-placement vocabulary for the whole stack (docs/sharding.md):
+``mesh`` builds the production / forced-host-device meshes, ``shardings``
+assigns PartitionSpecs to parameter, cache (dense slot-stacked, paged
+pool, int8-scale) and batch pytrees by path, and ``specs`` provides
+ShapeDtypeStruct stand-ins for the assigned (arch x shape) pairs so
+placement can be decided without allocating.  ``dryrun`` is deliberately
+NOT imported here: importing it mutates ``XLA_FLAGS`` (512 forced host
+devices) and must only ever happen in a dedicated interpreter — run it as
+``python -m repro.launch.dryrun``.
+"""
+from repro.launch.mesh import (HOST_DEVICE_FLAG, forced_host_env,
+                               make_host_mesh, make_production_mesh)
+from repro.launch.shardings import (batch_shardings, cache_shardings,
+                                    cache_spec, paged_cache_shardings,
+                                    paged_cache_spec, param_spec,
+                                    params_shardings, replicated,
+                                    slot_cache_shardings, slot_cache_spec,
+                                    tree_shardings)
+from repro.launch.specs import (SHAPES, PairSpec, abstract_cache,
+                                abstract_params, input_specs, pair_spec)
+
+__all__ = [
+    # meshes
+    "HOST_DEVICE_FLAG", "forced_host_env", "make_host_mesh",
+    "make_production_mesh",
+    # sharding rules
+    "batch_shardings", "cache_shardings", "cache_spec",
+    "paged_cache_shardings", "paged_cache_spec", "param_spec",
+    "params_shardings", "replicated", "slot_cache_shardings",
+    "slot_cache_spec", "tree_shardings",
+    # abstract input specs
+    "SHAPES", "PairSpec", "abstract_cache", "abstract_params",
+    "input_specs", "pair_spec",
+]

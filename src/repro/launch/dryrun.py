@@ -1,16 +1,24 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
 lowers, compiles, fits, and report its roofline terms.
 
-MUST be run as a module/script (never imported by tests — the XLA_FLAGS
-above force 512 host devices before jax initializes).
+MUST be run as a module/script, never imported by tests or library code:
+importing this module sets ``XLA_FLAGS`` to force 512 host devices, which
+only takes effect if jax has not initialized yet — and would silently
+leave a test process at 1 device (or, worse, poison a later jax init in
+the same process) if imported casually.  The env assignment sits below
+this docstring but ABOVE the first ``import jax``, which is what makes
+the trick work while keeping this text the module's real ``__doc__``
+(docs/sharding.md#dryrun).
 
 Usage:
   python -m repro.launch.dryrun --arch gemma-2b --shape decode_32k [--multi-pod]
   python -m repro.launch.dryrun --all            # every pair, both meshes
 """
+import os
+
+# Force 512 virtual host devices BEFORE jax (imported below) initializes.
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import json
 import sys
@@ -30,6 +38,8 @@ from repro.models import transformer as T
 from repro.models.sharding import use_mesh
 from repro.training.optimizer import OptConfig, init_opt_state
 from repro.training.train_loop import make_train_step
+
+__all__ = ["lower_pair", "main"]
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")

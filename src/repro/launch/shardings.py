@@ -1,14 +1,20 @@
 """Parameter / cache / batch PartitionSpec assignment by pytree path.
 
-Logical scheme (DESIGN.md §5):
+Logical scheme (DESIGN.md §5, docs/sharding.md):
   * tensor-parallel axis "model": attention heads, FFN hidden, MoE experts,
     vocab dim of the embedding.
   * FSDP axis ("pod","data"): the other large weight dim (ZeRO-style); for
     single-pod meshes "pod" resolves away, for batch=1 shapes everything
     non-divisible is dropped by ``resolve_spec``.
-  * batch axis ("pod","data") on activations and KV caches.
+  * batch axis ("pod","data") on activations and KV caches; the engines'
+    slot-stacked caches shard their leading SLOT axis over it
+    (``slot_cache_spec``) and paged pools shard heads over "model" with
+    per-stream tables/lengths on the batch axis (``paged_cache_spec``).
 
 Stacked (scan-over-layers) parameters get a leading replicated cycle dim.
+Int8-quantized caches carry ``*_scale`` siblings that shard exactly like
+their payload rows; tree-speculation node buffers reuse the attention
+cache rules (their leaves mirror the cache layout).
 """
 from __future__ import annotations
 
@@ -18,10 +24,18 @@ from typing import Any, Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.models.cache import POOL_LEAF_KEYS
 from repro.models.sharding import resolve_spec
 
 FSDP = ("pod", "data")
 BATCH = ("pod", "data")
+
+__all__ = [
+    "FSDP", "BATCH", "param_spec", "params_shardings", "cache_spec",
+    "cache_shardings", "slot_cache_spec", "slot_cache_shardings",
+    "paged_cache_spec", "paged_cache_shardings", "batch_shardings",
+    "tree_shardings", "replicated",
+]
 
 # (regex over "/"-joined path, spec WITHOUT the stacked-cycle dim)
 _PARAM_RULES: Tuple[Tuple[str, tuple], ...] = (
@@ -79,6 +93,15 @@ def _path_str(path) -> str:
 
 
 def param_spec(path_str: str, shape) -> tuple:
+    # int8-quantized weights (models/quant.py): the "qw" payload keeps its
+    # parent weight's spec; the per-output-channel "scale" (parent shape
+    # minus the contracted d_in axis) keeps the parent's d_out sharding
+    if path_str.endswith("/qw"):
+        return param_spec(path_str[:-len("/qw")], shape)
+    if path_str.endswith("/scale"):
+        parent = param_spec(path_str[:-len("/scale")],
+                            tuple(shape[:-1]) + (1, shape[-1]))
+        return tuple(parent[:-2]) + (parent[-1],)
     stacked = "/stack/" in path_str or path_str.endswith("/stack")
     for pat, spec in _PARAM_RULES:
         if re.search(pat, path_str):
@@ -116,7 +139,10 @@ def params_shardings(mesh: Mesh, params_shape: Any, mode: str = "train") -> Any:
 def cache_spec(path_str: str, shape) -> tuple:
     """KV/state cache sharding: batch over ("pod","data"); for attention
     caches prefer sharding KV heads over "model", else the sequence dim;
-    recurrent state shards its channel/head dim over "model"."""
+    recurrent state shards its channel/head dim over "model".  Int8 caches'
+    ``*_scale`` leaves shard like their payload minus the head_dim axis.
+    Tree node buffers ({"k","v"} (B, Tn, G, D) carries) hit the same rules
+    as the cache rows they mirror."""
     stacked = "/stack/" in path_str
     lead = (None,) if stacked else ()
     if re.search(r"/(k|v)$", path_str):
@@ -124,8 +150,15 @@ def cache_spec(path_str: str, shape) -> tuple:
         if G % 16 == 0:
             return lead + (BATCH, None, "model", None)
         return lead + (BATCH, "model", None, None)
+    if re.search(r"/(k|v)_scale$", path_str):
+        b, L, G = shape[-3:]
+        if G % 16 == 0:
+            return lead + (BATCH, None, "model")
+        return lead + (BATCH, "model", None)
     if re.search(r"/ckv$", path_str) or re.search(r"/krope$", path_str):
         return lead + (BATCH, "model", None)
+    if re.search(r"/(ckv|krope)_scale$", path_str):
+        return lead + (BATCH, "model")
     if re.search(r"/pos$", path_str):
         return lead + (None,) * (len(shape) - len(lead))
     if re.search(r"/conv$", path_str):
@@ -141,6 +174,46 @@ def cache_spec(path_str: str, shape) -> tuple:
 
 def cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
     return tree_shardings(mesh, cache_shape, cache_spec)
+
+
+def slot_cache_spec(path_str: str, shape) -> tuple:
+    """Slot-stacked dense caches (``BatchedSpecEngine``): B per-stream B=1
+    caches stacked on a leading SLOT axis.  The slot axis is the serving
+    batch — shard it over ("pod","data") — and the inner dims follow the
+    single-stream ``cache_spec`` rules (the inner batch dim is 1, so its
+    batch axes resolve away and only "model" head sharding survives)."""
+    return (BATCH,) + tuple(cache_spec(path_str, shape[1:]))
+
+
+def slot_cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+    return tree_shardings(mesh, cache_shape, slot_cache_spec)
+
+
+def paged_cache_spec(path_str: str, shape) -> tuple:
+    """Paged caches (``PagedSpecEngine``): the global block pools carry NO
+    stream axis — any stream's table may point at any physical block, so
+    the pool's block axis must stay whole per shard.  K/V pools (and their
+    int8 scale siblings) shard KV heads over "model"; MLA latent pools are
+    contracted over their latent dim inside absorbed attention and stay
+    replicated.  Per-stream leaves — block tables, lengths, recurrent
+    state — shard over the ("pod","data") batch axes, which is what keeps
+    paged gather/rollback per-shard: a lane's table row lives with the
+    lane."""
+    leaf = path_str.rsplit("/", 1)[-1]
+    if leaf in POOL_LEAF_KEYS:
+        lead = (None,) if "/stack/" in path_str else ()
+        if leaf in ("k", "v"):
+            return lead + (None, None, "model", None)
+        if leaf in ("k_scale", "v_scale"):
+            return lead + (None, None, "model")
+        return (None,) * len(shape)            # MLA latent pools replicated
+    if leaf in ("lengths", "tables"):
+        return (BATCH,) + (None,) * (len(shape) - 1)
+    return cache_spec(path_str, shape)         # per-stream recurrent state
+
+
+def paged_cache_shardings(mesh: Mesh, cache_shape: Any) -> Any:
+    return tree_shardings(mesh, cache_shape, paged_cache_spec)
 
 
 def batch_shardings(mesh: Mesh, batch_shape: Any) -> Any:

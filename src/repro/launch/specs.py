@@ -23,6 +23,9 @@ import jax.numpy as jnp
 from repro.models import ModelConfig
 from repro.models import transformer as T
 
+__all__ = ["SHAPES", "PairSpec", "pair_spec", "input_specs",
+           "abstract_params", "abstract_cache"]
+
 SHAPES = {
     "train_4k": dict(seq_len=4096, batch=256, kind="train"),
     "prefill_32k": dict(seq_len=32768, batch=32, kind="prefill"),

@@ -426,8 +426,14 @@ def attn_tree(params, cfg, x, positions, cache_layer, prev_nodes, node_mask,
     cmask = jnp.broadcast_to(cmask, (S, kpos.shape[0]))          # (Tc, L)
     mask = jnp.concatenate([cmask, node_mask], axis=1)           # (Tc, L+Tn)
     kc, vc = cache_kv(cache_layer, q.dtype)
-    kk = jnp.concatenate([kc, nodes["k"]], axis=1)
-    vv = jnp.concatenate([vc, nodes["v"]], axis=1)
+    # gather [cache rows | node rows] before attending: XLA SPMD miscompiles
+    # a concatenate whose operand is sharded on the concat dim when the
+    # result length is not divisible by the axis (tree verify appends Tn
+    # node rows to the L-row cache), so the concat result must be pinned
+    # replicated — the tree pass is one fused forward, the all-gather is
+    # its natural KV layout anyway
+    kk = constrain(jnp.concatenate([kc, nodes["k"]], axis=1))
+    vv = constrain(jnp.concatenate([vc, nodes["v"]], axis=1))
     out = explicit_mask_sdpa(q, kk, vv, mask, cfg.logits_softcap)
     return qmatmul(out.reshape(B, S, -1), params["wo"]), nodes
 
@@ -453,8 +459,10 @@ def attn_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
     cmask = jnp.broadcast_to(cmask, (B, S, kg.shape[1]))
     nmask = jnp.broadcast_to(node_mask[None], (B,) + node_mask.shape)
     mask = jnp.concatenate([cmask, nmask], axis=2)
-    kk = jnp.concatenate([kg, nodes["k"]], axis=1)
-    vv = jnp.concatenate([vg, nodes["v"]], axis=1)
+    # pin [gathered pages | node rows] replicated (see attn_tree: SPMD
+    # concat-on-sharded-dim miscompile)
+    kk = constrain(jnp.concatenate([kg, nodes["k"]], axis=1))
+    vv = constrain(jnp.concatenate([vg, nodes["v"]], axis=1))
     out = explicit_mask_sdpa(q, kk, vv, mask, cfg.logits_softcap)
     return qmatmul(out.reshape(B, S, -1), params["wo"]), nodes
 

@@ -245,8 +245,12 @@ def mla_tree(params, cfg, x, positions, cache_layer, prev_nodes, node_mask,
     cmask = jnp.broadcast_to(cmask, (S, kpos.shape[0]))          # (Tc, L)
     mask = jnp.concatenate([cmask, node_mask], axis=1)
     ckv_c, krope_c = cache_latents(cache_layer, x.dtype)
-    ckv = jnp.concatenate([ckv_c, nodes["ckv"].astype(x.dtype)], axis=1)
-    krope = jnp.concatenate([krope_c, nodes["krope"].astype(x.dtype)], axis=1)
+    # pin [cache latents | node latents] replicated (see attn_tree: SPMD
+    # concat-on-sharded-dim miscompile)
+    ckv = constrain(jnp.concatenate([ckv_c, nodes["ckv"].astype(x.dtype)],
+                                    axis=1))
+    krope = constrain(jnp.concatenate(
+        [krope_c, nodes["krope"].astype(x.dtype)], axis=1))
     return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
                             mask), nodes
 
@@ -270,8 +274,11 @@ def mla_tree_paged(params, cfg, x, layer_cache, tables, lengths, depths,
                              (B, S, ckv_c.shape[1]))
     nmask = jnp.broadcast_to(node_mask[None], (B,) + node_mask.shape)
     mask = jnp.concatenate([cmask, nmask], axis=2)
-    ckv = jnp.concatenate([ckv_c, nodes["ckv"].astype(x.dtype)], axis=1)
-    krope = jnp.concatenate([krope_c, nodes["krope"].astype(x.dtype)], axis=1)
+    # pin [gathered latents | node latents] replicated (see attn_tree)
+    ckv = constrain(jnp.concatenate([ckv_c, nodes["ckv"].astype(x.dtype)],
+                                    axis=1))
+    krope = constrain(jnp.concatenate(
+        [krope_c, nodes["krope"].astype(x.dtype)], axis=1))
     return _absorbed_attend(params, cfg, q_nope, q_rope, ckv, krope,
                             mask), nodes
 

@@ -48,15 +48,19 @@ def use_mesh(mesh: Optional[Mesh]):
 AxisLike = Union[None, str, Tuple[str, ...]]
 
 
-def _resolve_axis(mesh: Mesh, axis: AxisLike, dim: int) -> AxisLike:
-    """Drop mesh axes that are absent or do not divide ``dim``."""
+def _resolve_axis(mesh: Mesh, axis: AxisLike, dim: int,
+                  used: Optional[set] = None) -> AxisLike:
+    """Drop mesh axes that are absent, do not divide ``dim``, or were
+    already assigned to an earlier dimension of the same spec (a mesh axis
+    may appear at most once per PartitionSpec — size-1 axes would
+    otherwise 'divide' every dim and duplicate)."""
     if axis is None:
         return None
     names = (axis,) if isinstance(axis, str) else tuple(axis)
     kept = []
     size = 1
     for n in names:
-        if n not in mesh.axis_names:
+        if n not in mesh.axis_names or (used is not None and n in used):
             continue
         nsz = mesh.shape[n]
         if dim % (size * nsz) != 0:
@@ -65,12 +69,15 @@ def _resolve_axis(mesh: Mesh, axis: AxisLike, dim: int) -> AxisLike:
         size *= nsz
     if not kept:
         return None
+    if used is not None:
+        used.update(kept)
     return kept[0] if len(kept) == 1 else tuple(kept)
 
 
 def resolve_spec(mesh: Mesh, spec: Sequence[AxisLike], shape: Sequence[int]) -> P:
     axes = list(spec) + [None] * (len(shape) - len(spec))
-    return P(*[_resolve_axis(mesh, a, d) for a, d in zip(axes, shape)])
+    used: set = set()
+    return P(*[_resolve_axis(mesh, a, d, used) for a, d in zip(axes, shape)])
 
 
 def constrain(x, *spec: AxisLike):

@@ -28,6 +28,14 @@ cache pair and ONE jitted batched draft/verify program (compiled once per
   reconciled by the engine's batched rollback, so a masked slot can never
   perturb its neighbors.
 
+* **Sharding** (``mesh=``, docs/sharding.md): the server hands the mesh to
+  its engine, which places params (serve-mode tensor-parallel rules) and
+  caches (slot lanes / paged tables over the ("pod","data") batch axes,
+  pool heads over "model") at init and compiles the batched session
+  programs with NamedSharding in/out shardings.  Admission prefills run
+  against mesh-resident state, so a new stream's lane lands directly on
+  the shard that owns its slot.
+
 All streams share ONE TapOut controller — the bandit is online across
 requests, exactly the paper's deployment setting.  Each tick yields one
 batch of per-stream (arms, n_drafted, n_accepted) observations, consumed by
@@ -76,13 +84,19 @@ class SpecServer:
                  greedy: bool = True, seed: int = 0, paged: bool = False,
                  block_size: int = 64, pool_tokens: Optional[int] = None,
                  tree: bool = False, kv_dtype: Optional[str] = None,
-                 quant_draft: bool = False):
+                 quant_draft: bool = False, mesh=None):
         # quantization knobs (docs/quantization.md) apply to every backend:
         # kv_dtype="int8" stores both models' KV quantized — the same
         # pool_tokens budget costs ~4x fewer bytes (fp32 pools), i.e. ~2x
         # the effective capacity of a bf16 deployment per byte —
         # quant_draft=True swaps the draft for int8 weights with the
-        # precision-scaled modeled cost
+        # precision-scaled modeled cost.
+        # mesh (docs/sharding.md) applies to every backend too: params and
+        # caches are placed at init, slot lanes shard over ("pod","data"),
+        # and admission prefills land on the shard that owns the slot lane
+        # they are written into.  The controller stays host-side: its
+        # per-tick observation merge is order-independent, so bandit state
+        # is identical whatever mesh served the batch.
         if tree:
             # tree-speculation serving: per-slot single-stream caches, ONE
             # shape bandit (chain + tree arms) online across requests; the
@@ -93,7 +107,8 @@ class SpecServer:
             self.engine = TreeSlotEngine(
                 draft, target, controller, batch_size=max_concurrency,
                 max_len=max_len, temperature=temperature, greedy=greedy,
-                kv_dtype=kv_dtype, quant_draft=quant_draft, seed=seed)
+                kv_dtype=kv_dtype, quant_draft=quant_draft, seed=seed,
+                mesh=mesh)
         elif paged:
             # pool_tokens sizes KV memory independently of B x max_len: with
             # short requests the SAME byte budget admits more concurrent
@@ -103,12 +118,14 @@ class SpecServer:
                 max_len=max_len, block_size=block_size,
                 pool_tokens=pool_tokens, temperature=temperature,
                 greedy=greedy, kv_dtype=kv_dtype, quant_draft=quant_draft,
-                seed=seed)
+                seed=seed, mesh=mesh)
         else:
             self.engine = BatchedSpecEngine(
                 draft, target, controller, batch_size=max_concurrency,
                 max_len=max_len, temperature=temperature, greedy=greedy,
-                kv_dtype=kv_dtype, quant_draft=quant_draft, seed=seed)
+                kv_dtype=kv_dtype, quant_draft=quant_draft, seed=seed,
+                mesh=mesh)
+        self.mesh = mesh
         self.paged = paged
         self.tree = tree
         self.gamma_max = controller.gamma_max
@@ -218,6 +235,10 @@ class SpecServer:
             "peak_concurrency": self.peak_concurrency,
             "backpressure_events": self.backpressure_events,
         }
+        if self.mesh is not None:
+            stats["mesh_devices"] = int(self.mesh.devices.size)
+            stats["mesh_axes"] = {k: int(v)
+                                  for k, v in self.mesh.shape.items()}
         if self.paged:
             stats.update(self.engine.pool_stats())
         if self.tree:

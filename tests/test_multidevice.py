@@ -1,0 +1,281 @@
+"""Multi-device parity suite (docs/sharding.md).
+
+Runs when the process sees >= 8 devices — CI's multi-device lane forces
+them with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before
+pytest starts; on a normal 1-device run every in-process test here skips
+and only the subprocess-based ``slow`` test executes.
+
+The invariants (docs/sharding.md#numerics):
+
+* DATA-PARALLEL sharding is bitwise — per-lane arithmetic is untouched,
+  so greedy outputs are IDENTICAL to the unsharded engines on every
+  backend (dense/paged x chain/tree, fp and int8), and paged==dense
+  still holds;
+* TENSOR-PARALLEL ("model" axis) reorders reductions, which perturbs
+  logits at the ulp level — the TP tests assert logit agreement to float
+  tolerance and that the full workload serves end to end (an exact-token
+  assertion would hinge on genuine near-ties of the random test model;
+  int8 KV quantization amplifies those ulps to full quant steps at write
+  time);
+* the host-side bandit sees the same observations either way, so its
+  state after sharded serving equals the host-only path's.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ModelBundle, make_controller
+from repro.core.controller import TapOutTreeSequence
+from repro.launch.mesh import forced_host_env, make_host_mesh
+from repro.models import ModelConfig
+from repro.models import transformer as T
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+multidev = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def pair():
+    """Smaller than conftest's tiny_dense_pair: every test here compiles
+    its programs twice (sharded + unsharded)."""
+    V = 61
+    tcfg = ModelConfig(name="md_tgt", arch_type="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                       vocab_size=V)
+    dcfg = ModelConfig(name="md_drf", arch_type="dense", num_layers=1,
+                       d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
+                       vocab_size=V)
+    return (ModelBundle(T.init_params(dcfg, jax.random.PRNGKey(1)), dcfg),
+            ModelBundle(T.init_params(tcfg, jax.random.PRNGKey(0)), tcfg))
+
+
+PROMPTS = [[1, 5, 9, 13], [2, 6, 10, 14], [3, 7, 11, 15]]
+
+
+def _controller(tree: bool):
+    if tree:
+        return TapOutTreeSequence(6, "ucb1", "simple", seed=0)
+    return make_controller("tapout_seq_ucb1", gamma_max=4, seed=0)
+
+
+def _serve(pair, mesh=None, tree=False, ticks=None, max_new=6, **kw):
+    from repro.serving.engine import SpecServer
+    draft, target = pair
+    ctrl = _controller(tree)
+    srv = SpecServer(draft, target, ctrl, max_len=128, max_concurrency=2,
+                     mesh=mesh, tree=tree, **kw)
+    for p in PROMPTS:
+        srv.submit(p, max_new)
+    if ticks is None:
+        srv.run_until_drained()
+    else:
+        for _ in range(ticks):
+            srv.step()
+    outs = [r.result.tokens
+            for r in sorted(srv.responses, key=lambda r: r.request_id)]
+    return outs, ctrl, srv
+
+
+# ------------------------------------------------------- batched engine
+
+@multidev
+def test_sharded_batched_engine_matches_unsharded(pair):
+    """B=4 BatchedSpecEngine with each slot lane on its own device
+    (data=4) produces the exact greedy outputs of the meshless engine,
+    slot for slot — data-parallel sharding is bitwise."""
+    from repro.core.engine import BatchedSpecEngine
+    prompts = PROMPTS + [[4, 8, 12, 16]]
+
+    def run(mesh):
+        draft, target = pair
+        eng = BatchedSpecEngine(draft, target,
+                                make_controller("tapout_seq_ucb1",
+                                                gamma_max=4, seed=0),
+                                batch_size=4, max_len=128, mesh=mesh)
+        for s, p in enumerate(prompts):
+            eng.open_stream(s, list(p))
+        for _ in range(4):
+            eng.session_step_batch()
+        return [list(eng.slots[s]["seq"]) for s in range(4)]
+
+    base = run(None)
+    sharded = run(make_host_mesh(data=4))
+    assert base == sharded
+
+
+# ------------------------------------------------------- paged == dense
+
+@multidev
+def test_paged_equals_dense_under_2x2_mesh(pair):
+    """The paged==dense invariant survives sharding: both backends on the
+    same 2x2 mesh drain the same workload to identical outputs."""
+    mesh = make_host_mesh(data=2, model=2)
+    dense, _, _ = _serve(pair, mesh=mesh)
+    paged, _, _ = _serve(pair, mesh=mesh, paged=True, block_size=16,
+                         pool_tokens=512)
+    assert dense == paged
+
+
+# ------------------------------------------------------- bandit equality
+
+@multidev
+def test_bandit_state_equal_after_sharded_tick(pair):
+    """TapOut's policy layer is sharding-invariant: after serving ticks on
+    a (4,2) mesh the ONE host-side bandit holds exactly the state the
+    host-only path produces (same observations, same order-independent
+    merge)."""
+    _, ctrl_host, _ = _serve(pair, ticks=2)
+    _, ctrl_mesh, _ = _serve(pair, mesh=make_host_mesh(data=4, model=2),
+                             ticks=2)
+    a, b = ctrl_host.bandit.state_dict(), ctrl_mesh.bandit.state_dict()
+    assert a["t"] == b["t"]
+    np.testing.assert_array_equal(a["counts"], b["counts"])
+    np.testing.assert_allclose(a["means"], b["means"], rtol=0, atol=0)
+    np.testing.assert_allclose(a["m2"], b["m2"], rtol=0, atol=0)
+
+
+# ------------------------------------------------------- backend matrix
+
+BACKENDS = {
+    "dense_fp": dict(),
+    "paged_int8kv": dict(paged=True, block_size=16, pool_tokens=512,
+                         kv_dtype="int8"),
+    "tree_int8kv": dict(tree=True, kv_dtype="int8"),
+}
+
+SLOW_BACKENDS = {
+    "dense_int8kv": dict(kv_dtype="int8"),
+    "dense_qdraft": dict(quant_draft=True),
+    "paged_fp": dict(paged=True, block_size=16, pool_tokens=512),
+    "paged_qdraft": dict(paged=True, block_size=16, pool_tokens=512,
+                         quant_draft=True),
+    "tree_fp": dict(tree=True),
+}
+
+
+def _backend_parity(pair, kw, check_stats=False):
+    """Exact output parity on a data-parallel mesh (slot lanes sharded
+    2-way, per-lane numerics bitwise — see module docstring)."""
+    kw = dict(kw)
+    tree = kw.pop("tree", False)
+    base, _, _ = _serve(pair, tree=tree, **kw)
+    sharded, _, srv = _serve(pair, mesh=make_host_mesh(data=2),
+                             tree=tree, **kw)
+    assert base == sharded
+    if check_stats:
+        stats = srv.throughput_stats()
+        assert stats["mesh_devices"] == 2
+        assert stats["mesh_axes"] == {"data": 2, "model": 1}
+
+
+@multidev
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_server_backend_sharded_matches_unsharded(pair, backend):
+    _backend_parity(pair, BACKENDS[backend], check_stats=True)
+
+
+@multidev
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", sorted(SLOW_BACKENDS))
+def test_server_backend_sharded_matches_unsharded_full(pair, backend):
+    _backend_parity(pair, SLOW_BACKENDS[backend])
+
+
+# ------------------------------------------------- tensor-parallel mesh
+
+@multidev
+def test_tensor_parallel_mesh_logits_agree_and_serve(pair):
+    """On the full (4, 2) data x model mesh: single-step logits agree with
+    the unsharded model to float tolerance (TP reduction reordering is
+    ulp-level, not structural), and the server drains the whole workload
+    on a dense AND a paged backend with complete responses."""
+    import jax.numpy as jnp
+    from repro.models.sharding import use_mesh
+    from repro.launch.shardings import cache_shardings, params_shardings
+
+    mesh = make_host_mesh(data=4, model=2)
+    _, target = pair
+    cache, spec = T.init_cache(target.cfg, 1, 128, jnp.float32)
+    toks = jnp.asarray([PROMPTS[0]], jnp.int32)
+    lg0, _ = jax.jit(lambda p, t, c: T.step(p, target.cfg, t, c, spec,
+                                            all_logits=True))(
+        target.params, toks, cache)
+    pp = jax.device_put(target.params,
+                        params_shardings(mesh, target.params, mode="serve"))
+    cc = jax.device_put(cache, cache_shardings(mesh, cache))
+    with use_mesh(mesh):
+        lg1, _ = jax.jit(lambda p, t, c: T.step(p, target.cfg, t, c, spec,
+                                                all_logits=True))(pp, toks, cc)
+    np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1), atol=2e-5)
+
+    for kw in (dict(), dict(paged=True, block_size=16, pool_tokens=512)):
+        outs, _, srv = _serve(pair, mesh=mesh, **kw)
+        assert len(outs) == len(PROMPTS)
+        assert all(len(o) >= len(p) + 6 for o, p in zip(outs, PROMPTS))
+        assert srv.throughput_stats()["mesh_axes"] == {"data": 4, "model": 2}
+
+
+# ------------------------------------------------------- pool stats
+
+@multidev
+def test_paged_pool_stats_report_per_shard_bytes(pair):
+    _, _, srv = _serve(pair, mesh=make_host_mesh(data=4, model=2),
+                       paged=True, block_size=16, pool_tokens=512)
+    stats = srv.engine.pool_stats()
+    assert stats["mesh_devices"] == 8
+    assert 0 < stats["cache_pool_bytes_per_shard"] <= stats["cache_pool_bytes"]
+
+
+# ------------------------------------------------- subprocess fallback
+
+_SUBPROC = """
+import jax, numpy as np
+assert len(jax.devices()) == 8, jax.devices()
+from repro.core import ModelBundle, make_controller
+from repro.launch.mesh import make_host_mesh
+from repro.models import ModelConfig
+from repro.models import transformer as T
+from repro.serving.engine import SpecServer
+
+V = 61
+tcfg = ModelConfig(name="tgt", arch_type="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=V)
+dcfg = ModelConfig(name="drf", arch_type="dense", num_layers=1, d_model=32,
+                   num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=V)
+draft = ModelBundle(T.init_params(dcfg, jax.random.PRNGKey(1)), dcfg)
+target = ModelBundle(T.init_params(tcfg, jax.random.PRNGKey(0)), tcfg)
+
+def serve(mesh):
+    srv = SpecServer(draft, target,
+                     make_controller("tapout_seq_ucb1", gamma_max=4, seed=0),
+                     max_len=128, max_concurrency=2, mesh=mesh)
+    for p in [[1, 5, 9, 13], [2, 6, 10, 14]]:
+        srv.submit(p, 6)
+    srv.run_until_drained()
+    return [r.result.tokens
+            for r in sorted(srv.responses, key=lambda r: r.request_id)]
+
+base = serve(None)
+sharded = serve(make_host_mesh(data=2))     # data-parallel: bitwise parity
+assert base == sharded, (base, sharded)
+print("SHARDED_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_server_parity_subprocess():
+    """Fallback that runs even when this process has 1 device: spawn a
+    fresh interpreter with 8 forced host devices (``forced_host_env``) and
+    assert sharded == unsharded greedy serving outputs inside it."""
+    env = forced_host_env(8)
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "SHARDED_PARITY_OK" in r.stdout, r.stdout + "\n" + r.stderr
