@@ -6,7 +6,8 @@ import numpy as np
 
 from .common import (GAMMA_MAX, calibrated_pool, calibrated_thresholds,
                      evaluate_method, get_corpus, save_json, trained_pair)
-from repro.core import SpecEngine, StaticGamma, TapOutSequence, make_controller
+from repro.core import (EngineSpec, StaticGamma, TapOutSequence,
+                        make_controller, make_engine)
 
 ARMS = ["max_confidence", "svip", "adaedl", "svip_difference", "logit_margin"]
 
@@ -20,7 +21,8 @@ def run(quick: bool = False) -> dict:
                    corpus.prompts(dataset, 3 if quick else 6, seed=31)]
         pool = calibrated_pool("llama-1b-8b")
         ctrl = TapOutSequence(GAMMA_MAX, "ucb1", "blend", pool=pool)
-        eng = SpecEngine(draft, target, ctrl, max_len=512)
+        eng = make_engine(draft, target, ctrl,
+                          EngineSpec(backend="single", max_len=512))
         progression = []
         for ids in prompts:
             eng.generate(ids, 40 if quick else 72)

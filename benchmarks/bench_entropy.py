@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from .common import GAMMA_MAX, get_corpus, save_json, trained_pair
-from repro.core import SpecEngine, StaticGamma
+from repro.core import EngineSpec, StaticGamma, make_engine
 
 
 def run(quick: bool = False) -> dict:
@@ -15,7 +15,8 @@ def run(quick: bool = False) -> dict:
     buckets = {}
     for label, dataset in (("coding", "humaneval"), ("non-coding", "mt_bench")):
         per_pos = [[] for _ in range(GAMMA_MAX)]
-        eng = SpecEngine(draft, target, StaticGamma(gamma=GAMMA_MAX), max_len=512)
+        eng = make_engine(draft, target, StaticGamma(gamma=GAMMA_MAX),
+                          EngineSpec(backend="single", max_len=512))
         eng.collect_traces = True
         for _, ids in corpus.prompts(dataset, n, seed=7):
             r = eng.generate(ids[:48], 48 if quick else 80)

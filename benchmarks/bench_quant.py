@@ -43,14 +43,15 @@ def _serve_paged(draft, target, prompts, *, max_new: int, gamma_max: int,
     all of which is wrong for a byte-footprint + output-parity comparison
     — this one drains once with a fixed stop rule and keeps the tokens.
     """
-    from repro.core import make_controller
+    from repro.core import EngineSpec, make_controller
     from repro.serving.engine import SpecServer
     srv = SpecServer(draft, target,
                      make_controller("fixed_svip", gamma_max=gamma_max,
                                      seed=0),
-                     max_len=max_len, max_concurrency=4, paged=True,
-                     block_size=16, pool_tokens=pool_tokens,
-                     kv_dtype=kv_dtype)
+                     spec=EngineSpec(backend="paged", batch_size=4,
+                                     max_len=max_len, block_size=16,
+                                     pool_tokens=pool_tokens,
+                                     kv_dtype=kv_dtype))
     for p in prompts:
         srv.submit(p, max_new)
     srv.run_until_drained(max_ticks=2000)

@@ -22,7 +22,7 @@ pool must come in at no more bytes than the fp pool while sustaining at
 least its concurrency (``claim_int8_kv_doubles_capacity_per_byte``).
 
 The SHARDED rows (docs/sharding.md) serve the SAME workload on forced
-host devices at increasing device counts — ``SpecServer(mesh=
+host devices at increasing device counts — ``EngineSpec(mesh=
 make_host_mesh(data=n))``, one subprocess per count because the XLA
 device-count flag binds at jax init.  Tokens/s per count is recorded for
 the trajectory (virtual CPU devices: informational, not a speedup
@@ -94,8 +94,8 @@ def _serve(draft, target, prompts, *, batch_size: int, max_new: int,
            gamma_max: int, max_len: int, seed: int = 0,
            repeats: int = 2, paged: bool = False,
            pool_tokens: int = 0, block_size: int = 16,
-           kv_dtype=None) -> dict:
-    from repro.core import make_controller
+           kv_dtype=None, fused: bool = True) -> dict:
+    from repro.core import EngineSpec, make_controller
     from repro.serving.engine import SpecServer
 
     def drain(server, reqs):
@@ -108,11 +108,12 @@ def _serve(draft, target, prompts, *, batch_size: int, max_new: int,
     # warmup drain: compiles the batched session program for this B plus
     # both prefill shapes (chunk + single; the long prompt covers the chunk)
     ctrl = make_controller("tapout_seq_ucb1", gamma_max=gamma_max, seed=seed)
-    kw = dict(paged=True, pool_tokens=pool_tokens,
-              block_size=block_size) if paged else {}
-    srv = SpecServer(draft, target, ctrl, max_len=max_len,
-                     max_concurrency=batch_size, seed=seed,
-                     kv_dtype=kv_dtype, **kw)
+    spec = EngineSpec(backend="paged" if paged else "batched",
+                      batch_size=batch_size, max_len=max_len, seed=seed,
+                      kv_dtype=kv_dtype, fused=fused,
+                      pool_tokens=pool_tokens if paged else None,
+                      block_size=block_size)
+    srv = SpecServer(draft, target, ctrl, spec=spec)
     warm = [list(range(1, 40))] + prompts[:min(batch_size, len(prompts)) - 1]
     drain(srv, warm)
     srv.responses.clear()
@@ -128,11 +129,16 @@ def _serve(draft, target, prompts, *, batch_size: int, max_new: int,
         wall = drain(srv, prompts)
         stats = srv.throughput_stats()
         srv.responses.clear()
-        stats["batch_size"] = batch_size
         stats["wall_s"] = wall
         stats["tokens_per_s"] = stats["total_new_tokens"] / max(wall, 1e-9)
         if not paged:
             stats["cache_kv_bytes"] = _dense_kv_bytes(srv)
+        # every row carries the settings that produced it (stable schema:
+        # the engine's canonical describe() blob, hoisted for flat readers)
+        eng = stats["engine"]
+        stats.update(batch_size=eng["batch_size"], backend=eng["backend"],
+                     devices=eng["devices"], kv_dtype=eng["kv_dtype"],
+                     fused=eng["fused"])
         if best is None or stats["tokens_per_s"] > best["tokens_per_s"]:
             best = stats
     return best
@@ -146,7 +152,7 @@ _SHARDED_CHILD = """
 import json, sys, time
 import jax
 from benchmarks.bench_serving_batch import _tiny_pair, _workload
-from repro.core import make_controller
+from repro.core import EngineSpec, make_controller
 from repro.launch.mesh import make_host_mesh
 from repro.serving.engine import SpecServer
 
@@ -158,8 +164,9 @@ mesh = make_host_mesh(data=cfg["devices"])
 srv = SpecServer(draft, target,
                  make_controller("tapout_seq_ucb1",
                                  gamma_max=cfg["gamma_max"], seed=0),
-                 max_len=cfg["max_len"], max_concurrency=cfg["batch_size"],
-                 mesh=mesh, seed=0)
+                 spec=EngineSpec(backend="batched",
+                                 batch_size=cfg["batch_size"],
+                                 max_len=cfg["max_len"], mesh=mesh))
 
 def drain(reqs):
     for p in reqs:
@@ -174,12 +181,17 @@ wall = drain(prompts)
 resp = sorted(srv.responses, key=lambda r: r.request_id)
 toks = sum(r.result.new_tokens for r in resp)
 st = srv.engine.controller.bandit.state_dict()
+eng = srv.engine.describe()
 print("SHARDED_ROW " + json.dumps({
     "devices": len(jax.devices()),
     "mesh_axes": {k: int(v) for k, v in mesh.shape.items()},
     "wall_s": wall,
     "tokens_per_s": toks / max(wall, 1e-9),
     "total_new_tokens": toks,
+    "engine": eng,
+    "backend": eng["backend"],
+    "batch_size": eng["batch_size"],
+    "kv_dtype": eng["kv_dtype"],
     "arm_trace": [[s.arm for s in r.result.sessions] for r in resp],
     "bandit_counts": st["counts"].tolist(),
     "bandit_t": int(st["t"]),
@@ -245,6 +257,22 @@ def run(quick: bool = False, smoke: bool = False,
     base = rows[min(batch_sizes)]["tokens_per_s"]
     b_claim = 4 if 4 in rows else max(batch_sizes)
 
+    # ---- ragged regression gate: the length-aware ragged kernels + fused
+    # single-dispatch tick exist precisely so that adding lanes cannot COST
+    # throughput (padded-lane compute and per-tick host round-trips were
+    # what made B=2 flap below B=1) — so tokens/s must be monotone
+    # non-decreasing in B, with a small tolerance for timer noise on
+    # shared CI runners.  Deterministic-ish (best-of-repeats), gates every
+    # mode including --smoke.
+    order = sorted(batch_sizes)
+    speeds = [rows[b]["tokens_per_s"] for b in order]
+    claim_monotone = bool(all(rows[b]["fused"] for b in order) and
+                          all(b >= a * 0.95
+                              for a, b in zip(speeds, speeds[1:])))
+    trend = "  ".join("B=%d:%.1f" % (b, s) for b, s in zip(order, speeds))
+    print(f"  claim_ragged_monotone_in_b={claim_monotone}  ({trend})",
+          file=sys.stderr)
+
     # ---- paged row: SAME token budget as the dense claim-B run, wider slot
     # pool; short requests reserve only what they need, so the paged server
     # must sustain more concurrent streams than B_dense from those bytes
@@ -305,6 +333,7 @@ def run(quick: bool = False, smoke: bool = False,
         # headline: B=4 batched vs draining the same workload at B=1
         "claim_batched_beats_sequential":
             bool(rows[b_claim]["tokens_per_s"] > base),
+        "claim_ragged_monotone_in_b": claim_monotone,
         "speedup_vs_b1": {str(b): rows[b]["tokens_per_s"] / max(base, 1e-9)
                           for b in batch_sizes},
         "paged": paged,
@@ -325,8 +354,10 @@ def run(quick: bool = False, smoke: bool = False,
         "p95_latency_s": {str(b): rows[b]["p95_latency_s"]
                           for b in batch_sizes},
         "speedup_vs_b1": payload["speedup_vs_b1"],
+        "engine": {str(b): rows[b]["engine"] for b in batch_sizes},
         "claim_batched_beats_sequential":
             payload["claim_batched_beats_sequential"],
+        "claim_ragged_monotone_in_b": claim_monotone,
         "paged": {"tokens_per_s": paged["tokens_per_s"],
                   "peak_concurrency": paged["peak_concurrency"],
                   "cache_pool_bytes": paged["cache_pool_bytes"],
@@ -355,14 +386,19 @@ if __name__ == "__main__":
     args = ap.parse_args()
     payload = run(quick=args.quick, smoke=args.smoke)
     ok = payload["claim_batched_beats_sequential"]
+    ok_monotone = payload["claim_ragged_monotone_in_b"]
     ok_paged = payload["claim_paged_admits_more"]
     ok_sharded = payload["claim_sharded_bandit_invariant"]
     print(f"claim_batched_beats_sequential={ok}")
+    print(f"claim_ragged_monotone_in_b={ok_monotone}")
     print(f"claim_paged_admits_more={ok_paged}")
     print(f"claim_sharded_bandit_invariant={ok_sharded}")
     # --smoke is an artifact-producing CI exercise of the serving path; a
-    # seconds-scale TIMING comparison on a noisy shared runner must not
-    # gate the build.  The paged-admission and sharded-bandit-invariance
-    # claims are deterministic (they count streams / compare arm ids, not
-    # seconds) and gate every mode.
-    sys.exit(0 if ((ok or args.smoke) and ok_paged and ok_sharded) else 1)
+    # seconds-scale TIMING comparison across DISTINCT workloads must not
+    # gate the build there.  The monotone-in-B gate DOES gate every mode:
+    # it compares the same workload against itself at growing B, which the
+    # ragged+fused tick must never make slower (best-of-repeats + 5%
+    # tolerance absorb runner noise).  The paged-admission and sharded-
+    # bandit-invariance claims are deterministic and gate every mode.
+    sys.exit(0 if ((ok or args.smoke) and ok_monotone and ok_paged
+                   and ok_sharded) else 1)

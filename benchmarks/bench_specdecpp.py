@@ -8,7 +8,7 @@ import numpy as np
 
 from .common import (GAMMA_MAX, evaluate_method, get_corpus, run_method_suite,
                      save_json, trained_pair)
-from repro.core import SpecEngine, StaticGamma
+from repro.core import EngineSpec, StaticGamma, make_engine
 from repro.core.controller import Controller
 from repro.core.specdecpp import (collect_from_traces, make_specdecpp_arm,
                                   train_classifier)
@@ -30,7 +30,8 @@ def run(quick: bool = False) -> dict:
 
     # --- train the classifier on calibration traces (alpaca analog)
     traces = []
-    eng = SpecEngine(draft, target, StaticGamma(gamma=8), max_len=512)
+    eng = make_engine(draft, target, StaticGamma(gamma=8),
+                      EngineSpec(backend="single", max_len=512))
     eng.collect_traces = True
     for _, ids in corpus.prompts("alpaca", 4 if quick else 10, seed=23):
         r = eng.generate(ids[:48], 48 if quick else 64)

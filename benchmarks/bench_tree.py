@@ -87,9 +87,9 @@ def _workload(n_prompts: int, seed: int = 0) -> List[List[int]]:
 
 
 def _run_engine(draft, target, controller, prompts, max_new, max_len, seed):
-    from repro.core import TreeSpecEngine
-    eng = TreeSpecEngine(draft, target, controller, max_len=max_len,
-                         seed=seed)
+    from repro.core import EngineSpec, make_engine
+    eng = make_engine(draft, target, controller,
+                      EngineSpec(backend="tree", max_len=max_len, seed=seed))
     acc = drafted = sessions = new = 0
     cost = 0.0
     t0 = time.perf_counter()

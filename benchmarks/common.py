@@ -21,8 +21,8 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.registry import PAIR_COST_RATIO, PAPER_PAIRS, paper_pair
-from repro.core import (FixedArm, ModelBundle, SpecEngine, StaticGamma,
-                        make_controller)
+from repro.core import (EngineSpec, FixedArm, ModelBundle, StaticGamma,
+                        make_controller, make_engine)
 from repro.core.controller import Controller
 from repro.data.synthetic import SyntheticCorpus
 from repro.models import transformer as T
@@ -105,7 +105,8 @@ BASELINE_GRIDS = {
 
 def _collect_calibration_traces(draft, target, n_prompts=4, max_new=48):
     corpus = get_corpus()
-    eng = SpecEngine(draft, target, StaticGamma(gamma=8), max_len=512)
+    eng = make_engine(draft, target, StaticGamma(gamma=8),
+                      EngineSpec(backend="single", max_len=512))
     eng.collect_traces = True
     traces = []
     for _, ids in corpus.prompts("alpaca", n_prompts, seed=101):
@@ -200,14 +201,15 @@ def evaluate_method(draft: ModelBundle, target: ModelBundle,
                     max_new: int = 64, max_len: int = 1024, seed: int = 0,
                     engine_kwargs: Optional[Dict] = None) -> MethodResult:
     """Drain ``prompts`` through a single-stream engine and aggregate the
-    paper metrics.  ``engine_kwargs`` reach ``SpecEngine`` directly — the
+    paper metrics.  ``engine_kwargs`` become ``EngineSpec`` fields — the
     quantization axes (``kv_dtype="int8"``, ``quant_draft=True``) ride
     through here so every bench compares precisions under one harness; a
     quantized draft's cheaper ``cost_per_token``
     (``core.rewards.precision_cost_factor``) flows into
     ``cost_per_token`` below via the engine's modeled session cost."""
-    eng = SpecEngine(draft, target, controller, max_len=max_len, seed=seed,
-                     **(engine_kwargs or {}))
+    eng = make_engine(draft, target, controller,
+                      EngineSpec(backend="single", max_len=max_len, seed=seed,
+                                 **(engine_kwargs or {})))
     tot_acc = tot_draft = tot_sessions = tot_new = 0
     cost = wall = 0.0
     for ids in prompts:

@@ -14,7 +14,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro.configs.registry import ARCH_IDS, smoke_config
-from repro.core import ModelBundle, SpecEngine, make_controller
+from repro.core import EngineSpec, ModelBundle, make_controller, make_engine
 from repro.models import transformer as T
 
 
@@ -34,7 +34,8 @@ def main():
     target = ModelBundle(T.init_params(tcfg, jax.random.PRNGKey(0)), tcfg)
     draft = ModelBundle(T.init_params(dcfg, jax.random.PRNGKey(1)), dcfg)
     ctrl = make_controller("tapout_seq_ucb1", gamma_max=8)
-    eng = SpecEngine(draft, target, ctrl, max_len=256)
+    eng = make_engine(draft, target, ctrl,
+                      EngineSpec(backend="single", max_len=256))
     print(f"arch family: {tcfg.arch_type}; pointer-rollback caches: "
           f"draft={eng.draft_cheap} target={eng.target_cheap}")
     kw = {}

@@ -10,7 +10,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import get_corpus, trained_pair
-from repro.core import SpecEngine, make_controller
+from repro.core import EngineSpec, make_controller, make_engine
 from repro.data.tokenizer import ByteTokenizer
 
 
@@ -20,7 +20,8 @@ def main():
     tok = ByteTokenizer()
     corpus = get_corpus()
     controller = make_controller("tapout_seq_ucb1", gamma_max=16)
-    engine = SpecEngine(draft, target, controller, max_len=1024)
+    engine = make_engine(draft, target, controller,
+                         EngineSpec(backend="single", max_len=1024))
 
     for kind, ids in corpus.prompts("humaneval", 2, seed=5):
         res = engine.generate(ids[:64], 96)

@@ -12,13 +12,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import get_corpus, trained_pair
-from repro.core import StaticGamma, make_controller
+from repro.core import EngineSpec, StaticGamma, make_controller
 from repro.serving.engine import SpecServer
 
 
 def serve(controller, draft, target, prompts, max_new):
-    srv = SpecServer(draft, target, controller, max_len=1024,
-                     max_concurrency=4)
+    srv = SpecServer(draft, target, controller,
+                     spec=EngineSpec(batch_size=4, max_len=1024))
     for ids in prompts:
         srv.submit(ids, max_new)
     srv.run_until_drained()

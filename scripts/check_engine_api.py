@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Lint: new code must build engines through the factory API.
+
+Two rules, enforced over ``src/repro``, ``benchmarks``, ``scripts`` and
+``examples`` (NOT ``tests/`` — the suite deliberately exercises both the
+concrete classes and the deprecated kwarg shim):
+
+1. No direct construction of the concrete engine classes (``SpecEngine``,
+   ``BatchedSpecEngine``, ``PagedSpecEngine``, ``TreeSpecEngine``,
+   ``TreeSlotEngine``) outside ``core/engine.py`` — that file owns them
+   and ``make_engine`` is the one public way in.  Mentioning the names
+   (imports, isinstance, type hints) is fine; CALLING them is not.
+2. No ``SpecServer(...)`` call without ``spec=`` — the keyword surface
+   (``max_concurrency=``, ``paged=``, ``tree=``, ...) is deprecated and
+   only kept alive for out-of-repo callers (docs/serving.md has the
+   migration table).
+
+Exit 1 with file:line diagnostics on any violation; wired into the CI
+lint lane so a regression to the old construction paths fails the build.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SCAN_DIRS = ("src/repro", "benchmarks", "scripts", "examples")
+ENGINE_OWNER = os.path.join("src", "repro", "core", "engine.py")
+SERVER_OWNER = os.path.join("src", "repro", "serving", "engine.py")
+ENGINE_CLASSES = ("SpecEngine", "BatchedSpecEngine", "PagedSpecEngine",
+                  "TreeSpecEngine", "TreeSlotEngine")
+CALL_RE = re.compile(r"\b(" + "|".join(ENGINE_CLASSES) + r")\s*\(")
+SERVER_RE = re.compile(r"\bSpecServer\s*\(")
+
+
+def _py_files():
+    for d in SCAN_DIRS:
+        base = os.path.join(ROOT, d)
+        for dirpath, _, names in os.walk(base):
+            for n in sorted(names):
+                if n.endswith(".py"):
+                    yield os.path.join(dirpath, n)
+
+
+def _call_span(text: str, open_paren: int) -> str:
+    """The argument text of the call whose ``(`` is at ``open_paren``."""
+    depth = 0
+    for i in range(open_paren, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return text[open_paren:i + 1]
+    return text[open_paren:]
+
+
+def check_file(path: str) -> list:
+    rel = os.path.relpath(path, ROOT)
+    src = open(path).read()
+    problems = []
+    if not rel.endswith(ENGINE_OWNER):
+        for m in CALL_RE.finditer(src):
+            # a class STATEMENT (``class SpecEngine(...)``) is a definition,
+            # not a construction; everything else that calls the name is
+            line_start = src.rfind("\n", 0, m.start()) + 1
+            prefix = src[line_start:m.start()]
+            if prefix.lstrip().startswith("class "):
+                continue
+            line = src.count("\n", 0, m.start()) + 1
+            problems.append(
+                f"{rel}:{line}: direct {m.group(1)}(...) construction — "
+                f"use make_engine(draft, target, controller, EngineSpec(...))")
+    # the server module itself only mentions the legacy call shape inside
+    # its own DeprecationWarning message — skip the owner
+    for m in (() if rel.endswith(SERVER_OWNER) else SERVER_RE.finditer(src)):
+        span = _call_span(src, m.end() - 1)
+        if "spec=" not in span and "spec =" not in span:
+            line = src.count("\n", 0, m.start()) + 1
+            problems.append(
+                f"{rel}:{line}: SpecServer(...) without spec= — the legacy "
+                f"kwarg surface is deprecated; pass spec=EngineSpec(...)")
+    return problems
+
+
+def main() -> int:
+    problems = []
+    for path in _py_files():
+        if os.path.abspath(path) == os.path.abspath(__file__):
+            continue
+        problems.extend(check_file(path))
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"\n{len(problems)} engine-API violation(s).", file=sys.stderr)
+        return 1
+    print("engine-API lint: OK "
+          f"({sum(1 for _ in _py_files())} files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

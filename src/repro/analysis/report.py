@@ -13,11 +13,12 @@ import json
 import os
 from collections import defaultdict
 
-__all__ = ["dryrun_section", "roofline_section", "bench_section", "build",
-           "main"]
+__all__ = ["dryrun_section", "roofline_section", "bench_section",
+           "serving_section", "build", "main"]
 
 ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
 ART = os.path.join(ROOT, "artifacts")
+BENCH_SERVING = os.path.join(ROOT, "BENCH_serving.json")
 
 ARCH_ORDER = ["deepseek-v2-lite-16b", "gemma-2b", "qwen3-4b",
               "recurrentgemma-2b", "qwen3-moe-235b-a22b", "mamba2-1.3b",
@@ -227,11 +228,55 @@ quantiles, no performance feedback).
     return "\n".join(lines)
 
 
+def serving_section() -> str:
+    """Latest serving-bench trajectory from the committed
+    ``BENCH_serving.json`` — reads ONLY the canonical row schema
+    (``tokens_per_s`` keyed by B, the ``engine`` describe() blob, and the
+    ``claim_*`` gates; docs/serving.md#canonical-stats)."""
+    lines = ["## §Serving", ""]
+    if not os.path.exists(BENCH_SERVING):
+        lines.append("_no serving runs recorded yet_")
+        return "\n".join(lines)
+    try:
+        runs = json.load(open(BENCH_SERVING)).get("runs", [])
+    except (ValueError, OSError):
+        runs = []
+    latest = {}
+    for r in runs:                      # last run per bench wins
+        latest[r.get("bench", "?")] = r
+    if not latest:
+        lines.append("_no serving runs recorded yet_")
+        return "\n".join(lines)
+    lines += ["| bench | recorded | tokens/s by B | backend | gates |",
+              "|---|---|---|---|---|"]
+    for name in sorted(latest):
+        r = latest[name]
+        s = r.get("summary", {})
+        tps = s.get("tokens_per_s", {})
+        trend = "  ".join(f"{b}:{v:.1f}" for b, v in sorted(
+            tps.items(), key=lambda kv: int(kv[0])))
+        engines = s.get("engine", {})
+        any_engine = next(iter(engines.values()), {}) if engines else {}
+        backend = any_engine.get("backend", "?")
+        fused = any_engine.get("fused", "?")
+        gates = ", ".join(f"{k.replace('claim_', '')}={v}"
+                          for k, v in sorted(s.items())
+                          if k.startswith("claim_"))
+        lines.append(f"| {name} | {r.get('recorded_at', '?')} | {trend} | "
+                     f"{backend} (fused={fused}) | {gates} |")
+    lines.append("")
+    lines.append("(Full per-run rows, each stamped with the engine settings "
+                 "that produced it, accumulate in `BENCH_serving.json` — its "
+                 "git history is the cross-PR perf trajectory.)")
+    return "\n".join(lines)
+
+
 def build(perf_md: str = "") -> str:
     parts = ["# EXPERIMENTS", "",
              "Generated by `python -m repro.analysis.report`. "
              "Paper: TapOut (bandit-based dynamic speculative decoding).", "",
-             dryrun_section(), "", roofline_section(), "", bench_section()]
+             dryrun_section(), "", roofline_section(), "", bench_section(),
+             "", serving_section()]
     if not perf_md:
         perf_path = os.path.join(ART, "perf_log.md")
         if os.path.exists(perf_path):

@@ -13,9 +13,10 @@ from .bandits import make_bandit, BanditBank
 from .controller import (Controller, FixedArm, FixedShape, StaticGamma,
                          TapOutSequence, TapOutToken, TapOutTreeSequence,
                          make_controller)
-from .engine import (BatchedSpecEngine, GenResult, ModelBundle,
+from .engine import (BatchedSpecEngine, EngineSpec, GenResult, ModelBundle,
                      PagedSpecEngine, SpecEngine, TreeSlotEngine,
-                     TreeSpecEngine, quantized_bundle)
+                     TreeSpecEngine, engine_spec_from_legacy, make_engine,
+                     quantized_bundle)
 from .rewards import (modeled_session_cost, precision_cost_factor, r_blend,
                       r_cost_adjusted, r_simple)
 from .spec_decode import (draft_session, draft_session_batched,
@@ -34,8 +35,9 @@ __all__ = [
     "Controller", "FixedArm", "FixedShape", "StaticGamma", "TapOutSequence",
     "TapOutToken", "TapOutTreeSequence", "make_controller",
     # engines
-    "BatchedSpecEngine", "GenResult", "ModelBundle", "PagedSpecEngine",
-    "SpecEngine", "TreeSlotEngine", "TreeSpecEngine", "quantized_bundle",
+    "BatchedSpecEngine", "EngineSpec", "GenResult", "ModelBundle",
+    "PagedSpecEngine", "SpecEngine", "TreeSlotEngine", "TreeSpecEngine",
+    "engine_spec_from_legacy", "make_engine", "quantized_bundle",
     # rewards / cost model
     "modeled_session_cost", "precision_cost_factor", "r_blend",
     "r_cost_adjusted", "r_simple",

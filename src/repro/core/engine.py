@@ -12,7 +12,7 @@ from __future__ import annotations
 import contextlib
 import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -28,6 +28,7 @@ from .controller import Controller, TapOutTreeSequence
 from .rewards import modeled_session_cost, precision_cost_factor
 from .spec_decode import (_probs, draft_session, draft_session_batched,
                           draft_session_paged, fresh_session_jits,
+                          fused_session_tick, make_sharded_fused,
                           make_sharded_sessions, verify_session,
                           verify_session_batched, verify_session_paged)
 from .tree import TreeSpec, verify_walk
@@ -58,11 +59,52 @@ class _ShardingMixin:
     """
 
     mesh = None
+    backend_name = "single"
+
+    def describe(self) -> dict:
+        """Canonical description of this engine's deployment settings —
+        the single schema benchmarks and ``SpecServer.throughput_stats``
+        attach to every row they emit (docs/serving.md)."""
+        d = {
+            "backend": self.backend_name,
+            "batch_size": int(getattr(self, "batch_size", 1)),
+            "max_len": int(self.max_len),
+            "gamma_max": int(self.gamma_max),
+            "temperature": float(self.temperature),
+            "greedy": bool(self.greedy),
+            "kv_dtype": self.kv_dtype or "fp",
+            "fused": bool(getattr(self, "fused", False)),
+            "devices": (int(self.mesh.devices.size)
+                        if self.mesh is not None else 1),
+            "mesh_axes": ({k: int(v) for k, v in self.mesh.shape.items()}
+                          if self.mesh is not None else None),
+        }
+        return d
 
     def _mesh_ctx(self):
         if self.mesh is None:
             return contextlib.nullcontext()
         return use_mesh(self.mesh)
+
+    def _meshless_fused(self, *, paged: bool):
+        """Bind this engine's statics onto the module-level fused-tick jit
+        (meshless engines share its trace cache, exactly like the
+        synchronous session primitives)."""
+        statics = dict(cfg_d=self.draft.cfg, cfg_t=self.target.cfg,
+                       dspec=self.dspec, tspec=self.tspec,
+                       arms=self.controller.arms, gamma_max=self.gamma_max,
+                       temperature=self.temperature, greedy=self.greedy,
+                       n_prompt_tokens=2, paged=paged)
+
+        def tick(dparams, tparams, dcaches, tcaches, in_tokens, last_tokens,
+                 arm_mat, lam, drngs, vrngs, active, lengths, dkeep, tkeep):
+            return fused_session_tick(
+                dparams, tparams, dcaches=dcaches, tcaches=tcaches,
+                in_tokens=in_tokens, last_tokens=last_tokens,
+                arm_mat=arm_mat, lam=lam, drngs=drngs, vrngs=vrngs,
+                active=active, lengths=lengths, dkeep=dkeep, tkeep=tkeep,
+                **statics)
+        return tick
 
     def _place_bundles(self):
         """Shard draft/target params over the mesh (serve-mode rules);
@@ -175,6 +217,10 @@ class GenResult:
     def mean_accepted(self) -> float:
         n = len(self.sessions)
         return self.total_accepted / n if n else 0.0
+
+    # canonical name shared with the serving/bench schema: accepted tokens
+    # per verify pass (every session runs exactly one verify forward)
+    accepted_per_verify = mean_accepted
 
 
 class _StepMixin:
@@ -397,6 +443,8 @@ class TreeSpecEngine(_StepMixin, _ShardingMixin):
     single stream owns the whole pool.  Requires attention/MLA-only stacks
     (recurrent state cannot fork per branch) with non-ring buffers.
     """
+
+    backend_name = "tree"
 
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: TapOutTreeSequence, *, max_len: int = 2048,
@@ -706,7 +754,7 @@ class TreeSpecEngine(_StepMixin, _ShardingMixin):
 
 
 class TreeSlotEngine(TreeSpecEngine):
-    """Slot facade over the tree engine for ``SpecServer(tree=...)``.
+    """Slot facade over the tree engine (``EngineSpec(backend="tree_slot")``).
 
     B per-slot stream states (each with its own single-stream cache pair)
     share ONE shape bandit, online across requests — the TapOut deployment
@@ -716,12 +764,15 @@ class TreeSlotEngine(TreeSpecEngine):
     it needs per-shape program pools like the chain engines').
     """
 
+    backend_name = "tree_slot"
+
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: TapOutTreeSequence, *, batch_size: int = 4,
                  **kw):
         super().__init__(draft, target, controller, **kw)
         self.batch_size = batch_size
         self.slots: List[Optional[dict]] = [None] * batch_size
+        self._pending: Optional[dict] = None
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -741,12 +792,27 @@ class TreeSlotEngine(TreeSpecEngine):
         return st
 
     def session_step_batch(self) -> List[int]:
+        self.session_step_launch()
+        return self.session_step_flush()
+
+    # the tree tick is host-driven (per-shape jitted programs per slot), so
+    # launch/flush degenerate to run-then-report — but exposing the same
+    # two-phase protocol lets the server drive every backend identically
+    def session_step_launch(self) -> bool:
+        assert self._pending is None, "previous tick not flushed"
         acted: List[int] = []
         for s, st in enumerate(self.slots):
             if st is not None and not st["done"]:
                 self.session_step(st, st.get("eos_id"))
                 acted.append(s)
-        return acted
+        if not acted:
+            return False
+        self._pending = {"acted": acted}
+        return True
+
+    def session_step_flush(self) -> List[int]:
+        pending, self._pending = self._pending, None
+        return pending["acted"] if pending else []
 
 
 # ===================================================================== batched
@@ -784,14 +850,27 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
     The batched session program compiles ONCE per (B, gamma_max); admission
     into a free slot never recompiles it (prefill uses chunked feeds of at
     most two shapes, see ``_prefill``).
+
+    ``fused=True`` (the default, requires cheap-rollback caches on both
+    models) additionally collapses the whole tick — input-side rollback,
+    draft while-loop, verify, accept, output-side rollback — into ONE
+    device program (``spec_decode.fused_session_tick``) and splits the tick
+    into ``session_step_launch`` / ``session_step_flush`` so the serving
+    loop can overlap tick t's device work with tick t-1's host accounting.
+    The fused program runs the exact traced bodies of the synchronous
+    primitives, so outcomes — and the bandit state they produce — are
+    bit-identical to ``fused=False``.
     """
+
+    backend_name = "batched"
 
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: Controller, *, batch_size: int = 4,
                  max_len: int = 2048, temperature: float = 0.0,
                  greedy: bool = True, cache_dtype=jnp.float32,
                  kv_dtype: Optional[str] = None, quant_draft: bool = False,
-                 seed: int = 0, prefill_chunk: int = 16, mesh=None):
+                 seed: int = 0, prefill_chunk: int = 16, fused: bool = True,
+                 mesh=None):
         assert batch_size >= 1
         if quant_draft:
             draft = quantized_bundle(draft)
@@ -839,8 +918,29 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
                 arms=controller.arms, temperature=temperature, greedy=greedy,
                 n_prompt_tokens=2 if self.draft_cheap else 1, paged=False)
 
+        # fused single-dispatch tick: needs O(1) pointer rollback on BOTH
+        # models (recurrent state falls back to the two-dispatch tick with
+        # host-side snapshot-recompute)
+        self.fused = bool(fused and self.draft_cheap and self.target_cheap)
+        self._fused_tick = None
+        if self.fused:
+            if mesh is None:
+                self._fused_tick = self._meshless_fused(paged=False)
+            else:
+                from repro.launch.shardings import slot_cache_shardings
+                self._fused_tick = make_sharded_fused(
+                    mesh, cfg_d=self.draft.cfg, cfg_t=self.target.cfg,
+                    dspec=self.dspec, tspec=self.tspec,
+                    dparams_sh=self._dparams_sh, tparams_sh=self._tparams_sh,
+                    dcache_sh=slot_cache_shardings(mesh, self.dcaches),
+                    tcache_sh=slot_cache_shardings(mesh, self.tcaches),
+                    batch_size=batch_size, gamma_max=self.gamma_max,
+                    arms=controller.arms, temperature=temperature,
+                    greedy=greedy, n_prompt_tokens=2, paged=False)
+
         B = batch_size
         self.slots: List[Optional[dict]] = [None] * B
+        self._pending: Optional[dict] = None
         # host mirrors of each lane's cache "pos" (invariant: len(seq)-1
         # for target, len(seq)-2 for pointer-rollback draft caches)
         self._dpos = np.zeros(B, np.int64)
@@ -909,10 +1009,111 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
         return st
 
     # -------------------------------------------------------- tick
-    @_on_mesh
     def session_step_batch(self) -> List[int]:
         """Run one draft/verify session for every active slot in one
-        batched program.  Returns the slots that were active this tick."""
+        batched program (one synchronous tick: launch + flush back to
+        back).  Returns the slots that were active this tick."""
+        self.session_step_launch()
+        return self.session_step_flush()
+
+    @_on_mesh
+    def session_step_launch(self) -> bool:
+        """Dispatch one tick WITHOUT reading its outcomes back.
+
+        Fused path: the only host work is input assembly and the bandit's
+        arm draw (``begin_batch``); the single device program is launched
+        asynchronously and its ``FusedTick`` outcome buffer stays
+        device-resident until ``session_step_flush``.  The serving loop
+        flushes tick t-1 only after admitting for tick t, so the bandit
+        consumes outcomes one step behind — its begin/update call sequence
+        is exactly the synchronous path's, keeping its state bit-identical.
+        Non-fused engines run the classic two-dispatch tick here and merely
+        stash the acted list for flush.  Returns True iff a tick ran."""
+        assert self._pending is None, "previous tick not flushed"
+        B, g = self.batch_size, self.gamma_max
+        active = self.active_mask()
+        act_idx = np.flatnonzero(active)
+        if act_idx.size == 0:
+            return False
+        if not self.fused:
+            self._pending = {"acted": self._session_step_sync()}
+            return True
+
+        L = np.array([len(self.slots[s]["seq"]) if self.slots[s] else 0
+                      for s in range(B)], np.int64)
+        arm_mat = np.zeros((B, g), np.int32)
+        arm_mat[act_idx] = self.controller.begin_batch(act_idx.size)
+        in_toks = np.zeros((B, 2), np.int32)
+        last_toks = np.zeros((B, 1), np.int32)
+        for s in act_idx:
+            seq = self.slots[s]["seq"]
+            in_toks[s] = seq[-2:]
+            last_toks[s, 0] = seq[-1]
+        keys = self._next_rng(2 * B)
+        ft = self._fused_tick(
+            self.draft.params, self.target.params, self.dcaches,
+            self.tcaches, jnp.asarray(in_toks), jnp.asarray(last_toks),
+            jnp.asarray(arm_mat), jnp.float32(self.controller.lam),
+            keys[:B], keys[B:], jnp.asarray(active),
+            jnp.asarray(L, jnp.int32), jnp.asarray(self._dpos, jnp.int32),
+            jnp.asarray(self._tpos, jnp.int32))
+        # caches come back already rolled back — adopt them immediately so
+        # admissions between ticks write into post-tick lanes
+        self.dcaches, self.tcaches = ft.dcache, ft.tcache
+        self._pending = {"act_idx": act_idx, "active": active,
+                         "arm_mat": arm_mat, "L": L, "ft": ft}
+        return True
+
+    @_on_mesh
+    def session_step_flush(self) -> List[int]:
+        """Read the pending tick's device-resident outcomes, do per-stream
+        accounting (sequence extension, stats, EOS/budget termination) and
+        feed the bandit (``update_batch``).  Returns the acted slots; [] if
+        no tick is pending."""
+        pending, self._pending = self._pending, None
+        if pending is None:
+            return []
+        if "acted" in pending:              # non-fused tick already complete
+            return pending["acted"]
+        active, act_idx = pending["active"], pending["act_idx"]
+        arm_mat, L, ft = pending["arm_mat"], pending["L"], pending["ft"]
+        g = self.gamma_max
+        c_d = self.draft.cost_per_token
+        c_t = self.target.cost_per_token
+        nd = np.asarray(ft.n_drafted)
+        m = np.asarray(ft.n_accepted)
+        out_all = np.asarray(ft.out_tokens)
+        if self.collect_traces:
+            sig_all = np.asarray(ft.signals)
+            ent_all = np.asarray(ft.entropies)
+        for s in act_idx:
+            st = self.slots[s]
+            seq, res = st["seq"], st["res"]
+            out = out_all[s, :m[s] + 1].tolist()
+            seq.extend(out)
+            res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
+                                             int(arm_mat[s, 0])))
+            res.modeled_cost += modeled_session_cost(int(nd[s]) + 1, c_d, c_t)
+            if self.collect_traces:
+                res.traces.append({
+                    "signals": sig_all[s], "entropies": ent_all[s],
+                    "n_drafted": int(nd[s]), "n_accepted": int(m[s]),
+                    "position_base": 0})
+            eos = st["eos_id"]
+            if eos is not None and eos in out:
+                seq[:] = seq[:len(seq) - len(out) + out.index(eos) + 1]
+                st["done"] = True
+            if len(seq) + g + 2 >= self.max_len:
+                st["done"] = True
+        # host mirrors follow the on-device output-side rollback
+        self._tpos = np.where(active, L + m, self._tpos)
+        self._dpos = np.where(active, L + m - 1, self._dpos)
+        self.controller.update_batch(arm_mat[act_idx], nd[act_idx], m[act_idx])
+        return act_idx.tolist()
+
+    def _session_step_sync(self) -> List[int]:
+        """The classic two-dispatch tick (snapshot-recompute rollback for
+        recurrent stacks lives here — fusion requires cheap rollback)."""
         B, g = self.batch_size, self.gamma_max
         active = self.active_mask()
         act_idx = np.flatnonzero(active)
@@ -1069,7 +1270,14 @@ class PagedSpecEngine(_ShardingMixin):
     (B, gamma_max); admission/release only change table/length DATA, never
     shapes, so a request joining the running batch never recompiles.
     Masked lanes write into the reserved trash block 0.
+
+    ``fused=True`` (default, cheap-rollback stacks only) collapses the tick
+    into one device program with the launch/flush split — identical
+    semantics to ``BatchedSpecEngine``'s, with per-lane LENGTH truncation
+    standing in for the dense pointer rollback.
     """
+
+    backend_name = "paged"
 
     def __init__(self, draft: ModelBundle, target: ModelBundle,
                  controller: Controller, *, batch_size: int = 4,
@@ -1078,7 +1286,7 @@ class PagedSpecEngine(_ShardingMixin):
                  temperature: float = 0.0, greedy: bool = True,
                  cache_dtype=jnp.float32, kv_dtype: Optional[str] = None,
                  quant_draft: bool = False, seed: int = 0,
-                 prefill_chunk: int = 16, mesh=None):
+                 prefill_chunk: int = 16, fused: bool = True, mesh=None):
         assert batch_size >= 1
         if quant_draft:
             draft = quantized_bundle(draft)
@@ -1132,7 +1340,25 @@ class PagedSpecEngine(_ShardingMixin):
                 arms=controller.arms, temperature=temperature, greedy=greedy,
                 n_prompt_tokens=2 if self.draft_cheap else 1, paged=True)
 
+        self.fused = bool(fused and self.draft_cheap and self.target_cheap)
+        self._fused_tick = None
+        if self.fused:
+            if mesh is None:
+                self._fused_tick = self._meshless_fused(paged=True)
+            else:
+                from repro.launch.shardings import paged_cache_shardings
+                self._fused_tick = make_sharded_fused(
+                    mesh, cfg_d=self.draft.cfg, cfg_t=self.target.cfg,
+                    dspec=self.dspec, tspec=self.tspec,
+                    dparams_sh=self._dparams_sh, tparams_sh=self._tparams_sh,
+                    dcache_sh=paged_cache_shardings(mesh, self.dcache),
+                    tcache_sh=paged_cache_shardings(mesh, self.tcache),
+                    batch_size=batch_size, gamma_max=self.gamma_max,
+                    arms=controller.arms, temperature=temperature,
+                    greedy=greedy, n_prompt_tokens=2, paged=True)
+
         self.slots: List[Optional[dict]] = [None] * B
+        self._pending: Optional[dict] = None
         self._dlen = np.zeros(B, np.int64)   # host mirrors of device lengths
         self._tlen = np.zeros(B, np.int64)
 
@@ -1302,9 +1528,95 @@ class PagedSpecEngine(_ShardingMixin):
         return st
 
     # -------------------------------------------------------- tick
-    @_on_mesh
     def session_step_batch(self) -> List[int]:
-        """One batched draft/verify session across every active slot."""
+        """One batched draft/verify session across every active slot
+        (one synchronous tick: launch + flush back to back)."""
+        self.session_step_launch()
+        return self.session_step_flush()
+
+    @_on_mesh
+    def session_step_launch(self) -> bool:
+        """Dispatch one tick without reading its outcomes back (see
+        ``BatchedSpecEngine.session_step_launch`` — identical protocol,
+        with per-lane length mirrors instead of pointer mirrors)."""
+        assert self._pending is None, "previous tick not flushed"
+        B, g = self.batch_size, self.gamma_max
+        active = self.active_mask()
+        act_idx = np.flatnonzero(active)
+        if act_idx.size == 0:
+            return False
+        if not self.fused:
+            self._pending = {"acted": self._session_step_sync()}
+            return True
+
+        L = np.array([len(self.slots[s]["seq"]) if self.slots[s] else 0
+                      for s in range(B)], np.int64)
+        arm_mat = np.zeros((B, g), np.int32)
+        arm_mat[act_idx] = self.controller.begin_batch(act_idx.size)
+        in_toks = np.zeros((B, 2), np.int32)
+        last_toks = np.zeros((B, 1), np.int32)
+        for s in act_idx:
+            seq = self.slots[s]["seq"]
+            in_toks[s] = seq[-2:]
+            last_toks[s, 0] = seq[-1]
+        keys = self._next_rng(2 * B)
+        ft = self._fused_tick(
+            self.draft.params, self.target.params, self.dcache, self.tcache,
+            jnp.asarray(in_toks), jnp.asarray(last_toks),
+            jnp.asarray(arm_mat), jnp.float32(self.controller.lam),
+            keys[:B], keys[B:], jnp.asarray(active),
+            jnp.asarray(L, jnp.int32), jnp.asarray(self._dlen, jnp.int32),
+            jnp.asarray(self._tlen, jnp.int32))
+        self.dcache, self.tcache = ft.dcache, ft.tcache
+        self._pending = {"act_idx": act_idx, "active": active,
+                         "arm_mat": arm_mat, "L": L, "ft": ft}
+        return True
+
+    @_on_mesh
+    def session_step_flush(self) -> List[int]:
+        """Host accounting for the pending tick + the bandit update."""
+        pending, self._pending = self._pending, None
+        if pending is None:
+            return []
+        if "acted" in pending:
+            return pending["acted"]
+        active, act_idx = pending["active"], pending["act_idx"]
+        arm_mat, L, ft = pending["arm_mat"], pending["L"], pending["ft"]
+        g = self.gamma_max
+        c_d = self.draft.cost_per_token
+        c_t = self.target.cost_per_token
+        nd = np.asarray(ft.n_drafted)
+        m = np.asarray(ft.n_accepted)
+        out_all = np.asarray(ft.out_tokens)
+        if self.collect_traces:
+            sig_all = np.asarray(ft.signals)
+            ent_all = np.asarray(ft.entropies)
+        for s in act_idx:
+            st = self.slots[s]
+            seq, res = st["seq"], st["res"]
+            out = out_all[s, :m[s] + 1].tolist()
+            seq.extend(out)
+            res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
+                                             int(arm_mat[s, 0])))
+            res.modeled_cost += modeled_session_cost(int(nd[s]) + 1, c_d, c_t)
+            if self.collect_traces:
+                res.traces.append({
+                    "signals": sig_all[s], "entropies": ent_all[s],
+                    "n_drafted": int(nd[s]), "n_accepted": int(m[s]),
+                    "position_base": 0})
+            eos = st["eos_id"]
+            if eos is not None and eos in out:
+                seq[:] = seq[:len(seq) - len(out) + out.index(eos) + 1]
+                st["done"] = True
+            if len(seq) + g + 2 >= self.max_len:
+                st["done"] = True
+        self._tlen = np.where(active, L + m, self._tlen)
+        self._dlen = np.where(active, L + m - 1, self._dlen)
+        self.controller.update_batch(arm_mat[act_idx], nd[act_idx], m[act_idx])
+        return act_idx.tolist()
+
+    def _session_step_sync(self) -> List[int]:
+        """The classic two-dispatch tick (recurrent stacks only)."""
         B, g = self.batch_size, self.gamma_max
         active = self.active_mask()
         act_idx = np.flatnonzero(active)
@@ -1457,3 +1769,133 @@ class PagedSpecEngine(_ShardingMixin):
                 pool_bytes(self.dcache, per_shard=True)
                 + pool_bytes(self.tcache, per_shard=True))
         return stats
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d["pool"] = self.pool_stats()
+        return d
+
+
+# ===================================================================== spec
+
+BACKENDS = ("auto", "single", "batched", "paged", "tree", "tree_slot")
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """One declarative description of a speculative-serving deployment.
+
+    ``make_engine(draft, target, controller, spec)`` — and
+    ``SpecServer(..., spec=...)`` — turn a spec into the right engine, so
+    the five engine constructors stop being public API surface.  Fields
+    are grouped by what they control; every backend ignores the fields
+    that don't apply to it (docs/serving.md has the migration table from
+    the old per-engine kwargs).
+
+    * ``backend`` — "single" | "batched" | "paged" | "tree" | "tree_slot",
+      or "auto": "paged" when ``pool_tokens`` is set, else "batched" when
+      ``batch_size > 1``, else "single".
+    * ``batch_size`` — slot count for the slot engines (the old
+      ``max_concurrency`` server kwarg).
+    * ``fused`` — single-dispatch ragged tick for the batched/paged
+      backends (auto-disabled on recurrent stacks).
+    * ``tree_paged`` — back the tree backends with B=1 paged pools.
+    * precision: ``cache_dtype`` / ``kv_dtype`` ("int8" KV caches) /
+      ``quant_draft`` (int8 draft weights).
+    * placement: ``mesh`` (docs/sharding.md).
+    """
+    backend: str = "auto"
+    batch_size: int = 4
+    max_len: int = 2048
+    temperature: float = 0.0
+    greedy: bool = True
+    cache_dtype: object = jnp.float32
+    kv_dtype: Optional[str] = None
+    quant_draft: bool = False
+    seed: int = 0
+    prefill_chunk: int = 16
+    block_size: int = 64
+    pool_tokens: Optional[int] = None
+    tree_paged: bool = False
+    fused: bool = True
+    mesh: object = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+
+    def resolve_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        if self.pool_tokens is not None:
+            return "paged"
+        return "batched" if self.batch_size > 1 else "single"
+
+
+def engine_spec_from_legacy(*, max_len: int = 2048,
+                            max_concurrency: int = 8,
+                            temperature: float = 0.0, greedy: bool = True,
+                            seed: int = 0, paged: bool = False,
+                            block_size: int = 64,
+                            pool_tokens: Optional[int] = None,
+                            tree: bool = False,
+                            kv_dtype: Optional[str] = None,
+                            quant_draft: bool = False,
+                            mesh=None) -> EngineSpec:
+    """Map the pre-spec ``SpecServer`` keyword surface onto an
+    ``EngineSpec`` (the deprecation shim's translation table)."""
+    if tree:
+        assert not paged, "tree serving uses per-slot dense caches"
+        backend = "tree_slot"
+    elif paged:
+        backend = "paged"
+    else:
+        backend = "batched"
+    return EngineSpec(backend=backend, batch_size=max_concurrency,
+                      max_len=max_len, temperature=temperature,
+                      greedy=greedy, seed=seed, block_size=block_size,
+                      pool_tokens=pool_tokens, kv_dtype=kv_dtype,
+                      quant_draft=quant_draft, mesh=mesh)
+
+
+def make_engine(draft: ModelBundle, target: ModelBundle,
+                controller: Controller, spec: Optional[EngineSpec] = None,
+                **fields):
+    """THE engine factory: build the backend ``spec`` describes.
+
+    ``make_engine(d, t, c, spec)`` or — convenience — field overrides
+    directly: ``make_engine(d, t, c, backend="paged", pool_tokens=4096)``
+    (with both, the overrides win via ``dataclasses.replace``)."""
+    if spec is None:
+        spec = EngineSpec(**fields)
+    elif fields:
+        spec = replace(spec, **fields)
+    backend = spec.resolve_backend()
+    common = dict(max_len=spec.max_len, temperature=spec.temperature,
+                  greedy=spec.greedy, cache_dtype=spec.cache_dtype,
+                  kv_dtype=spec.kv_dtype, quant_draft=spec.quant_draft,
+                  seed=spec.seed, mesh=spec.mesh)
+    if backend == "single":
+        return SpecEngine(draft, target, controller, **common)
+    if backend == "batched":
+        return BatchedSpecEngine(draft, target, controller,
+                                 batch_size=spec.batch_size,
+                                 prefill_chunk=spec.prefill_chunk,
+                                 fused=spec.fused, **common)
+    if backend == "paged":
+        return PagedSpecEngine(draft, target, controller,
+                               batch_size=spec.batch_size,
+                               block_size=spec.block_size,
+                               pool_tokens=spec.pool_tokens,
+                               prefill_chunk=spec.prefill_chunk,
+                               fused=spec.fused, **common)
+    assert isinstance(controller, TapOutTreeSequence), \
+        f"{backend} backend needs a TapOutTreeSequence controller"
+    if backend == "tree":
+        return TreeSpecEngine(draft, target, controller,
+                              paged=spec.tree_paged,
+                              block_size=spec.block_size, **common)
+    return TreeSlotEngine(draft, target, controller,
+                          batch_size=spec.batch_size,
+                          paged=spec.tree_paged,
+                          block_size=spec.block_size, **common)

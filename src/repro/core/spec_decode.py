@@ -46,7 +46,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import transformer as T
-from repro.models.cache import CacheSpec
+from repro.models.cache import CacheSpec, paged_rollback, rollback
 from repro.models.sharding import BATCH_AXES, constrain, resolve_spec
 from .arms import Arm, SIGNAL_VECTOR_DIM, signal_vector, signals_from_probs
 
@@ -559,3 +559,123 @@ def make_sharded_sessions(mesh, *, cfg_d, cfg_t, dspec, tspec, dparams_sh,
         out_shardings=VerifyResult(
             lane((B,)), lane((B, g + 1)), lane((B,)), tcache_sh))
     return draft_jit, verify_jit
+
+
+# ------------------------------------------------------------- fused tick
+
+class FusedTick(NamedTuple):
+    """Device-resident outcome buffer of one fused serving tick.
+
+    The host reads the integer/trace fields ONE STEP BEHIND (the engine's
+    launch/flush split); the rolled-back caches feed the next tick without
+    ever leaving the device."""
+    n_drafted: jnp.ndarray     # (B,) int32
+    n_accepted: jnp.ndarray    # (B,) int32
+    out_tokens: jnp.ndarray    # (B, gamma_max+1) accepted + replacement/bonus
+    entropies: jnp.ndarray     # (B, gamma_max) per-position sqrt-entropy
+    signals: jnp.ndarray       # (B, gamma_max, 6) per-position signal vector
+    dcache: dict               # draft cache AFTER output-side rollback
+    tcache: dict               # target cache AFTER output-side rollback
+
+
+FUSED_STATICS = ("cfg_d", "cfg_t", "dspec", "tspec", "arms", "gamma_max",
+                 "temperature", "greedy", "n_prompt_tokens", "paged")
+
+
+def _fused_tick_core(dparams, tparams, cfg_d, cfg_t, dspec: CacheSpec,
+                     tspec: CacheSpec, dcaches, tcaches, in_tokens,
+                     last_tokens, arm_mat, lam, drngs, vrngs, active,
+                     lengths, dkeep, tkeep, *, arms: Tuple[Arm, ...],
+                     gamma_max: int, temperature: float, greedy: bool,
+                     n_prompt_tokens: int, paged: bool):
+    """ONE device program per serving tick: input-side rollback -> draft
+    while-loop -> verify forward -> accept -> output-side rollback.
+
+    Calls the exact traced bodies of the synchronous primitives
+    (``draft_session_batched`` / ``verify_session_batched`` or their paged
+    twins), so per-lane arithmetic — and therefore every (n_drafted,
+    n_accepted, out_tokens) outcome the bandit consumes — is the same
+    computation the two-dispatch path runs; only the host round-trips
+    between the stages disappear.
+
+    lengths: (B,) int32 per-lane sequence lengths (len(seq));
+    dkeep/tkeep: (B,) int32 cache pointers (dense) or lengths (paged) to
+    KEEP for inactive lanes — the on-device analog of the engine's host
+    mirrors.  Requires cheap-rollback caches on both models (the engine
+    gates fusion on ``CacheSpec.cheap_rollback``)."""
+    lengths, dkeep, tkeep = _lane_constrain(lengths, dkeep, tkeep)
+    rb = paged_rollback if paged else rollback
+    draft_raw = (draft_session_paged if paged else
+                 draft_session_batched).__wrapped__
+    verify_raw = (verify_session_paged if paged else
+                  verify_session_batched).__wrapped__
+
+    # input-side rollback: re-feed the last two accepted tokens
+    dcaches_in = rb(dcaches, jnp.where(active, lengths - 2, dkeep))
+    dres = draft_raw(dparams, cfg_d, dspec, dcaches_in, in_tokens, arm_mat,
+                     lam, drngs, active, arms=arms, gamma_max=gamma_max,
+                     temperature=temperature,
+                     n_prompt_tokens=n_prompt_tokens)
+    vres = verify_raw(tparams, cfg_t, tspec, tcaches, last_tokens,
+                      dres.tokens, dres.n_drafted, dres.qprobs, vrngs,
+                      active, gamma_max=gamma_max, temperature=temperature,
+                      greedy=greedy)
+    m = vres.n_accepted
+    # output-side rollback (cache invariant: pos/length == len(seq) - 1 fed)
+    tcache = rb(vres.cache, jnp.where(active, lengths + m, tkeep))
+    dcache = rb(dres.cache, jnp.where(active, lengths + m - 1, dkeep))
+    return FusedTick(dres.n_drafted, m, vres.out_tokens, dres.entropies,
+                     dres.signals, dcache, tcache)
+
+
+@functools.partial(jax.jit, static_argnames=FUSED_STATICS)
+def fused_session_tick(dparams, tparams, cfg_d, cfg_t, dspec, tspec,
+                       dcaches, tcaches, in_tokens, last_tokens, arm_mat,
+                       lam, drngs, vrngs, active, lengths, dkeep, tkeep, *,
+                       arms: Tuple[Arm, ...], gamma_max: int,
+                       temperature: float = 0.0, greedy: bool = True,
+                       n_prompt_tokens: int = 2, paged: bool = False):
+    """Jitted fused serving tick (see ``_fused_tick_core``)."""
+    return _fused_tick_core(dparams, tparams, cfg_d, cfg_t, dspec, tspec,
+                            dcaches, tcaches, in_tokens, last_tokens,
+                            arm_mat, lam, drngs, vrngs, active, lengths,
+                            dkeep, tkeep, arms=arms, gamma_max=gamma_max,
+                            temperature=temperature, greedy=greedy,
+                            n_prompt_tokens=n_prompt_tokens, paged=paged)
+
+
+def fresh_fused_jit():
+    """Per-engine re-jit of ``fused_session_tick`` (same trace-cache
+    hygiene as ``fresh_session_jits``)."""
+    return jax.jit(fused_session_tick.__wrapped__,
+                   static_argnames=FUSED_STATICS)
+
+
+def make_sharded_fused(mesh, *, cfg_d, cfg_t, dspec, tspec, dparams_sh,
+                       tparams_sh, dcache_sh, tcache_sh, batch_size: int,
+                       gamma_max: int, arms: Tuple[Arm, ...],
+                       temperature: float, greedy: bool,
+                       n_prompt_tokens: int, paged: bool = False):
+    """Jit the fused tick with explicit in/out shardings for one engine's
+    deployment on ``mesh`` (``launch/shardings.fused_tick_shardings``):
+    per-lane operands — tokens, arm rows, PRNG keys, the ragged length /
+    keep-pointer vectors — shard over the ("pod","data") batch axes, params
+    and caches keep their resident pytree shardings."""
+    from repro.launch.shardings import fused_tick_shardings
+    ins, outs = fused_tick_shardings(
+        mesh, batch_size=batch_size, gamma_max=gamma_max,
+        n_prompt_tokens=n_prompt_tokens, signal_dim=SIGNAL_VECTOR_DIM,
+        dparams_sh=dparams_sh, tparams_sh=tparams_sh,
+        dcache_sh=dcache_sh, tcache_sh=tcache_sh)
+
+    def tick_fn(dparams, tparams, dcaches, tcaches, in_tokens, last_tokens,
+                arm_mat, lam, drngs, vrngs, active, lengths, dkeep, tkeep):
+        return _fused_tick_core(
+            dparams, tparams, cfg_d, cfg_t, dspec, tspec, dcaches, tcaches,
+            in_tokens, last_tokens, arm_mat, lam, drngs, vrngs, active,
+            lengths, dkeep, tkeep, arms=arms, gamma_max=gamma_max,
+            temperature=temperature, greedy=greedy,
+            n_prompt_tokens=n_prompt_tokens, paged=paged)
+
+    return jax.jit(tick_fn, in_shardings=ins,
+                   out_shardings=FusedTick(**outs))

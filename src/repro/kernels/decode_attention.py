@@ -22,6 +22,17 @@ before the p·v dot — the fp K/V blocks are never materialized, so the
 HBM->VMEM traffic of this memory-bound kernel drops ~4x vs fp32 pools
 (1 byte payload + one f32 scale per row-head vs 4 bytes per element).
 
+RAGGED LANES.  Serving batches mix sequence lengths, so every kernel that
+takes per-lane lengths early-exits per block: the whole compute body sits
+under ``@pl.when(i * block < lengths[b])`` and the K/V index maps clamp to
+the lane's last valid block, so a short lane neither computes nor re-DMAs
+blocks past its length (consecutive identical block indices elide the
+copy).  ``ragged_decode_attention`` / ``ragged_decode_attention_quant``
+are the dense variants: contiguous per-lane caches (B, G, L, D) with
+``lengths`` riding in as a scalar-prefetch operand, query at position
+``lengths[b] - 1``, rows ``>= lengths[b]`` dead.  The paged kernels get
+the same early-exit on top of their trash-block masking.
+
 Layouts: q (B, H, D) one query per head.
   dense: k, v (B, G, L, D); kpos (L,); qpos scalar int32.
   paged: kpool, vpool (N, bs, G, D); tables (B, MB) int32; lengths (B,).
@@ -215,6 +226,216 @@ def decode_attention_quant(q, k, kscale, v, vscale, qpos, kpos, *,
     return out
 
 
+# ----------------------------------------------------------- dense ragged
+
+def _last_block(n, blk):
+    """Index of the last block holding valid rows for a lane of ``n`` valid
+    tokens (0 for an empty lane — its rows are masked anyway)."""
+    return jnp.maximum((n + blk - 1) // blk - 1, 0)
+
+
+def _ragged_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, window: int,
+                   bl: int, nl: int):
+    b = pl.program_id(0)
+    i_l = pl.program_id(2)
+
+    @pl.when(i_l == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n = lengths_ref[b]                           # valid rows in this lane
+
+    @pl.when(i_l * bl < n)                       # EARLY EXIT past the length
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)         # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)      # (bl, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        qp = n - 1                               # query = last stored token
+        kp = i_l * bl + jax.lax.broadcasted_iota(jnp.int32, (bl, 1), 0)[:, 0]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * scale
+        mask = kp <= qp                          # contiguous: validity==causal
+        if window:
+            mask &= (qp - kp) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + p.sum()
+        acc_ref[...] = (acc_ref[...] * corr + jax.lax.dot_general(
+            p[None, :], v, (((1,), (0,)), ((), ()))))
+        m_ref[0] = m_new
+
+    # finalize stays UNGUARDED: skipped blocks leave the scratch untouched,
+    # and an empty lane (l == 0) falls through to the zero branch
+    @pl.when(i_l == nl - 1)
+    def _finalize():
+        l = l_ref[0]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, 0] = out[0].astype(o_ref.dtype)
+
+
+def ragged_decode_attention(q, k, v, lengths, *, window: int = 0,
+                            block_l: int = 512, interpret: bool = False):
+    """Length-aware dense flash decode: q (B,H,D); k,v (B,G,L,D) contiguous
+    per-lane caches; lengths (B,) int32 valid rows per lane (query position
+    = lengths-1, rows >= lengths dead). -> (B,H,D).
+
+    ``lengths`` is a SCALAR-PREFETCH operand so (a) the kernel body can
+    early-exit every block past a lane's length and (b) the K/V index maps
+    clamp to the lane's last valid block — consecutive identical indices
+    elide the HBM->VMEM copy, so a short lane in a long batch pays for its
+    own length, not the batch max."""
+    B, H, D = q.shape
+    G, L = k.shape[1], k.shape[2]
+    assert H % G == 0 and lengths.shape == (B,)
+    bl = min(block_l, L)
+    pL = (-L) % bl
+    if pL:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pL), (0, 0)))
+    nl = k.shape[2] // bl
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+
+    def kv_map(b, h, il, ln):
+        return (b, h // rep, jnp.minimum(il, _last_block(ln[b], bl)), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nl),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, il, ln: (b, h, 0)),
+            pl.BlockSpec((1, 1, bl, D), kv_map),
+            pl.BlockSpec((1, 1, bl, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, il, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_ragged_kernel, scale=scale, window=window,
+                          bl=bl, nl=nl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), q.reshape(B, H, D), k, v)
+    return out
+
+
+def _ragged_quant_kernel(lengths_ref, q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                         window: int, bl: int, nl: int):
+    b = pl.program_id(0)
+    i_l = pl.program_id(2)
+
+    @pl.when(i_l == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n = lengths_ref[b]
+
+    @pl.when(i_l * bl < n)                       # EARLY EXIT past the length
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)         # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)      # (bl, D) int8 payload
+        v = v_ref[0, 0].astype(jnp.float32)
+        ks = ks_ref[0, 0]                        # (bl,) f32 scales
+        vs = vs_ref[0, 0]
+        qp = n - 1
+        kp = i_l * bl + jax.lax.broadcasted_iota(jnp.int32, (bl, 1), 0)[:, 0]
+
+        # dequant-in-register (see ``_quant_kernel``)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * ks * scale
+        mask = kp <= qp
+        if window:
+            mask &= (qp - kp) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + p.sum()
+        acc_ref[...] = (acc_ref[...] * corr + jax.lax.dot_general(
+            (p * vs)[None, :], v, (((1,), (0,)), ((), ()))))
+        m_ref[0] = m_new
+
+    @pl.when(i_l == nl - 1)
+    def _finalize():
+        l = l_ref[0]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)
+        out = jnp.where(l > 0, out, 0.0)
+        o_ref[0, 0] = out[0].astype(o_ref.dtype)
+
+
+def ragged_decode_attention_quant(q, k, kscale, v, vscale, lengths, *,
+                                  window: int = 0, block_l: int = 512,
+                                  interpret: bool = False):
+    """Int8 variant of ``ragged_decode_attention``: k,v (B,G,L,D) int8 with
+    kscale,vscale (B,G,L) per-row-per-head scales; same early-exit and
+    clamped-DMA ragged semantics. -> (B,H,D) float."""
+    B, H, D = q.shape
+    G, L = k.shape[1], k.shape[2]
+    assert H % G == 0 and k.dtype == jnp.int8 and v.dtype == jnp.int8
+    assert kscale.shape == (B, G, L) and vscale.shape == (B, G, L)
+    assert lengths.shape == (B,)
+    bl = min(block_l, L)
+    pL = (-L) % bl
+    if pL:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        kscale = jnp.pad(kscale, ((0, 0), (0, 0), (0, pL)))
+        vscale = jnp.pad(vscale, ((0, 0), (0, 0), (0, pL)))
+    nl = k.shape[2] // bl
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+
+    def kv_map(b, h, il, ln):
+        return (b, h // rep, jnp.minimum(il, _last_block(ln[b], bl)), 0)
+
+    def sc_map(b, h, il, ln):
+        return (b, h // rep, jnp.minimum(il, _last_block(ln[b], bl)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nl),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, il, ln: (b, h, 0)),
+            pl.BlockSpec((1, 1, bl, D), kv_map),
+            pl.BlockSpec((1, 1, bl), sc_map),
+            pl.BlockSpec((1, 1, bl, D), kv_map),
+            pl.BlockSpec((1, 1, bl), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, il, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_ragged_quant_kernel, scale=scale, window=window,
+                          bl=bl, nl=nl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), q.reshape(B, H, D),
+      k, kscale, v, vscale)
+    return out
+
+
 # ------------------------------------------------------------------ paged
 
 def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
@@ -229,29 +450,35 @@ def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)             # (1, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)       # (bs, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)       # (bs, D)
-    qp = lengths_ref[b] - 1                      # query = last stored token
-    kp = i_b * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0]
+    n = lengths_ref[b]
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * scale  # (bl,)
-    mask = kp <= qp                              # contiguous: validity==causal
-    if window:
-        mask &= (qp - kp) < window
-    s = jnp.where(mask, s, NEG_INF)
+    @pl.when(i_b * bs < n)                       # EARLY EXIT past the length
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)         # (1, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)   # (bs, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)   # (bs, D)
+        qp = n - 1                               # query = last stored token
+        kp = i_b * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0]
 
-    m_prev = m_ref[0]
-    m_new = jnp.maximum(m_prev, s.max())
-    # explicit re-mask: a FULLY masked block (empty lane, lengths == 0) has
-    # m_new == NEG_INF, so exp(s - m_new) == 1 would poison l/acc
-    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[0] = l_ref[0] * corr + p.sum()
-    acc_ref[...] = (acc_ref[...] * corr +
-                    jax.lax.dot_general(p[None, :], v, (((1,), (0,)), ((), ()))))
-    m_ref[0] = m_new
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * scale
+        mask = kp <= qp                          # contiguous: validity==causal
+        if window:
+            mask &= (qp - kp) < window
+        s = jnp.where(mask, s, NEG_INF)
 
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        # explicit re-mask: a partially valid block has masked rows whose
+        # exp(s - m_new) == 1 would poison l/acc
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + p.sum()
+        acc_ref[...] = (acc_ref[...] * corr + jax.lax.dot_general(
+            p[None, :], v, (((1,), (0,)), ((), ()))))
+        m_ref[0] = m_new
+
+    # finalize stays UNGUARDED: an empty lane (lengths == 0) skips every
+    # compute block and falls through to the l == 0 zero branch
     @pl.when(i_b == nmb - 1)
     def _finalize():
         l = l_ref[0]
@@ -266,10 +493,12 @@ def paged_decode_attention(q, kpool, vpool, tables, lengths, *,
     ids (0 = the reserved trash block for unallocated entries); lengths (B,)
     valid tokens per stream (query position = lengths-1). -> (B,H,D).
 
-    The grid sweeps every table slot; out-of-length slots resolve to block 0
-    whose rows are fully masked, so the sweep is correct for ragged lengths
-    and for post-rollback states (rows past the truncated length are live in
-    HBM but dead under the mask).
+    The grid sweeps every table slot, but a lane stops paying past its own
+    length: blocks ``>= ceil(lengths[b]/bs)`` skip compute via ``pl.when``
+    early-exit and their DMA index clamps to the lane's last valid block
+    (consecutive identical indices elide the copy), so ragged lanes and
+    post-rollback states (rows past the truncated length live in HBM but
+    dead under the mask) cost what they store, not what the table spans.
     """
     B, H, D = q.shape
     N, bs, G, _ = kpool.shape
@@ -279,15 +508,17 @@ def paged_decode_attention(q, kpool, vpool, tables, lengths, *,
     rep = H // G
     scale = 1.0 / (D ** 0.5)
 
+    def kv_map(b, h, ib, tbl, ln):
+        return (tbl[b, jnp.minimum(ib, _last_block(ln[b], bs))],
+                0, h // rep, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, MB),
         in_specs=[
             pl.BlockSpec((1, 1, D), lambda b, h, ib, tbl, ln: (b, h, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep, 0)),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
         ],
         out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ib, tbl, ln: (b, h, 0)),
         scratch_shapes=[
@@ -321,30 +552,34 @@ def _paged_quant_kernel(tables_ref, lengths_ref, q_ref, k_ref, ks_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)             # (1, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)       # (bs, D) int8 payload
-    v = v_ref[0, :, 0].astype(jnp.float32)       # (bs, D) int8 payload
-    ks = ks_ref[0, :, 0]                         # (bs,) f32 scales
-    vs = vs_ref[0, :, 0]
-    qp = lengths_ref[b] - 1
-    kp = i_b * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0]
+    n = lengths_ref[b]
 
-    # dequant-in-register (see ``_quant_kernel``): scales hit the score and
-    # the softmax weight, the int8 blocks go straight into the dots
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * ks * scale
-    mask = kp <= qp
-    if window:
-        mask &= (qp - kp) < window
-    s = jnp.where(mask, s, NEG_INF)
+    @pl.when(i_b * bs < n)                       # EARLY EXIT past the length
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)         # (1, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)   # (bs, D) int8 payload
+        v = v_ref[0, :, 0].astype(jnp.float32)   # (bs, D) int8 payload
+        ks = ks_ref[0, :, 0]                     # (bs,) f32 scales
+        vs = vs_ref[0, :, 0]
+        qp = n - 1
+        kp = i_b * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)[:, 0]
 
-    m_prev = m_ref[0]
-    m_new = jnp.maximum(m_prev, s.max())
-    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[0] = l_ref[0] * corr + p.sum()
-    acc_ref[...] = (acc_ref[...] * corr + jax.lax.dot_general(
-        (p * vs)[None, :], v, (((1,), (0,)), ((), ()))))
-    m_ref[0] = m_new
+        # dequant-in-register (see ``_quant_kernel``): scales hit the score
+        # and the softmax weight, the int8 blocks go straight into the dots
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))[0] * ks * scale
+        mask = kp <= qp
+        if window:
+            mask &= (qp - kp) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[0]
+        m_new = jnp.maximum(m_prev, s.max())
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + p.sum()
+        acc_ref[...] = (acc_ref[...] * corr + jax.lax.dot_general(
+            (p * vs)[None, :], v, (((1,), (0,)), ((), ()))))
+        m_ref[0] = m_new
 
     @pl.when(i_b == nmb - 1)
     def _finalize():
@@ -362,7 +597,7 @@ def paged_decode_attention_quant(q, kpool, kscale, vpool, vscale, tables,
     same block tables as the payloads, ``models/cache.py``); tables
     (B,MB); lengths (B,). -> (B,H,D) float.
 
-    Same scalar-prefetch DMA steering and ragged-length semantics as
+    Same scalar-prefetch DMA steering and ragged early-exit semantics as
     ``paged_decode_attention``; each grid step additionally streams the
     block's scale rows (bs * 4 bytes vs bs * D payload bytes — noise).
     """
@@ -376,19 +611,23 @@ def paged_decode_attention_quant(q, kpool, kscale, vpool, vscale, tables,
     rep = H // G
     scale = 1.0 / (D ** 0.5)
 
+    def kv_map(b, h, ib, tbl, ln):
+        return (tbl[b, jnp.minimum(ib, _last_block(ln[b], bs))],
+                0, h // rep, 0)
+
+    def sc_map(b, h, ib, tbl, ln):
+        return (tbl[b, jnp.minimum(ib, _last_block(ln[b], bs))],
+                0, h // rep)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, MB),
         in_specs=[
             pl.BlockSpec((1, 1, D), lambda b, h, ib, tbl, ln: (b, h, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep, 0)),
-            pl.BlockSpec((1, bs, 1),
-                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep, 0)),
-            pl.BlockSpec((1, bs, 1),
-                         lambda b, h, ib, tbl, ln: (tbl[b, ib], 0, h // rep)),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1), sc_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1), sc_map),
         ],
         out_specs=pl.BlockSpec((1, 1, D), lambda b, h, ib, tbl, ln: (b, h, 0)),
         scratch_shapes=[

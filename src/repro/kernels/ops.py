@@ -69,6 +69,31 @@ def paged_decode_attention_quant(q, kpool, kscale, vpool, vscale, tables,
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_l"))
+def ragged_decode_attention(q, k, v, lengths, *, window: int = 0,
+                            block_l: int = 512):
+    return _da.ragged_decode_attention(q, k, v, lengths, window=window,
+                                       block_l=block_l,
+                                       interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_l"))
+def ragged_decode_attention_quant(q, k, kscale, v, vscale, lengths, *,
+                                  window: int = 0, block_l: int = 512):
+    return _da.ragged_decode_attention_quant(q, k, kscale, v, vscale,
+                                             lengths, window=window,
+                                             block_l=block_l,
+                                             interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_l"))
+def ragged_tree_attention(q, k, v, bases, kt, vt, depths, anc, *,
+                          window: int = 0, block_l: int = 512):
+    return _ta.ragged_tree_attention(q, k, v, bases, kt, vt, depths, anc,
+                                     window=window, block_l=block_l,
+                                     interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_l"))
 def tree_attention(q, k, v, kpos, base, kt, vt, qpos, anc, *,
                    window: int = 0, block_l: int = 512):
     return _ta.tree_attention(q, k, v, kpos, base, kt, vt, qpos, anc,

@@ -57,6 +57,46 @@ def paged_decode_attention_ref(q, kpool, vpool, tables, lengths, *,
     return jnp.stack(outs)
 
 
+def ragged_decode_attention_ref(q, k, v, lengths, *, window: int = 0):
+    """q (B,H,D); k,v (B,G,L,D) contiguous per-lane caches; lengths (B,)
+    valid rows per lane (query position = lengths-1).  Per-lane reuse of
+    the dense decode oracle; an empty lane (lengths == 0) emits zeros."""
+    B = q.shape[0]
+    L = k.shape[2]
+    outs = []
+    for b in range(B):
+        n = int(lengths[b])
+        kpos = jnp.where(jnp.arange(L) < n, jnp.arange(L), -1).astype(jnp.int32)
+        outs.append(decode_attention_ref(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                         n - 1, kpos, window=window)[0])
+    return jnp.stack(outs)
+
+
+def ragged_decode_attention_quant_ref(q, k, kscale, v, vscale, lengths, *,
+                                      window: int = 0):
+    """Int8 ragged oracle: dequantize and reuse the float ragged oracle."""
+    return ragged_decode_attention_ref(q, _dequant(k, kscale),
+                                       _dequant(v, vscale), lengths,
+                                       window=window)
+
+
+def ragged_tree_attention_ref(q, k, v, bases, kt, vt, depths, anc, *,
+                              window: int = 0):
+    """Length-aware dense tree oracle: per-lane reuse of the dense tree
+    oracle with base = bases[b] and contiguous stored positions."""
+    B = q.shape[0]
+    L = k.shape[2]
+    outs = []
+    for b in range(B):
+        base = int(bases[b])
+        kpos = jnp.where(jnp.arange(L) < base, jnp.arange(L), -1).astype(jnp.int32)
+        outs.append(tree_attention_ref(
+            q[b:b + 1], k[b:b + 1], v[b:b + 1], kpos, base,
+            kt[b:b + 1], vt[b:b + 1],
+            base + jnp.asarray(depths, jnp.int32), anc, window=window)[0])
+    return jnp.stack(outs)
+
+
 def _dequant(qv, scale):
     """int8 payload (..., L, D) + per-row scale (..., L) -> float32."""
     return qv.astype(jnp.float32) * scale[..., None].astype(jnp.float32)

@@ -21,6 +21,14 @@ each grid step's DMA to ``tables[b, ib]`` — the same structure as
 ``decode_attention.paged_decode_attention``.  Validity degenerates to
 ``kp < lengths[b]`` (committed rows only, by construction).
 
+``ragged_tree_attention`` is the length-aware dense variant for mixed-
+length serving lanes: the per-lane cache pointer rides in as a (B,)
+scalar-prefetch operand ``bases``, cache blocks past ``bases[b]`` skip
+compute via ``pl.when`` early-exit with their DMA index clamped to the
+lane's last valid block, and the tree block always runs (nodes attend
+their ancestors even on an empty cache).  The paged kernel applies the
+same early-exit on top of its trash-block masking.
+
 Layouts (one query per tree node per head):
   dense: q (B, H, T, D); k, v (B, G, L, D); kpos (L,); base () int32;
          kt, vt (B, G, T, D); qpos (T,) node positions; anc (T, T) int32.
@@ -150,6 +158,116 @@ def tree_attention(q, k, v, kpos, base, kt, vt, qpos, anc, *,
     return out
 
 
+# ----------------------------------------------------------- dense ragged
+
+def _last_block(n, blk):
+    """Index of the last block holding valid rows for a lane of ``n`` valid
+    tokens (0 for an empty lane — its rows are masked anyway)."""
+    return jnp.maximum((n + blk - 1) // blk - 1, 0)
+
+
+def _ragged_tree_kernel(bases_ref, depths_ref, anc_ref, q_ref, k_ref, v_ref,
+                        kt_ref, vt_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        scale: float, window: int, bl: int, nl: int):
+    b = pl.program_id(0)
+    il = pl.program_id(2)
+
+    @pl.when(il == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (T, D)
+    base = bases_ref[b]                               # per-lane cache pointer
+
+    @pl.when((il < nl) & (il * bl < base))            # EARLY EXIT past base
+    def _cache_block():
+        k = k_ref[0, 0].astype(jnp.float32)           # (bl, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        kp = il * bl + jax.lax.broadcasted_iota(jnp.int32, (bl, 1), 0)[:, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        mask = jnp.broadcast_to(kp[None, :] < base, s.shape)
+        if window:
+            qp = base + depths_ref[...]               # (T,) node positions
+            mask &= (qp[:, None] - kp[None, :]) < window
+        _online_update(s, mask, v, m_ref, l_ref, acc_ref)
+
+    # the tree block always runs: nodes attend their ancestors even when
+    # the lane's cache is empty, and it carries the finalize
+    @pl.when(il == nl)
+    def _tree_block():
+        kt = kt_ref[0, 0].astype(jnp.float32)
+        vt = vt_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ()))) * scale
+        _online_update(s, anc_ref[...] != 0, vt, m_ref, l_ref, acc_ref)
+        _finalize(o_ref, m_ref, l_ref, acc_ref)
+
+
+def ragged_tree_attention(q, k, v, bases, kt, vt, depths, anc, *,
+                          window: int = 0, block_l: int = 512,
+                          interpret: bool = False):
+    """Length-aware dense tree verification: q (B,H,T,D); k,v (B,G,L,D)
+    contiguous per-lane caches; bases (B,) int32 per-lane cache pointers
+    (rows >= bases[b] dead); kt,vt (B,G,T,D) tree-node K/V; depths (T,)
+    node depths (window masking only — node position = bases[b] + depth);
+    anc (T,T) ancestor mask. -> (B,H,T,D).
+
+    ``bases`` is a SCALAR-PREFETCH operand: cache blocks past a lane's
+    pointer early-exit and clamp their DMA to the last valid block, so a
+    short lane pays its own cache sweep, not the batch max."""
+    B, H, T, D = q.shape
+    G, L = k.shape[1], k.shape[2]
+    assert H % G == 0 and bases.shape == (B,)
+    assert kt.shape == (B, G, T, D) and vt.shape == (B, G, T, D)
+    assert anc.shape == (T, T) and depths.shape == (T,)
+    bl = min(block_l, L)
+    pL = (-L) % bl
+    if pL:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pL), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pL), (0, 0)))
+    nl = k.shape[2] // bl
+    rep = H // G
+    scale = 1.0 / (D ** 0.5)
+
+    def kv_map(b, h, il, bs_):
+        il_eff = jnp.minimum(jnp.minimum(il, nl - 1),
+                             _last_block(bs_[b], bl))
+        return (b, h // rep, il_eff, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nl + 1),
+        in_specs=[
+            pl.BlockSpec((T,), lambda b, h, il, bs_: (0,)),
+            pl.BlockSpec((T, T), lambda b, h, il, bs_: (0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, il, bs_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bl, D), kv_map),
+            pl.BlockSpec((1, 1, bl, D), kv_map),
+            pl.BlockSpec((1, 1, T, D),
+                         lambda b, h, il, bs_: (b, h // rep, 0, 0)),
+            pl.BlockSpec((1, 1, T, D),
+                         lambda b, h, il, bs_: (b, h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, D),
+                               lambda b, h, il, bs_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T,), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_ragged_tree_kernel, scale=scale, window=window,
+                          bl=bl, nl=nl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(bases, jnp.int32), jnp.asarray(depths, jnp.int32),
+      jnp.asarray(anc, jnp.int32), q, k, v, kt, vt)
+    return out
+
+
 # ------------------------------------------------------------------ paged
 
 def _paged_tree_kernel(tables_ref, lengths_ref, depths_ref, anc_ref, q_ref,
@@ -168,7 +286,7 @@ def _paged_tree_kernel(tables_ref, lengths_ref, depths_ref, anc_ref, q_ref,
     q = q_ref[0, 0].astype(jnp.float32)               # (T, D)
     ln = lengths_ref[b]
 
-    @pl.when(ib < nmb)
+    @pl.when((ib < nmb) & (ib * bs < ln))             # EARLY EXIT past length
     def _cache_block():
         k = k_ref[0, :, 0].astype(jnp.float32)        # (bs, D)
         v = v_ref[0, :, 0].astype(jnp.float32)
@@ -192,9 +310,10 @@ def _paged_tree_kernel(tables_ref, lengths_ref, depths_ref, anc_ref, q_ref,
 def paged_tree_attention(q, kpool, vpool, tables, lengths, kt, vt, depths,
                          anc, *, window: int = 0, interpret: bool = False):
     """Paged tree verification: the grid sweeps every table slot (scalar-
-    prefetch DMA steering); out-of-length slots resolve to the trash block
-    whose rows are fully masked, so ragged lengths and post-rollback states
-    are handled by the same sweep. -> (B, H, T, D)."""
+    prefetch DMA steering) but early-exits blocks past ``lengths[b]`` with
+    their DMA clamped to the lane's last valid block, so ragged lengths and
+    post-rollback states cost what they store, not what the table spans.
+    -> (B, H, T, D)."""
     B, H, T, D = q.shape
     N, bs, G, _ = kpool.shape
     MB = tables.shape[1]
@@ -204,6 +323,11 @@ def paged_tree_attention(q, kpool, vpool, tables, lengths, kt, vt, depths,
     rep = H // G
     scale = 1.0 / (D ** 0.5)
 
+    def kv_map(b, h, ib, tbl, ln):
+        ib_eff = jnp.minimum(jnp.minimum(ib, MB - 1),
+                             _last_block(ln[b], bs))
+        return (tbl[b, ib_eff], 0, h // rep, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, H, MB + 1),
@@ -211,12 +335,8 @@ def paged_tree_attention(q, kpool, vpool, tables, lengths, kt, vt, depths,
             pl.BlockSpec((T,), lambda b, h, ib, tbl, ln: (0,)),
             pl.BlockSpec((T, T), lambda b, h, ib, tbl, ln: (0, 0)),
             pl.BlockSpec((1, 1, T, D), lambda b, h, ib, tbl, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, ib, tbl, ln:
-                         (tbl[b, jnp.minimum(ib, MB - 1)], 0, h // rep, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda b, h, ib, tbl, ln:
-                         (tbl[b, jnp.minimum(ib, MB - 1)], 0, h // rep, 0)),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
             pl.BlockSpec((1, 1, T, D),
                          lambda b, h, ib, tbl, ln: (b, h // rep, 0, 0)),
             pl.BlockSpec((1, 1, T, D),

@@ -34,7 +34,8 @@ __all__ = [
     "FSDP", "BATCH", "param_spec", "params_shardings", "cache_spec",
     "cache_shardings", "slot_cache_spec", "slot_cache_shardings",
     "paged_cache_spec", "paged_cache_shardings", "batch_shardings",
-    "tree_shardings", "replicated",
+    "tree_shardings", "replicated", "lane_shardings",
+    "fused_tick_shardings",
 ]
 
 # (regex over "/"-joined path, spec WITHOUT the stacked-cycle dim)
@@ -224,3 +225,46 @@ def batch_shardings(mesh: Mesh, batch_shape: Any) -> Any:
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+def lane_shardings(mesh: Mesh, *shapes):
+    """NamedShardings pinning the leading STREAM-LANE axis of flat (B, ...)
+    per-lane serving operands — tokens, arm rows, PRNG keys, active masks,
+    and the RAGGED-LENGTH vectors the fused tick and length-aware kernels
+    take — to the ("pod","data") batch axes.  Indivisible axes drop per
+    ``resolve_spec``, so B=1 / odd-B shapes degrade to replicated."""
+    out = tuple(NamedSharding(mesh, resolve_spec(mesh, (BATCH,), s))
+                for s in shapes)
+    return out[0] if len(out) == 1 else out
+
+
+def fused_tick_shardings(mesh: Mesh, *, batch_size: int, gamma_max: int,
+                         n_prompt_tokens: int, signal_dim: int,
+                         dparams_sh, tparams_sh, dcache_sh, tcache_sh):
+    """(in_shardings, out_sharding_fields) for the fused serving tick
+    (``core/spec_decode.fused_session_tick`` argument order).
+
+    Per-lane operands — in/last tokens, arm matrix, draft/verify PRNG
+    keys, active mask, and the three ragged (B,) length/keep vectors —
+    shard their lane axis over ("pod","data"); the AdaEDL threshold
+    replicates; params and caches keep the resident pytree shardings the
+    engine placed them with.  The outcome-buffer fields come back lane-
+    sharded so the host's deferred read pulls each lane from its shard."""
+    B, g = batch_size, gamma_max
+
+    def lane(shape):
+        return lane_shardings(mesh, shape)
+
+    ins = (dparams_sh, tparams_sh, dcache_sh, tcache_sh,
+           lane((B, n_prompt_tokens)),            # in_tokens
+           lane((B, 1)),                          # last_tokens
+           lane((B, g)),                          # arm_mat
+           replicated(mesh),                      # lam
+           lane((B, 2)), lane((B, 2)),            # drngs, vrngs
+           lane((B,)),                            # active
+           lane((B,)), lane((B,)), lane((B,)))    # lengths, dkeep, tkeep
+    outs = dict(n_drafted=lane((B,)), n_accepted=lane((B,)),
+                out_tokens=lane((B, g + 1)), entropies=lane((B, g)),
+                signals=lane((B, g, signal_dim)),
+                dcache=dcache_sh, tcache=tcache_sh)
+    return ins, outs

@@ -49,15 +49,16 @@ Per-request accounting: queue delay (submit -> admission), latency
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.controller import Controller, TapOutTreeSequence
-from repro.core.engine import (BatchedSpecEngine, GenResult, ModelBundle,
-                               PagedSpecEngine, TreeSlotEngine)
+from repro.core.controller import Controller
+from repro.core.engine import (EngineSpec, GenResult, ModelBundle,
+                               engine_spec_from_legacy, make_engine)
 
 
 @dataclass
@@ -77,59 +78,49 @@ class Response:
     queue_delay_s: float
 
 
+_LEGACY_KWARGS = ("max_len", "max_concurrency", "temperature", "greedy",
+                  "seed", "paged", "block_size", "pool_tokens", "tree",
+                  "kv_dtype", "quant_draft", "mesh")
+
+
 class SpecServer:
     def __init__(self, draft: ModelBundle, target: ModelBundle,
-                 controller: Controller, *, max_len: int = 2048,
-                 max_concurrency: int = 8, temperature: float = 0.0,
-                 greedy: bool = True, seed: int = 0, paged: bool = False,
-                 block_size: int = 64, pool_tokens: Optional[int] = None,
-                 tree: bool = False, kv_dtype: Optional[str] = None,
-                 quant_draft: bool = False, mesh=None):
-        # quantization knobs (docs/quantization.md) apply to every backend:
-        # kv_dtype="int8" stores both models' KV quantized — the same
-        # pool_tokens budget costs ~4x fewer bytes (fp32 pools), i.e. ~2x
-        # the effective capacity of a bf16 deployment per byte —
-        # quant_draft=True swaps the draft for int8 weights with the
-        # precision-scaled modeled cost.
-        # mesh (docs/sharding.md) applies to every backend too: params and
-        # caches are placed at init, slot lanes shard over ("pod","data"),
-        # and admission prefills land on the shard that owns the slot lane
-        # they are written into.  The controller stays host-side: its
-        # per-tick observation merge is order-independent, so bandit state
-        # is identical whatever mesh served the batch.
-        if tree:
-            # tree-speculation serving: per-slot single-stream caches, ONE
-            # shape bandit (chain + tree arms) online across requests; the
-            # controller must expose the shape surface
-            assert isinstance(controller, TapOutTreeSequence), \
-                "tree serving needs a TapOutTreeSequence controller"
-            assert not paged, "tree serving uses per-slot dense caches"
-            self.engine = TreeSlotEngine(
-                draft, target, controller, batch_size=max_concurrency,
-                max_len=max_len, temperature=temperature, greedy=greedy,
-                kv_dtype=kv_dtype, quant_draft=quant_draft, seed=seed,
-                mesh=mesh)
-        elif paged:
-            # pool_tokens sizes KV memory independently of B x max_len: with
-            # short requests the SAME byte budget admits more concurrent
-            # streams than the dense engine's worst-case per-slot buffers
-            self.engine = PagedSpecEngine(
-                draft, target, controller, batch_size=max_concurrency,
-                max_len=max_len, block_size=block_size,
-                pool_tokens=pool_tokens, temperature=temperature,
-                greedy=greedy, kv_dtype=kv_dtype, quant_draft=quant_draft,
-                seed=seed, mesh=mesh)
-        else:
-            self.engine = BatchedSpecEngine(
-                draft, target, controller, batch_size=max_concurrency,
-                max_len=max_len, temperature=temperature, greedy=greedy,
-                kv_dtype=kv_dtype, quant_draft=quant_draft, seed=seed,
-                mesh=mesh)
-        self.mesh = mesh
-        self.paged = paged
-        self.tree = tree
+                 controller: Controller, *,
+                 spec: Optional[EngineSpec] = None, **legacy):
+        # ONE construction surface: an EngineSpec describes the whole
+        # deployment (backend, concurrency, precision, placement — see
+        # ``core.engine.EngineSpec`` and docs/serving.md) and the factory
+        # builds the matching engine.  The pre-spec keyword surface
+        # (max_concurrency=, paged=, tree=, ...) still works through
+        # ``engine_spec_from_legacy`` but is deprecated.
+        if spec is not None and legacy:
+            raise TypeError(
+                f"pass spec= OR legacy engine kwargs, not both: {sorted(legacy)}")
+        if spec is None:
+            unknown = set(legacy) - set(_LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(f"unknown SpecServer kwargs: {sorted(unknown)}")
+            if legacy:
+                warnings.warn(
+                    "SpecServer(max_concurrency=..., paged=..., tree=..., ...)"
+                    " is deprecated; pass spec=EngineSpec(...) instead"
+                    " (docs/serving.md has the migration table)",
+                    DeprecationWarning, stacklevel=2)
+            spec = engine_spec_from_legacy(**legacy)
+        # serving needs a slot engine: the single-stream and B=1-tree
+        # backends promote to their slot facades
+        backend = spec.resolve_backend()
+        backend = {"single": "batched", "tree": "tree_slot"}.get(backend,
+                                                                 backend)
+        self.engine = make_engine(draft, target, controller, spec,
+                                  backend=backend)
+        self.spec = spec
+        self.backend = backend
+        self.mesh = spec.mesh
+        self.paged = backend == "paged"
+        self.tree = backend == "tree_slot"
         self.gamma_max = controller.gamma_max
-        self.max_concurrency = max_concurrency
+        self.max_concurrency = spec.batch_size
         self.queue: deque = deque()
         self.requests: Dict[int, Request] = {}
         self.responses: List[Response] = []
@@ -180,14 +171,30 @@ class SpecServer:
             self._slot_started[slot] = time.perf_counter()
 
     def step(self) -> List[int]:
-        """One scheduler tick: admit, run one batched session across all
-        active slots, release finished slots.  Returns the request ids that
-        completed this tick (several streams can finish in one tick)."""
+        """One scheduler tick, PIPELINED against the device:
+
+          1. flush tick t-1 (read back its device-resident outcomes, do
+             per-stream accounting, feed the bandit),
+          2. release the slots that finished,
+          3. admit queued requests into the free slots,
+          4. launch tick t (fused engines: one asynchronous device
+             program; its outcomes are read by the NEXT step's flush).
+
+        The bandit therefore consumes acceptance outcomes one step behind
+        the device, but its begin/update call sequence — and so its state
+        — is exactly what back-to-back synchronous ticks produce.  Returns
+        the request ids that completed this tick (i.e. in the flushed
+        tick t-1; several streams can finish in one tick)."""
+        self.engine.session_step_flush()
+        finished = self._release_finished()
         self._admit()
-        if not self._slot_rid:
-            return []
-        self.peak_concurrency = max(self.peak_concurrency, len(self._slot_rid))
-        self.engine.session_step_batch()
+        if self._slot_rid:
+            self.peak_concurrency = max(self.peak_concurrency,
+                                        len(self._slot_rid))
+            self.engine.session_step_launch()
+        return finished
+
+    def _release_finished(self) -> List[int]:
         finished: List[int] = []
         for slot in list(self._slot_rid):
             st = self.engine.slots[slot]
@@ -207,6 +214,8 @@ class SpecServer:
         return finished
 
     def run_until_drained(self, max_ticks: int = 1_000_000) -> List[Response]:
+        # the loop condition naturally drains the pipeline: after the last
+        # launch, _slot_rid stays non-empty until the final flush+release
         ticks = 0
         while (self.queue or self._slot_rid) and ticks < max_ticks:
             self.step()
@@ -223,17 +232,23 @@ class SpecServer:
         acc = sum(r.result.total_accepted for r in self.responses)
         drf = sum(r.result.total_drafted for r in self.responses)
         lats = np.array([r.latency_s for r in self.responses])
+        sessions = sum(len(r.result.sessions) for r in self.responses)
         stats = {
             "n_requests": len(self.responses),
             "total_new_tokens": toks,
             "modeled_cost_per_token": cost / max(toks, 1),
             "wall_s_per_token": wall / max(toks, 1),
             "accept_rate": acc / max(drf, 1),
+            # canonical across ALL backends (the tree-vs-chain objective is
+            # just its specialization): accepted tokens per verify forward
+            "accepted_per_verify": acc / max(sessions, 1),
             "mean_latency_s": float(lats.mean()),
             "p50_latency_s": float(np.percentile(lats, 50)),
             "p95_latency_s": float(np.percentile(lats, 95)),
             "peak_concurrency": self.peak_concurrency,
             "backpressure_events": self.backpressure_events,
+            # canonical settings blob: what produced these numbers
+            "engine": self.engine.describe(),
         }
         if self.mesh is not None:
             stats["mesh_devices"] = int(self.mesh.devices.size)
@@ -242,11 +257,7 @@ class SpecServer:
         if self.paged:
             stats.update(self.engine.pool_stats())
         if self.tree:
-            # per-request accepted-path accounting: accepted tokens per
-            # verify pass (the tree-vs-chain objective) + the bandit's
-            # shape preferences after serving this workload
-            sessions = sum(len(r.result.sessions) for r in self.responses)
-            stats["accepted_per_verify"] = acc / max(sessions, 1)
+            # the bandit's shape preferences after serving this workload
             ctrl = self.engine.controller
             stats["shape_names"] = [s.name for s in ctrl.shapes]
             stats["shape_pulls"] = ctrl.shape_pulls.tolist()

@@ -1,0 +1,201 @@
+"""EngineSpec/make_engine factory API: spec-vs-legacy parity, the
+deprecation shim, canonical stats naming, and fused-vs-synchronous tick
+bit-identity (the single-dispatch serving step must leave the bandit in
+exactly the state the two-dispatch path produces)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import EngineSpec, make_controller, make_engine
+from repro.core.engine import (BatchedSpecEngine, PagedSpecEngine,
+                               SpecEngine, TreeSlotEngine)
+from repro.serving.engine import SpecServer
+
+PROMPTS = [[1, 5, 9, 13], [2, 6, 10, 14], [3, 7, 11, 15]]
+
+
+def _controller(backend: str):
+    kind = ("tapout_tree_ucb1" if backend.startswith("tree")
+            else "tapout_seq_ucb1")
+    return make_controller(kind, gamma_max=4, seed=0)
+
+
+def _serve(pair, *, spec=None, legacy=None, max_new=10):
+    draft, target = pair
+    backend = spec.backend if spec is not None else (
+        "tree_slot" if legacy.get("tree") else "batched")
+    ctrl = _controller(backend)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        srv = (SpecServer(draft, target, ctrl, spec=spec)
+               if spec is not None
+               else SpecServer(draft, target, ctrl, **legacy))
+    for p in PROMPTS:
+        srv.submit(p, max_new)
+    responses = srv.run_until_drained()
+    tokens = {r.request_id: r.result.tokens for r in responses}
+    return srv, ctrl, tokens
+
+
+def _assert_state_equal(a, b):
+    assert a["t"] == b["t"]
+    np.testing.assert_array_equal(a["counts"], b["counts"])
+    np.testing.assert_allclose(a["means"], b["means"], rtol=0, atol=0)
+    np.testing.assert_allclose(a["m2"], b["m2"], rtol=0, atol=0)
+
+
+# ------------------------------------------------------------- resolution
+
+def test_spec_backend_resolution():
+    assert EngineSpec().resolve_backend() == "batched"
+    assert EngineSpec(batch_size=1).resolve_backend() == "single"
+    assert EngineSpec(pool_tokens=4096).resolve_backend() == "paged"
+    assert EngineSpec(backend="tree").resolve_backend() == "tree"
+    with pytest.raises(ValueError):
+        EngineSpec(backend="bogus")
+
+
+def test_make_engine_dispatch(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    ctrl = _controller("batched")
+    eng = make_engine(draft, target, ctrl,
+                      EngineSpec(batch_size=1, max_len=128))
+    assert isinstance(eng, SpecEngine) and eng.backend_name == "single"
+    eng = make_engine(draft, target, ctrl, backend="batched", batch_size=2,
+                      max_len=128)
+    assert isinstance(eng, BatchedSpecEngine)
+    assert eng.fused                      # cheap-rollback stack -> fused
+    d = eng.describe()
+    assert d["backend"] == "batched" and d["batch_size"] == 2
+    assert d["fused"] and d["devices"] == 1 and d["kv_dtype"] == "fp"
+    eng = make_engine(draft, target, ctrl, backend="paged", batch_size=2,
+                      max_len=128, pool_tokens=512)
+    assert isinstance(eng, PagedSpecEngine)
+    assert eng.describe()["pool"]["pool_tokens"] == 512
+    eng = make_engine(draft, target, _controller("tree_slot"),
+                      backend="tree_slot", batch_size=2, max_len=128)
+    assert isinstance(eng, TreeSlotEngine)
+    assert eng.describe()["backend"] == "tree_slot"
+
+
+# ------------------------------------------------------------- deprecation
+
+def test_legacy_kwargs_emit_deprecation_warning(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    with pytest.warns(DeprecationWarning, match="EngineSpec"):
+        srv = SpecServer(draft, target, _controller("batched"),
+                         max_len=256, max_concurrency=2)
+    assert srv.backend == "batched" and srv.max_concurrency == 2
+
+
+def test_spec_path_is_warning_free(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        srv = SpecServer(draft, target, _controller("batched"),
+                         spec=EngineSpec(batch_size=2, max_len=256))
+    assert srv.backend == "batched"
+
+
+def test_spec_plus_legacy_kwargs_raise(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    with pytest.raises(TypeError, match="not both"):
+        SpecServer(draft, target, _controller("batched"),
+                   spec=EngineSpec(), max_concurrency=2)
+    with pytest.raises(TypeError, match="unknown"):
+        SpecServer(draft, target, _controller("batched"), batch_sizes=2)
+
+
+# ------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("backend", ["batched", "paged", "tree_slot"])
+def test_factory_matches_legacy_kwargs(tiny_dense_pair, backend):
+    """spec= and the deprecated kwarg surface must build engines that
+    produce identical outputs AND identical bandit state."""
+    legacy = dict(max_len=256, max_concurrency=2)
+    if backend == "paged":
+        legacy["paged"] = True
+    if backend == "tree_slot":
+        legacy["tree"] = True
+    spec = EngineSpec(backend=backend, batch_size=2, max_len=256)
+    _, ctrl_a, toks_a = _serve(tiny_dense_pair, legacy=legacy)
+    _, ctrl_b, toks_b = _serve(tiny_dense_pair, spec=spec)
+    assert toks_a == toks_b
+    _assert_state_equal(ctrl_a.bandit.state_dict(),
+                        ctrl_b.bandit.state_dict())
+
+
+@pytest.mark.parametrize("backend", ["batched", "paged"])
+def test_fused_tick_matches_synchronous(tiny_dense_pair, backend):
+    """The single-dispatch fused tick and the two-dispatch synchronous
+    tick must agree token-for-token and leave BIT-IDENTICAL bandit state
+    (the fused program runs the sync primitives' exact traced bodies)."""
+    results = {}
+    for fused in (True, False):
+        spec = EngineSpec(backend=backend, batch_size=2, max_len=256,
+                          fused=fused)
+        srv, ctrl, toks = _serve(tiny_dense_pair, spec=spec)
+        assert srv.engine.fused is fused
+        results[fused] = (ctrl, toks)
+    assert results[True][1] == results[False][1]
+    _assert_state_equal(results[True][0].bandit.state_dict(),
+                        results[False][0].bandit.state_dict())
+
+
+def test_fused_engine_direct_ticks_match(tiny_dense_pair):
+    """Engine-level check without the server: back-to-back
+    session_step_batch (launch+flush) on a fused engine equals the
+    synchronous engine, stream for stream."""
+    draft, target = tiny_dense_pair
+    engines = {}
+    for fused in (True, False):
+        ctrl = _controller("batched")
+        eng = make_engine(draft, target, ctrl, backend="batched",
+                          batch_size=2, max_len=256, fused=fused)
+        eng.open_stream(0, PROMPTS[0])
+        eng.open_stream(1, PROMPTS[1])
+        for _ in range(4):
+            acted = eng.session_step_batch()
+            assert acted == [0, 1]
+        engines[fused] = (eng, ctrl)
+    ef, es = engines[True][0], engines[False][0]
+    assert ef.slots[0]["seq"] == es.slots[0]["seq"]
+    assert ef.slots[1]["seq"] == es.slots[1]["seq"]
+    np.testing.assert_array_equal(ef._dpos, es._dpos)
+    np.testing.assert_array_equal(ef._tpos, es._tpos)
+    _assert_state_equal(engines[True][1].bandit.state_dict(),
+                        engines[False][1].bandit.state_dict())
+
+
+def test_launch_flush_protocol(tiny_dense_pair):
+    """Launch defers all host effects to flush: the bandit sees begin at
+    launch and update only at flush; double-launch is rejected."""
+    draft, target = tiny_dense_pair
+    ctrl = _controller("batched")
+    eng = make_engine(draft, target, ctrl, backend="batched", batch_size=2,
+                      max_len=256)
+    assert eng.session_step_flush() == []          # nothing pending
+    eng.open_stream(0, PROMPTS[0])
+    t0 = ctrl.bandit.t
+    assert eng.session_step_launch() is True
+    assert ctrl.bandit.t == t0                     # update deferred
+    with pytest.raises(AssertionError):
+        eng.session_step_launch()                  # pending not flushed
+    assert eng.session_step_flush() == [0]
+    assert ctrl.bandit.t > t0
+    assert eng.session_step_flush() == []
+
+
+# ------------------------------------------------------------- stats
+
+def test_canonical_stats_schema(tiny_dense_pair):
+    spec = EngineSpec(backend="batched", batch_size=2, max_len=256)
+    srv, _, _ = _serve(tiny_dense_pair, spec=spec)
+    stats = srv.throughput_stats()
+    assert stats["accepted_per_verify"] > 0
+    eng = stats["engine"]
+    assert eng["backend"] == "batched" and eng["batch_size"] == 2
+    assert eng["fused"] is True and eng["devices"] == 1
+    for r in srv.responses:
+        assert r.result.accepted_per_verify == r.result.mean_accepted

@@ -7,6 +7,7 @@ point is exercising the example's own code path, not its quality."""
 import importlib.util
 import os
 import sys
+from dataclasses import replace
 
 import pytest
 
@@ -38,14 +39,15 @@ def test_quickstart_main(monkeypatch, tiny_trained_pair):
     monkeypatch.setattr(mod, "make_controller",
                         lambda kind, gamma_max=16, **kw:
                         real_make(kind, gamma_max=4, **kw))
-    real_engine = mod.SpecEngine
-    class TinyEngine(real_engine):
-        def __init__(self, draft, target, controller, **kw):
-            kw["max_len"] = 160
-            super().__init__(draft, target, controller, **kw)
-        def generate(self, prompt, max_new_tokens, eos_id=None):
-            return super().generate(prompt[:8], min(max_new_tokens, 8), eos_id)
-    monkeypatch.setattr(mod, "SpecEngine", TinyEngine)
+    real_make_engine = mod.make_engine
+    def tiny_make_engine(draft, target, controller, spec=None, **fields):
+        eng = real_make_engine(draft, target, controller,
+                               replace(spec, max_len=160), **fields)
+        real_gen = eng.generate
+        eng.generate = (lambda prompt, max_new_tokens, eos_id=None:
+                        real_gen(prompt[:8], min(max_new_tokens, 8), eos_id))
+        return eng
+    monkeypatch.setattr(mod, "make_engine", tiny_make_engine)
     mod.main()
 
 
@@ -61,10 +63,9 @@ def test_serve_tapout_main(monkeypatch, tiny_trained_pair, capsys):
                         lambda gamma, **kw: real_static(gamma=3, **kw))
     real_server = mod.SpecServer
     class TinyServer(real_server):
-        def __init__(self, draft, target, controller, **kw):
-            kw["max_len"] = 160
-            kw["max_concurrency"] = 2
-            super().__init__(draft, target, controller, **kw)
+        def __init__(self, draft, target, controller, *, spec, **kw):
+            super().__init__(draft, target, controller,
+                             spec=replace(spec, max_len=160, batch_size=2))
     monkeypatch.setattr(mod, "SpecServer", TinyServer)
     monkeypatch.setattr(sys, "argv",
                         ["serve_tapout.py", "--requests", "2", "--max-new", "6"])

@@ -195,6 +195,149 @@ def test_paged_decode_post_rollback_state():
                                atol=5e-5, rtol=5e-5)
 
 
+# ------------------------------------------------------------- dense ragged
+
+@pytest.mark.parametrize("B,H,G,L,D,window", [
+    (2, 4, 2, 256, 64, 0),
+    (3, 2, 1, 130, 32, 0),       # padding path, MQA
+    (2, 8, 8, 128, 128, 0),      # MHA, MXU-aligned head dim
+    (2, 4, 2, 256, 32, 24),      # sliding window
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_decode_attention_sweep(B, H, G, L, D, window, dtype):
+    """Per-lane lengths via scalar prefetch + pl.when early-exit vs the
+    per-lane oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(30), 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, G, L, D), dtype)
+    v = jax.random.normal(ks[2], (B, G, L, D), dtype)
+    rng = np.random.default_rng(30)
+    lengths = jnp.asarray(rng.integers(1, L, size=B), jnp.int32)
+    out = ops.ragged_decode_attention(q, k, v, lengths, window=window,
+                                      block_l=64)
+    exp = ref.ragged_decode_attention_ref(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_ragged_decode_matches_per_lane_dense():
+    """Ragged kernel == the non-ragged dense kernel called lane by lane."""
+    B, H, G, L, D = 3, 4, 2, 192, 64
+    ks = jax.random.split(jax.random.PRNGKey(31), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    lengths = np.array([17, 192, 65], np.int32)
+    out = ops.ragged_decode_attention(q, k, v, jnp.asarray(lengths),
+                                      block_l=64)
+    for b in range(B):
+        kpos = jnp.where(jnp.arange(L) < lengths[b], jnp.arange(L),
+                         -1).astype(jnp.int32)
+        exp = ops.decode_attention(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                   jnp.int32(lengths[b] - 1), kpos,
+                                   block_l=64)
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(exp[0]),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def test_ragged_decode_empty_lane_outputs_zero():
+    """lengths == 0: every block early-exits, the scratch stays at init,
+    and the unguarded finalize must emit zeros."""
+    B, H, G, L, D = 2, 2, 1, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(32), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    lengths = jnp.asarray([0, 70], jnp.int32)
+    out = ops.ragged_decode_attention(q, k, v, lengths, block_l=32)
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    exp = ref.ragged_decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+@pytest.mark.parametrize("B,H,G,L,D,window", [
+    (2, 4, 2, 256, 64, 0),
+    (3, 2, 1, 130, 32, 0),       # padding path, MQA
+    (2, 4, 2, 256, 32, 24),      # sliding window
+])
+def test_ragged_decode_attention_quant_sweep(B, H, G, L, D, window):
+    """Int8 ragged kernel vs the quantized ragged oracle, and within
+    quantization error of the fp ragged kernel on the same cache."""
+    from repro.models.quant import quantize_rows
+    ks = jax.random.split(jax.random.PRNGKey(33), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    kq, kscale = quantize_rows(k)
+    vq, vscale = quantize_rows(v)
+    rng = np.random.default_rng(33)
+    lengths = jnp.asarray(rng.integers(1, L, size=B), jnp.int32)
+    out = ops.ragged_decode_attention_quant(q, kq, kscale, vq, vscale,
+                                            lengths, window=window,
+                                            block_l=64)
+    exp = ref.ragged_decode_attention_quant_ref(q, kq, kscale, vq, vscale,
+                                                lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+    fp = ref.ragged_decode_attention_ref(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fp),
+                               atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("B,H,G,L,D,window", [
+    (2, 4, 2, 128, 64, 0),
+    (3, 2, 1, 130, 32, 0),       # padding path, MQA
+    (2, 4, 2, 128, 32, 24),      # sliding window
+])
+@pytest.mark.parametrize("treespec", ["chain4", "binary2"])
+def test_ragged_tree_attention_sweep(B, H, G, L, D, window, treespec):
+    """Per-lane bases via scalar prefetch + pl.when early-exit vs the
+    per-lane dense tree oracle."""
+    from repro.core import tree as trees
+    spec = {"chain4": trees.chain(4), "binary2": trees.binary(2)}[treespec]
+    T = spec.n_nodes
+    ks = jax.random.split(jax.random.PRNGKey(34), 5)
+    q = jax.random.normal(ks[0], (B, H, T, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    kt = jax.random.normal(ks[3], (B, G, T, D))
+    vt = jax.random.normal(ks[4], (B, G, T, D))
+    rng = np.random.default_rng(34)
+    bases = jnp.asarray(rng.integers(1, L, size=B), jnp.int32)
+    depths = jnp.asarray(spec.depths, jnp.int32)
+    anc = jnp.asarray(spec.ancestor_mask, jnp.int32)
+    out = ops.ragged_tree_attention(q, k, v, bases, kt, vt, depths, anc,
+                                    window=window, block_l=64)
+    exp = ref.ragged_tree_attention_ref(q, k, v, bases, kt, vt, depths, anc,
+                                        window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_ragged_tree_empty_lane_attends_tree_only():
+    """bases == 0: every cache block early-exits; nodes still attend their
+    ancestors, so the output equals tree-only attention (not zeros)."""
+    from repro.core import tree as trees
+    spec = trees.chain(3)
+    B, H, G, L, D = 1, 2, 1, 64, 32
+    T = spec.n_nodes
+    ks = jax.random.split(jax.random.PRNGKey(35), 5)
+    q = jax.random.normal(ks[0], (B, H, T, D))
+    k = jax.random.normal(ks[1], (B, G, L, D))
+    v = jax.random.normal(ks[2], (B, G, L, D))
+    kt = jax.random.normal(ks[3], (B, G, T, D))
+    vt = jax.random.normal(ks[4], (B, G, T, D))
+    depths = jnp.asarray(spec.depths, jnp.int32)
+    anc = jnp.asarray(spec.ancestor_mask, jnp.int32)
+    out = ops.ragged_tree_attention(q, k, v, jnp.zeros((B,), jnp.int32),
+                                    kt, vt, depths, anc, block_l=32)
+    exp = ref.flash_attention_ref(q, kt, vt, depths,
+                                  jnp.arange(T, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=5e-5, rtol=5e-5)
+
+
 # --------------------------------------------------------------- quantized
 
 @pytest.mark.parametrize("B,H,G,L,D,valid,window", [

@@ -188,6 +188,42 @@ def test_server_backend_sharded_matches_unsharded_full(pair, backend):
     _backend_parity(pair, SLOW_BACKENDS[backend])
 
 
+# ------------------------------------------------------- fused tick
+
+@multidev
+@pytest.mark.parametrize("backend", ["batched", "paged"])
+def test_fused_tick_matches_synchronous_sharded(pair, backend):
+    """The fused single-dispatch tick preserves PR 5's sharding-invariance
+    guarantee: on the full (4, 2) mesh, fused and synchronous serving
+    produce identical greedy outputs and BIT-IDENTICAL bandit state (the
+    one-step-delayed outcome readback changes when the host learns, never
+    what it learns)."""
+    from repro.core import EngineSpec
+    from repro.serving.engine import SpecServer
+    draft, target = pair
+    results = {}
+    for fused in (True, False):
+        ctrl = _controller(False)
+        spec = EngineSpec(backend=backend, batch_size=2, max_len=128,
+                          block_size=16,
+                          pool_tokens=512 if backend == "paged" else None,
+                          fused=fused, mesh=make_host_mesh(data=4, model=2))
+        srv = SpecServer(draft, target, ctrl, spec=spec)
+        assert srv.engine.fused is fused
+        for p in PROMPTS:
+            srv.submit(p, 6)
+        srv.run_until_drained()
+        outs = [r.result.tokens
+                for r in sorted(srv.responses, key=lambda r: r.request_id)]
+        results[fused] = (outs, ctrl.bandit.state_dict())
+    assert results[True][0] == results[False][0]
+    a, b = results[True][1], results[False][1]
+    assert a["t"] == b["t"]
+    np.testing.assert_array_equal(a["counts"], b["counts"])
+    np.testing.assert_allclose(a["means"], b["means"], rtol=0, atol=0)
+    np.testing.assert_allclose(a["m2"], b["m2"], rtol=0, atol=0)
+
+
 # ------------------------------------------------- tensor-parallel mesh
 
 @multidev
