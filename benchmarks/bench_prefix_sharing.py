@@ -1,0 +1,248 @@
+"""Prefix-sharing serving: pool bytes, peak concurrency, and prefill
+skipped on a cache hit (docs/prefix_sharing.md).
+
+N streams admitted with a common block-aligned system prompt should be
+~free relative to PR 2-style fully private reservation, along three
+measured-and-GATED axes:
+
+* ``claim_shared_region_blocks_1_over_n`` — the physical blocks backing
+  the shared prefix region across all N concurrent streams are <=
+  ``(1/N + eps)`` of what private reservation allocates for that region
+  (exactly ``F`` distinct blocks vs ``N*F``; a copy-on-write of the one
+  draft frontier block is the only allowed slack).  Counted from the
+  allocator's tables — deterministic, gates every mode including
+  ``--smoke``.
+* ``claim_shared_admits_more`` — at a FIXED pool size the prefix-sharing
+  server reaches STRICTLY higher peak concurrency than the private
+  server on the same shared-prompt workload, because adopters reserve
+  only their non-shared suffix.  Deterministic admission arithmetic,
+  gates every mode.
+* ``claim_prefill_skipped_ge_shared_fraction`` — on a cache hit the
+  engine's prefill-compute counters show at least the shared fraction of
+  the prefill region was skipped (the compute part of the TTFT win;
+  deterministic, gates every mode).  ``claim_ttft_hit_faster`` asserts
+  the wall-clock counterpart — admission-to-first-token on a hit beats
+  the cold admission of the same prompt — and also gates every mode: at
+  >=80% of prefill skipped the gap is far outside timer noise once both
+  code paths are warm.
+
+Appends a ``prefix_sharing`` summary row to BENCH_serving.json (the
+committed perf trajectory) and writes
+``artifacts/bench/prefix_sharing[_smoke].json``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_serving_batch import _tiny_pair
+
+BLOCK = 16
+
+
+def _prompts(n: int, prefix_blocks: int, seed: int = 0) -> List[List[int]]:
+    """n prompts sharing a block-aligned prefix + a distinct short tail."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, 60, size=prefix_blocks * BLOCK).tolist()
+    return [prefix + rng.integers(1, 60, size=7).tolist() for _ in range(n)]
+
+
+def _mk_engine(draft, target, *, prefix_cache, pool_tokens, batch_size=4,
+               gamma_max=4, max_len=256, seed=0):
+    from repro.core import EngineSpec, make_controller, make_engine
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=gamma_max, seed=seed)
+    return make_engine(draft, target, ctrl, EngineSpec(
+        backend="paged", batch_size=batch_size, max_len=max_len,
+        block_size=BLOCK, pool_tokens=pool_tokens,
+        prefix_cache=prefix_cache, seed=seed))
+
+
+def _shared_region_blocks(eng, n_streams: int, region_blocks: int) -> int:
+    """Distinct physical blocks backing the first ``region_blocks`` logical
+    blocks of every live stream, summed over the draft+target pools."""
+    total = 0
+    for alloc in (eng.dalloc, eng.talloc):
+        phys = {b for s in range(n_streams)
+                for b in alloc.owned[s][:region_blocks]}
+        total += len(phys)
+    return total
+
+
+def _region_bytes(eng, n_blocks: int) -> int:
+    """Bytes of ``n_blocks`` pool blocks across both models' cache leaves."""
+    per_block = eng.pool_stats()["cache_pool_bytes"] // (
+        eng.dspec.num_blocks + eng.tspec.num_blocks)
+    return 2 * n_blocks * per_block
+
+
+def _concurrency_run(draft, target, prompts, *, prefix_cache, pool_tokens,
+                     max_new, gamma_max):
+    from repro.core import EngineSpec, make_controller
+    from repro.serving.engine import SpecServer
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=gamma_max, seed=0)
+    srv = SpecServer(draft, target, ctrl, spec=EngineSpec(
+        backend="paged", batch_size=4, max_len=256, block_size=BLOCK,
+        pool_tokens=pool_tokens, prefix_cache=prefix_cache))
+    for p in prompts:
+        srv.submit(p, max_new)
+    t0 = time.perf_counter()
+    srv.run_until_drained(max_ticks=2000)
+    wall = time.perf_counter() - t0
+    stats = srv.throughput_stats()
+    stats["wall_s"] = wall
+    stats["tokens_per_s"] = stats["total_new_tokens"] / max(wall, 1e-9)
+    assert len(srv.responses) == len(prompts), "workload failed to drain"
+    return stats
+
+
+def _ttft(eng, prompt, slot) -> float:
+    """Wall seconds from admission to the first emitted token."""
+    t0 = time.perf_counter()
+    eng.open_stream(slot, list(prompt), reserve_tokens=len(prompt) + 20)
+    eng.session_step_batch()
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    from benchmarks.common import record_serving_bench, save_json
+
+    n_streams = 4
+    prefix_blocks = 2 if smoke else 4
+    max_new = 6 if smoke else (12 if quick else 24)
+    gamma_max = 4
+    draft, target = _tiny_pair(n_layers_t=2, d_model_t=64,
+                               n_layers_d=1, d_model_d=32)
+    prompts = _prompts(n_streams, prefix_blocks)
+    P = len(prompts[0])
+    reserve = P + max_new + gamma_max + 2
+    need_blocks = -(-reserve // BLOCK)
+    shared_tokens = prefix_blocks * BLOCK
+
+    # ---- pool-bytes row: N concurrent streams, same block-aligned prefix.
+    # Private reservation backs the prefix region with N*F blocks per pool;
+    # sharing backs it with F (+ at most the one COW'd draft frontier
+    # block, which this layout never needs: the suffix keeps the write
+    # frontier past the adopted run).
+    rows = {}
+    for mode, pc in (("private", False), ("shared", True)):
+        eng = _mk_engine(draft, target, prefix_cache=pc,
+                         pool_tokens=16 * need_blocks * BLOCK,
+                         gamma_max=gamma_max)
+        for s, p in enumerate(prompts):
+            eng.open_stream(s, list(p), reserve_tokens=reserve)
+        blocks = _shared_region_blocks(eng, n_streams, prefix_blocks)
+        ps = eng.pool_stats()
+        rows[mode] = {
+            "prefix_region_blocks": blocks,
+            "prefix_region_bytes": _region_bytes(eng, blocks),
+            "blocks_in_use": ps["blocks_in_use"],
+            "prefill_tokens_computed": ps["prefill_tokens_computed"],
+            "prefill_tokens_skipped": ps["prefill_tokens_skipped"],
+            "cow_copies": ps["cow_copies"],
+        }
+        for s in range(n_streams):
+            eng.close_stream(s)
+    ratio = rows["shared"]["prefix_region_blocks"] / max(
+        rows["private"]["prefix_region_blocks"], 1)
+    eps = 1.0 / (n_streams * prefix_blocks)        # one COW block of slack
+    claim_blocks = bool(ratio <= 1.0 / n_streams + eps)
+    print(f"  shared-region blocks: {rows['shared']['prefix_region_blocks']}"
+          f" vs private {rows['private']['prefix_region_blocks']}"
+          f"  ratio={ratio:.3f} (target <= {1.0 / n_streams + eps:.3f})",
+          file=sys.stderr)
+
+    # ---- fixed-pool concurrency row: the pool fits ONE private
+    # reservation plus change, so the private server serializes; adopters
+    # only reserve their suffix, so the sharing server overlaps streams.
+    pool_blocks = need_blocks + 2 * max(need_blocks - prefix_blocks, 1)
+    many = _prompts(8, prefix_blocks, seed=1)
+    conc = {}
+    for mode, pc in (("private", False), ("shared", True)):
+        conc[mode] = _concurrency_run(
+            draft, target, many, prefix_cache=pc,
+            pool_tokens=pool_blocks * BLOCK, max_new=max_new,
+            gamma_max=gamma_max)
+        print(f"  {mode}: peak_concurrency={conc[mode]['peak_concurrency']}"
+              f"  backpressure={conc[mode]['backpressure_events']}"
+              f"  {conc[mode]['tokens_per_s']:.1f} tok/s", file=sys.stderr)
+    claim_conc = bool(conc["shared"]["peak_concurrency"]
+                      > conc["private"]["peak_concurrency"])
+
+    # ---- TTFT row: same prompt cold (miss) and warm (hit) on one engine
+    # whose jitted shapes are already compiled; the hit skips the shared
+    # prefix's prefill compute entirely.
+    eng = _mk_engine(draft, target, prefix_cache=True,
+                     pool_tokens=16 * need_blocks * BLOCK,
+                     gamma_max=gamma_max)
+    _ttft(eng, prompts[0], 0)                      # warmup: compile + seed
+    eng.close_stream(0)
+    eng.prefix_cache.evict(10 ** 6)                # forget everything
+    base = eng.pool_stats()
+    ttft_miss = _ttft(eng, prompts[1], 0)          # cold: full prefill
+    ttft_hit = _ttft(eng, prompts[2], 1)           # hit: suffix-only prefill
+    ps = eng.pool_stats()
+    skipped = ps["prefill_tokens_skipped"] - base["prefill_tokens_skipped"]
+    computed = ps["prefill_tokens_computed"] - base["prefill_tokens_computed"]
+    hit_prefill_region = P - 1
+    frac_skipped = skipped / hit_prefill_region
+    shared_frac = shared_tokens / hit_prefill_region
+    claim_prefill = bool(frac_skipped >= shared_frac - 1e-9)
+    claim_ttft = bool(ttft_hit < ttft_miss)
+    print(f"  ttft: miss={ttft_miss * 1e3:.1f}ms hit={ttft_hit * 1e3:.1f}ms"
+          f"  prefill skipped {skipped}/{hit_prefill_region}"
+          f" (shared fraction {shared_frac:.2f})", file=sys.stderr)
+
+    payload = {
+        "config": {"n_streams": n_streams, "prefix_blocks": prefix_blocks,
+                   "block_size": BLOCK, "prompt_len": P,
+                   "max_new": max_new, "gamma_max": gamma_max,
+                   "pool_blocks_fixed": pool_blocks},
+        "region": rows,
+        "region_block_ratio": ratio,
+        "concurrency": conc,
+        "ttft_miss_s": ttft_miss,
+        "ttft_hit_s": ttft_hit,
+        "prefill_skipped_fraction_on_hit": frac_skipped,
+        "prefill_tokens_computed_on_miss": computed,
+        "claim_shared_region_blocks_1_over_n": claim_blocks,
+        "claim_shared_admits_more": claim_conc,
+        "claim_prefill_skipped_ge_shared_fraction": claim_prefill,
+        "claim_ttft_hit_faster": claim_ttft,
+    }
+    suffix = "_smoke" if smoke else ""
+    save_json(f"prefix_sharing{suffix}", payload)
+    record_serving_bench(f"prefix_sharing{suffix}", {
+        "engine": eng.describe(),
+        "region_block_ratio": ratio,
+        "peak_concurrency_shared": conc["shared"]["peak_concurrency"],
+        "peak_concurrency_private": conc["private"]["peak_concurrency"],
+        "ttft_miss_s": ttft_miss,
+        "ttft_hit_s": ttft_hit,
+        "prefill_skipped_fraction_on_hit": frac_skipped,
+        "claim_shared_region_blocks_1_over_n": claim_blocks,
+        "claim_shared_admits_more": claim_conc,
+        "claim_prefill_skipped_ge_shared_fraction": claim_prefill,
+        "claim_ttft_hit_faster": claim_ttft,
+    })
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale config for CI; claims still gate")
+    args = ap.parse_args()
+    payload = run(quick=args.quick, smoke=args.smoke)
+    ok = all(payload[k] for k in payload if k.startswith("claim_"))
+    for k in sorted(payload):
+        if k.startswith("claim_"):
+            print(f"{k}={payload[k]}")
+    sys.exit(0 if ok else 1)

@@ -14,12 +14,13 @@ artifacts/bench/.
   serving_batch       —        batched serving tokens/s + latency vs B
   tree_spec           —        tree-vs-chain accepted/verify + shape bandit
   quant_spec          —        bf16 vs int8-KV vs int8-draft arms + pool bytes
+  prefix_sharing      —        shared-prefix pool blocks / concurrency / TTFT
   kernels_micro       —        kernel/XLA-path microbench
   roofline            §Roofline collation from the dry-run artifacts
 
-Serving-path benches (serving_batch, tree_spec, quant_spec) additionally
-append their summaries to the repo-root BENCH_serving.json (committed —
-the perf trajectory across PRs).
+Serving-path benches (serving_batch, tree_spec, quant_spec,
+prefix_sharing) additionally append their summaries to the repo-root
+BENCH_serving.json (committed — the perf trajectory across PRs).
 """
 from __future__ import annotations
 
@@ -38,9 +39,10 @@ def main() -> int:
     args = ap.parse_args()
 
     from . import (bench_arm_values, bench_entropy, bench_kernels, bench_main,
-                   bench_more_arms, bench_quant, bench_reward,
-                   bench_serving_batch, bench_specbench, bench_specdecpp,
-                   bench_tree, bench_ucb_variants, roofline_table)
+                   bench_more_arms, bench_prefix_sharing, bench_quant,
+                   bench_reward, bench_serving_batch, bench_specbench,
+                   bench_specdecpp, bench_tree, bench_ucb_variants,
+                   roofline_table)
 
     def derived_fmt(d):
         keys = [k for k in d if k.startswith("claim_")]
@@ -59,6 +61,7 @@ def main() -> int:
         "serving_batch": (bench_serving_batch.run, derived_fmt),
         "tree_spec": (bench_tree.run, derived_fmt),
         "quant_spec": (bench_quant.run, derived_fmt),
+        "prefix_sharing": (bench_prefix_sharing.run, derived_fmt),
         "fig5_6_arm_values": (bench_arm_values.run, lambda d: ";".join(
             f"{k}_spearman={d[k]['spearman_values_vs_speedup']:.2f}"
             for k in d)),

@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.cache import (POOL_LEAF_KEYS, BlockAllocator, PoolExhausted,
-                                paged_rollback, rollback)
+                                PrefixCache, paged_copy_block, paged_rollback,
+                                rollback)
 from repro.models.quant import quantize_params
 from repro.models.sharding import use_mesh
 from .controller import Controller, TapOutTreeSequence
@@ -1286,7 +1287,8 @@ class PagedSpecEngine(_ShardingMixin):
                  temperature: float = 0.0, greedy: bool = True,
                  cache_dtype=jnp.float32, kv_dtype: Optional[str] = None,
                  quant_draft: bool = False, seed: int = 0,
-                 prefill_chunk: int = 16, fused: bool = True, mesh=None):
+                 prefill_chunk: int = 16, fused: bool = True,
+                 prefix_cache: bool = False, mesh=None):
         assert batch_size >= 1
         if quant_draft:
             draft = quantized_bundle(draft)
@@ -1327,6 +1329,22 @@ class PagedSpecEngine(_ShardingMixin):
                                      self.dspec.max_blocks, B)
         self.talloc = BlockAllocator(self.tspec.num_blocks,
                                      self.tspec.max_blocks, B)
+        # prefix-sharing admission (docs/prefix_sharing.md): hashed
+        # block-aligned prompt chunks -> physical block runs in BOTH pools.
+        # Adoption rewires tables/lengths, so it needs the attention/MLA-only
+        # stacks whose per-stream state IS the pool (recurrent conv/ssm state
+        # is integrated per stream and cannot be adopted from a block run).
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            if not (self.draft_cheap and self.target_cheap):
+                raise ValueError(
+                    "prefix_cache=True needs attention/MLA-only stacks; "
+                    "recurrent per-stream state cannot be block-shared")
+            self.prefix_cache = PrefixCache(block_size,
+                                            (self.dalloc, self.talloc))
+        self.prefill_tokens_computed = 0
+        self.prefill_tokens_skipped = 0
+        self.cow_copies = 0
         self._sharded_sessions = None
         if mesh is not None:
             from repro.launch.shardings import paged_cache_shardings
@@ -1459,10 +1477,37 @@ class PagedSpecEngine(_ShardingMixin):
         need = min(reserve_tokens, self.max_len)
         return self.dalloc.blocks_for(need, self.block_size)
 
-    def can_admit(self, reserve_tokens: int) -> bool:
-        n = self.reserve_blocks_for(reserve_tokens)
-        return (self.dalloc.can_allocate(n) and self.talloc.can_allocate(n)
-                and bool(self.free_slots()))
+    def _adoptable(self, prompt: List[int], touch: bool = False):
+        """(n_adopt, runs, n_cow): the longest cached chunk run inside the
+        prompt's prefill region [0, P-1), and whether adopting it forces a
+        copy-on-write of the draft's frontier block.
+
+        The draft refeeds from position P-2, so an adopted block containing
+        P-2 (only possible when the run ends EXACTLY at P-1, i.e. ``bs``
+        divides P-1) must be privatized before the first tick; the target
+        writes from P-1, which by construction lies past every adopted
+        block, so it never needs one."""
+        if self.prefix_cache is None or len(prompt) < 2:
+            return 0, None, 0
+        n, runs = self.prefix_cache.match(prompt, limit_tokens=len(prompt) - 1,
+                                          touch=touch)
+        n_cow = 1 if n and (len(prompt) - 2) // self.block_size < n else 0
+        return n, runs, n_cow
+
+    def can_admit(self, reserve_tokens: int,
+                  prompt: Optional[List[int]] = None) -> bool:
+        """Feasibility probe for the scheduler: with ``prompt`` given, a
+        prefix-cache hit only needs the NON-SHARED suffix (plus at most one
+        COW block), and evictable cached chunks count as reclaimable."""
+        need = self.reserve_blocks_for(reserve_tokens)
+        if not self.free_slots():
+            return False
+        n_adopt, _, n_cow = self._adoptable(prompt) if prompt else (0, None, 0)
+        evictable = (self.prefix_cache.evictable_chunks()
+                     if self.prefix_cache is not None else 0)
+        need_new = max(need - n_adopt, 0) + n_cow
+        return all(need_new <= len(a.free) + evictable
+                   for a in (self.dalloc, self.talloc))
 
     @_on_mesh
     def open_stream(self, slot: int, prompt: List[int],
@@ -1475,39 +1520,112 @@ class PagedSpecEngine(_ShardingMixin):
         ``max_len`` (dense-equivalent reservation).  Raises
         ``PoolExhausted`` when the pool cannot cover it — callers should
         check ``can_admit`` first and backpressure.
-        """
+
+        With a ``PrefixCache``, admission first matches the prompt's
+        block-aligned chunks: adopted blocks are SHARED (table row aliases,
+        refcount bumps, zero prefill compute), only the non-shared suffix
+        is reserved privately, the draft's frontier block is copied-on-write
+        if the adopted run reaches it, and after prefill the stream's own
+        full blocks below its write frontier are registered for the next
+        stream to adopt."""
         assert self.slots[slot] is None, f"slot {slot} busy"
         assert len(prompt) >= 2, "need >= 2 prompt tokens"
         assert len(prompt) + self.gamma_max + 2 <= self.max_len, \
             "prompt cannot fit a single session within max_len"
         need = self.reserve_blocks_for(reserve_tokens or self.max_len)
-        if not (self.dalloc.can_allocate(need)
-                and self.talloc.can_allocate(need)):
-            raise PoolExhausted(f"{need} blocks unavailable for admission")
-        self.dalloc.allocate(slot, need)
-        self.talloc.allocate(slot, need)
         seq = list(prompt)
         pre = seq[:-1]                       # invariant: length = len(seq) - 1
+        n_adopt, runs, n_cow = self._adoptable(prompt, touch=True)
+        need = max(need, n_adopt)
+        need_new = need - n_adopt + n_cow
+        deficit = max(need_new - len(self.dalloc.free),
+                      need_new - len(self.talloc.free))
+        if deficit > 0 and self.prefix_cache is not None:
+            self.prefix_cache.evict(deficit)
+        if not (self.dalloc.can_allocate(need_new)
+                and self.talloc.can_allocate(need_new)):
+            raise PoolExhausted(f"{need_new} blocks unavailable for admission")
+        if n_adopt:
+            self.dalloc.share(slot, runs[0][:n_adopt])
+            self.talloc.share(slot, runs[1][:n_adopt])
+            self.dalloc.extend(slot, need - n_adopt)
+            self.talloc.extend(slot, need - n_adopt)
+        else:
+            self.dalloc.allocate(slot, need)
+            self.talloc.allocate(slot, need)
+        adopted = n_adopt * self.block_size
         self.dcache = {**self.dcache,
                        "tables": jnp.asarray(self.dalloc.tables),
-                       "lengths": self.dcache["lengths"].at[slot].set(0)}
+                       "lengths": self.dcache["lengths"].at[slot].set(adopted)}
         self.tcache = {**self.tcache,
                        "tables": jnp.asarray(self.talloc.tables),
-                       "lengths": self.tcache["lengths"].at[slot].set(0)}
+                       "lengths": self.tcache["lengths"].at[slot].set(adopted)}
         if not self.draft_cheap:
             self.dcache = self._reset_lane_state(self.dcache, slot)
         if not self.target_cheap:
             self.tcache = self._reset_lane_state(self.tcache, slot)
+        if n_adopt:
+            # copy-on-first-divergent-write: privatize any adopted block the
+            # stream will write into (draft refeeds from P-2, target from
+            # P-1 — at most the draft's one frontier block, see _adoptable)
+            self.dcache = self._cow_frontier("draft", slot, len(seq) - 2)
+            self.tcache = self._cow_frontier("target", slot, len(seq) - 1)
+        rest = pre[adopted:]
+        self.prefill_tokens_skipped += adopted
+        self.prefill_tokens_computed += len(rest)
         self.dcache = self._place_cache(
-            self._prefill_lane("draft", self.dcache, slot, pre), paged=True)
+            self._prefill_lane("draft", self.dcache, slot, rest), paged=True)
         self.tcache = self._place_cache(
-            self._prefill_lane("target", self.tcache, slot, pre), paged=True)
+            self._prefill_lane("target", self.tcache, slot, rest), paged=True)
         self._dlen[slot] = len(pre)
         self._tlen[slot] = len(pre)
+        if self.prefix_cache is not None:
+            # register this stream's full blocks strictly below its write
+            # frontier P-2: positions the stream can never rewrite, so the
+            # cached KV stays bit-exact for the stream's whole lifetime
+            n_reg = (len(seq) - 2) // self.block_size
+            if n_reg > 0:
+                self.prefix_cache.insert(
+                    prompt, n_reg,
+                    (self.dalloc.owned[slot], self.talloc.owned[slot]))
         st = {"seq": seq, "res": GenResult(tokens=seq, prompt_len=len(prompt)),
               "done": False, "eos_id": eos_id}
         self.slots[slot] = st
         return st
+
+    def _cow_frontier(self, which: str, slot: int, first_write_pos: int):
+        """Privatize every non-writable block of ``slot`` that overlaps the
+        write range ``[first_write_pos, ...)``: allocate a fresh block, copy
+        the shared block's pool rows (all leaves, int8 scales included),
+        repoint the table row, drop the shared reference."""
+        alloc = self.dalloc if which == "draft" else self.talloc
+        cache = self.dcache if which == "draft" else self.tcache
+        copied = False
+        start = max(first_write_pos, 0) // self.block_size
+        for idx in range(start, len(alloc.owned[slot])):
+            if not alloc.writable(slot, idx):
+                src, dst = alloc.cow(slot, idx)
+                cache = paged_copy_block(cache, src, dst)
+                self.cow_copies += 1
+                copied = True
+        if copied:
+            cache = {**cache, "tables": jnp.asarray(alloc.tables)}
+        return cache
+
+    def _assert_cow_safety(self) -> None:
+        """Every active lane's write range this tick (draft from L-2,
+        target from L-1, up to gamma_max ahead) must sit in sole-owner,
+        non-immutable blocks — speculative writes and rollback can then
+        never touch a block another stream or the cache still references."""
+        for s in np.flatnonzero(self.active_mask()):
+            L = len(self.slots[int(s)]["seq"])
+            for alloc, first in ((self.dalloc, L - 2), (self.talloc, L - 1)):
+                owned = alloc.owned[int(s)]
+                for idx in range(max(first, 0) // self.block_size,
+                                 len(owned)):
+                    assert alloc.writable(int(s), idx), (
+                        f"slot {s}: write-frontier block {owned[idx]} "
+                        f"(logical {idx}) is shared/immutable — COW missed")
 
     def close_stream(self, slot: int) -> dict:
         """Release a slot: blocks return to the pool, its table row points
@@ -1545,6 +1663,8 @@ class PagedSpecEngine(_ShardingMixin):
         act_idx = np.flatnonzero(active)
         if act_idx.size == 0:
             return False
+        if __debug__ and self.prefix_cache is not None:
+            self._assert_cow_safety()
         if not self.fused:
             self._pending = {"acted": self._session_step_sync()}
             return True
@@ -1757,7 +1877,15 @@ class PagedSpecEngine(_ShardingMixin):
             "blocks_in_use": self.dalloc.blocks_in_use + self.talloc.blocks_in_use,
             "peak_blocks_in_use": (self.dalloc.peak_in_use
                                    + self.talloc.peak_in_use),
+            "shared_blocks_in_use": (
+                self.dalloc.sharing_stats()["shared_blocks"]
+                + self.talloc.sharing_stats()["shared_blocks"]),
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
+            "cow_copies": self.cow_copies,
         }
+        if self.prefix_cache is not None:
+            stats["prefix_cache"] = self.prefix_cache.stats()
         if self.mesh is not None:
             # per-shard residency: the "model"-sharded pools split their
             # bytes across tensor-parallel shards; block accounting is
@@ -1802,6 +1930,10 @@ class EngineSpec:
     * ``tree_paged`` — back the tree backends with B=1 paged pools.
     * precision: ``cache_dtype`` / ``kv_dtype`` ("int8" KV caches) /
       ``quant_draft`` (int8 draft weights).
+    * ``prefix_cache`` — paged backend only: refcounted copy-on-write
+      prefix sharing with a hashed prefill cache (docs/prefix_sharing.md).
+      Streams admitted with an already-cached prompt prefix alias the
+      cached blocks instead of re-prefilling them.
     * placement: ``mesh`` (docs/sharding.md).
     """
     backend: str = "auto"
@@ -1816,6 +1948,7 @@ class EngineSpec:
     prefill_chunk: int = 16
     block_size: int = 64
     pool_tokens: Optional[int] = None
+    prefix_cache: bool = False
     tree_paged: bool = False
     fused: bool = True
     mesh: object = None
@@ -1888,7 +2021,8 @@ def make_engine(draft: ModelBundle, target: ModelBundle,
                                block_size=spec.block_size,
                                pool_tokens=spec.pool_tokens,
                                prefill_chunk=spec.prefill_chunk,
-                               fused=spec.fused, **common)
+                               fused=spec.fused,
+                               prefix_cache=spec.prefix_cache, **common)
     assert isinstance(controller, TapOutTreeSequence), \
         f"{backend} backend needs a TapOutTreeSequence controller"
     if backend == "tree":

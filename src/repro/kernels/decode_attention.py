@@ -499,6 +499,11 @@ def paged_decode_attention(q, kpool, vpool, tables, lengths, *,
     (consecutive identical indices elide the copy), so ragged lanes and
     post-rollback states (rows past the truncated length live in HBM but
     dead under the mask) cost what they store, not what the table spans.
+
+    Prefix sharing (docs/prefix_sharing.md) is invisible here: the kernel
+    only READS through the table, so two lanes whose tables alias the same
+    physical prefix blocks simply DMA the same pool rows — no refcount
+    plumbing reaches the device.
     """
     B, H, D = q.shape
     N, bs, G, _ = kpool.shape

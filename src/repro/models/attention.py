@@ -298,6 +298,14 @@ def paged_write(pool, new, tables, lengths):
     row is all-zero (masked/empty slots) write into the trash block 0; the
     allocator never hands block 0 to a stream, so those writes cannot leak
     into a neighbor's pages.
+
+    Sharing invariant (docs/prefix_sharing.md): writes land only at
+    positions >= lengths[b], and admission copy-on-writes any refcount>1 /
+    immutable block overlapping the stream's write frontier BEFORE the
+    first tick — so this scatter only ever touches sole-owner blocks, and
+    needs no refcount awareness of its own.  Rollback stays a pure length
+    write (``paged_rollback``) for the same reason: shared blocks live
+    strictly below the frontier and are never rewritten in place.
     """
     N, bs = pool.shape[0], pool.shape[1]
     B, S = new.shape[:2]
@@ -492,7 +500,10 @@ def commit_tree_rows_attn(cache_layer, nodes, path, n_commit, base):
 def commit_tree_rows_paged_attn(layer_cache, nodes, path, tables, lengths):
     """Scatter accepted-path node K/V into the PAGED pool at each stream's
     current length; rows past the engine's subsequent ``lengths + n_commit``
-    truncation are dead under the ``p < length`` mask."""
+    truncation are dead under the ``p < length`` mask.  Like every paged
+    commit, it writes only at positions >= lengths[b] — under prefix
+    sharing those blocks are sole-owner by the admission-time COW
+    invariant, so the commit stays O(path) and never clones a block."""
     rows_k = jnp.take(nodes["k"], path, axis=1)
     rows_v = jnp.take(nodes["v"], path, axis=1)
     return paged_write_kv(layer_cache, rows_k, rows_v, tables, lengths)

@@ -34,6 +34,16 @@ blocks to streams at admission and reclaims them at release; physical block
 0 is a reserved TRASH block every empty table row points at, so masked
 batch lanes write garbage there instead of into a neighbor's pages.
 
+Blocks are REFCOUNTED (docs/prefix_sharing.md): several streams' table
+rows may point at the same physical block (``share``), and registering a
+block in the ``PrefixCache`` marks it IMMUTABLE and takes a reference of
+its own, so prefilled prompt prefixes survive the stream that computed
+them.  ``truncate``/``release`` decrement instead of freeing; a block
+returns to the free list only when its last reference drops.  A stream may
+write a block only while it is its sole, non-immutable owner — the
+copy-on-write primitive (``BlockAllocator.cow`` + ``paged_copy_block``)
+privatizes a shared block in O(block) before the first divergent write.
+
 Both layouts optionally store K/V (and MLA latents) as INT8 with per-row
 float32 scales (``kv_quant`` specs, ``models/quant.py``): payload leaves
 switch dtype and gain a ``*_scale`` sibling of the same leading shape, and
@@ -43,10 +53,11 @@ writes — applies to the scale leaves verbatim.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
@@ -235,9 +246,14 @@ class BlockAllocator:
 
     Invariants (asserted by tests):
       * block 0 (trash) is never handed out;
-      * a physical block belongs to at most one slot at a time;
-      * ``free + in_use == num_blocks - 1`` at all times;
-      * table rows of unallocated logical blocks point at the trash block.
+      * ``free + in_use == num_blocks - 1`` after EVERY mutation, where a
+        block is in use iff its refcount is positive (shared blocks count
+        once no matter how many table rows alias them);
+      * free blocks have refcount 0 and are not immutable;
+      * table rows of unallocated logical blocks point at the trash block;
+      * a slot writes a block only while ``writable(slot, idx)`` — sole
+        owner, not immutable.  Aliased or cached blocks must be privatized
+        with ``cow`` before the first divergent write.
     """
 
     def __init__(self, num_blocks: int, max_blocks: int, batch: int):
@@ -248,6 +264,11 @@ class BlockAllocator:
         self.free: List[int] = list(range(num_blocks - 1, 0, -1))  # LIFO
         self.owned: List[List[int]] = [[] for _ in range(batch)]
         self.tables = np.zeros((batch, max_blocks), np.int32)
+        # per-PHYSICAL-block state: how many owners (slots' table rows plus
+        # at most one PrefixCache reference) alias the block, and whether it
+        # is a registered immutable prefix block (never a write target)
+        self.refcount = np.zeros(num_blocks, np.int32)
+        self.immutable = np.zeros(num_blocks, bool)
         self.peak_in_use = 0
 
     # ------------------------------------------------------------ queries
@@ -256,45 +277,323 @@ class BlockAllocator:
         return (self.num_blocks - 1) - len(self.free)
 
     def blocks_for(self, n_tokens: int, block_size: int) -> int:
-        return min(-(-max(n_tokens, 1) // block_size), self.max_blocks)
+        """Logical blocks covering ``n_tokens``.  Raises ``ValueError``
+        when that exceeds the per-stream table width ``max_blocks`` — the
+        request can NEVER fit, so silently clamping (the old behavior)
+        would under-reserve and route the overflow through trash block 0."""
+        n = -(-max(n_tokens, 1) // block_size)
+        if n > self.max_blocks:
+            raise ValueError(
+                f"{n_tokens} tokens need {n} blocks > max_blocks="
+                f"{self.max_blocks}; the stream cannot fit its table row")
+        return n
 
     def can_allocate(self, n_blocks: int) -> bool:
         return n_blocks <= len(self.free)
 
+    def writable(self, slot: int, idx: int) -> bool:
+        """May ``slot`` write into its ``idx``-th logical block? True iff
+        it is the block's only reference and the block is not a registered
+        immutable prefix — the copy-on-write predicate."""
+        blk = self.owned[slot][idx]
+        return self.refcount[blk] == 1 and not self.immutable[blk]
+
+    def sharing_stats(self) -> dict:
+        return {"blocks_in_use": self.blocks_in_use,
+                "shared_blocks": int(np.sum(self.refcount > 1)),
+                "immutable_blocks": int(np.sum(self.immutable))}
+
+    # ------------------------------------------------------------ refcounts
+    def addref(self, blk: int) -> None:
+        """Take an extra reference on an in-use block (PrefixCache
+        registration / a new stream adopting it via ``share``)."""
+        assert 0 < blk < self.num_blocks and self.refcount[blk] > 0, blk
+        self.refcount[blk] += 1
+
+    def decref(self, blk: int) -> bool:
+        """Drop one reference; the block returns to the free list (and
+        sheds its immutable mark) only when the last reference goes."""
+        assert self.refcount[blk] > 0, f"decref of free block {blk}"
+        self.refcount[blk] -= 1
+        if self.refcount[blk] == 0:
+            self.immutable[blk] = False
+            self.free.append(blk)
+            return True
+        return False
+
+    def _note_usage(self) -> None:
+        if self.blocks_in_use > self.peak_in_use:
+            self.peak_in_use = self.blocks_in_use
+
+    def reset_peak(self) -> None:
+        """Re-base the peak to the CURRENT usage — benches call this after
+        warmup so truncate/release churn before the measured window cannot
+        leave a stale peak in their pool-stats rows."""
+        self.peak_in_use = self.blocks_in_use
+
     # ------------------------------------------------------------ mutation
     def allocate(self, slot: int, n_blocks: int) -> np.ndarray:
-        """Reserve ``n_blocks`` physical blocks for ``slot``; returns the
-        updated table row. Raises ``PoolExhausted`` if the free list is
-        short (callers backpressure instead of admitting)."""
-        n_blocks = min(n_blocks, self.max_blocks)
+        """Reserve ``n_blocks`` fresh private blocks for the empty ``slot``;
+        returns the updated table row.  Raises ``PoolExhausted`` if the free
+        list is short (callers backpressure instead of admitting) and
+        ``ValueError`` if the request exceeds the table width."""
         assert not self.owned[slot], f"slot {slot} already holds blocks"
+        self.tables[slot, :] = 0
+        self.extend(slot, n_blocks)
+        return self.tables[slot]
+
+    def extend(self, slot: int, n_blocks: int) -> np.ndarray:
+        """Append ``n_blocks`` fresh private blocks after ``slot``'s current
+        run (admission reserves the non-shared suffix this way)."""
+        have = len(self.owned[slot])
+        if have + n_blocks > self.max_blocks:
+            raise ValueError(
+                f"slot {slot}: {have}+{n_blocks} blocks exceed max_blocks="
+                f"{self.max_blocks}")
         if n_blocks > len(self.free):
             raise PoolExhausted(
                 f"need {n_blocks} blocks, {len(self.free)} free")
-        blocks = [self.free.pop() for _ in range(n_blocks)]
+        for i in range(n_blocks):
+            blk = self.free.pop()
+            self.refcount[blk] = 1
+            self.owned[slot].append(blk)
+            self.tables[slot, have + i] = blk
+        self._note_usage()
+        return self.tables[slot]
+
+    def share(self, slot: int, blocks: Sequence[int]) -> np.ndarray:
+        """Point the empty ``slot``'s table row at EXISTING in-use blocks
+        (a prefix-cache hit adopting a cached prompt prefix).  Each block
+        gains a reference; no pool memory is consumed."""
+        assert not self.owned[slot], f"slot {slot} already holds blocks"
+        blocks = [int(b) for b in blocks]
+        if len(blocks) > self.max_blocks:
+            raise ValueError(f"{len(blocks)} shared blocks exceed max_blocks="
+                             f"{self.max_blocks}")
+        for b in blocks:
+            self.addref(b)
         self.owned[slot] = blocks
-        row = self.tables[slot]
-        row[:] = 0
-        row[:n_blocks] = blocks
-        self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
-        return row
+        self.tables[slot, :] = 0
+        self.tables[slot, :len(blocks)] = blocks
+        self._note_usage()
+        return self.tables[slot]
+
+    def cow(self, slot: int, idx: int) -> Tuple[int, int]:
+        """Copy-on-write: replace ``slot``'s ``idx``-th logical block with a
+        fresh private block, dropping its reference on the old one.  Returns
+        ``(src, dst)`` physical ids — the caller must copy the pool rows
+        (``paged_copy_block``) before the stream's next write."""
+        if not self.free:
+            raise PoolExhausted("no free block for copy-on-write")
+        src = self.owned[slot][idx]
+        dst = self.free.pop()
+        self.refcount[dst] = 1
+        self.owned[slot][idx] = dst
+        self.tables[slot, idx] = dst
+        self.decref(src)
+        self._note_usage()
+        return src, dst
 
     def truncate(self, slot: int, keep_tokens: int, block_size: int) -> int:
-        """Free whole blocks past ``keep_tokens`` (preemption / shrink);
-        returns how many were released. Per-tick speculative rollback does
-        NOT call this — reserved capacity makes rollback a pure length
-        write — but release-on-close and preemption do."""
-        keep = self.blocks_for(keep_tokens, block_size) if keep_tokens > 0 else 0
-        released = 0
+        """Drop whole blocks past ``keep_tokens`` from ``slot``'s run
+        (preemption / shrink); each loses one reference and returns to the
+        free list only if that was the last.  Returns how many blocks the
+        slot dropped.  Per-tick speculative rollback does NOT call this —
+        reserved capacity makes rollback a pure length write — but
+        release-on-close and preemption do."""
+        keep = 0 if keep_tokens <= 0 else -(-keep_tokens // block_size)
+        keep = min(keep, len(self.owned[slot]))
+        dropped = 0
         while len(self.owned[slot]) > keep:
             blk = self.owned[slot].pop()
             self.tables[slot, len(self.owned[slot])] = 0
-            self.free.append(blk)
-            released += 1
-        return released
+            self.decref(blk)
+            dropped += 1
+        self._note_usage()
+        return dropped
 
     def release(self, slot: int) -> int:
-        """Return every block owned by ``slot`` to the free list."""
+        """Drop every block owned by ``slot``; blocks whose last reference
+        this was return to the free list (shared/cached blocks survive)."""
         n = self.truncate(slot, 0, 1)
         self.tables[slot, :] = 0
         return n
+
+
+def paged_copy_block(cache, src: int, dst: int):
+    """O(block) copy-on-write primitive: duplicate physical block ``src``'s
+    rows into ``dst`` across EVERY pool leaf — K/V payloads, MLA latents,
+    and the int8 ``*_scale`` siblings, which are per-row state and must
+    travel with their payload block (docs/prefix_sharing.md).  Per-stream
+    leaves (tables/lengths/recurrent state) are untouched."""
+    def f(path, a):
+        if getattr(path[-1], "key", None) in POOL_LEAF_KEYS:
+            return a.at[dst].set(a[src])
+        return a
+    return {**cache,
+            "layers": jax.tree_util.tree_map_with_path(f, cache["layers"])}
+
+
+# ============================================================ prefix cache
+
+class _PrefixNode:
+    """One block-aligned prompt chunk: the trie path from the root spells
+    the token prefix, ``blocks[i]`` is the physical block holding its KV in
+    allocator ``i``'s pool (draft and target travel together)."""
+    __slots__ = ("children", "blocks", "tick")
+
+    def __init__(self, blocks):
+        self.children: Dict[tuple, "_PrefixNode"] = {}
+        self.blocks = blocks
+        self.tick = 0
+
+
+class PrefixCache:
+    """Host-side radix cache of prefilled prompt prefixes over a pair of
+    block pools (docs/prefix_sharing.md).
+
+    Prompts are split into block-aligned chunks; each cached chunk maps the
+    HASHED chunk (dict-keyed on the token tuple, so hash collisions cannot
+    corrupt a lookup) to one physical block per allocator.  ``match`` walks
+    the trie for the longest cached chunk run that prefixes a new prompt;
+    ``insert`` registers a stream's freshly prefilled blocks, taking a
+    cache-owned reference on each (``addref``) and marking it immutable so
+    it survives the stream's release and can never be written in place.
+
+    No resume state beyond the block run is stored: the engines' refeed
+    invariant (draft re-enters from ``seq[-2:]``, target from ``seq[-1:]``)
+    means a hit resumes decode from tables + lengths alone — the "cached
+    last-token state" of the design degenerates to the block run itself.
+
+    Eviction is LRU over trie LEAVES and gated on ``refcount == 1`` in
+    every allocator: a chunk still aliased by a live stream is pinned."""
+
+    def __init__(self, block_size: int, allocs: Sequence[BlockAllocator]):
+        self.block_size = block_size
+        self.allocs = tuple(allocs)
+        self.root = _PrefixNode(None)
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+
+    def _chunks(self, tokens: Sequence[int], limit: Optional[int] = None):
+        bs = self.block_size
+        n = (len(tokens) if limit is None else min(limit, len(tokens))) // bs
+        return [tuple(tokens[i * bs:(i + 1) * bs]) for i in range(n)]
+
+    # -------------------------------------------------------------- stats
+    @property
+    def n_chunks(self) -> int:
+        def count(node):
+            return sum(1 + count(c) for c in node.children.values())
+        return count(self.root)
+
+    def cached_blocks(self) -> int:
+        """Physical blocks held by the cache, summed over allocators."""
+        return self.n_chunks * len(self.allocs)
+
+    def evictable_chunks(self) -> int:
+        """Chunks droppable RIGHT NOW or after their descendants go: the
+        capacity ``can_admit`` may count on reclaiming via ``evict``."""
+        def walk(node):
+            n, all_ok = 0, True
+            for c in node.children.values():
+                cn, cok = walk(c)
+                n += cn
+                all_ok = all_ok and cok
+            if node is self.root:
+                return n, all_ok
+            mine = all_ok and all(a.refcount[b] == 1
+                                  for a, b in zip(self.allocs, node.blocks))
+            return n + (1 if mine else 0), mine
+        return walk(self.root)[0]
+
+    # ------------------------------------------------------------- lookup
+    def match(self, tokens: Sequence[int], limit_tokens: Optional[int] = None,
+              touch: bool = True):
+        """Longest cached chunk run prefixing ``tokens[:limit_tokens]``:
+        returns ``(n_chunks, runs)`` with ``runs[i]`` the physical blocks in
+        allocator ``i``.  ``touch=False`` (admission feasibility probes)
+        leaves the LRU clocks and hit/miss counters alone."""
+        if touch:
+            self._tick += 1
+        node, runs = self.root, [[] for _ in self.allocs]
+        for chunk in self._chunks(tokens, limit_tokens):
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            if touch:
+                child.tick = self._tick
+            for i, blk in enumerate(child.blocks):
+                runs[i].append(blk)
+            node = child
+        n = len(runs[0])
+        if touch:
+            if n:
+                self.hits += 1
+                self.hit_tokens += n * self.block_size
+            else:
+                self.misses += 1
+        return n, runs
+
+    def insert(self, tokens: Sequence[int], n_chunks: int,
+               rows: Sequence[Sequence[int]]) -> int:
+        """Register ``tokens``' first ``n_chunks`` chunks, backed by
+        ``rows[i][d]`` (allocator ``i``, depth ``d``).  Depths already
+        cached are left as-is (the existing copy wins — the new stream
+        adopted it anyway); new depths gain a cache-owned reference and the
+        immutable mark.  Returns how many chunks were newly cached."""
+        self._tick += 1
+        node, added = self.root, 0
+        for d, chunk in enumerate(self._chunks(tokens)[:n_chunks]):
+            child = node.children.get(chunk)
+            if child is None:
+                blocks = tuple(int(rows[i][d])
+                               for i in range(len(self.allocs)))
+                for alloc, blk in zip(self.allocs, blocks):
+                    alloc.addref(blk)
+                    alloc.immutable[blk] = True
+                child = node.children[chunk] = _PrefixNode(blocks)
+                added += 1
+            child.tick = self._tick
+            node = child
+        return added
+
+    # ------------------------------------------------------------ eviction
+    def _evictable_leaves(self):
+        out = []
+        def walk(parent):
+            for key, node in parent.children.items():
+                walk(node)
+                if not node.children and all(
+                        a.refcount[b] == 1
+                        for a, b in zip(self.allocs, node.blocks)):
+                    out.append((node.tick, parent, key, node))
+        walk(self.root)
+        out.sort(key=lambda t: t[0])
+        return out
+
+    def evict(self, n_blocks: int) -> int:
+        """Drop least-recently-used evictable leaves until ``n_blocks``
+        blocks are freed PER ALLOCATOR or nothing evictable remains
+        (interior chunks unlock as their children go).  Returns the number
+        of chunks evicted."""
+        dropped = 0
+        while dropped < n_blocks:
+            leaves = self._evictable_leaves()
+            if not leaves:
+                break
+            for _, parent, key, node in leaves[:n_blocks - dropped]:
+                del parent.children[key]
+                for alloc, blk in zip(self.allocs, node.blocks):
+                    alloc.decref(blk)          # 1 -> 0: back to the free list
+                dropped += 1
+                self.evictions += 1
+        return dropped
+
+    def stats(self) -> dict:
+        return {"chunks": self.n_chunks, "hits": self.hits,
+                "misses": self.misses, "hit_tokens": self.hit_tokens,
+                "evictions": self.evictions}

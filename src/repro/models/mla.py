@@ -301,7 +301,10 @@ def commit_tree_rows_mla(cache_layer, nodes, path, n_commit, base):
 
 
 def commit_tree_rows_paged_mla(layer_cache, nodes, path, tables, lengths):
-    """Scatter accepted-path node latents into the PAGED latent pools."""
+    """Scatter accepted-path node latents into the PAGED latent pools.
+    Writes land at positions >= lengths[b] only, so under prefix sharing
+    (docs/prefix_sharing.md) the admission-time COW invariant guarantees
+    the touched blocks are sole-owner — no clone here."""
     from .attention import paged_write
     rows_c = jnp.take(nodes["ckv"], path, axis=1)
     rows_r = jnp.take(nodes["krope"], path, axis=1)

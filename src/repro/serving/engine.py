@@ -156,7 +156,8 @@ class SpecServer:
                 break
             rid = self.queue[0]
             req = self.requests[rid]
-            if self.paged and not self.engine.can_admit(self._reserve_tokens(req)):
+            if self.paged and not self.engine.can_admit(
+                    self._reserve_tokens(req), prompt=req.prompt):
                 # backpressure: head-of-queue request stays queued (FIFO
                 # preserved) until completed streams release blocks
                 self.backpressure_events += 1

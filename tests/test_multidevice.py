@@ -269,6 +269,49 @@ def test_paged_pool_stats_report_per_shard_bytes(pair):
     assert 0 < stats["cache_pool_bytes_per_shard"] <= stats["cache_pool_bytes"]
 
 
+# ------------------------------------------------- prefix sharing on mesh
+
+@multidev
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_prefix_sharing_parity_on_mesh(pair, kv_dtype):
+    """Shared-prefix admission is bit-identical to fully private admission
+    on the forced-8 mesh too (fp and int8 KV): adoption only rewires host
+    tables/lengths, so the sharded device programs see the same physical
+    rows either way — tokens, arm trace, and bandit state all match."""
+    from repro.core.engine import EngineSpec, make_engine
+
+    shared_prefix = np.random.default_rng(7).integers(
+        1, 60, size=17).tolist()
+    donor = shared_prefix + [11, 22, 33, 44, 55]
+    adopter = list(shared_prefix)               # bs | P-1: the COW case
+
+    def run(prefix_cache):
+        ctrl = _controller(False)
+        eng = make_engine(*pair, ctrl, EngineSpec(
+            backend="paged", batch_size=2, max_len=128, block_size=8,
+            pool_tokens=512, kv_dtype=kv_dtype, prefix_cache=prefix_cache,
+            mesh=make_host_mesh(data=4, model=2)))
+        outs = []
+        for slot, p in enumerate((donor, adopter)):
+            eng.open_stream(slot, list(p), reserve_tokens=len(p) + 20)
+            for _ in range(5):
+                eng.session_step_batch()
+            st = eng.slots[slot]
+            outs.append((list(st["seq"]),
+                         [(s.n_drafted, s.n_accepted, s.arm)
+                          for s in st["res"].sessions]))
+        return outs, ctrl.bandit.state_dict(), eng.pool_stats()
+
+    shared, bs_state, stats = run(True)
+    private, bp_state, _ = run(False)
+    assert shared == private
+    assert stats["prefill_tokens_skipped"] == 16
+    assert stats["cow_copies"] == 1
+    np.testing.assert_array_equal(bs_state["counts"], bp_state["counts"])
+    np.testing.assert_allclose(bs_state["means"], bp_state["means"],
+                               rtol=0, atol=0)
+
+
 # ------------------------------------------------- subprocess fallback
 
 _SUBPROC = """

@@ -307,6 +307,63 @@ def test_paged_server_backpressures_and_drains(tiny_dense_pair):
     assert stats["peak_blocks_in_use"] > 0
 
 
+def test_allocator_blocks_for_raises_beyond_table_width():
+    """Regression: ``blocks_for`` used to clamp to ``max_blocks``, so an
+    over-long request under-reserved and wrote through trash block 0."""
+    a = BlockAllocator(num_blocks=64, max_blocks=4, batch=1)
+    assert a.blocks_for(64, 16) == 4
+    with pytest.raises(ValueError, match="max_blocks"):
+        a.blocks_for(65, 16)
+    assert a.blocks_in_use == 0, "the failed probe must not allocate"
+
+
+def test_admission_backpressure_under_fragmentation(tiny_dense_pair):
+    """Interleave admit/preempt(truncate)/release until ``PoolExhausted``:
+    the engine must keep backpressuring (can_admit False) while full, then
+    drain and re-admit with zero leaked blocks."""
+    draft, target = tiny_dense_pair
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=3, seed=0)
+    eng = PagedSpecEngine(draft, target, ctrl, batch_size=4, max_len=256,
+                          block_size=16, pool_tokens=160)   # 10 usable blocks
+
+    def conserved(a):
+        return len(a.free) + a.blocks_in_use == a.num_blocks - 1
+
+    prompts = [[1 + i, 5, 9, 13, 17, 21, 25] for i in range(8)]
+    live, i, exhausted = [], 0, False
+    while i < len(prompts):
+        reserve = len(prompts[i]) + 40                      # 3 blocks each
+        if not eng.can_admit(reserve):
+            exhausted = True
+            free_slot = next(s for s in range(4) if s not in live)
+            with pytest.raises(PoolExhausted):
+                eng.open_stream(free_slot, prompts[i], reserve_tokens=reserve)
+            # fragment: preempt the OLDEST stream's tail, then release it
+            victim = live.pop(0)
+            eng.dalloc.truncate(victim, 16, eng.block_size)
+            eng.talloc.truncate(victim, 16, eng.block_size)
+            eng.close_stream(victim)
+        else:
+            slot = next(s for s in range(4) if s not in live)
+            eng.open_stream(slot, prompts[i], reserve_tokens=reserve)
+            live.append(slot)
+            i += 1
+        assert conserved(eng.dalloc) and conserved(eng.talloc)
+    assert exhausted, "the pool was never actually binding"
+    for _ in range(3):
+        eng.session_step_batch()
+    for slot in live:
+        eng.close_stream(slot)
+    assert eng.dalloc.blocks_in_use == 0 and eng.talloc.blocks_in_use == 0
+    assert conserved(eng.dalloc) and conserved(eng.talloc)
+    # the drained pool admits a full-size request again
+    assert eng.can_admit(len(prompts[0]) + 40)
+    eng.open_stream(0, prompts[0], reserve_tokens=len(prompts[0]) + 40)
+    eng.session_step_batch()
+    eng.close_stream(0)
+    assert eng.dalloc.blocks_in_use == 0
+
+
 def test_paged_server_matches_dense_server(tiny_dense_pair):
     """Same workload through the dense and the paged server: identical
     tokens per request (greedy), so the refactor is behavior-preserving."""

@@ -1,0 +1,336 @@
+"""Prefix-sharing copy-on-write KV pool: allocator refcount/share/COW
+units, PrefixCache trie semantics + LRU eviction, exact token/bandit
+parity between shared-prefix and fully private admission (fp and int8 KV),
+and serving with the prefix cache enabled."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ModelBundle, make_controller
+from repro.core.engine import EngineSpec, make_engine
+from repro.models import ModelConfig
+from repro.models import transformer as T
+from repro.models.cache import BlockAllocator, PoolExhausted, PrefixCache
+from repro.serving.engine import SpecServer
+
+
+def _conserved(a: BlockAllocator) -> bool:
+    return len(a.free) + a.blocks_in_use == a.num_blocks - 1
+
+
+# --------------------------------------------------------------- allocator
+
+def test_blocks_for_raises_instead_of_clamping():
+    """Regression: a request needing more logical blocks than the table
+    width used to be silently clamped, under-reserving and routing the
+    overflow through trash block 0."""
+    a = BlockAllocator(num_blocks=32, max_blocks=4, batch=1)
+    assert a.blocks_for(4 * 16, 16) == 4
+    with pytest.raises(ValueError, match="max_blocks"):
+        a.blocks_for(4 * 16 + 1, 16)
+    with pytest.raises(ValueError):
+        a.allocate(0, 5)                   # extend enforces the same bound
+    assert a.blocks_in_use == 0 and _conserved(a)
+
+
+def test_share_refcounts_outlive_the_first_owner():
+    a = BlockAllocator(num_blocks=16, max_blocks=8, batch=3)
+    a.allocate(0, 4)
+    blocks = list(a.owned[0])
+    a.share(1, blocks[:2])
+    assert a.blocks_in_use == 4, "sharing consumes no new blocks"
+    assert [int(a.refcount[b]) for b in blocks] == [2, 2, 1, 1]
+    assert (a.tables[1][:2] == blocks[:2]).all()
+    a.release(0)
+    assert a.blocks_in_use == 2, "shared blocks survive the donor's release"
+    assert [int(a.refcount[b]) for b in blocks[:2]] == [1, 1]
+    a.release(1)
+    assert a.blocks_in_use == 0 and _conserved(a)
+
+
+def test_cow_privatizes_a_shared_block():
+    a = BlockAllocator(num_blocks=16, max_blocks=8, batch=2)
+    a.allocate(0, 2)
+    a.share(1, list(a.owned[0]))
+    assert not a.writable(1, 1) and not a.writable(0, 1)
+    src, dst = a.cow(1, 1)
+    assert src != dst and a.owned[1][1] == dst == a.tables[1][1]
+    assert a.writable(1, 1), "slot 1 now solely owns its copy"
+    assert a.writable(0, 1), "slot 0 got its sole ownership back"
+    assert int(a.refcount[src]) == 1 and int(a.refcount[dst]) == 1
+    assert _conserved(a)
+
+
+def test_immutable_blocks_are_never_writable():
+    a = BlockAllocator(num_blocks=16, max_blocks=8, batch=1)
+    a.allocate(0, 2)
+    blk = a.owned[0][0]
+    a.addref(blk)
+    a.immutable[blk] = True
+    assert not a.writable(0, 0)
+    a.decref(blk)
+    assert not a.writable(0, 0), "immutable even as sole owner"
+    a.release(0)
+    assert not a.immutable[blk], "last decref sheds the immutable mark"
+    assert a.blocks_in_use == 0 and _conserved(a)
+
+
+def test_extend_appends_after_shared_run():
+    a = BlockAllocator(num_blocks=16, max_blocks=8, batch=2)
+    a.allocate(0, 3)
+    a.share(1, list(a.owned[0])[:2])
+    a.extend(1, 2)
+    assert len(a.owned[1]) == 4
+    assert a.owned[1][:2] == a.owned[0][:2]
+    assert a.writable(1, 2) and a.writable(1, 3)
+    assert (a.tables[1][:4] == a.owned[1]).all()
+    assert _conserved(a)
+    tight = BlockAllocator(num_blocks=4, max_blocks=8, batch=1)
+    tight.allocate(0, 2)
+    with pytest.raises(PoolExhausted):
+        tight.extend(0, 2)                     # fits the table, not the pool
+    assert tight.blocks_in_use == 2 and _conserved(tight)
+
+
+# ------------------------------------------------------------ prefix cache
+
+def _cache_with_donor(bs=4, n_blocks=6):
+    a = BlockAllocator(num_blocks=32, max_blocks=8, batch=4)
+    b = BlockAllocator(num_blocks=32, max_blocks=8, batch=4)
+    pc = PrefixCache(bs, (a, b))
+    a.allocate(0, n_blocks)
+    b.allocate(0, n_blocks)
+    return pc, a, b
+
+
+def test_prefix_cache_match_insert_roundtrip():
+    pc, a, b = _cache_with_donor()
+    toks = list(range(100, 120))                        # 5 chunks of 4
+    added = pc.insert(toks, 3, (a.owned[0], b.owned[0]))
+    assert added == 3 and pc.n_chunks == 3
+    n, runs = pc.match(toks)
+    assert n == 3
+    assert runs[0] == a.owned[0][:3] and runs[1] == b.owned[0][:3]
+    # longest match stops at the first divergent chunk
+    n2, _ = pc.match(toks[:8] + [7, 7, 7, 7] + toks[12:])
+    assert n2 == 2
+    # a shorter prompt matches only its own whole chunks
+    n3, _ = pc.match(toks[:7])
+    assert n3 == 1
+    # re-registering is idempotent: existing copy wins, no double refs
+    before = [int(a.refcount[blk]) for blk in a.owned[0][:3]]
+    assert pc.insert(toks, 3, (a.owned[0], b.owned[0])) == 0
+    assert [int(a.refcount[blk]) for blk in a.owned[0][:3]] == before
+
+
+def test_prefix_cache_refs_pin_blocks_until_eviction():
+    pc, a, b = _cache_with_donor()
+    pc.insert(list(range(100, 116)), 4, (a.owned[0], b.owned[0]))
+    donor = list(a.owned[0])
+    a.release(0)
+    b.release(0)
+    assert a.blocks_in_use == 4, "cached chunks survive the donor"
+    assert all(a.immutable[blk] for blk in donor[:4])
+    assert pc.evictable_chunks() == 4
+    assert pc.evict(10) == 4
+    assert a.blocks_in_use == 0 and b.blocks_in_use == 0
+    assert _conserved(a) and _conserved(b)
+
+
+def test_prefix_cache_eviction_respects_live_stream_pins():
+    pc, a, b = _cache_with_donor(n_blocks=2)
+    old = list(range(100, 108))                          # 2 chunks
+    new = list(range(200, 208))
+    pc.insert(old, 2, (a.owned[0], b.owned[0]))
+    a.allocate(1, 2)
+    b.allocate(1, 2)
+    pc.insert(new, 2, (a.owned[1], b.owned[1]))
+    pin = list(a.owned[1])
+    a.release(0), b.release(0), a.release(1), b.release(1)
+    a.share(2, pin)               # a live stream still aliases new's blocks
+    assert pc.evictable_chunks() == 2, "only the unpinned branch counts"
+    assert pc.evict(10) == 2
+    assert pc.match(new, touch=False)[0] == 2, "pinned branch survives"
+    assert pc.match(old, touch=False)[0] == 0
+
+
+def test_prefix_cache_lru_order():
+    pc, a, b = _cache_with_donor(n_blocks=2)
+    first = list(range(100, 108))
+    second = list(range(200, 208))
+    pc.insert(first, 1, (a.owned[0][:1], b.owned[0][:1]))
+    pc.insert(second, 1, (a.owned[0][1:], b.owned[0][1:]))
+    a.release(0)
+    b.release(0)
+    pc.match(first)                                      # first becomes MRU
+    pc.evict(1)
+    assert pc.match(first, touch=False)[0] == 1
+    assert pc.match(second, touch=False)[0] == 0, "LRU chunk went first"
+
+
+# ------------------------------------------------- engine parity + stats
+
+@pytest.fixture(scope="module")
+def pair():
+    V = 61
+    tcfg = ModelConfig(name="tgt", arch_type="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                       vocab_size=V)
+    dcfg = ModelConfig(name="drf", arch_type="dense", num_layers=1,
+                       d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
+                       vocab_size=V)
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    return ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+
+
+def _mk(pair, prefix_cache, kv_dtype=None, pool_tokens=512, mesh=None):
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=3, seed=0)
+    eng = make_engine(*pair, ctrl, EngineSpec(
+        backend="paged", batch_size=4, max_len=256, block_size=8,
+        pool_tokens=pool_tokens, prefix_cache=prefix_cache,
+        kv_dtype=kv_dtype, mesh=mesh))
+    return eng, ctrl
+
+
+def _run(eng, prompt, slot, ticks=6):
+    eng.open_stream(slot, list(prompt), reserve_tokens=len(prompt) + 30)
+    for _ in range(ticks):
+        eng.session_step_batch()
+    st = eng.slots[slot]
+    return (list(st["seq"]),
+            [(s.n_drafted, s.n_accepted, s.arm) for s in st["res"].sessions])
+
+
+SHARED = np.random.default_rng(0).integers(1, 60, size=17).tolist()
+# donor registers (22-2)//8 = 2 chunks; the aligned adopter (len 17,
+# 16 = 2*8 prefill tokens) adopts both and must COW the draft frontier
+DONOR = SHARED + [11, 22, 33, 44, 55]
+ALIGNED = list(SHARED)
+UNALIGNED = SHARED + [17, 28, 39]
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+@pytest.mark.parametrize("adopter,want_cow",
+                         [(ALIGNED, 1), (UNALIGNED, 0)])
+def test_shared_prefix_parity(pair, kv_dtype, adopter, want_cow):
+    """A stream admitted onto shared prefix blocks is BIT-IDENTICAL to the
+    same stream on fully private blocks: tokens, arm-selection trace, and
+    bandit posterior all match, while prefill compute was actually skipped."""
+    shared, ctrl_s = _mk(pair, True, kv_dtype)
+    oA = _run(shared, DONOR, 0)
+    oB = _run(shared, adopter, 1)
+    ps = shared.pool_stats()
+    assert ps["prefill_tokens_skipped"] == 16
+    assert ps["cow_copies"] == want_cow
+    assert ps["shared_blocks_in_use"] >= 2 * (2 - want_cow)
+    assert ps["prefix_cache"]["hits"] == 1
+
+    private, ctrl_p = _mk(pair, False, kv_dtype)
+    assert _run(private, DONOR, 0) == oA
+    assert _run(private, adopter, 1) == oB
+    np.testing.assert_array_equal(ctrl_s.bandit.counts, ctrl_p.bandit.counts)
+    np.testing.assert_array_equal(ctrl_s.bandit.means, ctrl_p.bandit.means)
+
+
+def test_shared_prefix_parity_with_concurrent_donor(pair):
+    """Donor keeps decoding WHILE the adopter runs on its blocks — the
+    shared region must stay bit-stable under the donor's live writes."""
+    shared, _ = _mk(pair, True)
+    shared.open_stream(0, list(DONOR), reserve_tokens=len(DONOR) + 30)
+    shared.session_step_batch()
+    shared.open_stream(1, list(ALIGNED), reserve_tokens=len(ALIGNED) + 30)
+    for _ in range(6):
+        shared.session_step_batch()
+    out0 = list(shared.slots[0]["seq"])
+    out1 = list(shared.slots[1]["seq"])
+
+    private, _ = _mk(pair, False)
+    private.open_stream(0, list(DONOR), reserve_tokens=len(DONOR) + 30)
+    private.session_step_batch()
+    private.open_stream(1, list(ALIGNED), reserve_tokens=len(ALIGNED) + 30)
+    for _ in range(6):
+        private.session_step_batch()
+    assert list(private.slots[0]["seq"]) == out0
+    assert list(private.slots[1]["seq"]) == out1
+
+
+def test_close_stream_keeps_cached_blocks_and_evict_reclaims(pair):
+    eng, _ = _mk(pair, True)
+    _run(eng, DONOR, 0)
+    eng.close_stream(0)
+    assert eng.dalloc.blocks_in_use == 2, "cache holds the registered run"
+    assert eng.prefix_cache.evictable_chunks() == 2
+    # a new admission of the same prompt re-adopts the cached blocks
+    _run(eng, DONOR, 1, ticks=2)
+    assert eng.pool_stats()["prefix_cache"]["hits"] == 1
+    eng.close_stream(1)
+    eng.prefix_cache.evict(99)
+    assert eng.dalloc.blocks_in_use == 0 and eng.talloc.blocks_in_use == 0
+    assert _conserved(eng.dalloc) and _conserved(eng.talloc)
+
+
+def test_admission_evicts_cold_prefixes_under_pressure(pair):
+    """With a pool sized so cached chunks must be reclaimed, admission
+    evicts cold prefixes instead of backpressuring forever."""
+    eng, _ = _mk(pair, True, pool_tokens=9 * 8)          # 9 usable blocks
+    rng = np.random.default_rng(3)
+    for slot in range(2):
+        p = rng.integers(1, 60, size=18).tolist()        # reserve 48 -> 6 blk
+        _run(eng, p, slot, ticks=2)
+        eng.close_stream(slot)
+    assert eng.prefix_cache.n_chunks == 4
+    big = rng.integers(1, 60, size=20).tolist()          # reserve 50 -> 7 blk
+    assert eng.can_admit(len(big) + 30, prompt=big)
+    _run(eng, big, 0, ticks=2)                           # forces eviction
+    assert eng.pool_stats()["prefix_cache"]["evictions"] > 0
+    eng.close_stream(0)
+
+
+def test_describe_and_stats_schema(pair):
+    eng, _ = _mk(pair, True)
+    d = eng.describe()
+    for key in ("shared_blocks_in_use", "prefill_tokens_computed",
+                "prefill_tokens_skipped", "cow_copies", "prefix_cache"):
+        assert key in d["pool"]
+    assert d["pool"]["prefix_cache"]["chunks"] == 0
+    off, _ = _mk(pair, False)
+    assert "prefix_cache" not in off.describe()["pool"]
+
+
+def test_prefix_cache_rejects_recurrent_stacks():
+    V = 61
+    from repro.models import RGLRUConfig
+    cfg = ModelConfig(name="r", arch_type="hybrid", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=V,
+                      block_pattern=("rglru", "attn"), window=16,
+                      rglru=RGLRUConfig(lru_width=32))
+    p = T.init_params(cfg, jax.random.PRNGKey(0))
+    bundle = ModelBundle(p, cfg)
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=3, seed=0)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        make_engine(bundle, bundle, ctrl, EngineSpec(
+            backend="paged", batch_size=2, max_len=128, block_size=8,
+            pool_tokens=256, prefix_cache=True))
+
+
+# ----------------------------------------------------------------- serving
+
+def test_server_shared_prompt_workload_drains_and_shares(pair):
+    draft, target = pair
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=3, seed=0)
+    srv = SpecServer(draft, target, ctrl, spec=EngineSpec(
+        backend="paged", batch_size=4, max_len=256, block_size=8,
+        pool_tokens=768, prefix_cache=True))
+    rng = np.random.default_rng(1)
+    system = rng.integers(1, 60, size=33).tolist()
+    ids = [srv.submit(system + rng.integers(1, 60, size=4).tolist(), 8)
+           for _ in range(6)]
+    responses = srv.run_until_drained(max_ticks=500)
+    assert {r.request_id for r in responses} == set(ids)
+    stats = srv.throughput_stats()
+    assert stats["prefill_tokens_skipped"] > 0
+    assert stats["prefix_cache"]["hits"] >= 5
+    # only cache-held blocks remain after the drain
+    assert stats["blocks_in_use"] == (
+        stats["prefix_cache"]["chunks"] * 2)

@@ -147,32 +147,128 @@ def test_paged_kernel_matches_dense_reference(data):
                                atol=5e-5, rtol=5e-5)
 
 
-@given(st.lists(st.tuples(st.integers(1, 48), st.integers(0, 1)),
-                min_size=1, max_size=12),
+@given(st.lists(st.tuples(st.integers(1, 48), st.integers(0, 2)),
+                min_size=1, max_size=16),
        st.integers(2, 12), st.integers(4, 16))
 @settings(max_examples=50, deadline=None)
 def test_allocator_conservation_under_churn(events, num_blocks_x, bs):
-    """Arbitrary admit/release churn conserves blocks, never double-books
-    a physical block, and never hands out the trash block."""
+    """Arbitrary admit/truncate/release churn conserves blocks
+    (``free + in_use == num_blocks - 1`` after EVERY mutation), never
+    double-books a physical block, never hands out the trash block, and
+    keeps ``peak_in_use`` an exact running max.  Requests too large for
+    the table width raise ``ValueError`` instead of silently clamping."""
     from repro.models.cache import BlockAllocator, PoolExhausted
     num_blocks = num_blocks_x
     a = BlockAllocator(num_blocks=num_blocks, max_blocks=8, batch=4)
     live = set()
-    for tokens, kill in events:
+    running_peak = 0
+
+    def check():
+        owned = [b for s in range(4) for b in a.owned[s]]
+        assert 0 not in owned
+        assert len(owned) == len(set(owned))          # no double-booking
+        assert len(a.free) + a.blocks_in_use == num_blocks - 1
+        assert len(owned) == a.blocks_in_use          # no sharing here
+        assert a.peak_in_use == running_peak
+
+    for tokens, action in events:
         slot = tokens % 4
-        if slot in live and kill:
+        if slot in live and action == 1:
             a.release(slot)
             live.discard(slot)
+        elif slot in live and action == 2:
+            a.truncate(slot, tokens, bs)
+            if not a.owned[slot]:
+                live.discard(slot)
         elif slot not in live:
             try:
                 a.allocate(slot, a.blocks_for(tokens, bs))
                 live.add(slot)
+            except ValueError:
+                assert -(-tokens // bs) > a.max_blocks
             except PoolExhausted:
                 pass
-        owned = [b for s in range(4) for b in a.owned[s]]
-        assert 0 not in owned
-        assert len(owned) == len(set(owned))          # no double-booking
-        assert len(a.free) + len(owned) == num_blocks - 1
+        running_peak = max(running_peak, a.blocks_in_use)
+        check()
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(2, 40),
+                          st.integers(0, 2)),
+                min_size=1, max_size=20),
+       st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_cow_safety_under_admit_draft_rollback_evict(events, seed):
+    """COW safety: over random admit/draft-write/rollback/release/evict
+    sequences with prefix sharing, a slot's write frontier (positions the
+    draft/target may speculatively write, then roll back) NEVER overlaps a
+    block with refcount > 1 or an immutable cached block — so rollback,
+    which only rewinds lengths, cannot be observed by any other stream.
+    Conservation holds throughout, cache references included."""
+    from repro.models.cache import (BlockAllocator, PoolExhausted,
+                                    PrefixCache)
+    bs, B = 4, 4
+    rng = np.random.default_rng(seed)
+    dalloc = BlockAllocator(num_blocks=24, max_blocks=12, batch=B)
+    talloc = BlockAllocator(num_blocks=24, max_blocks=12, batch=B)
+    pc = PrefixCache(bs, (dalloc, talloc))
+    # a small prompt pool so admissions actually collide on prefixes
+    prompts = [rng.integers(1, 9, size=n).tolist()
+               for n in rng.integers(6, 20, size=3)]
+    live = {}                                     # slot -> prompt length
+
+    def check():
+        for a in (dalloc, talloc):
+            assert len(a.free) + a.blocks_in_use == a.num_blocks - 1
+        for slot, P in live.items():
+            for a, first in ((dalloc, P - 2), (talloc, P - 1)):
+                for idx in range(first // bs, len(a.owned[slot])):
+                    blk = a.owned[slot][idx]
+                    assert a.refcount[blk] == 1 and not a.immutable[blk], \
+                        f"slot {slot} frontier block {blk} is shared"
+
+    for slot, x, action in events:
+        if slot in live and action == 1:          # release
+            dalloc.release(slot)
+            talloc.release(slot)
+            del live[slot]
+        elif action == 2:                         # evict pressure
+            pc.evict(x % 4)
+        elif slot not in live:                    # admit with sharing + COW
+            prompt = prompts[x % len(prompts)]
+            P = len(prompt)
+            need = dalloc.blocks_for(P + 8, bs)
+            n, runs = pc.match(prompt, limit_tokens=P - 1)
+            n_cow = 1 if n and (P - 2) // bs < n else 0
+            try:
+                if n:
+                    dalloc.share(slot, runs[0][:n])
+                    talloc.share(slot, runs[1][:n])
+                    dalloc.extend(slot, need - n)
+                    talloc.extend(slot, need - n)
+                    for a, first in ((dalloc, P - 2), (talloc, P - 1)):
+                        for idx in range(first // bs, len(a.owned[slot])):
+                            if not a.writable(slot, idx):
+                                a.cow(slot, idx)
+                else:
+                    dalloc.allocate(slot, need)
+                    talloc.allocate(slot, need)
+            except PoolExhausted:
+                dalloc.release(slot)
+                talloc.release(slot)
+            else:
+                n_reg = (P - 2) // bs
+                if n_reg > 0:
+                    pc.insert(prompt, n_reg,
+                              (dalloc.owned[slot], talloc.owned[slot]))
+                live[slot] = P
+        check()
+    # drain: every stream releases, the cache evicts everything — all
+    # blocks return to the free lists
+    for slot in list(live):
+        dalloc.release(slot)
+        talloc.release(slot)
+    pc.evict(10 ** 6)
+    assert dalloc.blocks_in_use == 0 and talloc.blocks_in_use == 0
 
 
 # ------------------------------------------------------------- quantization
