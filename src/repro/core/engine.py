@@ -1505,6 +1505,10 @@ class PagedSpecEngine(_ShardingMixin):
         n_adopt, _, n_cow = self._adoptable(prompt) if prompt else (0, None, 0)
         evictable = (self.prefix_cache.evictable_chunks()
                      if self.prefix_cache is not None else 0)
+        # the adopted run is refcount==1 until admission pins it, so it is
+        # counted inside ``evictable_chunks`` — subtract it (floored at 0)
+        # or capacity is overstated by up to ``n_adopt`` blocks per pool
+        evictable = max(evictable - n_adopt, 0)
         need_new = max(need - n_adopt, 0) + n_cow
         return all(need_new <= len(a.free) + evictable
                    for a in (self.dalloc, self.talloc))
@@ -1538,21 +1542,47 @@ class PagedSpecEngine(_ShardingMixin):
         n_adopt, runs, n_cow = self._adoptable(prompt, touch=True)
         need = max(need, n_adopt)
         need_new = need - n_adopt + n_cow
-        deficit = max(need_new - len(self.dalloc.free),
-                      need_new - len(self.talloc.free))
-        if deficit > 0 and self.prefix_cache is not None:
-            self.prefix_cache.evict(deficit)
-        if not (self.dalloc.can_allocate(need_new)
-                and self.talloc.can_allocate(need_new)):
-            raise PoolExhausted(f"{need_new} blocks unavailable for admission")
+        # Pin the adopted run BEFORE any eviction: until ``share`` runs the
+        # matched chunks are refcount==1 (cache-owned only), so a
+        # deficit-driven evict could free the very blocks being adopted.
+        # The pin also takes them out of ``evictable_chunks`` below, so the
+        # feasibility check cannot count on reclaiming them.
         if n_adopt:
-            self.dalloc.share(slot, runs[0][:n_adopt])
-            self.talloc.share(slot, runs[1][:n_adopt])
-            self.dalloc.extend(slot, need - n_adopt)
-            self.talloc.extend(slot, need - n_adopt)
-        else:
-            self.dalloc.allocate(slot, need)
-            self.talloc.allocate(slot, need)
+            for alloc, run in zip((self.dalloc, self.talloc), runs):
+                for b in run[:n_adopt]:
+                    alloc.addref(int(b))
+        try:
+            deficit = max(need_new - len(self.dalloc.free),
+                          need_new - len(self.talloc.free))
+            if deficit > 0:
+                evictable = (self.prefix_cache.evictable_chunks()
+                             if self.prefix_cache is not None else 0)
+                if deficit > evictable:
+                    # doomed admission: backpressure WITHOUT flushing warm
+                    # prefixes the request cannot use anyway
+                    raise PoolExhausted(
+                        f"{need_new} blocks unavailable for admission "
+                        f"({deficit - evictable} short after eviction)")
+                self.prefix_cache.evict(deficit)
+            if not (self.dalloc.can_allocate(need_new)
+                    and self.talloc.can_allocate(need_new)):
+                raise PoolExhausted(
+                    f"{need_new} blocks unavailable for admission")
+            if n_adopt:
+                self.dalloc.share(slot, runs[0][:n_adopt])
+                self.talloc.share(slot, runs[1][:n_adopt])
+                self.dalloc.extend(slot, need - n_adopt)
+                self.talloc.extend(slot, need - n_adopt)
+            else:
+                self.dalloc.allocate(slot, need)
+                self.talloc.allocate(slot, need)
+        finally:
+            # drop the admission pin: the cache ref (and, on success, the
+            # stream's ``share`` ref) keep the blocks alive
+            if n_adopt:
+                for alloc, run in zip((self.dalloc, self.talloc), runs):
+                    for b in run[:n_adopt]:
+                        alloc.decref(int(b))
         adopted = n_adopt * self.block_size
         self.dcache = {**self.dcache,
                        "tables": jnp.asarray(self.dalloc.tables),
@@ -1613,16 +1643,23 @@ class PagedSpecEngine(_ShardingMixin):
         return cache
 
     def _assert_cow_safety(self) -> None:
-        """Every active lane's write range this tick (draft from L-2,
-        target from L-1, up to gamma_max ahead) must sit in sole-owner,
-        non-immutable blocks — speculative writes and rollback can then
-        never touch a block another stream or the cache still references."""
+        """Every active lane's write range THIS TICK (draft from L-2,
+        target from L-1, at most gamma_max tokens ahead) must sit in
+        sole-owner, non-immutable blocks — speculative writes and rollback
+        can then never touch a block another stream or the cache still
+        references.  Only the tick's write window is checked (a handful of
+        blocks per lane, not the whole reservation): blocks past it are
+        fresh private extends that nothing can alias before the frontier
+        reaches them, and checking them every launch made this O(slots x
+        owned_blocks) host work in the serving hot path."""
+        bs = self.block_size
         for s in np.flatnonzero(self.active_mask()):
             L = len(self.slots[int(s)]["seq"])
+            hi = (L + self.gamma_max) // bs       # last block written this tick
             for alloc, first in ((self.dalloc, L - 2), (self.talloc, L - 1)):
                 owned = alloc.owned[int(s)]
-                for idx in range(max(first, 0) // self.block_size,
-                                 len(owned)):
+                for idx in range(max(first, 0) // bs,
+                                 min(len(owned), hi + 1)):
                     assert alloc.writable(int(s), idx), (
                         f"slot {s}: write-frontier block {owned[idx]} "
                         f"(logical {idx}) is shared/immutable — COW missed")

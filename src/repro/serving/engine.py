@@ -59,6 +59,7 @@ import numpy as np
 from repro.core.controller import Controller
 from repro.core.engine import (EngineSpec, GenResult, ModelBundle,
                                engine_spec_from_legacy, make_engine)
+from repro.models.cache import PoolExhausted
 
 
 @dataclass
@@ -164,8 +165,20 @@ class SpecServer:
                 break
             self.queue.popleft()
             if self.paged:
-                self.engine.open_stream(slot, req.prompt, req.eos_id,
-                                        reserve_tokens=self._reserve_tokens(req))
+                try:
+                    self.engine.open_stream(
+                        slot, req.prompt, req.eos_id,
+                        reserve_tokens=self._reserve_tokens(req))
+                except PoolExhausted:
+                    # ``can_admit`` is a feasibility PROBE, not a
+                    # reservation: anything that shifts evictability
+                    # between probe and admission lands here.  The request
+                    # goes back to the head of the queue (FIFO intact) —
+                    # backpressure, never a dropped request or a crashed
+                    # serving loop.
+                    self.queue.appendleft(rid)
+                    self.backpressure_events += 1
+                    break
             else:
                 self.engine.open_stream(slot, req.prompt, req.eos_id)
             self._slot_rid[slot] = rid

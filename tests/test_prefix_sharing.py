@@ -287,6 +287,76 @@ def test_admission_evicts_cold_prefixes_under_pressure(pair):
     eng.close_stream(0)
 
 
+def test_admission_pins_adopted_run_against_its_own_eviction(pair):
+    """Regression: when the deficit can only be covered by evicting the
+    very chunks being adopted (refcount==1 until ``share`` pins them),
+    admission used to evict them first — ``share`` then addref'd a freed
+    block (assert / silent KV aliasing).  It must backpressure cleanly
+    instead, leaving the cache intact."""
+    eng, _ = _mk(pair, True, pool_tokens=9 * 8)          # 9 usable blocks
+    _run(eng, DONOR, 0, ticks=2)
+    eng.close_stream(0)
+    assert eng.prefix_cache.evictable_chunks() == 2      # the adopted run
+    cached = [b for run in eng.prefix_cache.match(DONOR, touch=False)[1]
+              for b in run]
+    # need 9 blocks, 7 free, and the only evictable chunks ARE the run
+    # being adopted: can_admit must not promise this capacity...
+    assert not eng.can_admit(72, prompt=ALIGNED)
+    # ...and open_stream must refuse without corrupting the cache
+    with pytest.raises(PoolExhausted):
+        eng.open_stream(1, list(ALIGNED), reserve_tokens=72)
+    assert eng.slots[1] is None
+    assert eng.prefix_cache.match(DONOR, touch=False)[0] == 2
+    assert [int(eng.dalloc.refcount[b]) for b in cached[:2]] == [1, 1], \
+        "admission pin was dropped on the failure path"
+    assert eng.prefix_cache.evictable_chunks() == 2
+    assert _conserved(eng.dalloc) and _conserved(eng.talloc)
+    # the same admission with a feasible reservation still succeeds
+    # (the refused attempt above already counted one cache hit)
+    assert eng.can_admit(len(ALIGNED) + 20, prompt=ALIGNED)
+    eng.open_stream(1, list(ALIGNED), reserve_tokens=len(ALIGNED) + 20)
+    assert eng.pool_stats()["prefix_cache"]["hits"] == 2
+
+
+def test_admission_evicts_cold_chunks_but_never_the_adopted_run(pair):
+    """Deficit covered by COLD chunks while the adopted run rides through
+    pinned: eviction reclaims the cold prefix, the hit survives."""
+    eng, _ = _mk(pair, True, pool_tokens=9 * 8)
+    cold = np.random.default_rng(7).integers(1, 60, size=18).tolist()
+    _run(eng, cold, 0, ticks=2)
+    eng.close_stream(0)
+    _run(eng, DONOR, 0, ticks=2)
+    eng.close_stream(0)
+    assert eng.prefix_cache.n_chunks == 4                # 2 cold + 2 donor
+    assert eng.prefix_cache.match(ALIGNED, touch=False)[0] == 2
+    # need 7 blocks, 5 free -> deficit 1, covered by cold chunks only
+    eng.open_stream(0, list(ALIGNED), reserve_tokens=56)
+    assert eng.pool_stats()["prefix_cache"]["evictions"] >= 1
+    assert eng.prefix_cache.match(DONOR, touch=False)[0] == 2, \
+        "eviction reclaimed the adopted (pinned) run"
+    assert eng.pool_stats()["prefix_cache"]["hits"] == 1
+    assert _conserved(eng.dalloc) and _conserved(eng.talloc)
+
+
+def test_server_requeues_request_when_admission_races_the_probe(pair):
+    """``can_admit`` is a probe, not a reservation: if ``open_stream``
+    still raises ``PoolExhausted``, the server must re-queue the request
+    as backpressure (FIFO intact), not crash the serving loop."""
+    draft, target = pair
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=3, seed=0)
+    srv = SpecServer(draft, target, ctrl, spec=EngineSpec(
+        backend="paged", batch_size=2, max_len=256, block_size=8,
+        pool_tokens=6 * 8, prefix_cache=True))
+    prompt = np.random.default_rng(2).integers(1, 60, size=20).tolist()
+    rid = srv.submit(prompt, 30)                         # needs 7 > 6 blocks
+    srv.engine.can_admit = lambda *a, **k: True          # force the race
+    srv.step()
+    assert list(srv.queue) == [rid], "request re-queued at the head"
+    assert srv.backpressure_events == 1
+    assert all(s is None for s in srv.engine.slots)
+    assert _conserved(srv.engine.dalloc) and _conserved(srv.engine.talloc)
+
+
 def test_describe_and_stats_schema(pair):
     eng, _ = _mk(pair, True)
     d = eng.describe()
