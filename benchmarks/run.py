@@ -15,12 +15,14 @@ artifacts/bench/.
   tree_spec           —        tree-vs-chain accepted/verify + shape bandit
   quant_spec          —        bf16 vs int8-KV vs int8-draft arms + pool bytes
   prefix_sharing      —        shared-prefix pool blocks / concurrency / TTFT
+  slo_serving         —        open-loop goodput under p95 SLO, FIFO vs SLO
   kernels_micro       —        kernel/XLA-path microbench
   roofline            §Roofline collation from the dry-run artifacts
 
 Serving-path benches (serving_batch, tree_spec, quant_spec,
-prefix_sharing) additionally append their summaries to the repo-root
-BENCH_serving.json (committed — the perf trajectory across PRs).
+prefix_sharing, slo_serving) additionally append their summaries to the
+repo-root BENCH_serving.json (committed — the perf trajectory across
+PRs); ``scripts/check_bench_schema.py`` validates every appended row.
 """
 from __future__ import annotations
 

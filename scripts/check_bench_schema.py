@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Lint-lane schema check for the committed BENCH_serving.json (stdlib only).
+
+The serving-path benches append one row per run via
+``benchmarks.common.record_serving_bench``; the file's git history IS the
+perf trajectory across PRs, so a malformed row silently poisons every
+later comparison.  This script validates each row:
+
+1. the document is ``{"runs": [...]}`` and each row has exactly the keys
+   ``bench`` (non-empty str), ``recorded_at`` (UTC ``...T...Z`` timestamp)
+   and ``summary`` (non-empty dict);
+2. every ``claim_*`` key anywhere in a summary holds a real bool — a
+   claim recorded as a string/int/None means the bench's gate logic broke;
+3. each summary carries at least one ``claim_*`` key (a serving bench
+   with no gated claim is recording noise, not evidence);
+4. rows from benches that ship an engine ``describe()`` blob
+   (``ENGINE_BLOB_BENCHES``) actually attach one — a dict under an
+   ``engine`` key (possibly nested per-config) with at least a ``backend``
+   field, so the trajectory stays attributable to an engine config.
+   Pre-existing benches that predate the convention are exempt.
+
+Exits non-zero with one ``::error::`` line per violation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+PATH = os.path.join(REPO, "BENCH_serving.json")
+ROW_KEYS = {"bench", "recorded_at", "summary"}
+TS_RE = re.compile(r"^\d{4}-\d{2}-\d{2}T\d{2}:\d{2}:\d{2}Z$")
+# benches (by name prefix, _smoke included) required to attach describe()
+ENGINE_BLOB_BENCHES = ("prefix_sharing", "slo_serving")
+
+
+def claim_keys(obj, path=""):
+    """Yield (dotted_path, value) for every claim_* key, at any depth."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            p = f"{path}.{k}" if path else str(k)
+            if isinstance(k, str) and k.startswith("claim_"):
+                yield p, v
+            yield from claim_keys(v, p)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from claim_keys(v, f"{path}[{i}]")
+
+
+def engine_blobs(summary):
+    """Engine describe() blobs: ``engine`` may be one blob or a dict of
+    per-config blobs (e.g. {"fifo": {...}, "slo": {...}})."""
+    eng = summary.get("engine")
+    if not isinstance(eng, dict):
+        return []
+    if "backend" in eng:
+        return [eng]
+    return [v for v in eng.values() if isinstance(v, dict)]
+
+
+def check_row(i, row):
+    errs = []
+    where = f"runs[{i}]"
+    if not isinstance(row, dict):
+        return [f"{where}: row is {type(row).__name__}, not an object"]
+    if set(row) != ROW_KEYS:
+        errs.append(f"{where}: keys {sorted(row)} != {sorted(ROW_KEYS)}")
+        return errs
+    bench, ts, summary = row["bench"], row["recorded_at"], row["summary"]
+    if not (isinstance(bench, str) and bench):
+        errs.append(f"{where}: 'bench' must be a non-empty string")
+        bench = "?"
+    where = f"runs[{i}] ({bench})"
+    if not (isinstance(ts, str) and TS_RE.match(ts)):
+        errs.append(f"{where}: 'recorded_at' {ts!r} is not a UTC "
+                    f"YYYY-MM-DDTHH:MM:SSZ timestamp")
+    if not (isinstance(summary, dict) and summary):
+        errs.append(f"{where}: 'summary' must be a non-empty object")
+        return errs
+    claims = list(claim_keys(summary))
+    if not claims:
+        errs.append(f"{where}: summary has no claim_* key — serving "
+                    f"benches must record their gated claims")
+    for path, v in claims:
+        if not isinstance(v, bool):
+            errs.append(f"{where}: summary.{path} = {v!r} "
+                        f"({type(v).__name__}) — claims must be bool")
+    if bench.startswith(ENGINE_BLOB_BENCHES):
+        blobs = engine_blobs(summary)
+        if not blobs:
+            errs.append(f"{where}: missing engine describe() blob "
+                        f"(summary['engine'] dict with a 'backend' field)")
+        for b in blobs:
+            if "backend" not in b:
+                errs.append(f"{where}: engine blob lacks 'backend': "
+                            f"{sorted(b)[:6]}")
+    return errs
+
+
+def main() -> int:
+    if not os.path.exists(PATH):
+        print("::error::BENCH_serving.json is missing from the repo root")
+        return 1
+    try:
+        with open(PATH) as f:
+            doc = json.load(f)
+    except ValueError as e:
+        print(f"::error::BENCH_serving.json is not valid JSON: {e}")
+        return 1
+    runs = doc.get("runs") if isinstance(doc, dict) else None
+    if not isinstance(runs, list):
+        print("::error::BENCH_serving.json must be {\"runs\": [...]}")
+        return 1
+    errors = []
+    for i, row in enumerate(runs):
+        errors += check_row(i, row)
+    for e in errors:
+        print(f"::error::{e}")
+    if not errors:
+        n_claims = sum(len(list(claim_keys(r["summary"]))) for r in runs)
+        print(f"bench schema ok: {len(runs)} runs, {n_claims} claim "
+              f"values, all rows well-formed")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

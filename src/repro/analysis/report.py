@@ -256,7 +256,14 @@ def serving_section() -> str:
         trend = "  ".join(f"{b}:{v:.1f}" for b, v in sorted(
             tps.items(), key=lambda kv: int(kv[0])))
         engines = s.get("engine", {})
-        any_engine = next(iter(engines.values()), {}) if engines else {}
+        # ``engine`` is either ONE describe() blob or a dict of
+        # per-config blobs (e.g. {"fifo": {...}, "slo": {...}})
+        if isinstance(engines, dict) and "backend" in engines:
+            any_engine = engines
+        else:
+            any_engine = next((v for v in engines.values()
+                               if isinstance(v, dict)), {}) \
+                if isinstance(engines, dict) else {}
         backend = any_engine.get("backend", "?")
         fused = any_engine.get("fused", "?")
         gates = ", ".join(f"{k.replace('claim_', '')}={v}"
@@ -265,10 +272,52 @@ def serving_section() -> str:
         lines.append(f"| {name} | {r.get('recorded_at', '?')} | {trend} | "
                      f"{backend} (fused={fused}) | {gates} |")
     lines.append("")
+    tail = _slo_subsection(latest)
+    if tail:
+        lines += tail
     lines.append("(Full per-run rows, each stamped with the engine settings "
                  "that produced it, accumulate in `BENCH_serving.json` — its "
                  "git history is the cross-PR perf trajectory.)")
     return "\n".join(lines)
+
+
+def _slo_subsection(latest: dict) -> list:
+    """Queue-delay / SLO tails for rows that carry them (the open-loop
+    ``slo_serving`` bench and any server stats recorded with the
+    queue-delay satellites): goodput under p95-SLO per scheduler, p95
+    queue delay, and per-priority latency tails."""
+    lines = []
+    for name in sorted(latest):
+        s = latest[name].get("summary", {})
+        good = s.get("goodput_tokens_per_tick")
+        if isinstance(good, dict) and good:
+            lines += [f"### {name}: goodput under p95 SLO", "",
+                      "| scheduler | goodput tok/tick | slo met | "
+                      "p95 queue delay (ticks) | preemptions |",
+                      "|---|---|---|---|---|"]
+            for sched in sorted(good):
+                met = s.get("slo_met_frac", {}).get(sched, "?")
+                qd = s.get("p95_queue_delay_ticks", {}).get(sched, "?")
+                pre = s.get("preemption_events", {}).get(sched, "?")
+                met = f"{met:.2f}" if isinstance(met, float) else met
+                lines.append(f"| {sched} | {good[sched]:.2f} | {met} | "
+                             f"{qd} | {pre} |")
+            lines.append("")
+        per_pri = s.get("per_priority")
+        if isinstance(per_pri, dict) and per_pri:
+            for sched in sorted(per_pri):
+                classes = per_pri[sched]
+                if (not isinstance(classes, dict) or not classes
+                        or not all(isinstance(c, dict)
+                                   for c in classes.values())):
+                    continue
+                row = "  ".join(
+                    f"pri{p}: p95={c.get('p95_latency_s', 0):.3f}s "
+                    f"(n={c.get('n_requests', '?')})"
+                    for p, c in sorted(classes.items()))
+                lines.append(f"- {name}/{sched} per-priority tails: {row}")
+            lines.append("")
+    return lines
 
 
 def build(perf_md: str = "") -> str:

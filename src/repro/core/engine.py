@@ -27,11 +27,12 @@ from repro.models.quant import quantize_params
 from repro.models.sharding import use_mesh
 from .controller import Controller, TapOutTreeSequence
 from .rewards import modeled_session_cost, precision_cost_factor
-from .spec_decode import (_probs, draft_session, draft_session_batched,
-                          draft_session_paged, fresh_session_jits,
-                          fused_session_tick, make_sharded_fused,
-                          make_sharded_sessions, verify_session,
-                          verify_session_batched, verify_session_paged)
+from .spec_decode import (_probs, chunk_prefill_paged, draft_session,
+                          draft_session_batched, draft_session_paged,
+                          fresh_session_jits, fused_session_tick,
+                          make_sharded_fused, make_sharded_sessions,
+                          verify_session, verify_session_batched,
+                          verify_session_paged)
 from .tree import TreeSpec, verify_walk
 
 
@@ -1246,6 +1247,18 @@ def _path_keys(path):
     return [getattr(p, "key", None) for p in path]
 
 
+def _chunk_schedule(n_tokens: int, chunk: int) -> List[tuple]:
+    """``(lo, hi)`` feed windows of a prefill: whole ``chunk``-token
+    windows first, then singles for the unaligned tail.  ONE canonical
+    schedule shared by monolithic and per-tick chunked prefill — same
+    windows at the same offsets means the same compiled programs see the
+    same operands, so the two paths stay bit-identical."""
+    n_whole = n_tokens // chunk
+    sched = [(i * chunk, (i + 1) * chunk) for i in range(n_whole)]
+    sched += [(j, j + 1) for j in range(n_whole * chunk, n_tokens)]
+    return sched
+
+
 class PagedSpecEngine(_ShardingMixin):
     """Paged slot engine: B streams share global KV block pools.
 
@@ -1345,6 +1358,8 @@ class PagedSpecEngine(_ShardingMixin):
         self.prefill_tokens_computed = 0
         self.prefill_tokens_skipped = 0
         self.cow_copies = 0
+        self.preemptions = 0
+        self.resumes = 0
         self._sharded_sessions = None
         if mesh is not None:
             from repro.launch.shardings import paged_cache_shardings
@@ -1454,15 +1469,29 @@ class PagedSpecEngine(_ShardingMixin):
         return {**cache, "layers": jax.tree_util.tree_map_with_path(
             f, cache["layers"])}
 
+    def _chunk_feed_lane(self, which: str, cache, slot: int,
+                         tokens: np.ndarray, n_valid: int):
+        """One resumable chunk-prefill step on lane ``slot``: feed a (1, C)
+        buffer through ``chunk_prefill_paged`` (positions come from the
+        lane's live length, so it resumes anywhere) and fold the lane back
+        into the pool."""
+        bundle = self.draft if which == "draft" else self.target
+        spec = self.dspec if which == "draft" else self.tspec
+        lane = self._lane_view(cache, slot)
+        lane = chunk_prefill_paged(bundle.params, bundle.cfg, spec, lane,
+                                   jnp.asarray(tokens, jnp.int32), n_valid)
+        return self._merge_lane(cache, lane, slot)
+
     def _prefill_lane(self, which: str, cache, slot: int, tokens: List[int]):
+        """Monolithic prefill = the FULL chunk schedule run back to back.
+        Routing it through the same ``chunk_prefill_paged`` program (and
+        the same whole-chunks-then-singles schedule) that ``prefill_step``
+        uses makes chunked and monolithic prefill bit-identical by
+        construction — there is only one prefill program."""
         toks = np.asarray(tokens, np.int32)[None]
-        C = self.prefill_chunk
-        n_chunks = toks.shape[1] // C
-        for i in range(n_chunks):
-            cache = self._advance_lane(which, cache, slot,
-                                       toks[:, i * C:(i + 1) * C])
-        for j in range(n_chunks * C, toks.shape[1]):
-            cache = self._advance_lane(which, cache, slot, toks[:, j:j + 1])
+        for lo, hi in _chunk_schedule(toks.shape[1], self.prefill_chunk):
+            cache = self._chunk_feed_lane(which, cache, slot,
+                                          toks[:, lo:hi], hi - lo)
         return cache
 
     # -------------------------------------------------------- slots
@@ -1470,7 +1499,17 @@ class PagedSpecEngine(_ShardingMixin):
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def active_mask(self) -> np.ndarray:
-        return np.array([s is not None and not s["done"] for s in self.slots])
+        """Slots that decode THIS tick.  A slot still mid-chunked-prefill
+        occupies its lane and blocks but rides the tick masked (its lane's
+        garbage feed lands in its own reserved pages past the length
+        mirror, dead under the tick's rollback and overwritten by the next
+        real prefill chunk) until ``prefill_step`` finishes the prompt."""
+        return np.array([s is not None and not s["done"]
+                         and not s.get("prefilling") for s in self.slots])
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and s.get("prefilling")]
 
     def reserve_blocks_for(self, reserve_tokens: int) -> int:
         """Physical blocks a request with this worst-case length needs."""
@@ -1516,7 +1555,8 @@ class PagedSpecEngine(_ShardingMixin):
     @_on_mesh
     def open_stream(self, slot: int, prompt: List[int],
                     eos_id: Optional[int] = None,
-                    reserve_tokens: Optional[int] = None) -> dict:
+                    reserve_tokens: Optional[int] = None,
+                    resume_from: Optional[GenResult] = None) -> dict:
         """Admit a stream: reserve blocks, prefill the prompt into its pages.
 
         ``reserve_tokens`` is the worst-case sequence length this request
@@ -1531,14 +1571,164 @@ class PagedSpecEngine(_ShardingMixin):
         is reserved privately, the draft's frontier block is copied-on-write
         if the adopted run reaches it, and after prefill the stream's own
         full blocks below its write frontier are registered for the next
-        stream to adopt."""
+        stream to adopt.
+
+        ``resume_from`` re-opens a PREEMPTED stream from the handle
+        ``preempt_stream`` returned: pass the frozen sequence as
+        ``prompt`` and the frozen ``res`` here — accounting continues on
+        the same ``GenResult``, and the blocks ``preempt_stream``
+        registered make the re-prefill a prefix-cache adoption."""
         assert self.slots[slot] is None, f"slot {slot} busy"
         assert len(prompt) >= 2, "need >= 2 prompt tokens"
         assert len(prompt) + self.gamma_max + 2 <= self.max_len, \
             "prompt cannot fit a single session within max_len"
+        pre = prompt[:-1]                    # invariant: length = len(seq) - 1
+        adopted = self._admit_blocks(slot, prompt, reserve_tokens)
+        rest = pre[adopted:]
+        self.prefill_tokens_skipped += adopted
+        self.prefill_tokens_computed += len(rest)
+        self.dcache = self._place_cache(
+            self._prefill_lane("draft", self.dcache, slot, rest), paged=True)
+        self.tcache = self._place_cache(
+            self._prefill_lane("target", self.tcache, slot, rest), paged=True)
+        self._dlen[slot] = len(pre)
+        self._tlen[slot] = len(pre)
+        st = self._new_stream_state(slot, prompt, eos_id, resume_from)
+        self._register_prefix(slot)
+        return st
+
+    @_on_mesh
+    def open_stream_chunked(self, slot: int, prompt: List[int],
+                            eos_id: Optional[int] = None,
+                            reserve_tokens: Optional[int] = None,
+                            resume_from: Optional[GenResult] = None) -> dict:
+        """``open_stream`` that RESERVES but does not prefill: blocks (and
+        any prefix-cache adoption) happen now, the prompt's non-shared
+        suffix is fed later in bounded per-tick chunks via
+        ``prefill_step``.  Until the prompt is fully fed the slot is
+        occupied but inactive (``active_mask`` excludes it), so in-flight
+        decode ticks never stall behind a long admission prefill."""
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        assert len(prompt) >= 2, "need >= 2 prompt tokens"
+        assert len(prompt) + self.gamma_max + 2 <= self.max_len, \
+            "prompt cannot fit a single session within max_len"
+        pre = prompt[:-1]
+        adopted = self._admit_blocks(slot, prompt, reserve_tokens)
+        self.prefill_tokens_skipped += adopted
+        self._dlen[slot] = adopted
+        self._tlen[slot] = adopted
+        st = self._new_stream_state(slot, prompt, eos_id, resume_from)
+        if adopted >= len(pre):              # full prefix hit: nothing to feed
+            self._dlen[slot] = len(pre)
+            self._tlen[slot] = len(pre)
+            self.dcache = {**self.dcache, "lengths":
+                           self.dcache["lengths"].at[slot].set(len(pre))}
+            self.tcache = {**self.tcache, "lengths":
+                           self.tcache["lengths"].at[slot].set(len(pre))}
+            self._register_prefix(slot)
+            return st
+        st["prefilling"] = True
+        st["prefill_rest"] = pre[adopted:]
+        st["prefill_pos"] = 0
+        return st
+
+    @_on_mesh
+    def prefill_step(self, slot: int,
+                     max_tokens: Optional[int] = None) -> int:
+        """Feed up to ``max_tokens`` more prompt tokens into a slot opened
+        by ``open_stream_chunked`` (at least one schedule window makes
+        progress even when the budget is smaller).  Follows the SAME
+        whole-chunks-then-singles schedule as monolithic prefill, so a
+        prompt fed over many ticks lands bit-identical KV.  Returns the
+        tokens fed; on the last chunk the slot flips active and registers
+        its prefix-cache blocks."""
+        st = self.slots[slot]
+        assert st is not None and st.get("prefilling"), \
+            f"slot {slot} is not mid-prefill"
+        rest, pos = st["prefill_rest"], st["prefill_pos"]
+        budget = len(rest) - pos if max_tokens is None else max_tokens
+        fed = 0
+        for lo, hi in _chunk_schedule(len(rest), self.prefill_chunk):
+            if hi <= pos:                    # fed in an earlier call
+                continue
+            if fed and fed + (hi - lo) > budget:
+                break
+            toks = np.asarray(rest[lo:hi], np.int32)[None]
+            self.dcache = self._chunk_feed_lane("draft", self.dcache, slot,
+                                                toks, hi - lo)
+            self.tcache = self._chunk_feed_lane("target", self.tcache, slot,
+                                                toks, hi - lo)
+            fed += hi - lo
+            pos = hi
+        st["prefill_pos"] = pos
+        self._dlen[slot] += fed
+        self._tlen[slot] += fed
+        self.prefill_tokens_computed += fed
+        self.dcache = self._place_cache(self.dcache, paged=True)
+        self.tcache = self._place_cache(self.tcache, paged=True)
+        if pos >= len(rest):
+            st["prefilling"] = False
+            del st["prefill_rest"], st["prefill_pos"]
+            self._register_prefix(slot)
+        return fed
+
+    def preempt_stream(self, slot: int) -> dict:
+        """Evict a running (or mid-prefill) stream and return a frozen
+        handle for later resume.  O(1) per block: the stream's full blocks
+        below its write frontier are registered in the prefix cache FIRST
+        (refcount keeps them warm across the release), so resuming via
+        ``open_stream(frozen["seq"], resume_from=frozen["res"])`` adopts
+        the KV computed so far instead of recomputing it — at most the
+        sub-block frontier tail is re-prefilled.  The pending tick must be
+        flushed first (preemption between flush and launch)."""
+        assert self._pending is None, "flush the pending tick before preempt"
+        st = self.slots[slot]
+        assert st is not None, f"slot {slot} empty"
+        self._register_prefix(slot)
+        self.preemptions += 1
+        frozen = self.close_stream(slot)
+        return {"seq": list(frozen["seq"]), "res": frozen["res"],
+                "eos_id": frozen["eos_id"]}
+
+    def _new_stream_state(self, slot: int, prompt: List[int],
+                          eos_id: Optional[int],
+                          resume_from: Optional[GenResult]) -> dict:
+        seq = list(prompt)
+        if resume_from is not None:
+            res = resume_from
+            res.tokens = seq                 # res tracks the live seq again
+            self.resumes += 1
+        else:
+            res = GenResult(tokens=seq, prompt_len=len(prompt))
+        st = {"seq": seq, "res": res, "done": False, "eos_id": eos_id}
+        self.slots[slot] = st
+        return st
+
+    def _register_prefix(self, slot: int) -> None:
+        """Register ``slot``'s full blocks strictly below its draft write
+        frontier (positions the stream can never rewrite, so the cached KV
+        stays bit-exact for the blocks' whole cache lifetime).  At rest
+        the frontier is ``len(seq) - 2``; mid-prefill it is the prefill
+        position, whichever is lower."""
+        if self.prefix_cache is None:
+            return
+        seq = self.slots[slot]["seq"]
+        upto = min(int(self._dlen[slot]), len(seq) - 2)
+        n_reg = upto // self.block_size
+        if n_reg > 0:
+            self.prefix_cache.insert(
+                seq, n_reg,
+                (self.dalloc.owned[slot], self.talloc.owned[slot]))
+
+    def _admit_blocks(self, slot: int, prompt: List[int],
+                      reserve_tokens: Optional[int]) -> int:
+        """Block-reservation half of admission: adopt what the prefix
+        cache holds, evict/allocate the rest, point the slot's tables at
+        the run, privatize the draft's COW frontier.  Returns the adopted
+        token count (device lengths are set to it; the caller prefills
+        ``prompt[adopted:-1]``)."""
         need = self.reserve_blocks_for(reserve_tokens or self.max_len)
         seq = list(prompt)
-        pre = seq[:-1]                       # invariant: length = len(seq) - 1
         n_adopt, runs, n_cow = self._adoptable(prompt, touch=True)
         need = max(need, n_adopt)
         need_new = need - n_adopt + n_cow
@@ -1600,28 +1790,7 @@ class PagedSpecEngine(_ShardingMixin):
             # P-1 — at most the draft's one frontier block, see _adoptable)
             self.dcache = self._cow_frontier("draft", slot, len(seq) - 2)
             self.tcache = self._cow_frontier("target", slot, len(seq) - 1)
-        rest = pre[adopted:]
-        self.prefill_tokens_skipped += adopted
-        self.prefill_tokens_computed += len(rest)
-        self.dcache = self._place_cache(
-            self._prefill_lane("draft", self.dcache, slot, rest), paged=True)
-        self.tcache = self._place_cache(
-            self._prefill_lane("target", self.tcache, slot, rest), paged=True)
-        self._dlen[slot] = len(pre)
-        self._tlen[slot] = len(pre)
-        if self.prefix_cache is not None:
-            # register this stream's full blocks strictly below its write
-            # frontier P-2: positions the stream can never rewrite, so the
-            # cached KV stays bit-exact for the stream's whole lifetime
-            n_reg = (len(seq) - 2) // self.block_size
-            if n_reg > 0:
-                self.prefix_cache.insert(
-                    prompt, n_reg,
-                    (self.dalloc.owned[slot], self.talloc.owned[slot]))
-        st = {"seq": seq, "res": GenResult(tokens=seq, prompt_len=len(prompt)),
-              "done": False, "eos_id": eos_id}
-        self.slots[slot] = st
-        return st
+        return adopted
 
     def _cow_frontier(self, which: str, slot: int, first_write_pos: int):
         """Privatize every non-writable block of ``slot`` that overlaps the
@@ -1920,6 +2089,8 @@ class PagedSpecEngine(_ShardingMixin):
             "prefill_tokens_computed": self.prefill_tokens_computed,
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
             "cow_copies": self.cow_copies,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
         }
         if self.prefix_cache is not None:
             stats["prefix_cache"] = self.prefix_cache.stats()

@@ -478,6 +478,34 @@ def verify_session_paged(params, cfg, spec, cache, last_tokens, drafted,
     return VerifyResult(m, out, n_out, cache)
 
 
+# ----------------------------------------------------------- chunk prefill
+
+CHUNK_PREFILL_STATICS = ("cfg", "spec")
+
+
+@functools.partial(jax.jit, static_argnames=CHUNK_PREFILL_STATICS)
+def chunk_prefill_paged(params, cfg, spec, lane, tokens, n_valid):
+    """Resumable chunk-prefill session over ONE paged lane view.
+
+    Feeds a ``(1, C)`` token buffer whose first ``n_valid`` entries are
+    real prompt tokens; any pad tail rides through the forward (causal
+    attention keeps it invisible to the real tokens, and its pool writes
+    land at positions the rollback marks dead inside the stream's own
+    reserved pages) and is erased by an O(1) ``paged_rollback`` to
+    ``start + n_valid``.  Position state lives entirely in the lane's
+    ``lengths`` vector, so the program RESUMES AT ARBITRARY OFFSETS: a
+    scheduler can interleave one bounded chunk per serving tick instead of
+    stalling a tick on a full-prompt prefill, and every chunk of every
+    prompt reuses one compiled shape per chunk width.  With ``n_valid ==
+    C`` (no pads) the rollback is the identity length write, which is how
+    the engines keep chunked and monolithic prefill BIT-IDENTICAL: both
+    feed the same chunk schedule through this one program.
+    """
+    start = lane["lengths"]
+    _, lane = T.paged_step(params, cfg, tokens, lane, spec)
+    return paged_rollback(lane, start + jnp.asarray(n_valid, jnp.int32))
+
+
 # ------------------------------------------------------------- sharded jits
 
 def fresh_session_jits(*, paged: bool = False):

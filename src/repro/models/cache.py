@@ -303,6 +303,20 @@ class BlockAllocator:
                 "shared_blocks": int(np.sum(self.refcount > 1)),
                 "immutable_blocks": int(np.sum(self.immutable))}
 
+    def check_conservation(self) -> bool:
+        """The allocator conservation invariant, checked STRUCTURALLY:
+        every non-trash block is either on the free list (refcount 0) or
+        referenced (refcount > 0), never both and never neither, so
+        ``free + in_use == num_blocks - 1`` with no double-free and no
+        leak.  Cheap enough to assert inside preemption-churn loops."""
+        free = set(self.free)
+        if len(free) != len(self.free):          # duplicate free entries
+            return False
+        live = {b for b in range(1, self.num_blocks) if self.refcount[b] > 0}
+        return (not (free & live)
+                and len(free) + len(live) == self.num_blocks - 1
+                and all(self.refcount[b] == 0 for b in free))
+
     # ------------------------------------------------------------ refcounts
     def addref(self, blk: int) -> None:
         """Take an extra reference on an in-use block (PrefixCache

@@ -1,0 +1,150 @@
+"""Scheduling policies for ``SpecServer`` (docs/slo_scheduling.md).
+
+The server owns MECHANISM — slots, streams, accounting, the engine tick —
+and delegates POLICY to a scheduler object with one hook::
+
+    scheduler.schedule(server)   # between tick flush and tick launch
+
+At that point the previous tick is fully flushed (``engine._pending is
+None``), finished slots are released, and whatever the scheduler admits
+rides the tick launched right after.  Two policies ship:
+
+* ``FIFOScheduler`` — the classic baseline: head-of-queue admission into
+  free slots with monolithic admission prefill, block-aware backpressure
+  on the paged backend.  Exactly the server's historical behavior.
+* ``SLOScheduler`` — priority classes + earliest-deadline-first within a
+  class, CHUNKED admission prefill under a per-tick token budget (a long
+  prompt never stalls in-flight decodes for more than one bounded chunk),
+  and PREEMPTION of strictly-lower-priority streams when a waiting
+  request cannot otherwise get a slot or blocks.  Preempted streams are
+  frozen through ``engine.preempt_stream`` — their computed KV stays warm
+  in the prefix cache, so resume is an admission-time adoption.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.models.cache import PoolExhausted
+
+
+class FIFOScheduler:
+    """Head-of-queue admission, monolithic prefill — the baseline the SLO
+    scheduler is benchmarked against, and the default policy."""
+
+    name = "fifo"
+    requires_paged = False
+
+    def schedule(self, server) -> None:
+        for slot in server.engine.free_slots():
+            if not server.queue:
+                break
+            rid = server.queue[0]
+            if server.paged and not server.can_admit(rid):
+                # backpressure: head-of-queue request stays queued (FIFO
+                # preserved) until completed streams release blocks
+                server.backpressure_events += 1
+                break
+            server.queue.popleft()
+            try:
+                server._open(slot, rid)
+            except PoolExhausted:
+                # ``can_admit`` is a feasibility PROBE, not a
+                # reservation: anything that shifts evictability between
+                # probe and admission lands here.  The request goes back
+                # to the head of the queue (FIFO intact) — backpressure,
+                # never a dropped request or a crashed serving loop.
+                server.queue.appendleft(rid)
+                server.backpressure_events += 1
+                break
+
+
+class SLOScheduler:
+    """Priority + EDF admission, chunked prefill, preemption.
+
+    Ordering: waiting requests are ranked by ``(-priority, deadline,
+    request_id)`` where ``deadline = submitted_tick + slo_ticks``
+    (requests without an SLO sort last within their priority).  Admission
+    is STRICT-PRIORITY: when the top-ranked request cannot be admitted —
+    no slot, no preemptable victim, not enough blocks — the scheduler
+    backpressures rather than admitting anything ranked below it, so a
+    burst of cheap low-priority traffic can never starve the head.
+
+    Preemption: a waiting request may evict a running (or mid-prefill)
+    stream of STRICTLY lower priority; among victims the one with the
+    fewest generated tokens goes first (least progress to keep warm).
+    Victims re-enter the queue as resumable frozen handles.
+
+    Chunked prefill: admitted prompts reserve their blocks immediately
+    (``open_stream_chunked``) but feed at most
+    ``max_prefill_tokens_per_tick`` prompt tokens per tick across all
+    mid-prefill slots, highest-ranked first — the per-admission decode
+    stall is bounded by one chunk schedule window instead of one full
+    prompt."""
+
+    name = "slo"
+    requires_paged = True
+
+    def __init__(self, *, max_prefill_tokens_per_tick: int = 32,
+                 preempt: bool = True):
+        assert max_prefill_tokens_per_tick >= 1
+        self.max_prefill_tokens_per_tick = max_prefill_tokens_per_tick
+        self.preempt = preempt
+
+    # ----------------------------------------------------------- ranking
+    def _rank(self, server, rid: int):
+        req = server.requests[rid]
+        deadline = (req.submitted_tick + req.slo_ticks
+                    if req.slo_ticks is not None else math.inf)
+        return (-req.priority, deadline, rid)
+
+    def _pick_victim(self, server, rid: int) -> Optional[int]:
+        """Occupied slot to evict for ``rid``: strictly lower priority
+        only, fewest generated tokens first."""
+        pri = server.requests[rid].priority
+        best, best_key = None, None
+        for slot, vrid in server._slot_rid.items():
+            vreq = server.requests[vrid]
+            if vreq.priority >= pri:
+                continue
+            st = server.engine.slots[slot]
+            key = (vreq.priority, st["res"].new_tokens, -slot)
+            if best is None or key < best_key:
+                best, best_key = slot, key
+        return best
+
+    # --------------------------------------------------------- the hook
+    def schedule(self, server) -> None:
+        # 1. admission, strict priority order (reservation only — the
+        #    prompt feed happens in the budgeted phase below)
+        for rid in sorted(server.queue, key=lambda r: self._rank(server, r)):
+            admitted = False
+            while True:
+                free = server.engine.free_slots()
+                if free and server.can_admit(rid):
+                    server.queue.remove(rid)
+                    try:
+                        server._open(free[0], rid, chunked=True)
+                        admitted = True
+                    except PoolExhausted:
+                        # probe/admission race: requeue at head, FIFO-
+                        # within-rank intact (same protocol as FIFO)
+                        server.queue.appendleft(rid)
+                        server.backpressure_events += 1
+                    break
+                victim = (self._pick_victim(server, rid)
+                          if self.preempt else None)
+                if victim is None:
+                    server.backpressure_events += 1
+                    break
+                server._preempt(victim)   # frees the slot AND its blocks
+            if not admitted:
+                break                     # strict priority: nobody jumps
+        # 2. budgeted chunked prefill, highest-ranked streams first
+        budget = self.max_prefill_tokens_per_tick
+        pref = sorted(server.engine.prefilling_slots(),
+                      key=lambda s: self._rank(server, server._slot_rid[s]))
+        for slot in pref:
+            if budget <= 0:
+                break
+            budget -= server.engine.prefill_step(slot, budget)

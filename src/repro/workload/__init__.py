@@ -1,0 +1,28 @@
+"""Open-loop workload harness for serving benchmarks (docs/slo_scheduling.md).
+
+Closed-loop benches (submit-everything-then-drain) measure throughput but
+say nothing about tail behavior under load: arrivals never queue behind a
+busy server, so queue delay and SLO misses are structurally zero.  This
+package generates OPEN-LOOP traffic — requests arrive on their own clock
+whether or not the server keeps up — as deterministic, seeded traces:
+
+* ``arrivals`` — Poisson and bursty (two-state modulated Poisson)
+  arrival-time processes, plus the map onto discrete scheduler ticks;
+* ``lengths`` — prompt/output length distributions (fixed, uniform,
+  lognormal) for heterogeneous request mixes;
+* ``trace`` — ``WorkloadClass`` mixes (priority + SLO per class) composed
+  into replayable ``TraceRequest`` lists, with JSON save/load.
+
+Everything is driven by explicit seeds and returns plain data, so a bench
+row's workload is reproducible from its recorded parameters.
+"""
+from .arrivals import arrival_ticks, bursty_arrivals, poisson_arrivals
+from .lengths import LengthDist
+from .trace import (TraceRequest, WorkloadClass, load_trace, save_trace,
+                    synthesize)
+
+__all__ = [
+    "arrival_ticks", "bursty_arrivals", "poisson_arrivals",
+    "LengthDist", "TraceRequest", "WorkloadClass",
+    "load_trace", "save_trace", "synthesize",
+]

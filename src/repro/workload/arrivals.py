@@ -1,0 +1,60 @@
+"""Open-loop arrival processes (deterministic, seeded).
+
+Arrival TIMES are continuous; the serving loop is discrete (one batched
+tick at a time), so ``arrival_ticks`` quantizes a time series onto the
+tick grid — a request whose arrival falls inside tick ``t`` becomes
+visible to the scheduler at the START of tick ``t``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
+    """``n`` arrival times of a homogeneous Poisson process with ``rate``
+    arrivals per unit time (i.i.d. exponential inter-arrival gaps)."""
+    assert rate > 0 and n >= 0
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.cumsum(gaps)
+
+
+def bursty_arrivals(rate: float, n: int, seed: int = 0, *,
+                    burst_factor: float = 8.0,
+                    mean_burst: int = 8,
+                    mean_calm: int = 24) -> np.ndarray:
+    """Two-state Markov-modulated Poisson arrivals with overall mean
+    ``rate``: the process alternates between a CALM state and a BURST
+    state whose instantaneous rate is ``burst_factor`` times calm's.
+    State dwell lengths (in arrivals) are geometric with means
+    ``mean_burst`` / ``mean_calm``.  The calm/burst rates are solved so
+    the long-run average stays ``rate`` — same offered load as
+    ``poisson_arrivals``, much heavier queueing tail."""
+    assert rate > 0 and n >= 0 and burst_factor > 1.0
+    rng = np.random.default_rng(seed)
+    # time fraction in burst = dwell_burst/rate_burst over total;
+    # arrival fractions are dwell-proportional by construction
+    f_burst = mean_burst / (mean_burst + mean_calm)
+    # rate = time-weighted harmonic mix; solve calm rate r_c with
+    # r_b = burst_factor * r_c:  E[gap] = f_burst/r_b + (1-f_burst)/r_c
+    r_calm = rate * (f_burst / burst_factor + (1.0 - f_burst))
+    r_burst = burst_factor * r_calm
+    gaps = np.empty(n)
+    i = 0
+    in_burst = False
+    while i < n:
+        dwell = 1 + rng.geometric(1.0 / (mean_burst if in_burst
+                                         else mean_calm))
+        k = min(dwell, n - i)
+        r = r_burst if in_burst else r_calm
+        gaps[i:i + k] = rng.exponential(1.0 / r, size=k)
+        i += k
+        in_burst = not in_burst
+    return np.cumsum(gaps)
+
+
+def arrival_ticks(times: np.ndarray, tick_s: float = 1.0) -> np.ndarray:
+    """Map arrival times onto discrete scheduler tick indices: a request
+    arriving during tick ``t`` is submittable at the start of tick ``t``."""
+    assert tick_s > 0
+    return np.floor(np.asarray(times) / tick_s).astype(np.int64)

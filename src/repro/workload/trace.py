@@ -1,0 +1,93 @@
+"""Workload traces: class mixes -> replayable request lists.
+
+A ``WorkloadClass`` bundles what a traffic class looks like (prompt and
+output length distributions) with how the scheduler should treat it
+(priority, SLO).  ``synthesize`` draws an open-loop trace from a weighted
+mix of classes over a Poisson or bursty arrival process; traces are plain
+data (JSON round-trip via ``save_trace``/``load_trace``) so a bench row
+can name the exact traffic it measured and anyone can replay it.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .arrivals import bursty_arrivals, poisson_arrivals
+from .lengths import LengthDist
+
+
+@dataclass(frozen=True)
+class WorkloadClass:
+    """One traffic class: length mix + scheduling treatment."""
+    name: str
+    prompt_len: LengthDist
+    output_len: LengthDist
+    priority: int = 0              # higher = more urgent
+    slo_ticks: Optional[int] = None  # deadline: submit + slo_ticks
+    weight: float = 1.0            # sampling weight within the mix
+
+
+@dataclass
+class TraceRequest:
+    """One open-loop request, fully materialized (tokens included)."""
+    arrival_s: float
+    prompt: List[int]
+    max_new_tokens: int
+    priority: int = 0
+    slo_ticks: Optional[int] = None
+    cls: str = ""
+    request_id: Optional[int] = field(default=None, compare=False)
+
+
+def synthesize(classes: Sequence[WorkloadClass], *, rate: float, n: int,
+               seed: int = 0, vocab: int = 64,
+               bursty: bool = False, burst_factor: float = 8.0
+               ) -> List[TraceRequest]:
+    """Draw ``n`` requests from the weighted class mix over a Poisson
+    (or bursty) arrival process at ``rate`` requests per unit time.
+    Prompt token ids are uniform over ``[1, vocab)`` (0 is reserved as a
+    conventional pad/eos in the toy vocabularies)."""
+    assert classes and n >= 0
+    rng = np.random.default_rng(seed)
+    if bursty:
+        times = bursty_arrivals(rate, n, seed=seed + 1,
+                                burst_factor=burst_factor)
+    else:
+        times = poisson_arrivals(rate, n, seed=seed + 1)
+    w = np.array([c.weight for c in classes], float)
+    picks = rng.choice(len(classes), size=n, p=w / w.sum())
+    reqs: List[TraceRequest] = []
+    for i in range(n):
+        c = classes[picks[i]]
+        plen = int(c.prompt_len.sample(1, rng)[0])
+        olen = int(c.output_len.sample(1, rng)[0])
+        prompt = rng.integers(1, vocab, size=plen).tolist()
+        reqs.append(TraceRequest(
+            arrival_s=float(times[i]), prompt=[int(t) for t in prompt],
+            max_new_tokens=olen, priority=c.priority,
+            slo_ticks=c.slo_ticks, cls=c.name))
+    return reqs
+
+
+def save_trace(path: str, reqs: Sequence[TraceRequest]) -> None:
+    rows = [{"arrival_s": r.arrival_s, "prompt": r.prompt,
+             "max_new_tokens": r.max_new_tokens, "priority": r.priority,
+             "slo_ticks": r.slo_ticks, "cls": r.cls} for r in reqs]
+    with open(path, "w") as f:
+        json.dump({"version": 1, "requests": rows}, f)
+
+
+def load_trace(path: str) -> List[TraceRequest]:
+    with open(path) as f:
+        data = json.load(f)
+    assert data.get("version") == 1, "unknown trace version"
+    return [TraceRequest(
+        arrival_s=float(r["arrival_s"]), prompt=list(r["prompt"]),
+        max_new_tokens=int(r["max_new_tokens"]),
+        priority=int(r.get("priority", 0)),
+        slo_ticks=(None if r.get("slo_ticks") is None
+                   else int(r["slo_ticks"])),
+        cls=r.get("cls", "")) for r in data["requests"]]

@@ -1,0 +1,337 @@
+"""SLO-aware scheduling: open-loop workload synthesis, chunked prefill
+(bit parity with monolithic admission), preemption/resume (bit parity and
+allocator conservation), priority/EDF admission order, and the drain
+timeout diagnostic (docs/slo_scheduling.md)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ModelBundle, make_controller
+from repro.core.engine import (EngineSpec, _chunk_schedule, make_engine)
+from repro.models import ModelConfig
+from repro.models import transformer as T
+from repro.serving.engine import SpecServer
+from repro.serving.scheduler import SLOScheduler
+from repro.workload import (LengthDist, WorkloadClass, arrival_ticks,
+                            bursty_arrivals, load_trace, poisson_arrivals,
+                            save_trace, synthesize)
+
+
+# --------------------------------------------------------------- workload
+
+def test_poisson_arrivals_deterministic_and_calibrated():
+    a = poisson_arrivals(rate=0.5, n=4000, seed=3)
+    b = poisson_arrivals(rate=0.5, n=4000, seed=3)
+    assert np.array_equal(a, b), "same seed must replay the same trace"
+    assert (np.diff(a) > 0).all()
+    mean_gap = float(np.diff(a).mean())
+    assert abs(mean_gap - 2.0) / 2.0 < 0.1, mean_gap
+
+
+def test_bursty_arrivals_preserve_mean_rate_but_add_burstiness():
+    """The MMPP's two rates are solved so the LONG-RUN rate matches the
+    requested one — burstiness changes the variance, not the load."""
+    rate, n = 0.5, 6000
+    burst = bursty_arrivals(rate=rate, n=n, seed=1, burst_factor=8.0)
+    calm = poisson_arrivals(rate=rate, n=n, seed=1)
+    mean_gap = float(np.diff(burst).mean())
+    assert abs(mean_gap - 1.0 / rate) * rate < 0.15, mean_gap
+    # squared coefficient of variation: Poisson ~1, MMPP strictly above
+    def cv2(t):
+        g = np.diff(t)
+        return float(g.var() / g.mean() ** 2)
+    assert cv2(burst) > 1.5 * cv2(calm), (cv2(burst), cv2(calm))
+
+
+def test_arrival_ticks_floor():
+    assert arrival_ticks([0.0, 0.9, 1.0, 2.7], tick_s=1.0).tolist() == \
+        [0, 0, 1, 2]
+    assert arrival_ticks([0.6, 1.1], tick_s=0.5).tolist() == [1, 2]
+
+
+def test_length_dist_kinds_and_roundtrip():
+    rng = np.random.default_rng(0)
+    assert (LengthDist("fixed", (7,)).sample(5, rng) == 7).all()
+    u = LengthDist("uniform", (4, 9)).sample(500, rng)
+    assert u.min() >= 4 and u.max() <= 9
+    ln = LengthDist("lognormal", (40.0, 0.6), lo_clip=2).sample(4000, rng)
+    assert ln.min() >= 2
+    assert abs(float(ln.mean()) - 40.0) / 40.0 < 0.15, float(ln.mean())
+    d = LengthDist("uniform", (4, 9), lo_clip=3, hi_clip=8)
+    assert LengthDist.from_json(d.to_json()) == d
+    with pytest.raises(ValueError):
+        LengthDist("zipf", (2.0,))
+
+
+def test_synthesize_and_trace_roundtrip(tmp_path):
+    classes = [
+        WorkloadClass(name="interactive", priority=1, slo_ticks=8,
+                      prompt_len=LengthDist("uniform", (4, 8)),
+                      output_len=LengthDist("fixed", (6,)), weight=0.5),
+        WorkloadClass(name="batch", priority=0, slo_ticks=None,
+                      prompt_len=LengthDist("fixed", (20,)),
+                      output_len=LengthDist("fixed", (16,)), weight=0.5),
+    ]
+    tr = synthesize(classes, rate=0.5, n=40, seed=9, vocab=61, bursty=True)
+    assert tr == synthesize(classes, rate=0.5, n=40, seed=9, vocab=61,
+                            bursty=True), "synthesis must be deterministic"
+    assert {t.cls for t in tr} == {"interactive", "batch"}
+    for t in tr:
+        assert all(1 <= tok < 61 for tok in t.prompt)
+        if t.cls == "interactive":
+            assert t.priority == 1 and t.slo_ticks == 8
+            assert 4 <= len(t.prompt) <= 8 and t.max_new_tokens == 6
+        else:
+            assert t.priority == 0 and t.slo_ticks is None
+    p = tmp_path / "trace.json"
+    save_trace(str(p), tr)
+    assert load_trace(str(p)) == tr
+
+
+# ---------------------------------------------------------- chunk schedule
+
+def test_chunk_schedule_windows_then_singles():
+    assert _chunk_schedule(10, 4) == [(0, 4), (4, 8), (8, 9), (9, 10)]
+    assert _chunk_schedule(8, 4) == [(0, 4), (4, 8)]
+    assert _chunk_schedule(3, 8) == [(0, 1), (1, 2), (2, 3)]
+    assert _chunk_schedule(0, 4) == []
+
+
+# ----------------------------------------------------------- engine level
+
+@pytest.fixture(scope="module")
+def pair():
+    V = 61
+    tcfg = ModelConfig(name="tgt", arch_type="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                       vocab_size=V)
+    dcfg = ModelConfig(name="drf", arch_type="dense", num_layers=1,
+                       d_model=32, num_heads=2, num_kv_heads=1, d_ff=64,
+                       vocab_size=V)
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    return ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+
+
+def _mk(pair, kv_dtype=None, prefix_cache=True, pool_tokens=512):
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=3, seed=0)
+    return make_engine(*pair, ctrl, EngineSpec(
+        backend="paged", batch_size=4, max_len=256, block_size=8,
+        pool_tokens=pool_tokens, prefix_cache=prefix_cache,
+        kv_dtype=kv_dtype, prefill_chunk=8))
+
+
+PROMPT = np.random.default_rng(0).integers(1, 60, size=37).tolist()
+
+
+def test_chunked_prefill_matches_monolithic_bitwise(pair):
+    """Same jitted program (``chunk_prefill_paged``) drives both the
+    monolithic admission prefill and the incremental ``prefill_step``
+    path, so the decoded continuation is bit-identical; ticks taken while
+    a slot is mid-prefill are true no-ops (masked lane, no bandit
+    drift)."""
+    e1 = _mk(pair)
+    e1.open_stream(0, list(PROMPT), reserve_tokens=len(PROMPT) + 30)
+    for _ in range(4):
+        e1.session_step_batch()
+    ref = list(e1.slots[0]["seq"])
+
+    e2 = _mk(pair)
+    st = e2.open_stream_chunked(0, list(PROMPT),
+                                reserve_tokens=len(PROMPT) + 30)
+    assert st.get("prefilling")
+    assert not e2.active_mask().any(), "mid-prefill slots must be masked"
+    fed_total = 0
+    while e2.slots[0].get("prefilling"):
+        fed = e2.prefill_step(0, 8)
+        assert 1 <= fed <= 8 + 8 - 1, "budget bound: one window of slack"
+        fed_total += fed
+        if e2.slots[0].get("prefilling"):
+            e2.session_step_batch()      # interleaved ticks: no-ops
+    assert fed_total == len(PROMPT) - 1
+    assert int(np.asarray(e2.dcache["lengths"])[0]) == len(PROMPT) - 1
+    for _ in range(4):
+        e2.session_step_batch()
+    assert list(e2.slots[0]["seq"]) == ref
+    assert e2.controller.bandit.t == e1.controller.bandit.t, \
+        "masked prefill ticks fed the bandit"
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_preempt_resume_is_bit_identical(pair, kv_dtype):
+    """Preempt mid-decode, run an unrelated stream, resume: the final
+    sequence equals the uninterrupted run bit-for-bit (greedy accept =
+    target greedy), and resume re-adopts the frozen KV from the prefix
+    cache instead of recomputing it."""
+    rng = np.random.default_rng(4)
+    eng = _mk(pair, kv_dtype=kv_dtype)
+    eng.open_stream(0, list(PROMPT), reserve_tokens=len(PROMPT) + 60)
+    for _ in range(8):
+        eng.session_step_batch()
+    ref = list(eng.slots[0]["seq"])
+
+    e2 = _mk(pair, kv_dtype=kv_dtype)
+    e2.open_stream(0, list(PROMPT), reserve_tokens=len(PROMPT) + 60)
+    for _ in range(3):
+        e2.session_step_batch()
+    frozen = e2.preempt_stream(0)
+    assert e2.slots[0] is None
+    other = rng.integers(1, 60, size=12).tolist()
+    e2.open_stream(1, other, reserve_tokens=len(other) + 20)
+    e2.session_step_batch()
+    skipped_before = e2.prefill_tokens_skipped
+    e2.open_stream(0, frozen["seq"], frozen["eos_id"],
+                   reserve_tokens=len(frozen["seq"]) + 40,
+                   resume_from=frozen["res"])
+    for _ in range(5):
+        e2.session_step_batch()
+    assert list(e2.slots[0]["seq"]) == ref
+    ps = e2.pool_stats()
+    assert ps["preemptions"] == 1 and ps["resumes"] == 1
+    assert e2.prefill_tokens_skipped - skipped_before > 0, \
+        "resume recomputed KV the prefix cache should have kept warm"
+    assert e2.slots[0]["res"] is frozen["res"], \
+        "resume must continue the SAME GenResult (session history intact)"
+
+
+def test_allocator_conservation_across_preemption_churn(pair):
+    """free + in_use == num_blocks - 1 (trash block excluded) after many
+    preempt/resume/close cycles — no leaked or double-freed blocks."""
+    rng = np.random.default_rng(11)
+    eng = _mk(pair, pool_tokens=640)
+    frozen = {}
+    for round_ in range(3):
+        for slot in range(3):
+            if slot in frozen:
+                f = frozen.pop(slot)
+                eng.open_stream(slot, f["seq"], f["eos_id"],
+                                reserve_tokens=len(f["seq"]) + 30,
+                                resume_from=f["res"])
+            else:
+                p = rng.integers(1, 60, size=rng.integers(9, 30)).tolist()
+                eng.open_stream(slot, p, reserve_tokens=len(p) + 30)
+        for _ in range(2):
+            eng.session_step_batch()
+        frozen[round_ % 3] = eng.preempt_stream(round_ % 3)
+        for slot in range(3):
+            if eng.slots[slot] is not None:
+                eng.close_stream(slot)
+        assert eng.dalloc.check_conservation(), f"draft pool, round {round_}"
+        assert eng.talloc.check_conservation(), f"target pool, round {round_}"
+    assert eng.pool_stats()["preemptions"] == 3
+
+
+def test_check_conservation_catches_corruption(pair):
+    from repro.models.cache import BlockAllocator
+    a = BlockAllocator(num_blocks=16, max_blocks=8, batch=2)
+    a.allocate(0, 3)
+    assert a.check_conservation()
+    leaked = a.free.pop()                      # leak a block
+    assert not a.check_conservation()
+    a.free.append(leaked)
+    a.free.append(a.owned[0][0])               # double-free a live block
+    assert not a.check_conservation()
+
+
+# ----------------------------------------------------------- server level
+
+def _srv(pair, scheduler, batch_size=2, pool_tokens=512, gamma_max=3):
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=gamma_max, seed=0)
+    return SpecServer(*pair, ctrl, spec=EngineSpec(
+        backend="paged", batch_size=batch_size, max_len=256, block_size=8,
+        pool_tokens=pool_tokens, prefix_cache=True),
+        scheduler=scheduler)
+
+
+def test_slo_scheduler_requires_paged(tiny_dense_pair):
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=3, seed=0)
+    with pytest.raises(ValueError, match="paged"):
+        SpecServer(*tiny_dense_pair, ctrl, spec=EngineSpec(
+            backend="batched", batch_size=2, max_len=256),
+            scheduler=SLOScheduler())
+
+
+def test_priority_and_edf_admission_order(pair):
+    """With preemption off and one slot, admission order alone decides
+    completion order: priority first, earliest deadline within a
+    priority, no-SLO requests last."""
+    rng = np.random.default_rng(5)
+    srv = _srv(pair, SLOScheduler(preempt=False,
+                                  max_prefill_tokens_per_tick=64),
+               batch_size=1)
+    rids = [
+        srv.submit(rng.integers(1, 60, size=6).tolist(), 4,
+                   priority=0, slo_ticks=None),           # last
+        srv.submit(rng.integers(1, 60, size=6).tolist(), 4,
+                   priority=1, slo_ticks=50),             # second
+        srv.submit(rng.integers(1, 60, size=6).tolist(), 4,
+                   priority=1, slo_ticks=5),              # first: EDF
+    ]
+    done = []
+    for _ in range(200):
+        done += srv.step()
+        if len(done) == 3:
+            break
+    assert done == [rids[2], rids[1], rids[0]]
+    assert srv.throughput_stats()["preemption_events"] == 0
+
+
+def test_high_priority_preempts_and_victim_completes(pair):
+    """A tight-SLO request arriving into a full pool evicts a low-priority
+    stream, meets its deadline, and the victim resumes warm and still
+    produces its full output."""
+    rng = np.random.default_rng(1)
+    srv = _srv(pair, SLOScheduler(max_prefill_tokens_per_tick=16))
+    lo = [srv.submit(rng.integers(1, 60, size=24).tolist(), 40, priority=0)
+          for _ in range(2)]
+    for _ in range(4):
+        srv.step()
+    hi = srv.submit(rng.integers(1, 60, size=10).tolist(), 8, priority=5,
+                    slo_ticks=12)
+    res = srv.run_until_drained(timeout_s=600)
+    assert len(res) == 3
+    by_rid = {r.request_id: r for r in res}
+    assert by_rid[hi].slo_met, by_rid[hi].latency_ticks
+    stats = srv.throughput_stats()
+    assert stats["preemption_events"] >= 1
+    assert stats["resume_events"] == stats["preemption_events"]
+    assert sum(by_rid[r].n_preemptions for r in lo) == \
+        stats["preemption_events"]
+    for rid in lo:      # victims keep their full token budget
+        assert by_rid[rid].result.new_tokens >= 40
+    assert stats["per_priority"]["5"]["slo_met_frac"] == 1.0
+    assert srv.engine.dalloc.check_conservation()
+    assert srv.engine.talloc.check_conservation()
+
+
+def test_queue_delay_tick_accounting(pair):
+    """queue_delay_ticks = first admission - submit; latency_ticks >=
+    queue_delay_ticks; slo_met is a pure tick comparison."""
+    rng = np.random.default_rng(6)
+    srv = _srv(pair, SLOScheduler(max_prefill_tokens_per_tick=64),
+               batch_size=1)
+    a = srv.submit(rng.integers(1, 60, size=6).tolist(), 4, slo_ticks=100)
+    b = srv.submit(rng.integers(1, 60, size=6).tolist(), 4, slo_ticks=1)
+    res = {r.request_id: r for r in srv.run_until_drained(timeout_s=600)}
+    # EDF: b's deadline (tick 1) ranks it first despite submit order
+    assert res[b].queue_delay_ticks == 0
+    assert res[a].queue_delay_ticks > 0, "a waited for b's slot"
+    for r in res.values():
+        assert r.latency_ticks >= r.queue_delay_ticks >= 0
+    assert res[a].slo_met and not res[b].slo_met, \
+        "b cannot finish within 1 tick; a's 100-tick SLO holds"
+    st = srv.throughput_stats()
+    assert st["p95_queue_delay_s"] >= st["p50_queue_delay_s"] >= 0
+    assert set(st["per_priority"]) == {"0"}
+
+
+def test_drain_timeout_raises_with_diagnostic(pair):
+    srv = _srv(pair, SLOScheduler())
+    srv.submit(np.random.default_rng(2).integers(1, 60, size=10).tolist(),
+               200)
+    with pytest.raises(TimeoutError) as ei:
+        srv.run_until_drained(timeout_s=0.0)
+    msg = str(ei.value)
+    for needle in ("tick=", "queued=", "backpressure_events=",
+                   "pool: free_blocks="):
+        assert needle in msg, msg

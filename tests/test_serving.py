@@ -2,6 +2,7 @@
 import numpy as np
 
 from repro.core import make_controller
+from repro.core.engine import EngineSpec
 from repro.serving.engine import SpecServer
 
 
@@ -71,3 +72,43 @@ def test_server_queue_caps_concurrency(tiny_dense_pair):
     assert len(srv.queue) == 2
     srv.run_until_drained()
     assert len(srv.responses) == 4
+
+
+def test_repeated_admission_races_keep_fifo_and_drop_nothing(
+        tiny_dense_pair):
+    """``can_admit`` is a probe, not a reservation.  When the probe is
+    wrong EVERY tick (forced here), each failed ``open_stream`` must
+    re-queue the request at the HEAD — so across many consecutive races
+    the FIFO order never reshuffles and no request is ever dropped; once
+    blocks free up, admission proceeds in the original submit order."""
+    draft, target = tiny_dense_pair
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=3, seed=0)
+    srv = SpecServer(draft, target, ctrl, spec=EngineSpec(
+        backend="paged", batch_size=2, max_len=256, block_size=8,
+        pool_tokens=9 * 8, prefix_cache=True))    # 9 usable blocks
+    rng = np.random.default_rng(3)
+    # hog reserves 20 + 16 + 3 + 2 tokens -> 6 of the 9 usable blocks
+    hog = srv.submit(rng.integers(1, 60, size=20).tolist(), 16)
+    # each waiter needs 4 blocks > the 3 left while the hog runs
+    waiters = [srv.submit(rng.integers(1, 60, size=12).tolist(), 10)
+               for _ in range(3)]
+    srv.engine.can_admit = lambda *a, **k: True      # force the race
+    srv.step()
+    assert list(srv._slot_rid.values()) == [hog]
+    races = 0
+    while hog not in [r.request_id for r in srv.responses]:
+        assert list(srv.queue) == waiters, \
+            "a failed admission reshuffled or dropped the FIFO queue"
+        srv.step()
+        races += 1
+        assert races < 100
+    assert srv.backpressure_events >= 2, "expected repeated races"
+    res = {r.request_id: r for r in srv.run_until_drained(timeout_s=600)}
+    assert sorted(res) == sorted([hog] + waiters), "request dropped"
+    for rid in waiters:
+        assert res[rid].result.new_tokens >= 10
+    # FIFO preserved through every race: first-submitted admits first
+    admits = [res[r].queue_delay_ticks for r in waiters]
+    assert admits == sorted(admits), admits
+    assert srv.engine.dalloc.check_conservation()
+    assert srv.engine.talloc.check_conservation()
