@@ -17,7 +17,12 @@ later comparison.  This script validates each row:
    (``ENGINE_BLOB_BENCHES``) actually attach one — a dict under an
    ``engine`` key (possibly nested per-config) with at least a ``backend``
    field, so the trajectory stays attributable to an engine config.
-   Pre-existing benches that predate the convention are exempt.
+   Pre-existing benches that predate the convention are exempt;
+5. rows from drafter-pool benches (``DRAFTER_BLOB_BENCHES``) stamp
+   drafter identity: every engine blob carries a ``drafter`` dict with
+   ``name`` and ``kind``, and the summary carries a pool-level
+   ``drafters`` blob with the candidate ``names`` — a drafter bench row
+   that cannot say WHICH drafters competed is not evidence.
 
 Exits non-zero with one ``::error::`` line per violation.
 """
@@ -33,7 +38,10 @@ PATH = os.path.join(REPO, "BENCH_serving.json")
 ROW_KEYS = {"bench", "recorded_at", "summary"}
 TS_RE = re.compile(r"^\d{4}-\d{2}-\d{2}T\d{2}:\d{2}:\d{2}Z$")
 # benches (by name prefix, _smoke included) required to attach describe()
-ENGINE_BLOB_BENCHES = ("prefix_sharing", "slo_serving")
+ENGINE_BLOB_BENCHES = ("prefix_sharing", "slo_serving", "drafters")
+# benches required to stamp drafter identity (engine blob "drafter" dict
+# + summary-level "drafters" pool blob)
+DRAFTER_BLOB_BENCHES = ("drafters",)
 
 
 def claim_keys(obj, path=""):
@@ -96,6 +104,20 @@ def check_row(i, row):
             if "backend" not in b:
                 errs.append(f"{where}: engine blob lacks 'backend': "
                             f"{sorted(b)[:6]}")
+    if bench.startswith(DRAFTER_BLOB_BENCHES):
+        for b in engine_blobs(summary):
+            d = b.get("drafter")
+            if not (isinstance(d, dict) and isinstance(d.get("name"), str)
+                    and isinstance(d.get("kind"), str)):
+                errs.append(f"{where}: engine blob lacks a 'drafter' dict "
+                            f"with 'name'/'kind' — drafter identity must "
+                            f"be stamped on every run")
+        pool = summary.get("drafters")
+        if not (isinstance(pool, dict) and isinstance(pool.get("names"),
+                                                      list)
+                and pool["names"]):
+            errs.append(f"{where}: summary lacks a 'drafters' pool blob "
+                        f"with non-empty 'names'")
     return errs
 
 

@@ -3,12 +3,14 @@
 Stable names the docs (``docs/index.md``) point at: arm pools and shape
 arms (``arms``), bandit algorithms (``bandits``), controllers
 (``controller``), generation engines (``engine``), reward/cost models
-(``rewards``), the jitted draft/verify primitives (``spec_decode``) and
-static tree topologies (``tree``).
+(``rewards``), the jitted draft/verify primitives (``spec_decode``),
+static tree topologies (``tree``) and the heterogeneous drafter pool
+(``drafters``).
 """
 from .arms import (Arm, ShapeArm, arm_by_name, chain_shape, default_pool,
-                   default_shape_pool, multi_threshold_pool, quantized_shape,
-                   shape_cost_factor, tree_shape)
+                   default_drafter_pool, default_shape_pool, drafter_shape,
+                   multi_threshold_pool, quantized_shape, shape_cost_factor,
+                   tree_shape)
 from .bandits import make_bandit, BanditBank
 from .controller import (Controller, FixedArm, FixedShape, StaticGamma,
                          TapOutSequence, TapOutToken, TapOutTreeSequence,
@@ -17,8 +19,14 @@ from .engine import (BatchedSpecEngine, EngineSpec, GenResult, ModelBundle,
                      PagedSpecEngine, SpecEngine, TreeSlotEngine,
                      TreeSpecEngine, engine_spec_from_legacy, make_engine,
                      quantized_bundle)
-from .rewards import (modeled_session_cost, precision_cost_factor, r_blend,
-                      r_cost_adjusted, r_simple)
+from .drafters import (Drafter, DrafterPool, default_drafters, eagle_bundle,
+                       eagle_head_config, eagle_head_logits,
+                       eagle_logit_params, init_eagle_head, load_eagle_head,
+                       save_eagle_head, ssd_draft_bundle, ssd_draft_config,
+                       train_eagle_head)
+from .rewards import (drafter_state_bytes, kv_state_bytes,
+                      modeled_session_cost, precision_cost_factor, r_blend,
+                      r_cost_adjusted, r_simple, ssm_state_bytes)
 from .spec_decode import (draft_session, draft_session_batched,
                           draft_session_paged, verify_session,
                           verify_session_batched, verify_session_paged)
@@ -27,8 +35,14 @@ from .tree import TreeSpec, binary, chain, from_branching, wide
 __all__ = [
     # arms & shapes
     "Arm", "ShapeArm", "arm_by_name", "chain_shape", "default_pool",
-    "default_shape_pool", "multi_threshold_pool", "quantized_shape",
-    "shape_cost_factor", "tree_shape",
+    "default_drafter_pool", "default_shape_pool", "drafter_shape",
+    "multi_threshold_pool", "quantized_shape", "shape_cost_factor",
+    "tree_shape",
+    # drafter pool
+    "Drafter", "DrafterPool", "default_drafters", "eagle_bundle",
+    "eagle_head_config", "eagle_head_logits", "eagle_logit_params",
+    "init_eagle_head", "load_eagle_head", "save_eagle_head",
+    "ssd_draft_bundle", "ssd_draft_config", "train_eagle_head",
     # bandits
     "make_bandit", "BanditBank",
     # controllers
@@ -39,8 +53,9 @@ __all__ = [
     "PagedSpecEngine", "SpecEngine", "TreeSlotEngine", "TreeSpecEngine",
     "engine_spec_from_legacy", "make_engine", "quantized_bundle",
     # rewards / cost model
-    "modeled_session_cost", "precision_cost_factor", "r_blend",
-    "r_cost_adjusted", "r_simple",
+    "drafter_state_bytes", "kv_state_bytes", "modeled_session_cost",
+    "precision_cost_factor", "r_blend", "r_cost_adjusted", "r_simple",
+    "ssm_state_bytes",
     # jitted primitives
     "draft_session", "draft_session_batched", "draft_session_paged",
     "verify_session", "verify_session_batched", "verify_session_paged",

@@ -183,11 +183,20 @@ class ShapeArm:
     stop: Optional[Arm] = None     # chain: dynamic stop rule
     tree: Optional[object] = None  # tree: TreeSpec (hashable)
     precision: str = "bf16"        # draft weight precision: "bf16" | "int8"
+    # DRAFTER identity axis: which model drafts.  "" = the engine's default
+    # draft bundle (every pre-pool shape arm), otherwise a name resolved by
+    # the engine's DrafterPool (core/drafters.py).  ``drafter_cost`` is the
+    # drafter's modeled per-token draft cost RELATIVE to the pool default
+    # (e.g. an EAGLE head reusing the target's embeddings is far cheaper
+    # than a standalone small transformer).
+    drafter: str = ""
+    drafter_cost: float = 1.0
 
     def __post_init__(self):
         assert (self.kind == "chain") == (self.stop is not None)
         assert (self.kind == "tree") == (self.tree is not None)
         assert self.precision in ("bf16", "int8"), self.precision
+        assert self.drafter_cost > 0.0, self.drafter_cost
 
 
 def chain_shape(stop: Arm) -> ShapeArm:
@@ -207,16 +216,30 @@ def quantized_shape(shape: ShapeArm) -> ShapeArm:
                                precision="int8")
 
 
+def drafter_shape(shape: ShapeArm, drafter: str,
+                  cost: float = 1.0) -> ShapeArm:
+    """Bind a shape arm to a named drafter from a ``DrafterPool`` — the
+    (drafter, shape) cross that makes drafter identity an arm dimension.
+    ``cost`` is the drafter's per-token draft cost relative to the pool
+    default (rounded so equal-cost pools produce identical, jit-static
+    hashable arms)."""
+    import dataclasses
+    assert not shape.drafter, f"{shape.name} already bound to a drafter"
+    return dataclasses.replace(shape, name=f"{shape.name}@{drafter}",
+                               drafter=drafter,
+                               drafter_cost=round(float(cost), 6))
+
+
 def shape_cost_factor(shape: ShapeArm, gamma_max: int = 0) -> float:
     """Relative modeled DRAFT cost of a shape arm: the precision factor,
-    times the tree's node count relative to ``gamma_max`` for tree arms —
-    a tree drafting 2x gamma_max nodes per session costs ~2x a full chain,
-    and the cost-adjusted reward must see that, not just the precision
-    axis.  (Chains draft a DYNAMIC number of tokens <= gamma_max; their
-    per-session cost is the baseline 1.0 — the stop rule's thrift already
-    shows up in the observed reward.)"""
+    times the drafter's relative cost, times the tree's node count relative
+    to ``gamma_max`` for tree arms — a tree drafting 2x gamma_max nodes per
+    session costs ~2x a full chain, and the cost-adjusted reward must see
+    that, not just the precision axis.  (Chains draft a DYNAMIC number of
+    tokens <= gamma_max; their per-session cost is the baseline 1.0 — the
+    stop rule's thrift already shows up in the observed reward.)"""
     from .rewards import precision_cost_factor
-    factor = precision_cost_factor(shape.precision)
+    factor = precision_cost_factor(shape.precision) * shape.drafter_cost
     if shape.kind == "tree" and gamma_max:
         factor *= shape.tree.n_nodes / gamma_max
     return factor
@@ -238,6 +261,29 @@ def default_shape_pool(gamma_max: int = 8,
     if quantized:
         shapes += [quantized_shape(s) for s in chains]
     return shapes
+
+
+# Modeled relative per-token draft costs for the standard heterogeneous
+# pool when no DrafterPool supplies measured ones: the default KV drafter
+# is the 1.0 baseline; an EAGLE-style head is one transformer block plus a
+# reused LM head; a tiny Mamba2/SSD draft sits in between (no KV reads but
+# a full, if small, model).
+DEFAULT_DRAFTER_COSTS = (("kv", 1.0), ("eagle", 0.3), ("ssd", 0.6))
+
+
+def default_drafter_pool(gamma_max: int = 8,
+                         drafters=DEFAULT_DRAFTER_COSTS) -> List[ShapeArm]:
+    """The heterogeneous-drafter arm pool: the paper's 5 chain stop rules
+    CROSSED with N candidate drafters, so the TapOut meta-bandit picks
+    (drafter, stop rule) jointly from observed reward.  ``drafters`` is a
+    sequence of ``(name, relative_cost)`` pairs (or a dict) — pass
+    ``DrafterPool.shape_pool()`` arguments for measured costs.  Chains
+    only: drafter switching rides the batched chain engine's fused tick."""
+    if isinstance(drafters, dict):
+        drafters = tuple(drafters.items())
+    chains = [chain_shape(a) for a in default_pool()]
+    return [drafter_shape(c, name, cost)
+            for name, cost in drafters for c in chains]
 
 
 def update_adaedl_lambda(lam: float, accept_rate_ema: float, n_acc: int,

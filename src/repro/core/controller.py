@@ -254,7 +254,56 @@ class TapOutTreeSequence(Controller):
                            self._reward(n_accepted, n_drafted, shape_idx))
         self.history.append({"n_drafted": n_drafted, "n_accepted": n_accepted,
                              "shape": self.shapes[shape_idx].name,
+                             "drafter": self.shapes[shape_idx].drafter,
                              "arm_values": self.arm_values})
+
+    def update_shape_batch(self, shape_idx: int, n_drafted, n_accepted) -> None:
+        """One batched tick's observations for ONE shape arm — the
+        drafter-pool engine picks a single (drafter, stop-rule) arm per
+        tick so all lanes share a drafter, then reports every lane's
+        (n_drafted, n_accepted) here.  Order-independent across lanes: the
+        bandit merges the reward multiset against its pre-tick state
+        (``Bandit.update_batch``), and AdaEDL's lambda sees the pooled
+        accept rate (one EMA step per tick, as in ``update_batch``)."""
+        nd = np.asarray(n_drafted, np.int64)
+        na = np.asarray(n_accepted, np.int64)
+        if self.shapes[shape_idx].kind == "chain":
+            self.lam, self._accept_ema = update_adaedl_lambda(
+                self.lam, self._accept_ema, int(na.sum()), int(nd.sum()))
+        rewards = np.array([self._reward(int(a), int(d), shape_idx)
+                            for a, d in zip(na, nd)])
+        self.bandit.update_batch(
+            np.full((nd.size,), shape_idx, np.int64), rewards)
+        self.history.append({"n_drafted": int(nd.sum()),
+                             "n_accepted": int(na.sum()),
+                             "batch": int(nd.size),
+                             "shape": self.shapes[shape_idx].name,
+                             "drafter": self.shapes[shape_idx].drafter,
+                             "arm_values": self.arm_values})
+
+    # -- drafter-axis accessors (drafter-pool serving and stats) -------
+    def drafter_for(self, shape_idx: int) -> str:
+        """Name of the drafter bound to a shape arm ("" = engine default)."""
+        return self.shapes[shape_idx].drafter
+
+    @property
+    def drafter_names(self) -> List[str]:
+        """Distinct drafter names in pool order (first occurrence)."""
+        seen: List[str] = []
+        for s in self.shapes:
+            if s.drafter not in seen:
+                seen.append(s.drafter)
+        return seen
+
+    @property
+    def drafter_pulls(self) -> dict:
+        """Pull counts summed over the shape arms of each drafter — the
+        drafter-axis marginal of the meta-bandit's counts."""
+        counts = self.bandit.counts
+        pulls: dict = {}
+        for i, s in enumerate(self.shapes):
+            pulls[s.drafter] = pulls.get(s.drafter, 0) + int(counts[i])
+        return pulls
 
     # chain-controller surface (unused by the tree engine, kept total)
     def begin(self) -> np.ndarray:
@@ -341,4 +390,17 @@ def make_controller(kind: str, gamma_max: int, seed: int = 0, **kw) -> Controlle
         shapes = kw.get("shapes") or default_shape_pool(gamma_max,
                                                         quantized=True)
         return TapOutTreeSequence(gamma_max, "ucb1", "cost", shapes, seed)
+    if kind in ("tapout_drafter_ucb1", "tapout_drafter_exp3",
+                "tapout_drafter_cost"):
+        # drafter identity as an arm dimension: (drafter x stop-rule) chain
+        # arms (core/arms.default_drafter_pool, or a DrafterPool's
+        # shape_pool() passed via kw["shapes"] for measured costs)
+        from .arms import default_drafter_pool
+        shapes = kw.get("shapes") or default_drafter_pool(gamma_max)
+        bandit = "exp3" if kind.endswith("_exp3") else "ucb1"
+        reward = "cost" if kind.endswith("_cost") else kw.get("reward",
+                                                             "simple")
+        c = TapOutTreeSequence(gamma_max, bandit, reward, shapes, seed)
+        c.name = kind
+        return c
     raise ValueError(kind)

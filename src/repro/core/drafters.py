@@ -1,0 +1,319 @@
+"""Heterogeneous drafter pool: WHO drafts becomes a bandit arm dimension.
+
+TapOut's meta-bandit already chooses speculation *shape* and *precision*;
+this module adds the bigger lever — *which drafter* ("Not-a-Bandit" frames
+drafter selection as the no-regret problem, BanditSpec as the bandit
+hyperparameter setting).  A ``DrafterPool`` owns N candidate draft models:
+
+  * ``kv``    — a standalone small transformer (the classic draft), whose
+                per-stream cost is a KV cache LINEAR in context length;
+  * ``eagle`` — an EAGLE-style self-drafting head: ONE extra transformer
+                block trained against the target's hidden states, reusing
+                the target's embeddings and LM head (``training/``: chunked
+                CE loss + AdamW + checkpointing);
+  * ``ssd``   — a Mamba2/SSD recurrent draft (``models/ssm.py``) whose
+                per-stream state is O(1) in context length, making an
+                extra drafter nearly free at long contexts.
+
+The pool exposes per-drafter modeled costs (``core/rewards.py`` state-bytes
+helpers + ``ModelBundle.cost_per_token``) and builds the crossed
+(drafter x stop-rule) arm pool (``core/arms.default_drafter_pool``) that
+``core/controller.TapOutTreeSequence`` selects from.  The batched engine
+(``core/engine.py``) keeps one jitted session per drafter and lets the host
+bandit pick which to launch each tick — switching drafters never re-traces.
+
+EAGLE head, faithfully-simplified: the head is trained to map the target's
+post-final-norm hidden state at position t to the token at t+1 (a
+Medusa-head-0 / EAGLE-without-feature-recycling objective — the full EAGLE
+recycles its own predicted features autoregressively).  At serve time the
+trained block + norm are assembled into a standard 1-layer ``ModelBundle``
+over token embeddings, so the head rides every existing engine path
+(dense, paged, fused tick) unchanged; docs/drafters.md discusses the
+approximation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.blocks import block_train
+from repro.models.common import rms_norm
+from repro.models.config import ModelConfig, SSMConfig
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.losses import chunked_ce_loss
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+from .arms import ShapeArm, default_drafter_pool
+from .engine import ModelBundle
+from .rewards import drafter_state_bytes
+
+DRAFTER_KINDS = ("kv", "eagle", "ssd")
+
+
+@dataclasses.dataclass
+class Drafter:
+    """One candidate drafter: a serveable ``ModelBundle`` plus the kind tag
+    the cost model and bench rows key on."""
+    name: str
+    bundle: ModelBundle
+    kind: str
+
+    def __post_init__(self):
+        assert self.kind in DRAFTER_KINDS, self.kind
+
+
+class DrafterPool:
+    """Ordered collection of candidate drafters; the FIRST is the default
+    (the engine's ``draft`` bundle).  Deliberately a plain class with
+    identity hash: it holds device arrays, and it must be safe to store in
+    the frozen ``EngineSpec`` without defeating anything jit-static."""
+
+    def __init__(self, drafters: Sequence[Drafter]):
+        drafters = list(drafters)
+        assert drafters, "empty drafter pool"
+        names = [d.name for d in drafters]
+        assert len(set(names)) == len(names), f"duplicate drafter names: {names}"
+        self._drafters: Tuple[Drafter, ...] = tuple(drafters)
+        self._by_name: Dict[str, Drafter] = {d.name: d for d in drafters}
+
+    def __len__(self) -> int:
+        return len(self._drafters)
+
+    def __iter__(self) -> Iterator[Drafter]:
+        return iter(self._drafters)
+
+    @property
+    def default(self) -> str:
+        return self._drafters[0].name
+
+    @property
+    def names(self) -> List[str]:
+        return [d.name for d in self._drafters]
+
+    def get(self, name: str) -> Drafter:
+        """Resolve a drafter by name ("" = the pool default)."""
+        return self._by_name[name or self.default]
+
+    def bundle(self, name: str) -> ModelBundle:
+        return self.get(name).bundle
+
+    def kind(self, name: str) -> str:
+        return self.get(name).kind
+
+    def cost_factor(self, name: str) -> float:
+        """Modeled per-token draft cost relative to the pool default
+        (rounded so equal pools yield identical hashable shape arms)."""
+        base = self._drafters[0].bundle.cost_per_token
+        return round(self.get(name).bundle.cost_per_token / max(base, 1e-9), 6)
+
+    def state_bytes(self, name: str, seq_len: int, kv_dtype=None) -> int:
+        """Per-stream decode-resident draft-state bytes at context length
+        ``seq_len`` — linear in L for kv/eagle drafters, O(1) for ssd."""
+        return drafter_state_bytes(self.get(name).bundle.cfg, seq_len,
+                                   kv_dtype)
+
+    def shape_pool(self, gamma_max: int = 8) -> List[ShapeArm]:
+        """The crossed (drafter x stop-rule) arm pool with this pool's
+        measured relative costs."""
+        return default_drafter_pool(
+            gamma_max, tuple((d.name, self.cost_factor(d.name))
+                             for d in self._drafters))
+
+    def describe(self, seq_len: int = 1024, kv_dtype=None) -> dict:
+        """JSON-safe identity blob for ``engine.describe()`` / bench rows."""
+        return {
+            "names": self.names,
+            "default": self.default,
+            "kinds": {d.name: d.kind for d in self._drafters},
+            "cost_factors": {d.name: self.cost_factor(d.name)
+                             for d in self._drafters},
+            "state_bytes": {d.name: self.state_bytes(d.name, seq_len,
+                                                     kv_dtype)
+                            for d in self._drafters},
+            "state_bytes_at_len": int(seq_len),
+        }
+
+
+# ------------------------------------------------------------ EAGLE head
+
+def eagle_head_config(target_cfg: ModelConfig) -> ModelConfig:
+    """The head's 1-layer dense config: same width/heads/vocab as the
+    target so the block consumes target hidden states during training and
+    the target's embeddings/LM head serve as its logit layer."""
+    assert not target_cfg.is_attention_free, \
+        "EAGLE head needs an attention target"
+    return target_cfg.replace(name=f"{target_cfg.name}-eagle",
+                              arch_type="dense", num_layers=1,
+                              block_pattern=("attn",), moe=None, mla=None,
+                              ssm=None, rglru=None, encdec=None, vision=None,
+                              scan_layers=False)
+
+
+def init_eagle_head(target_cfg: ModelConfig, key):
+    """Fresh trainable head params: one transformer block + final norm
+    (everything else — embeddings, LM head — is frozen target weights)."""
+    head_cfg = eagle_head_config(target_cfg)
+    tpl = T.init_params(head_cfg, key)
+    head = {"block": tpl["layers"]["prefix"][0],
+            "final_norm": tpl["final_norm"]}
+    return head_cfg, head
+
+
+def eagle_logit_params(target_params) -> dict:
+    """The frozen logit layer the head reuses from the target."""
+    p = {"embed": target_params["embed"]}
+    if "lm_head" in target_params:
+        p["lm_head"] = target_params["lm_head"]
+    return p
+
+
+def eagle_head_hidden(head, head_cfg: ModelConfig, hidden):
+    """Apply the head block + norm to (B, S, d) hidden states."""
+    positions = jnp.arange(hidden.shape[1], dtype=jnp.int32)
+    h, _ = block_train(head["block"], head_cfg, 0, hidden, positions)
+    return rms_norm(h, head["final_norm"], head_cfg.rms_eps)
+
+
+def eagle_head_logits(head, head_cfg: ModelConfig, logit_params, hidden):
+    """Head logits over (B, S, d) hidden states (checkpoint-roundtrip and
+    eval surface; training uses the chunked-CE path below)."""
+    return T.logits_fn(logit_params, head_cfg,
+                       eagle_head_hidden(head, head_cfg, hidden))
+
+
+def eagle_head_loss(head, logit_params, head_cfg: ModelConfig, hidden,
+                    labels, *, chunk: int = 256):
+    """Chunked CE of the head's predictions against next tokens, given the
+    TARGET's hidden states as input (the EAGLE training signal)."""
+    h = eagle_head_hidden(head, head_cfg, hidden)
+    return chunked_ce_loss(logit_params, head_cfg, h, labels, chunk=chunk)
+
+
+def train_eagle_head(target: ModelBundle, batches, *, steps: int,
+                     opt_cfg: Optional[OptConfig] = None, seed: int = 0,
+                     ce_chunk: int = 256) -> dict:
+    """Train an EAGLE-style head against ``target``'s hidden states.
+
+    ``batches`` yields (tokens, labels) int32 arrays of shape (B, S) —
+    e.g. ``data.synthetic.SyntheticCorpus.training_batches``.  The target
+    is frozen: each step runs the target's full-sequence ``forward_hidden``
+    (no grad), then one AdamW step on the head (``training/optimizer.py``)
+    against the chunked-CE loss (``training/losses.py``).
+
+    Returns {"head", "head_cfg", "history"} — ``history`` is one
+    {"step", "loss"} dict per step for loss-curve artifacts."""
+    opt_cfg = opt_cfg or OptConfig(lr=1e-3, warmup_steps=min(5, steps),
+                                   total_steps=steps)
+    head_cfg, head = init_eagle_head(target.cfg, jax.random.PRNGKey(seed))
+    logit_params = eagle_logit_params(target.params)
+    opt_state = init_opt_state(head)
+
+    @jax.jit
+    def hidden_fn(tparams, tokens):
+        h, _ = T.forward_hidden(tparams, target.cfg, tokens, remat=False)
+        return h
+
+    @jax.jit
+    def train_step(head, opt_state, logit_params, hidden, labels):
+        loss, grads = jax.value_and_grad(eagle_head_loss)(
+            head, logit_params, head_cfg, hidden, labels, chunk=ce_chunk)
+        head, opt_state, _ = adamw_update(opt_cfg, head, grads, opt_state)
+        return head, opt_state, loss
+
+    history = []
+    it = iter(batches)
+    for step in range(steps):
+        x, y = next(it)
+        hidden = hidden_fn(target.params, jnp.asarray(x, jnp.int32))
+        head, opt_state, loss = train_step(head, opt_state, logit_params,
+                                           hidden, jnp.asarray(y, jnp.int32))
+        history.append({"step": step, "loss": float(loss)})
+    return {"head": head, "head_cfg": head_cfg, "history": history}
+
+
+def eagle_bundle(target: ModelBundle, head,
+                 head_cfg: Optional[ModelConfig] = None) -> ModelBundle:
+    """Assemble the trained head into a standard 1-layer ``ModelBundle``:
+    target embeddings -> trained block -> trained norm -> target LM head.
+    Serving feeds token EMBEDDINGS where training saw target hidden states
+    (the no-feature-recycling approximation) — but the result is an
+    ordinary transformer the engines serve with zero special cases."""
+    head_cfg = head_cfg or eagle_head_config(target.cfg)
+    params = {"embed": target.params["embed"],
+              "final_norm": head["final_norm"],
+              "layers": {"prefix": [head["block"]], "tail": [],
+                         "stack": None}}
+    if "lm_head" in target.params:
+        params["lm_head"] = target.params["lm_head"]
+    # modeled cost = HEAD-ONLY parameters: the embeddings and LM head are
+    # the target's own weights, resident and amortized regardless of the
+    # drafter choice, so the head's marginal per-token cost is just its
+    # trained block + norm
+    head_params = int(sum(np.size(x) for x in jax.tree.leaves(head)))
+    return ModelBundle(params, head_cfg, cost_per_token=float(head_params))
+
+
+def save_eagle_head(path: str, head, head_cfg: ModelConfig,
+                    history=None) -> None:
+    """Persist the trainable head (``training/checkpoint.py`` npz format)."""
+    meta = {"head_cfg_name": head_cfg.name, "vocab": head_cfg.vocab_size,
+            "d_model": head_cfg.d_model}
+    if history:
+        meta["final_loss"] = history[-1]["loss"]
+    save_checkpoint(path, head, meta)
+
+
+def load_eagle_head(path: str, target_cfg: ModelConfig):
+    """Load a trained head against a fresh template (bit-exact roundtrip)."""
+    head_cfg, template = init_eagle_head(target_cfg, jax.random.PRNGKey(0))
+    return head_cfg, load_checkpoint(path, template)
+
+
+# ------------------------------------------------------------ SSD drafter
+
+def ssd_draft_config(target_cfg: ModelConfig, *, d_model: int = 0,
+                     num_layers: int = 2, d_state: int = 16,
+                     head_dim: int = 16, d_conv: int = 4,
+                     chunk_size: int = 16) -> ModelConfig:
+    """A tiny Mamba2/SSD draft over the target's vocabulary.  Per-stream
+    decode state is a fixed conv window + (heads, head_dim, d_state) ssm
+    state — O(1) in context length (``core.rewards.ssm_state_bytes``)."""
+    d = d_model or max(32, target_cfg.d_model // 2)
+    assert (2 * d) % head_dim == 0, (d, head_dim)
+    return ModelConfig(
+        name=f"{target_cfg.name}-ssd-draft", arch_type="ssm",
+        num_layers=num_layers, d_model=d, num_heads=1, num_kv_heads=1,
+        d_ff=0, vocab_size=target_cfg.vocab_size, tie_embeddings=True,
+        block_pattern=("mamba2",),
+        ssm=SSMConfig(d_state=d_state, d_conv=d_conv, expand=2,
+                      head_dim=head_dim, ngroups=1, chunk_size=chunk_size),
+        source="tiny in-repo SSD draft (mamba2 conventions)")
+
+
+def ssd_draft_bundle(target_cfg: ModelConfig, seed: int = 0,
+                     **cfg_kw) -> ModelBundle:
+    cfg = ssd_draft_config(target_cfg, **cfg_kw)
+    return ModelBundle(T.init_params(cfg, jax.random.PRNGKey(seed)), cfg)
+
+
+# ------------------------------------------------------------ assembly
+
+def default_drafters(draft: ModelBundle, target: ModelBundle, *,
+                     eagle_head=None, ssd: Optional[ModelBundle] = None,
+                     seed: int = 0) -> DrafterPool:
+    """The standard 3-drafter pool: the given KV draft (default), an
+    EAGLE-style head (``eagle_head`` = trained head params, else a fresh
+    random-init head so the pool is constructible without training), and a
+    Mamba2/SSD recurrent draft."""
+    if eagle_head is None:
+        _, eagle_head = init_eagle_head(target.cfg,
+                                        jax.random.PRNGKey(seed + 1))
+    return DrafterPool([
+        Drafter("kv", draft, "kv"),
+        Drafter("eagle", eagle_bundle(target, eagle_head), "eagle"),
+        Drafter("ssd", ssd or ssd_draft_bundle(target.cfg, seed), "ssd"),
+    ])

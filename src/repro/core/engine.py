@@ -81,19 +81,42 @@ class _ShardingMixin:
             "mesh_axes": ({k: int(v) for k, v in self.mesh.shape.items()}
                           if self.mesh is not None else None),
         }
+        d["drafter"] = self._drafter_blob()
         return d
+
+    def _drafter_blob(self) -> dict:
+        """Drafter identity, stamped into every describe()/bench row: which
+        model drafts (name + kind) and — when the engine serves a
+        heterogeneous ``DrafterPool`` — the full pool (names, kinds,
+        relative costs, per-stream state bytes)."""
+        cfg = self.draft.cfg
+        blob = {"name": cfg.name,
+                "kind": "ssd" if cfg.is_attention_free else "kv",
+                "pool": None}
+        pool = getattr(self, "drafters", None)
+        if pool is not None:
+            blob["name"] = pool.default
+            blob["kind"] = pool.kind(pool.default)
+            blob["pool"] = pool.describe(int(self.max_len),
+                                         kv_dtype=self.kv_dtype)
+        return blob
 
     def _mesh_ctx(self):
         if self.mesh is None:
             return contextlib.nullcontext()
         return use_mesh(self.mesh)
 
-    def _meshless_fused(self, *, paged: bool):
+    def _meshless_fused(self, *, paged: bool, draft: "ModelBundle" = None,
+                        dspec=None):
         """Bind this engine's statics onto the module-level fused-tick jit
         (meshless engines share its trace cache, exactly like the
-        synchronous session primitives)."""
-        statics = dict(cfg_d=self.draft.cfg, cfg_t=self.target.cfg,
-                       dspec=self.dspec, tspec=self.tspec,
+        synchronous session primitives).  ``draft``/``dspec`` override the
+        draft-side statics for drafter-pool engines: each drafter gets its
+        own entry in the SAME module-level trace cache, so switching
+        drafters between ticks after warmup never re-traces."""
+        draft = draft or self.draft
+        statics = dict(cfg_d=draft.cfg, cfg_t=self.target.cfg,
+                       dspec=dspec or self.dspec, tspec=self.tspec,
                        arms=self.controller.arms, gamma_max=self.gamma_max,
                        temperature=self.temperature, greedy=self.greedy,
                        n_prompt_tokens=2, paged=paged)
@@ -249,6 +272,43 @@ class _StepMixin:
         fn = self._jit_step(which, tokens.shape[1])
         _, cache = fn(params, jnp.asarray(tokens, jnp.int32), cache)
         return cache
+
+    def _jit_step_for(self, tag: str, bundle: "ModelBundle", spec,
+                      length: int):
+        """Like ``_jit_step`` but for an arbitrary (tagged) bundle — the
+        per-drafter catch-up feeds of the drafter-pool engine.  Keyed by
+        (tag, length) in the same per-engine cache."""
+        key = (tag, length, False)
+        if key not in self._step_cache:
+            @jax.jit
+            def fn(params, tokens, cache):
+                return T.step(params, bundle.cfg, tokens, cache, spec)
+            self._step_cache[key] = fn
+        return self._step_cache[key]
+
+    def _advance_with(self, tag: str, bundle: "ModelBundle", spec, cache,
+                      tokens: np.ndarray):
+        """Feed ``tokens`` (1, L) through a tagged bundle's model."""
+        if tokens.shape[1] == 0:
+            return cache
+        fn = self._jit_step_for(tag, bundle, spec, tokens.shape[1])
+        _, cache = fn(bundle.params, jnp.asarray(tokens, jnp.int32), cache)
+        return cache
+
+    def jit_cache_sizes(self) -> dict:
+        """Trace-cache entry counts of every program this engine's ticks
+        can populate — the zero-retrace-after-warmup assertion surface
+        (tests/test_drafters.py): warm the engine, snapshot, keep serving
+        with drafter switches, assert unchanged."""
+        def n(fn):
+            try:
+                return int(fn._cache_size())
+            except Exception:
+                return -1
+        return {"fused_tick": n(fused_session_tick),
+                "draft_batched": n(draft_session_batched),
+                "verify_batched": n(verify_session_batched),
+                "step_cache": len(self._step_cache)}
 
 
 class SpecEngine(_StepMixin, _ShardingMixin):
@@ -872,8 +932,12 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
                  greedy: bool = True, cache_dtype=jnp.float32,
                  kv_dtype: Optional[str] = None, quant_draft: bool = False,
                  seed: int = 0, prefill_chunk: int = 16, fused: bool = True,
-                 mesh=None):
+                 mesh=None, drafters=None):
         assert batch_size >= 1
+        if drafters is not None:
+            # heterogeneous pool: the pool's DEFAULT drafter becomes the
+            # engine's draft bundle; the rest get per-drafter lanes below
+            draft = drafters.bundle(drafters.default)
         if quant_draft:
             draft = quantized_bundle(draft)
         self.draft, self.target = draft, target
@@ -944,9 +1008,134 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
         self.slots: List[Optional[dict]] = [None] * B
         self._pending: Optional[dict] = None
         # host mirrors of each lane's cache "pos" (invariant: len(seq)-1
-        # for target, len(seq)-2 for pointer-rollback draft caches)
+        # for target, len(seq)-2 for pointer-rollback draft caches; updated
+        # IN PLACE so drafter-pool runtimes can alias them)
         self._dpos = np.zeros(B, np.int64)
         self._tpos = np.zeros(B, np.int64)
+
+        # ---- heterogeneous drafter pool (drafter identity as an arm axis)
+        self.drafters = drafters
+        self._dr: Optional[Dict[str, dict]] = None
+        if drafters is not None:
+            self._init_drafter_pool(fused)
+
+    # ---------------------------------------------------- drafter pool
+    def _init_drafter_pool(self, fused_flag: bool) -> None:
+        """One runtime per candidate drafter: placed weights, a fresh B=1
+        lane, slot-stacked caches, a host pos mirror, and EITHER a fused
+        tick (cheap-rollback drafters) or the per-drafter statics for the
+        synchronous two-dispatch tick (recurrent SSD state).  All jitted
+        programs are per-drafter entries in the SAME module-level trace
+        caches, so the host bandit can switch drafters between ticks with
+        zero re-traces after warmup."""
+        pool, ctrl, B = self.drafters, self.controller, self.batch_size
+        assert hasattr(ctrl, "begin_shape") and hasattr(ctrl, "shapes"), \
+            "drafter-pool serving needs a shape controller (TapOutTreeSequence)"
+        names = set(pool.names)
+        for sh in ctrl.shapes:
+            assert sh.kind == "chain", \
+                f"drafter-pool serving drafts chains, got {sh.name}"
+            assert (sh.drafter or pool.default) in names, sh.drafter
+        self._dr = {}
+        for d in pool:
+            if d.name == pool.default:
+                rt = {"name": d.name, "bundle": self.draft,
+                      "spec": self.dspec, "cheap": self.draft_cheap,
+                      "fresh": self._fresh_dcache, "caches": self.dcaches,
+                      "pos": self._dpos, "sh": self._dparams_sh}
+            else:
+                bundle, sh = d.bundle, None
+                if self.mesh is not None:
+                    from repro.launch.shardings import params_shardings
+                    sh = params_shardings(self.mesh, bundle.params,
+                                          mode="serve")
+                    bundle = ModelBundle(jax.device_put(bundle.params, sh),
+                                         bundle.cfg,
+                                         cost_per_token=bundle.cost_per_token)
+                dc1, spec = T.init_cache(bundle.cfg, 1, self.max_len,
+                                         self.cache_dtype,
+                                         kv_dtype=self.kv_dtype)
+                stack = lambda c: jax.tree.map(
+                    lambda a: jnp.stack([a] * B), c)
+                rt = {"name": d.name, "bundle": bundle, "spec": spec,
+                      "cheap": spec.cheap_rollback,
+                      "fresh": self._place_cache(dc1),
+                      "caches": self._place_cache(stack(dc1), slots=True),
+                      "pos": np.zeros(B, np.int64), "sh": sh}
+            rt["fused"] = bool(fused_flag and rt["cheap"] and
+                               self.target_cheap)
+            rt["tick"] = rt["sessions"] = None
+            if rt["fused"]:
+                if self.mesh is None:
+                    rt["tick"] = (self._fused_tick
+                                  if rt["name"] == pool.default and self.fused
+                                  else self._meshless_fused(
+                                      paged=False, draft=rt["bundle"],
+                                      dspec=rt["spec"]))
+                else:
+                    from repro.launch.shardings import slot_cache_shardings
+                    rt["tick"] = make_sharded_fused(
+                        self.mesh, cfg_d=rt["bundle"].cfg,
+                        cfg_t=self.target.cfg, dspec=rt["spec"],
+                        tspec=self.tspec, dparams_sh=rt["sh"],
+                        tparams_sh=self._tparams_sh,
+                        dcache_sh=slot_cache_shardings(self.mesh,
+                                                       rt["caches"]),
+                        tcache_sh=slot_cache_shardings(self.mesh,
+                                                       self.tcaches),
+                        batch_size=B, gamma_max=self.gamma_max,
+                        arms=ctrl.arms, temperature=self.temperature,
+                        greedy=self.greedy, n_prompt_tokens=2, paged=False)
+            elif self.mesh is not None:
+                from repro.launch.shardings import slot_cache_shardings
+                rt["sessions"] = make_sharded_sessions(
+                    self.mesh, cfg_d=rt["bundle"].cfg, cfg_t=self.target.cfg,
+                    dspec=rt["spec"], tspec=self.tspec, dparams_sh=rt["sh"],
+                    tparams_sh=self._tparams_sh,
+                    dcache_sh=slot_cache_shardings(self.mesh, rt["caches"]),
+                    tcache_sh=slot_cache_shardings(self.mesh, self.tcaches),
+                    batch_size=B, gamma_max=self.gamma_max, arms=ctrl.arms,
+                    temperature=self.temperature, greedy=self.greedy,
+                    n_prompt_tokens=2 if rt["cheap"] else 1, paged=False)
+            self._dr[d.name] = rt
+
+    def _set_dr_caches(self, name: str, caches) -> None:
+        """Adopt a drafter's post-tick/post-catch-up stacked caches; the
+        default drafter's runtime and ``self.dcaches`` stay one object."""
+        self._dr[name]["caches"] = caches
+        if name == self.drafters.default:
+            self.dcaches = caches
+
+    def _sync_drafter_lanes(self, rt: dict, act_idx) -> None:
+        """Lazy catch-up: before a drafter ticks, feed each active lane the
+        tokens it missed while OTHER drafters were drafting (its cache
+        consumed ``pos`` tokens; a cheap-rollback drafter needs len(seq)-2,
+        a recurrent one len(seq)-1).  Feeds go through the canonical
+        ``_chunk_schedule`` windows — {prefill_chunk, 1} shapes only — so
+        catch-up compiles nothing new after warmup."""
+        need = {}
+        for s in act_idx:
+            n = len(self.slots[s]["seq"]) - (2 if rt["cheap"] else 1)
+            if int(rt["pos"][s]) < n:
+                need[s] = n
+        if not need:
+            return
+        tag = f"draft:{rt['name']}"
+        lanes = []
+        for s in range(self.batch_size):
+            lane = _tree_get_slot(rt["caches"], s)
+            if s in need:
+                q = int(rt["pos"][s])
+                toks = np.asarray(self.slots[s]["seq"][q:need[s]],
+                                  np.int32)[None]
+                for lo, hi in _chunk_schedule(toks.shape[1],
+                                              self.prefill_chunk):
+                    lane = self._advance_with(tag, rt["bundle"], rt["spec"],
+                                              lane, toks[:, lo:hi])
+                rt["pos"][s] = need[s]
+            lanes.append(lane)
+        self._set_dr_caches(rt["name"], self._place_cache(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *lanes), slots=True))
 
     # -------------------------------------------------------- helpers
     def _prefill(self, which: str, params, cache, tokens: List[int]):
@@ -996,6 +1185,19 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
             _tree_set_slot(self.tcaches, slot, tcache), slots=True)
         self._dpos[slot] = len(pre)
         self._tpos[slot] = len(pre)
+        if self._dr is not None:
+            # the default drafter's runtime adopts the prefilled lane; every
+            # OTHER drafter's lane resets to a fresh cache (recurrent SSD
+            # state MUST restart from zero) and catches up lazily before
+            # its first tick on this stream
+            self._dr[self.drafters.default]["caches"] = self.dcaches
+            for name, rt in self._dr.items():
+                if name == self.drafters.default:
+                    continue
+                rt["caches"] = self._place_cache(
+                    _tree_set_slot(rt["caches"], slot, rt["fresh"]),
+                    slots=True)
+                rt["pos"][slot] = 0
         st = {"seq": seq, "res": GenResult(tokens=seq, prompt_len=len(prompt)),
               "done": False, "eos_id": eos_id}
         self.slots[slot] = st
@@ -1008,6 +1210,9 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
         self.slots[slot] = None
         self._dpos[slot] = 0
         self._tpos[slot] = 0
+        if self._dr is not None:
+            for rt in self._dr.values():
+                rt["pos"][slot] = 0
         return st
 
     # -------------------------------------------------------- tick
@@ -1037,6 +1242,8 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
         act_idx = np.flatnonzero(active)
         if act_idx.size == 0:
             return False
+        if self._dr is not None:
+            return self._launch_drafter_tick(active, act_idx)
         if not self.fused:
             self._pending = {"acted": self._session_step_sync()}
             return True
@@ -1066,6 +1273,49 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
                          "arm_mat": arm_mat, "L": L, "ft": ft}
         return True
 
+    def _launch_drafter_tick(self, active, act_idx) -> bool:
+        """One tick of the heterogeneous-drafter engine: the host
+        meta-bandit picks ONE (drafter, stop-rule) arm for the whole batch
+        (``begin_shape``), the chosen drafter's lanes catch up on tokens
+        accepted while other drafters ran, then its pre-built fused tick
+        (cheap-rollback drafters) or synchronous two-dispatch tick
+        (recurrent SSD) launches — no re-trace, just a different cached
+        program."""
+        B, g = self.batch_size, self.gamma_max
+        ctrl = self.controller
+        shape_idx = int(ctrl.begin_shape())
+        rt = self._dr[ctrl.drafter_for(shape_idx) or self.drafters.default]
+        self._sync_drafter_lanes(rt, act_idx)
+        arm_mat = np.zeros((B, g), np.int32)
+        arm_mat[act_idx] = ctrl.stop_arm_index(shape_idx)
+        if not rt["fused"]:
+            acted = self._session_step_sync(rt=rt, shape_idx=shape_idx,
+                                            arm_mat=arm_mat)
+            self._pending = {"acted": acted}
+            return True
+        L = np.array([len(self.slots[s]["seq"]) if self.slots[s] else 0
+                      for s in range(B)], np.int64)
+        in_toks = np.zeros((B, 2), np.int32)
+        last_toks = np.zeros((B, 1), np.int32)
+        for s in act_idx:
+            seq = self.slots[s]["seq"]
+            in_toks[s] = seq[-2:]
+            last_toks[s, 0] = seq[-1]
+        keys = self._next_rng(2 * B)
+        ft = rt["tick"](
+            rt["bundle"].params, self.target.params, rt["caches"],
+            self.tcaches, jnp.asarray(in_toks), jnp.asarray(last_toks),
+            jnp.asarray(arm_mat), jnp.float32(ctrl.lam),
+            keys[:B], keys[B:], jnp.asarray(active),
+            jnp.asarray(L, jnp.int32), jnp.asarray(rt["pos"], jnp.int32),
+            jnp.asarray(self._tpos, jnp.int32))
+        self._set_dr_caches(rt["name"], ft.dcache)
+        self.tcaches = ft.tcache
+        self._pending = {"act_idx": act_idx, "active": active,
+                         "arm_mat": arm_mat, "L": L, "ft": ft,
+                         "shape_idx": shape_idx, "drafter": rt["name"]}
+        return True
+
     @_on_mesh
     def session_step_flush(self) -> List[int]:
         """Read the pending tick's device-resident outcomes, do per-stream
@@ -1079,8 +1329,10 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
             return pending["acted"]
         active, act_idx = pending["active"], pending["act_idx"]
         arm_mat, L, ft = pending["arm_mat"], pending["L"], pending["ft"]
+        drafter = pending.get("drafter")
         g = self.gamma_max
-        c_d = self.draft.cost_per_token
+        c_d = (self._dr[drafter]["bundle"].cost_per_token if drafter
+               else self.draft.cost_per_token)
         c_t = self.target.cost_per_token
         nd = np.asarray(ft.n_drafted)
         m = np.asarray(ft.n_accepted)
@@ -1093,8 +1345,11 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
             seq, res = st["seq"], st["res"]
             out = out_all[s, :m[s] + 1].tolist()
             seq.extend(out)
-            res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
-                                             int(arm_mat[s, 0])))
+            # drafter ticks record the META-arm (shape_idx); plain ticks
+            # record the stop-rule arm as before
+            arm = (int(pending["shape_idx"]) if drafter
+                   else int(arm_mat[s, 0]))
+            res.sessions.append(SessionStats(int(nd[s]), int(m[s]), arm))
             res.modeled_cost += modeled_session_cost(int(nd[s]) + 1, c_d, c_t)
             if self.collect_traces:
                 res.traces.append({
@@ -1107,31 +1362,55 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
                 st["done"] = True
             if len(seq) + g + 2 >= self.max_len:
                 st["done"] = True
-        # host mirrors follow the on-device output-side rollback
-        self._tpos = np.where(active, L + m, self._tpos)
-        self._dpos = np.where(active, L + m - 1, self._dpos)
-        self.controller.update_batch(arm_mat[act_idx], nd[act_idx], m[act_idx])
+        # host mirrors follow the on-device output-side rollback (in place:
+        # drafter-pool runtimes alias these arrays)
+        self._tpos[:] = np.where(active, L + m, self._tpos)
+        if drafter:
+            rt = self._dr[drafter]
+            rt["pos"][:] = np.where(active, L + m - 1, rt["pos"])
+            self.controller.update_shape_batch(pending["shape_idx"],
+                                               nd[act_idx], m[act_idx])
+        else:
+            self._dpos[:] = np.where(active, L + m - 1, self._dpos)
+            self.controller.update_batch(arm_mat[act_idx], nd[act_idx],
+                                         m[act_idx])
         return act_idx.tolist()
 
-    def _session_step_sync(self) -> List[int]:
+    def _session_step_sync(self, rt: Optional[dict] = None,
+                           shape_idx: Optional[int] = None,
+                           arm_mat: Optional[np.ndarray] = None) -> List[int]:
         """The classic two-dispatch tick (snapshot-recompute rollback for
-        recurrent stacks lives here — fusion requires cheap rollback)."""
+        recurrent stacks lives here — fusion requires cheap rollback).
+
+        With ``rt`` (a drafter-pool runtime) the draft side runs that
+        drafter's bundle/spec/caches instead of the engine defaults, the
+        stop-rule row matrix is supplied by the caller (one meta-arm for the
+        whole tick), and the bandit is fed through
+        ``update_shape_batch(shape_idx, ...)`` — this is how the recurrent
+        SSD drafter serves inside the drafter-pool engine."""
         B, g = self.batch_size, self.gamma_max
         active = self.active_mask()
         act_idx = np.flatnonzero(active)
         if act_idx.size == 0:
             return []
-        c_d = self.draft.cost_per_token
+        dbundle = rt["bundle"] if rt else self.draft
+        dspec = rt["spec"] if rt else self.dspec
+        dcheap = rt["cheap"] if rt else self.draft_cheap
+        dcaches_cur = rt["caches"] if rt else self.dcaches
+        dpos_arr = rt["pos"] if rt else self._dpos
+        sessions = rt["sessions"] if rt else self._sharded_sessions
+        c_d = dbundle.cost_per_token
         c_t = self.target.cost_per_token
         L = np.array([len(self.slots[s]["seq"]) if self.slots[s] else 0
                       for s in range(B)], np.int64)
 
         # ---- controller: per-stream arm rows (inactive rows are arm 0)
-        arm_mat = np.zeros((B, g), np.int32)
-        arm_mat[act_idx] = self.controller.begin_batch(act_idx.size)
+        if arm_mat is None:
+            arm_mat = np.zeros((B, g), np.int32)
+            arm_mat[act_idx] = self.controller.begin_batch(act_idx.size)
 
         # ---- assemble per-stream inputs
-        n_in = 2 if self.draft_cheap else 1
+        n_in = 2 if dcheap else 1
         in_toks = np.zeros((B, n_in), np.int32)
         last_toks = np.zeros((B, 1), np.int32)
         for s in act_idx:
@@ -1139,22 +1418,22 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
             in_toks[s] = seq[-n_in:]
             last_toks[s, 0] = seq[-1]
 
-        if self.draft_cheap:
-            dpos_in = np.where(active, L - 2, self._dpos)
-            dcaches_in = {**self.dcaches,
+        if dcheap:
+            dpos_in = np.where(active, L - 2, dpos_arr)
+            dcaches_in = {**dcaches_cur,
                           "pos": jnp.asarray(dpos_in, jnp.int32)}
             dsnap = None
         else:
-            dsnap = self.dcaches
-            dcaches_in = self.dcaches
+            dsnap = dcaches_cur
+            dcaches_in = dcaches_cur
         tsnap = None if self.target_cheap else self.tcaches
 
         keys = self._next_rng(2 * B)
         active_dev = jnp.asarray(active)
 
-        if self._sharded_sessions is not None:
-            draft_fn, verify_fn = self._sharded_sessions
-            dres = draft_fn(self.draft.params, dcaches_in,
+        if sessions is not None:
+            draft_fn, verify_fn = sessions
+            dres = draft_fn(dbundle.params, dcaches_in,
                             jnp.asarray(in_toks), jnp.asarray(arm_mat),
                             jnp.float32(self.controller.lam), keys[:B],
                             active_dev)
@@ -1164,7 +1443,7 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
                              active_dev)
         else:
             dres = draft_session_batched(
-                self.draft.params, self.draft.cfg, self.dspec, dcaches_in,
+                dbundle.params, dbundle.cfg, dspec, dcaches_in,
                 jnp.asarray(in_toks), arm_mat, jnp.float32(self.controller.lam),
                 keys[:B], active_dev, arms=self.controller.arms, gamma_max=g,
                 temperature=self.temperature, n_prompt_tokens=n_in)
@@ -1189,8 +1468,8 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
             out = out_all[s, :m[s] + 1].tolist()
             feeds[s] = np.asarray([seq[-1:] + out[:-1]], np.int32)
             seq.extend(out)
-            res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
-                                             int(arm_mat[s, 0])))
+            arm = int(shape_idx) if rt else int(arm_mat[s, 0])
+            res.sessions.append(SessionStats(int(nd[s]), int(m[s]), arm))
             res.modeled_cost += modeled_session_cost(
                 int(nd[s]) + n_in - 1, c_d, c_t)
             if self.collect_traces:
@@ -1209,32 +1488,52 @@ class BatchedSpecEngine(_StepMixin, _ShardingMixin):
         def readvance(which, params, snap):
             # snapshot rollback: inactive lanes keep the pre-tick snapshot,
             # active lanes are re-advanced by their accepted tokens, and the
-            # batch is restacked ONCE (not one full-tree copy per lane)
+            # batch is restacked ONCE (not one full-tree copy per lane).
+            # Drafter-pool re-advances go through the canonical chunk
+            # schedule — {prefill_chunk, 1} feed shapes only — so a pool
+            # drafter's whole serving surface compiles a FIXED set of
+            # programs (the zero-retrace-after-warmup guarantee).
             lanes = []
             for s in range(B):
                 lane = _tree_get_slot(snap, s)
                 if active[s]:
-                    lane = self._advance(which, params, lane, feeds[s])
+                    if rt and which == "draft":
+                        tag = f"draft:{rt['name']}"
+                        for lo, hi in _chunk_schedule(feeds[s].shape[1],
+                                                      self.prefill_chunk):
+                            lane = self._advance_with(
+                                tag, dbundle, dspec, lane, feeds[s][:, lo:hi])
+                    else:
+                        lane = self._advance(which, params, lane, feeds[s])
                 lanes.append(lane)
             return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
 
         if self.target_cheap:
-            self._tpos = np.where(active, L + m, self._tpos)
+            self._tpos[:] = np.where(active, L + m, self._tpos)
             self.tcaches = rollback(vres.cache, self._tpos)
         else:
             self.tcaches = self._place_cache(
                 readvance("target", self.target.params, tsnap), slots=True)
-            self._tpos = np.where(active, L + m, self._tpos)
-        if self.draft_cheap:
-            self._dpos = np.where(active, L + m - 1, self._dpos)
-            self.dcaches = rollback(dres.cache, self._dpos)
+            self._tpos[:] = np.where(active, L + m, self._tpos)
+        if dcheap:
+            dpos_arr[:] = np.where(active, L + m - 1, dpos_arr)
+            new_dcaches = rollback(dres.cache, dpos_arr)
         else:
-            self.dcaches = self._place_cache(
-                readvance("draft", self.draft.params, dsnap), slots=True)
-            self._dpos = np.where(active, L + m, self._dpos)
+            new_dcaches = self._place_cache(
+                readvance("draft", dbundle.params, dsnap), slots=True)
+            dpos_arr[:] = np.where(active, L + m, dpos_arr)
+        if rt:
+            self._set_dr_caches(rt["name"], new_dcaches)
+        else:
+            self.dcaches = new_dcaches
 
         # ---- one order-independent batched bandit update for the tick
-        self.controller.update_batch(arm_mat[act_idx], nd[act_idx], m[act_idx])
+        if rt:
+            self.controller.update_shape_batch(shape_idx, nd[act_idx],
+                                               m[act_idx])
+        else:
+            self.controller.update_batch(arm_mat[act_idx], nd[act_idx],
+                                         m[act_idx])
         return act_idx.tolist()
 
 
@@ -2143,6 +2442,11 @@ class EngineSpec:
       Streams admitted with an already-cached prompt prefix alias the
       cached blocks instead of re-prefilling them.
     * placement: ``mesh`` (docs/sharding.md).
+    * ``drafters`` — a ``core.drafters.DrafterPool``: heterogeneous
+      drafter serving on the batched backend (drafter identity as a bandit
+      arm, docs/drafters.md).  The pool's default drafter replaces the
+      positional ``draft`` bundle; the controller must be a shape
+      controller over (drafter x stop-rule) arms.
     """
     backend: str = "auto"
     batch_size: int = 4
@@ -2160,6 +2464,7 @@ class EngineSpec:
     tree_paged: bool = False
     fused: bool = True
     mesh: object = None
+    drafters: object = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -2168,6 +2473,8 @@ class EngineSpec:
     def resolve_backend(self) -> str:
         if self.backend != "auto":
             return self.backend
+        if self.drafters is not None:
+            return "batched"
         if self.pool_tokens is not None:
             return "paged"
         return "batched" if self.batch_size > 1 else "single"
@@ -2212,6 +2519,10 @@ def make_engine(draft: ModelBundle, target: ModelBundle,
     elif fields:
         spec = replace(spec, **fields)
     backend = spec.resolve_backend()
+    if spec.drafters is not None and backend != "batched":
+        raise ValueError(
+            "drafter pools are a batched-backend feature (got "
+            f"backend={backend!r})")
     common = dict(max_len=spec.max_len, temperature=spec.temperature,
                   greedy=spec.greedy, cache_dtype=spec.cache_dtype,
                   kv_dtype=spec.kv_dtype, quant_draft=spec.quant_draft,
@@ -2222,7 +2533,8 @@ def make_engine(draft: ModelBundle, target: ModelBundle,
         return BatchedSpecEngine(draft, target, controller,
                                  batch_size=spec.batch_size,
                                  prefill_chunk=spec.prefill_chunk,
-                                 fused=spec.fused, **common)
+                                 fused=spec.fused,
+                                 drafters=spec.drafters, **common)
     if backend == "paged":
         return PagedSpecEngine(draft, target, controller,
                                batch_size=spec.batch_size,

@@ -63,3 +63,63 @@ def r_cost_adjusted(n_accepted: int, n_drafted: int, gamma_max: int,
 
 
 REWARDS = {"simple": r_simple, "blend": r_blend, "cost": r_cost_adjusted}
+
+
+# ------------------------------------------------- per-drafter state model
+#
+# Drafter identity is an arm dimension (core/arms.py ``ShapeArm.drafter``),
+# and the dominant per-drafter cost difference at serving time is the
+# per-stream DRAFT STATE each candidate keeps resident:
+#
+#   * a KV drafter (small transformer, EAGLE-style head) holds
+#     2 * layers * kv_heads * head_dim * L bytes — LINEAR in context length;
+#   * a Mamba2/SSD drafter holds a fixed conv window + recurrent ssm state —
+#     O(1) in context length, which is what makes an extra recurrent
+#     drafter nearly free per stream at long contexts.
+#
+# These helpers are the roofline model ``bench_drafters.py`` and the
+# ``DrafterPool`` cost factors are built on; they intentionally count only
+# the decode-resident state (not weights — weights are amortized across the
+# batch and already covered by ``cost_per_token``).
+
+_KV_ITEMSIZE = {"fp": 2, "bf16": 2, "fp32": 4, "int8": 1}
+
+
+def kv_state_bytes(cfg, seq_len: int, kv_dtype=None) -> int:
+    """Per-stream KV-cache bytes of an attention drafter at context length
+    ``seq_len`` (k + v per attention layer; int8 KV stores 1-byte payload
+    plus a per-(head, position) fp16 scale pair)."""
+    key = "int8" if kv_dtype == "int8" else "bf16"
+    item = _KV_ITEMSIZE[key]
+    hd = cfg.resolved_head_dim
+    per_tok = 2 * cfg.num_kv_heads * hd * item
+    if key == "int8":
+        per_tok += 2 * cfg.num_kv_heads * 2 * 2  # k+v fp16 scales
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.block_kind(i) != "mamba2")
+    return int(n_attn * per_tok * seq_len)
+
+
+def ssm_state_bytes(cfg) -> int:
+    """Per-stream recurrent draft-state bytes of a Mamba2/SSD drafter:
+    a (d_conv - 1)-token conv window plus the (heads, head_dim, d_state)
+    fp32 ssm state per mamba2 layer — INDEPENDENT of context length."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    conv_dim = d_in + 2 * s.ngroups * s.d_state
+    n_heads = d_in // s.head_dim
+    per_layer = ((s.d_conv - 1) * conv_dim * 4          # conv window (f32)
+                 + n_heads * s.head_dim * s.d_state * 4)  # ssm state (f32)
+    n_ssm = sum(1 for i in range(cfg.num_layers)
+                if cfg.block_kind(i) == "mamba2")
+    return int(n_ssm * per_layer)
+
+
+def drafter_state_bytes(cfg, seq_len: int, kv_dtype=None) -> int:
+    """Per-stream decode-resident draft-state bytes for any drafter config
+    at context length ``seq_len``: KV bytes for attention layers (linear in
+    L) plus recurrent bytes for mamba2 layers (O(1) in L)."""
+    total = kv_state_bytes(cfg, seq_len, kv_dtype)
+    if cfg.ssm is not None:
+        total += ssm_state_bytes(cfg)
+    return total

@@ -399,6 +399,13 @@ class SpecServer:
             stats["shape_names"] = [s.name for s in ctrl.shapes]
             stats["shape_pulls"] = ctrl.shape_pulls.tolist()
             stats["shape_values"] = np.asarray(ctrl.arm_values).tolist()
+        if getattr(self.engine, "drafters", None) is not None:
+            # drafter-axis marginals: which drafter the meta-bandit pulled
+            ctrl = self.engine.controller
+            stats["shape_names"] = [s.name for s in ctrl.shapes]
+            stats["shape_pulls"] = ctrl.shape_pulls.tolist()
+            stats["drafter_names"] = self.engine.drafters.names
+            stats["drafter_pulls"] = ctrl.drafter_pulls
         return stats
 
     def _per_priority_stats(self) -> dict:

@@ -1,0 +1,192 @@
+"""Heterogeneous drafter pool (docs/drafters.md): SSD drafter parity with
+the direct ``models/ssm.py`` forward, EAGLE-head dense==paged parity,
+greedy-verify invariance while the meta-bandit switches drafters, O(1)
+SSD draft state, and the zero-retrace-after-warmup guarantee."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ar_greedy_decode
+from repro.core import (EngineSpec, StaticGamma, default_drafters,
+                        eagle_bundle, init_eagle_head, make_engine,
+                        ssd_draft_bundle)
+from repro.core.controller import TapOutTreeSequence
+from repro.core.engine import BatchedSpecEngine
+from repro.models import transformer as T
+
+PROMPTS = [[1, 5, 9, 13, 17, 21],
+           [2, 6, 10, 14, 18, 22, 26, 30],
+           [3, 7, 11, 15, 19]]
+
+
+@pytest.fixture(scope="module")
+def pool(tiny_dense_pair):
+    draft, target = tiny_dense_pair
+    return default_drafters(draft, target, seed=0)
+
+
+def _pool_controller(pool, gamma_max=4, seed=0, reward="simple"):
+    return TapOutTreeSequence(gamma_max, "ucb1", reward,
+                              shapes=pool.shape_pool(gamma_max), seed=seed)
+
+
+def _drain(eng, prompts, max_new, max_ticks=400):
+    final = [None] * len(prompts)
+    for i, p in enumerate(prompts):
+        eng.open_stream(i, list(p))
+    for _ in range(max_ticks):
+        for i in range(len(prompts)):
+            st = eng.slots[i]
+            if st is not None and (st["done"]
+                                   or st["res"].new_tokens >= max_new):
+                final[i] = eng.close_stream(i)
+        if all(f is not None for f in final):
+            return final
+        eng.session_step_batch()
+    raise AssertionError("streams did not drain")
+
+
+# ------------------------------------------------ SSD drafter parity
+
+def test_ssd_incremental_matches_full_forward(tiny_dense_pair):
+    """The SSD draft's cached decode recurrence (conv window + ssm state,
+    what the engine's draft lanes run) greedy-decodes the exact token
+    sequence of the direct full-sequence ``models/ssm.py`` forward."""
+    _, target = tiny_dense_pair
+    bundle = ssd_draft_bundle(target.cfg, seed=3)
+    prompt = [1, 5, 9, 13, 2, 6]
+    inc = ar_greedy_decode(bundle.params, bundle.cfg, prompt, 24, max_len=96)
+    seq = list(prompt)
+    for _ in range(24):
+        h, _ = T.forward_hidden(bundle.params, bundle.cfg,
+                                jnp.asarray([seq], jnp.int32), remat=False)
+        lg = T.logits_fn(bundle.params, bundle.cfg, h[:, -1:])
+        seq.append(int(jnp.argmax(lg[0, -1])))
+    assert inc == seq
+
+
+def test_ssd_state_is_o1_in_sequence_length(pool):
+    """Per-stream draft-state bytes: constant in L for the SSD drafter,
+    strictly linear for the KV drafters."""
+    assert pool.state_bytes("ssd", 128) == pool.state_bytes("ssd", 4096)
+    for name in ("kv", "eagle"):
+        b128, b4k = pool.state_bytes(name, 128), pool.state_bytes(name, 4096)
+        assert b4k == 32 * b128 > 0
+    # int8 KV shrinks the linear term but not the O(1) recurrent state
+    assert pool.state_bytes("kv", 4096, "int8") < pool.state_bytes("kv", 4096)
+    assert pool.state_bytes("ssd", 4096, "int8") == pool.state_bytes("ssd",
+                                                                     4096)
+
+
+# ------------------------------------------------ EAGLE head parity
+
+def test_eagle_drafter_dense_vs_paged_identical(tiny_dense_pair):
+    """The assembled EAGLE-head bundle is an ordinary 1-layer draft: the
+    dense and paged backends serve it to identical greedy tokens."""
+    _, target = tiny_dense_pair
+    _, head = init_eagle_head(target.cfg, jax.random.PRNGKey(7))
+    draft = eagle_bundle(target, head)
+    outs = []
+    for spec in (EngineSpec(backend="single", max_len=128),
+                 EngineSpec(backend="paged", max_len=128, block_size=16,
+                            pool_tokens=1024)):
+        eng = make_engine(draft, target, StaticGamma(gamma=4), spec)
+        if spec.backend == "paged":
+            eng.open_stream(0, list(PROMPTS[0]))
+            while not eng.slots[0]["done"] and \
+                    eng.slots[0]["res"].new_tokens < 20:
+                eng.session_step_batch()
+            outs.append(eng.close_stream(0)["seq"][:len(PROMPTS[0]) + 20])
+        else:
+            outs.append(eng.generate(PROMPTS[0], 20).tokens)
+    n = len(PROMPTS[0]) + 20
+    assert len(outs[0]) >= n and len(outs[1]) >= n
+    assert outs[0][:n] == outs[1][:n]
+
+
+# ------------------------------------------------ pool serving
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_pool_greedy_invariance_under_drafter_switching(tiny_dense_pair,
+                                                        pool, kv_dtype):
+    """Greedy-verify invariance survives the drafter axis: with the
+    meta-bandit switching (drafter, stop-rule) arms every tick, every
+    stream's output equals the pure target greedy decode — and all three
+    drafters actually get pulled."""
+    _, target = tiny_dense_pair
+    ctrl = _pool_controller(pool, gamma_max=4, seed=0)
+    eng = BatchedSpecEngine(None, target, ctrl, batch_size=3, max_len=128,
+                            kv_dtype=kv_dtype, drafters=pool)
+    max_new = 24
+    refs = [ar_greedy_decode(target.params, target.cfg, p, max_new)
+            for p in PROMPTS]
+    states = _drain(eng, PROMPTS, max_new)
+    for st, ref in zip(states, refs):
+        n = min(len(ref), len(st["seq"]))
+        assert st["seq"][:n] == ref[:n]
+    assert len(set(pool.names) & {h.get("drafter") for h in ctrl.history}) == 3
+    # one bandit pull per LANE per tick, one history row per tick
+    assert sum(ctrl.drafter_pulls.values()) == \
+        sum(h["batch"] for h in ctrl.history)
+
+
+def test_describe_and_spec_stamp_drafter_identity(tiny_dense_pair, pool):
+    """``engine.describe()`` carries the full drafter blob, and
+    ``EngineSpec(drafters=...)`` resolves to the batched backend."""
+    draft, target = tiny_dense_pair
+    spec = EngineSpec(drafters=pool, batch_size=2, max_len=128)
+    assert spec.resolve_backend() == "batched"
+    eng = make_engine(draft, target, _pool_controller(pool), spec)
+    blob = eng.describe()["drafter"]
+    assert blob["name"] == "kv" and blob["kind"] == "kv"
+    assert blob["pool"]["names"] == ["kv", "eagle", "ssd"]
+    assert blob["pool"]["kinds"]["ssd"] == "ssd"
+    assert blob["pool"]["state_bytes"]["kv"] > blob["pool"]["state_bytes"]["ssd"]
+    with pytest.raises(ValueError):
+        make_engine(draft, target, _pool_controller(pool),
+                    EngineSpec(drafters=pool, backend="paged"))
+
+
+# ------------------------------------------------ zero-retrace switching
+
+def test_drafter_switching_zero_retrace_after_warmup(tiny_dense_pair, pool):
+    """After a warmup that visits every (drafter, stop-rule) arm and both
+    chunked feed shapes, drafter switching — including stream churn and
+    per-drafter lane catch-up — adds ZERO new jit trace-cache entries."""
+    _, target = tiny_dense_pair
+    ctrl = _pool_controller(pool, gamma_max=4, seed=0)
+    # prefill_chunk=4 so prompts and lane catch-up exercise BOTH feed
+    # shapes (4 and 1) during warmup
+    eng = BatchedSpecEngine(None, target, ctrl, batch_size=2, max_len=256,
+                            prefill_chunk=4, drafters=pool)
+    # warmup: round-robin every shape arm (instance attr shadows method),
+    # with churn so fresh-lane resets and prefill shapes are also traced
+    rr = itertools.cycle(range(len(ctrl.shapes)))
+    ctrl.begin_shape = lambda: next(rr)
+    eng.open_stream(0, PROMPTS[0])
+    eng.open_stream(1, PROMPTS[1])
+    for tick in range(2 * len(ctrl.shapes)):
+        eng.session_step_batch()
+        if tick == len(ctrl.shapes):  # churn mid-warmup
+            eng.close_stream(0)
+            eng.open_stream(0, PROMPTS[2])
+    del ctrl.begin_shape  # restore the real meta-bandit draw
+    warm = eng.jit_cache_sizes()
+    assert all(v != 0 for v in warm.values()), warm
+
+    eng.close_stream(1)
+    eng.open_stream(1, PROMPTS[0])
+    used = set()
+    for _ in range(30):
+        eng.session_step_batch()
+        used.add(ctrl.history[-1]["drafter"])
+        for s in (0, 1):
+            st = eng.slots[s]
+            if st["done"] or st["res"].new_tokens >= 40:
+                eng.close_stream(s)
+                eng.open_stream(s, PROMPTS[s])
+    assert eng.jit_cache_sizes() == warm, (warm, eng.jit_cache_sizes())
+    assert len(used) >= 2, used

@@ -224,6 +224,40 @@ def test_fused_tick_matches_synchronous_sharded(pair, backend):
     np.testing.assert_allclose(a["m2"], b["m2"], rtol=0, atol=0)
 
 
+# ------------------------------------------------- drafter pool
+
+@multidev
+def test_drafter_selection_trace_device_count_invariant(pair):
+    """Heterogeneous drafter-pool serving (docs/drafters.md) is
+    device-count-invariant: the meta-bandit's per-tick (shape, drafter,
+    outcome) trace AND every slot's greedy tokens are identical between
+    the meshless engine and 4-way data-parallel lanes — drafter selection
+    is host policy, never a function of device topology."""
+    from repro.core import default_drafters
+    from repro.core.engine import BatchedSpecEngine
+    draft, target = pair
+    prompts = PROMPTS + [[4, 8, 12, 16]]
+
+    def run(mesh):
+        pool = default_drafters(draft, target, seed=0)
+        ctrl = TapOutTreeSequence(4, "ucb1", "simple",
+                                  shapes=pool.shape_pool(4), seed=0)
+        eng = BatchedSpecEngine(None, target, ctrl, batch_size=4,
+                                max_len=128, mesh=mesh, drafters=pool)
+        for s, p in enumerate(prompts):
+            eng.open_stream(s, list(p))
+        for _ in range(6):
+            eng.session_step_batch()
+        trace = [(h["shape"], h["drafter"], h["n_drafted"], h["n_accepted"])
+                 for h in ctrl.history]
+        return trace, [list(eng.slots[s]["seq"]) for s in range(4)]
+
+    base = run(None)
+    sharded = run(make_host_mesh(data=4))
+    assert base[0] == sharded[0]
+    assert base[1] == sharded[1]
+
+
 # ------------------------------------------------- tensor-parallel mesh
 
 @multidev

@@ -66,6 +66,64 @@ def test_adaedl_lambda_stays_bounded(lam, ema, n_acc_raw, n_drafted):
     assert 0.0 <= ema2 <= 1.0
 
 
+# ------------------------------------------------- drafter-as-arm bandit
+
+@given(st.lists(st.tuples(st.integers(0, 14),
+                          st.lists(st.tuples(st.integers(0, 6),
+                                             st.integers(0, 6)),
+                                   min_size=1, max_size=4)),
+                min_size=1, max_size=30),
+       st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_drafter_shape_batch_updates_order_independent(ticks, seed):
+    """Batched bandit updates over the (drafter x stop-rule) arm pool are
+    order-independent WITHIN a tick: permuting the lanes of every
+    ``update_shape_batch`` call leaves the meta-bandit's counts and
+    AdaEDL's pooled lambda bit-identical, and the merged means equal to
+    float tolerance (Chan's merge reorders float sums)."""
+    from repro.core.arms import default_drafter_pool
+    from repro.core.controller import TapOutTreeSequence
+
+    def run(permute):
+        rng = np.random.default_rng(seed)
+        c = TapOutTreeSequence(6, "ucb1", "simple",
+                               shapes=default_drafter_pool(6), seed=0)
+        for shape_idx, lanes in ticks:
+            nd = np.array([max(d, 1) for d, _ in lanes], np.int64)
+            na = np.minimum(np.array([a for _, a in lanes], np.int64), nd)
+            if permute:
+                p = rng.permutation(nd.size)
+                nd, na = nd[p], na[p]
+            c.update_shape_batch(shape_idx, nd, na)
+        return c
+
+    a, b = run(False), run(True)
+    sa, sb = a.bandit.state_dict(), b.bandit.state_dict()
+    assert sa["t"] == sb["t"]
+    np.testing.assert_array_equal(sa["counts"], sb["counts"])
+    np.testing.assert_allclose(sa["means"], sb["means"])
+    np.testing.assert_allclose(sa["m2"], sb["m2"], atol=1e-12)
+    assert a.lam == b.lam and a._accept_ema == b._accept_ema
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["kv", "eagle", "ssd"]))
+@settings(max_examples=10, deadline=None)
+def test_pull_share_converges_to_forced_best_drafter(seed, best):
+    """Under synthetic rewards where ONE drafter's arms accept far more,
+    the meta-bandit's empirical pull share converges to that drafter."""
+    from repro.core.arms import default_drafter_pool
+    from repro.core.controller import TapOutTreeSequence
+    c = TapOutTreeSequence(6, "ucb1", "simple",
+                           shapes=default_drafter_pool(6), seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(400):
+        i = c.begin_shape()
+        p = 0.8 if c.shapes[i].drafter == best else 0.2
+        c.update_shape(i, 6, int(rng.binomial(6, p)))
+    pulls = c.drafter_pulls
+    assert pulls[best] / sum(pulls.values()) > 0.5, pulls
+
+
 # ------------------------------------------------------------- tokenizer
 
 @given(st.text(max_size=200))
