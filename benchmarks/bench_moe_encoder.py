@@ -1,0 +1,177 @@
+"""MoE and encoder-conditioned serving workloads (docs/workloads.md).
+
+Two measured-and-GATED claims, one per workload axis:
+
+* ``claim_encoder_segment_bytes_1_over_n`` — N concurrent streams decoding
+  against ONE shared encoder input back their cross-attention K/V with a
+  single refcounted segment: the encoder-segment pool's unique bytes are
+  exactly ``1/N`` of the logical (per-stream) bytes.  Counted from
+  ``EncoderSegmentPool.stats()`` — deterministic, gates every mode
+  including ``--smoke``.
+* ``claim_moe_routed_cost_bandit_visible`` — a MoE-target session surfaces
+  its routed-expert activation density into the engine's modeled session
+  cost: ``describe()["moe"]`` carries ``routed_frac > 0`` and a measured
+  ``mean_routing_density >= 1`` (a gamma-token verify hits more distinct
+  experts than one decode token), and feeding those into
+  ``modeled_session_cost`` yields a routed verify cost at or above the
+  density-blind figure — the workload-dependent trade-off the TapOut
+  meta-bandit's cost-adjusted reward learns from.  Deterministic, gates
+  every mode.
+
+Appends a ``moe_encoder`` summary row to BENCH_serving.json (the committed
+perf trajectory; ``scripts/check_bench_schema.py`` requires the row to
+stamp routed-expert AND shared-segment stats) and writes
+``artifacts/bench/moe_encoder[_smoke].json``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+_ARCH = {"moe": "qwen3-moe-235b-a22b", "encdec": "seamless-m4t-large-v2"}
+
+
+def _pair(kind):
+    """Smoke-sized registry target + a plain dense draft sharing its vocab
+    (greedy verification keeps the unconditioned draft exact)."""
+    import jax
+    from repro.configs.registry import smoke_config
+    from repro.core import ModelBundle
+    from repro.models import ModelConfig
+    from repro.models import transformer as T
+    tcfg = smoke_config(_ARCH[kind])
+    dcfg = ModelConfig(name="drf", arch_type="dense", num_layers=2,
+                       d_model=64, num_heads=2, num_kv_heads=1, d_ff=128,
+                       vocab_size=tcfg.vocab_size)
+    return (ModelBundle(T.init_params(dcfg, jax.random.PRNGKey(1)), dcfg),
+            ModelBundle(T.init_params(tcfg, jax.random.PRNGKey(0)), tcfg))
+
+
+def _mk_engine(draft, target, batch_size, seed=0):
+    from repro.core.controller import make_controller
+    from repro.core.engine import PagedSpecEngine
+    ctrl = make_controller("tapout_seq_ucb1", gamma_max=4, seed=seed)
+    return PagedSpecEngine(draft, target, ctrl, batch_size=batch_size,
+                           max_len=128, block_size=16, seed=seed)
+
+
+def _drain(eng, n_streams, max_new, max_ticks=400):
+    t0 = time.perf_counter()
+    new_tokens = 0
+    for _ in range(max_ticks):
+        live = [s for s in range(n_streams)
+                if eng.slots[s] is not None
+                and not eng.slots[s]["done"]
+                and eng.slots[s]["res"].new_tokens < max_new]
+        if not live:
+            break
+        eng.session_step_batch()
+    for s in range(n_streams):
+        if eng.slots[s] is not None:
+            new_tokens += eng.slots[s]["res"].new_tokens
+            eng.close_stream(s)
+    wall = time.perf_counter() - t0
+    return {"new_tokens": new_tokens, "wall_s": wall,
+            "tokens_per_s": new_tokens / max(wall, 1e-9)}
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    import numpy as np
+
+    from benchmarks.common import record_serving_bench, save_json
+    from repro.core.rewards import modeled_session_cost
+
+    n_streams = 4
+    max_new = 6 if smoke else (12 if quick else 24)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 500, size=int(n)).tolist()
+               for n in rng.integers(5, 12, size=n_streams)]
+
+    # ---- encoder axis: N streams, ONE encoding -> one shared segment.
+    draft, enc_t = _pair("encdec")
+    fe = rng.standard_normal((enc_t.cfg.encdec.frontend_len,
+                              enc_t.cfg.encdec.frontend_dim)).astype(
+                                  np.float32)
+    enc_eng = _mk_engine(draft, enc_t, n_streams)
+    for s, p in enumerate(prompts):
+        enc_eng.open_stream(s, list(p), frame_embeds=fe)
+    seg = enc_eng.enc_pool.stats()
+    ratio = seg["unique_bytes"] / max(seg["logical_bytes"], 1)
+    claim_enc = bool(seg["logical_refs"] == n_streams
+                     and ratio <= 1.0 / n_streams + 1e-9)
+    enc_tp = _drain(enc_eng, n_streams, max_new)
+    enc_blob = enc_eng.describe()
+    encoder_stats = {"streams": n_streams,
+                     "unique_bytes": seg["unique_bytes"],
+                     "logical_bytes": seg["logical_bytes"],
+                     "segment_bytes_ratio": ratio,
+                     "hits": seg["hits"], "misses": seg["misses"]}
+    print(f"  encoder segments: {seg['unique_bytes']} unique vs "
+          f"{seg['logical_bytes']} logical bytes over {n_streams} streams "
+          f"(ratio {ratio:.3f}, target <= {1.0 / n_streams:.3f})",
+          file=sys.stderr)
+
+    # ---- MoE axis: routed-expert density flows into the modeled cost.
+    draft_m, moe_t = _pair("moe")
+    moe_eng = _mk_engine(draft_m, moe_t, 2)
+    for s, p in enumerate(prompts[:2]):
+        moe_eng.open_stream(s, list(p))
+    moe_tp = _drain(moe_eng, 2, max_new)
+    moe_blob = moe_eng.describe()
+    moe = moe_blob.get("moe", {})
+    rf = float(moe.get("routed_frac", 0.0))
+    dens = float(moe.get("mean_routing_density", 0.0))
+    cost_routed = modeled_session_cost(4, draft_m.cost_per_token,
+                                       moe_t.cost_per_token,
+                                       routed_frac=rf, routing_density=dens)
+    cost_flat = modeled_session_cost(4, draft_m.cost_per_token,
+                                     moe_t.cost_per_token)
+    claim_moe = bool(rf > 0.0 and dens >= 1.0 and moe.get("sessions", 0) > 0
+                     and cost_routed >= cost_flat)
+    moe_stats = {"routed_frac": rf, "mean_routing_density": dens,
+                 "sessions": int(moe.get("sessions", 0)),
+                 "modeled_session_cost_routed": cost_routed,
+                 "modeled_session_cost_flat": cost_flat}
+    print(f"  moe: routed_frac={rf:.3f} density={dens:.3f} over "
+          f"{moe.get('sessions', 0)} sessions — modeled verify cost "
+          f"{cost_routed:.1f} vs density-blind {cost_flat:.1f}",
+          file=sys.stderr)
+
+    payload = {
+        "config": {"n_streams": n_streams, "max_new": max_new,
+                   "encdec_arch": _ARCH["encdec"], "moe_arch": _ARCH["moe"]},
+        "encoder": encoder_stats,
+        "moe": moe_stats,
+        "throughput": {"encdec": enc_tp, "moe": moe_tp},
+        "claim_encoder_segment_bytes_1_over_n": claim_enc,
+        "claim_moe_routed_cost_bandit_visible": claim_moe,
+    }
+    suffix = "_smoke" if smoke else ""
+    save_json(f"moe_encoder{suffix}", payload)
+    record_serving_bench(f"moe_encoder{suffix}", {
+        "engine": {"moe": moe_blob, "encdec": enc_blob},
+        "encoder": encoder_stats,
+        "moe": moe_stats,
+        "claim_encoder_segment_bytes_1_over_n": claim_enc,
+        "claim_moe_routed_cost_bandit_visible": claim_moe,
+    })
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale config for CI; claims still gate")
+    args = ap.parse_args()
+    payload = run(quick=args.quick, smoke=args.smoke)
+    ok = all(payload[k] for k in payload if k.startswith("claim_"))
+    for k in sorted(payload):
+        if k.startswith("claim_"):
+            print(f"{k}={payload[k]}")
+    sys.exit(0 if ok else 1)

@@ -17,11 +17,12 @@ artifacts/bench/.
   prefix_sharing      —        shared-prefix pool blocks / concurrency / TTFT
   slo_serving         —        open-loop goodput under p95 SLO, FIFO vs SLO
   drafters            —        heterogeneous drafter pool: fixed vs meta-bandit
+  moe_encoder         —        MoE routed-cost + shared encoder-segment pool
   kernels_micro       —        kernel/XLA-path microbench
   roofline            §Roofline collation from the dry-run artifacts
 
 Serving-path benches (serving_batch, tree_spec, quant_spec,
-prefix_sharing, slo_serving, drafters) additionally append their
+prefix_sharing, slo_serving, drafters, moe_encoder) additionally append their
 summaries to the repo-root BENCH_serving.json (committed — the perf
 trajectory across
 PRs); ``scripts/check_bench_schema.py`` validates every appended row.
@@ -43,10 +44,11 @@ def main() -> int:
     args = ap.parse_args()
 
     from . import (bench_arm_values, bench_drafters, bench_entropy,
-                   bench_kernels, bench_main, bench_more_arms,
-                   bench_prefix_sharing, bench_quant, bench_reward,
-                   bench_serving_batch, bench_specbench, bench_specdecpp,
-                   bench_tree, bench_ucb_variants, roofline_table)
+                   bench_kernels, bench_main, bench_moe_encoder,
+                   bench_more_arms, bench_prefix_sharing, bench_quant,
+                   bench_reward, bench_serving_batch, bench_specbench,
+                   bench_specdecpp, bench_tree, bench_ucb_variants,
+                   roofline_table)
 
     def derived_fmt(d):
         keys = [k for k in d if k.startswith("claim_")]
@@ -67,6 +69,7 @@ def main() -> int:
         "quant_spec": (bench_quant.run, derived_fmt),
         "prefix_sharing": (bench_prefix_sharing.run, derived_fmt),
         "drafters": (bench_drafters.run, derived_fmt),
+        "moe_encoder": (bench_moe_encoder.run, derived_fmt),
         "fig5_6_arm_values": (bench_arm_values.run, lambda d: ";".join(
             f"{k}_spearman={d[k]['spearman_values_vs_speedup']:.2f}"
             for k in d)),

@@ -22,7 +22,13 @@ later comparison.  This script validates each row:
    drafter identity: every engine blob carries a ``drafter`` dict with
    ``name`` and ``kind``, and the summary carries a pool-level
    ``drafters`` blob with the candidate ``names`` — a drafter bench row
-   that cannot say WHICH drafters competed is not evidence.
+   that cannot say WHICH drafters competed is not evidence;
+6. rows from the MoE/encoder workload benches (``MOE_ENCODER_BENCHES``)
+   stamp BOTH axes: a ``moe`` dict with numeric routed-expert stats
+   (``routed_frac``, ``mean_routing_density``) and an ``encoder`` dict
+   with numeric shared-segment stats (``unique_bytes``, ``logical_bytes``,
+   ``streams``) — a routed-cost or segment-sharing claim without the
+   numbers behind it is not evidence.
 
 Exits non-zero with one ``::error::`` line per violation.
 """
@@ -38,10 +44,18 @@ PATH = os.path.join(REPO, "BENCH_serving.json")
 ROW_KEYS = {"bench", "recorded_at", "summary"}
 TS_RE = re.compile(r"^\d{4}-\d{2}-\d{2}T\d{2}:\d{2}:\d{2}Z$")
 # benches (by name prefix, _smoke included) required to attach describe()
-ENGINE_BLOB_BENCHES = ("prefix_sharing", "slo_serving", "drafters")
+ENGINE_BLOB_BENCHES = ("prefix_sharing", "slo_serving", "drafters",
+                       "moe_encoder")
 # benches required to stamp drafter identity (engine blob "drafter" dict
 # + summary-level "drafters" pool blob)
 DRAFTER_BLOB_BENCHES = ("drafters",)
+# benches required to stamp routed-expert stats ("moe" dict) and shared
+# encoder-segment stats ("encoder" dict) on the summary
+MOE_ENCODER_BENCHES = ("moe_encoder",)
+
+
+def _num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
 
 
 def claim_keys(obj, path=""):
@@ -118,6 +132,20 @@ def check_row(i, row):
                 and pool["names"]):
             errs.append(f"{where}: summary lacks a 'drafters' pool blob "
                         f"with non-empty 'names'")
+    if bench.startswith(MOE_ENCODER_BENCHES):
+        moe = summary.get("moe")
+        if not (isinstance(moe, dict) and _num(moe.get("routed_frac"))
+                and _num(moe.get("mean_routing_density"))):
+            errs.append(f"{where}: summary lacks a 'moe' dict with numeric "
+                        f"'routed_frac'/'mean_routing_density' — MoE rows "
+                        f"must stamp routed-expert stats")
+        enc = summary.get("encoder")
+        if not (isinstance(enc, dict) and _num(enc.get("unique_bytes"))
+                and _num(enc.get("logical_bytes"))
+                and _num(enc.get("streams"))):
+            errs.append(f"{where}: summary lacks an 'encoder' dict with "
+                        f"numeric 'unique_bytes'/'logical_bytes'/'streams' "
+                        f"— encoder rows must stamp shared-segment stats")
     return errs
 
 

@@ -20,13 +20,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
-from repro.models.cache import (POOL_LEAF_KEYS, BlockAllocator, PoolExhausted,
+from repro.models.cache import (POOL_LEAF_KEYS, BlockAllocator,
+                                EncoderSegmentPool, PoolExhausted,
                                 PrefixCache, paged_copy_block, paged_rollback,
                                 rollback)
 from repro.models.quant import quantize_params
 from repro.models.sharding import use_mesh
 from .controller import Controller, TapOutTreeSequence
-from .rewards import modeled_session_cost, precision_cost_factor
+from .rewards import (modeled_session_cost, moe_routed_frac,
+                      precision_cost_factor)
 from .spec_decode import (_probs, chunk_prefill_paged, draft_session,
                           draft_session_batched, draft_session_paged,
                           fresh_session_jits, fused_session_tick,
@@ -82,7 +84,39 @@ class _ShardingMixin:
                           if self.mesh is not None else None),
         }
         d["drafter"] = self._drafter_blob()
+        rf = float(getattr(self, "_routed_frac", 0.0))
+        if rf > 0.0:
+            n = int(getattr(self, "_moe_sessions", 0))
+            m = self.target.cfg.moe
+            d["moe"] = {
+                "routed_frac": rf,
+                "top_k": int(m.top_k),
+                "num_experts": int(m.num_experts),
+                "sessions": n,
+                "mean_routing_density": (float(self._moe_density_sum / n)
+                                         if n else 1.0),
+            }
         return d
+
+    def _init_moe_accounting(self):
+        """Routed-cost accounting state for MoE targets: ``_routed_frac``
+        is the share of the target's active per-token parameters that are
+        routed experts (0 for dense targets — every read is gated on it),
+        the density sum/count feed ``describe()["moe"]``."""
+        self._routed_frac = moe_routed_frac(self.target.cfg)
+        self._moe_density_sum = 0.0
+        self._moe_sessions = 0
+
+    def _routing_density_rows(self, tcache) -> np.ndarray:
+        """Per-lane routing density of the verify chunk just fed: the
+        cache's ``moe_stats`` channel (mean distinct experts hit per routed
+        layer) over ``top_k``.  One decode token gives exactly 1.0; a
+        gamma-token verify PHYSICALLY streams up to gamma * top_k distinct
+        experts' weights, so density > 1 raises the routed share of the
+        modeled verify cost (``rewards.modeled_session_cost``) — the
+        workload axis the bandit's cost-adjusted reward learns from."""
+        k = max(int(self.target.cfg.moe.top_k), 1)
+        return np.asarray(tcache["moe_stats"], np.float64) / k
 
     def _drafter_blob(self) -> dict:
         """Drafter identity, stamped into every describe()/bench row: which
@@ -348,6 +382,7 @@ class SpecEngine(_StepMixin, _ShardingMixin):
                                      kv_dtype=kv_dtype)
         self.draft_cheap = self.dspec.cheap_rollback
         self.target_cheap = self.tspec.cheap_rollback
+        self._init_moe_accounting()
 
     # -------------------------------------------------------- helpers
     def _next_rng(self):
@@ -356,8 +391,22 @@ class SpecEngine(_StepMixin, _ShardingMixin):
 
     # -------------------------------------------------------- streams
     @_on_mesh
-    def start_stream(self, prompt: List[int]) -> dict:
-        """Prefill a new generation stream; returns the stream state."""
+    def start_stream(self, prompt: List[int], *, frame_embeds=None,
+                     patch_embeds=None) -> dict:
+        """Prefill a new generation stream; returns the stream state.
+
+        Conditioning (target-side only — the draft stays a text-only
+        decoder, which greedy speculative decoding keeps output-exact):
+
+          * ``frame_embeds`` (T, frontend_dim) — enc-dec targets encode it
+            once and cache the per-layer cross-KV inside ``tcache`` (the
+            jitted sessions thread it untouched, so nothing downstream
+            changes);
+          * ``patch_embeds`` (P, vit_dim) — vision targets prepend P
+            projected patch positions before the prompt, so every TARGET
+            cache position is offset by ``toff = P`` from ``len(seq)``;
+            the session's target rollbacks carry that offset.
+        """
         assert len(prompt) >= 2, "need >= 2 prompt tokens"
         seq = list(prompt)
         res = GenResult(tokens=seq, prompt_len=len(prompt))
@@ -369,15 +418,34 @@ class SpecEngine(_StepMixin, _ShardingMixin):
         tcache = self._place_cache(tcache)
         pre = np.asarray(seq[:-1], np.int32)[None]   # invariant pos = len-1
         dcache = self._advance("draft", self.draft.params, dcache, pre)
-        tcache = self._advance("target", self.target.params, tcache, pre)
+        toff = 0
+        if frame_embeds is not None or patch_embeds is not None:
+            fe = pe = None
+            if frame_embeds is not None:
+                fe = jnp.asarray(frame_embeds)
+                fe = fe[None] if fe.ndim == 2 else fe
+            if patch_embeds is not None:
+                pe = jnp.asarray(patch_embeds)
+                pe = pe[None] if pe.ndim == 2 else pe
+                toff = int(pe.shape[1])
+            assert len(prompt) + self.gamma_max + 2 + toff <= self.max_len, \
+                "prompt + patches cannot fit a session within max_len"
+            # one conditioned prefill feed (once per stream — traced per
+            # prompt shape like the plain _advance path)
+            _, tcache = T.step(self.target.params, self.target.cfg,
+                               jnp.asarray(pre, jnp.int32), tcache,
+                               self.tspec, frame_embeds=fe, patch_embeds=pe)
+        else:
+            tcache = self._advance("target", self.target.params, tcache, pre)
         return {"seq": seq, "res": res, "dcache": dcache, "tcache": tcache,
-                "done": False}
+                "toff": toff, "done": False}
 
     @_on_mesh
     def session_step(self, state: dict, eos_id: Optional[int] = None) -> dict:
         """Run ONE draft/verify session on a stream (serving-layer unit)."""
         seq, res = state["seq"], state["res"]
         dcache, tcache = state["dcache"], state["tcache"]
+        toff = int(state.get("toff", 0))     # target-only position offset
         c_d = self.draft.cost_per_token
         c_t = self.target.cost_per_token
         if True:
@@ -418,7 +486,7 @@ class SpecEngine(_StepMixin, _ShardingMixin):
             accepted_feed = np.asarray([seq[-1:] + out[:-1]], np.int32)  # (1, m+1)
             seq.extend(out)
             if self.target_cheap:
-                tcache = rollback(vres.cache, L + m)
+                tcache = rollback(vres.cache, L + m + toff)
             else:
                 tcache = self._advance("target", self.target.params,
                                        tcache_snapshot, accepted_feed)
@@ -437,12 +505,18 @@ class SpecEngine(_StepMixin, _ShardingMixin):
                     "entropies": np.asarray(dres.entropies[0]),
                     "n_drafted": n_drafted, "n_accepted": m,
                     "position_base": 0})
+            density = 1.0
+            if self._routed_frac > 0.0:
+                density = float(self._routing_density_rows(vres.cache)[0])
+                self._moe_density_sum += density
+                self._moe_sessions += 1
             res.modeled_cost += modeled_session_cost(
-                n_drafted + n_in - 1, c_d, c_t)
+                n_drafted + n_in - 1, c_d, c_t,
+                routed_frac=self._routed_frac, routing_density=density)
             if eos_id is not None and eos_id in out:
                 seq[:] = seq[:len(seq) - len(out) + out.index(eos_id) + 1]
                 state["done"] = True
-            if len(seq) + gamma + 2 >= self.max_len:
+            if len(seq) + gamma + 2 + toff >= self.max_len:
                 state["done"] = True
 
         state["dcache"], state["tcache"] = dcache, tcache
@@ -450,9 +524,11 @@ class SpecEngine(_StepMixin, _ShardingMixin):
 
     # -------------------------------------------------------- generate
     def generate(self, prompt: List[int], max_new_tokens: int,
-                 eos_id: Optional[int] = None) -> GenResult:
+                 eos_id: Optional[int] = None, *, frame_embeds=None,
+                 patch_embeds=None) -> GenResult:
         t0 = time.perf_counter()
-        state = self.start_stream(prompt)
+        state = self.start_stream(prompt, frame_embeds=frame_embeds,
+                                  patch_embeds=patch_embeds)
         res = state["res"]
         while not state["done"] and res.new_tokens < max_new_tokens:
             state = self.session_step(state, eos_id)
@@ -1630,7 +1706,13 @@ class PagedSpecEngine(_ShardingMixin):
         self.tcache, self.tspec = T.init_paged_cache(
             target.cfg, B, max_len, block_size=block_size,
             pool_tokens=self.pool_tokens, dtype=cache_dtype,
-            kv_dtype=kv_dtype)
+            kv_dtype=kv_dtype, enc_segments=B + 1)
+        # enc-dec targets: one host-side refcounted directory over the
+        # shared encoder segment pools in tcache["cross"] — admission with
+        # an already-seen encoding adopts its segment (zero encoder
+        # compute, zero extra bytes), mirroring a prefix-cache hit
+        self.enc_pool: Optional[EncoderSegmentPool] = (
+            EncoderSegmentPool(B + 1) if target.cfg.is_encdec else None)
         # pools shard KV heads over "model" (whole block axis per shard —
         # any table may point anywhere); tables/lengths ride the lane axes
         self.dcache = self._place_cache(self.dcache, paged=True)
@@ -1693,6 +1775,13 @@ class PagedSpecEngine(_ShardingMixin):
         self._pending: Optional[dict] = None
         self._dlen = np.zeros(B, np.int64)   # host mirrors of device lengths
         self._tlen = np.zeros(B, np.int64)
+        # per-slot TARGET position offset: P prepended patch positions for
+        # vision-conditioned streams (lengths invariant becomes
+        # len(seq) - 1 + toff).  Any nonzero offset forces the sync tick —
+        # the fused program serves both models' rollbacks from ONE shared
+        # lengths vector, which an asymmetric offset would break.
+        self._toff = np.zeros(B, np.int64)
+        self._init_moe_accounting()
 
     # -------------------------------------------------------- plumbing
     def _next_rng(self, n: int = 1):
@@ -1713,7 +1802,10 @@ class PagedSpecEngine(_ShardingMixin):
         return self._step_cache[which]
 
     def _lane_view(self, cache, slot: int):
-        """Single-lane view: pools stay global, per-stream leaves sliced."""
+        """Single-lane view: pools stay global, per-stream leaves sliced.
+        Encoder segment pools ride whole (shared, indexed by the lane's
+        ``cross_seg`` row) so a lane prefill is conditioned exactly like
+        the batch-native tick; ``moe_stats`` is sliced per stream."""
         def f(path, a):
             keys = _path_keys(path)
             if keys[-1] in _POOL_KEYS:
@@ -1721,8 +1813,14 @@ class PagedSpecEngine(_ShardingMixin):
             ax = 1 if keys[0] == "stack" else 0
             return jax.lax.slice_in_dim(a, slot, slot + 1, axis=ax)
         layers = jax.tree_util.tree_map_with_path(f, cache["layers"])
-        return {"lengths": cache["lengths"][slot:slot + 1],
+        lane = {"lengths": cache["lengths"][slot:slot + 1],
                 "tables": cache["tables"][slot:slot + 1], "layers": layers}
+        if "cross" in cache:
+            lane["cross"] = cache["cross"]
+            lane["cross_seg"] = cache["cross_seg"][slot:slot + 1]
+        if "moe_stats" in cache:
+            lane["moe_stats"] = cache["moe_stats"][slot:slot + 1]
+        return lane
 
     def _merge_lane(self, cache, lane, slot: int):
         """Fold a lane view back: pools replace wholesale (the lane program
@@ -1793,6 +1891,52 @@ class PagedSpecEngine(_ShardingMixin):
                                           toks[:, lo:hi], hi - lo)
         return cache
 
+    def _prefill_vlm_lane(self, slot: int, tokens: List[int], patch_embeds):
+        """Conditioned target prefill: ONE feed of the projected patches +
+        the whole prompt through the lane (positions come from the lane's
+        zeroed length, so patches land at 0..P-1 and text at P.. with the
+        right RoPE — same layout as the dense conditioned reference)."""
+        lane = self._lane_view(self.tcache, slot)
+        toks = jnp.asarray(np.asarray(tokens, np.int32)[None])
+        _, lane = T.paged_step(self.target.params, self.target.cfg, toks,
+                               lane, self.tspec,
+                               patch_embeds=jnp.asarray(patch_embeds))
+        return self._place_cache(self._merge_lane(self.tcache, lane, slot),
+                                 paged=True)
+
+    def _enc_seg_bytes(self) -> int:
+        """Bytes ONE encoder segment occupies across every cross-KV pool."""
+        cp = self.tcache["cross"]
+        total = 0
+        for c in cp["prefix"] + cp["tail"]:
+            for a in jax.tree_util.tree_leaves(c):
+                total += int(np.prod(a.shape[1:])) * a.dtype.itemsize
+        if cp["stack"] is not None:
+            for a in jax.tree_util.tree_leaves(cp["stack"]):
+                total += int(a.shape[0] * np.prod(a.shape[2:])) * a.dtype.itemsize
+        return total
+
+    def _adopt_encoder_segment(self, slot: int, frame_embeds) -> int:
+        """Admission half of encoder conditioning: digest the raw frames,
+        adopt the cached segment on a hit (refcount bump — no encoder
+        forward, no new pool rows), else encode ONCE into a free segment.
+        Either way the slot's ``cross_seg`` row points at it afterwards."""
+        fe = np.asarray(frame_embeds, np.float32)
+        if fe.ndim == 2:
+            fe = fe[None]
+        seg, is_new = self.enc_pool.acquire(EncoderSegmentPool.digest(fe),
+                                            self._enc_seg_bytes())
+        if is_new:
+            cross_lane = T.encode_cross_segment(self.target.params,
+                                                self.target.cfg,
+                                                jnp.asarray(fe))
+            self.tcache = T.write_cross_segment(self.tcache, cross_lane, seg)
+        self.tcache = self._place_cache(
+            {**self.tcache,
+             "cross_seg": self.tcache["cross_seg"].at[slot].set(seg)},
+            paged=True)
+        return seg
+
     # -------------------------------------------------------- slots
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -1855,7 +1999,8 @@ class PagedSpecEngine(_ShardingMixin):
     def open_stream(self, slot: int, prompt: List[int],
                     eos_id: Optional[int] = None,
                     reserve_tokens: Optional[int] = None,
-                    resume_from: Optional[GenResult] = None) -> dict:
+                    resume_from: Optional[GenResult] = None, *,
+                    frame_embeds=None, patch_embeds=None) -> dict:
         """Admit a stream: reserve blocks, prefill the prompt into its pages.
 
         ``reserve_tokens`` is the worst-case sequence length this request
@@ -1876,23 +2021,57 @@ class PagedSpecEngine(_ShardingMixin):
         ``preempt_stream`` returned: pass the frozen sequence as
         ``prompt`` and the frozen ``res`` here — accounting continues on
         the same ``GenResult``, and the blocks ``preempt_stream``
-        registered make the re-prefill a prefix-cache adoption."""
+        registered make the re-prefill a prefix-cache adoption.
+
+        Conditioning (target-side; draft stays a text-only decoder):
+        ``frame_embeds`` (T, frontend_dim) for enc-dec targets lands as a
+        SHARED, refcounted encoder segment — admission with an
+        already-cached encoding adopts the segment exactly like a
+        prefix-cache hit (zero encoder compute, zero extra pool bytes);
+        ``patch_embeds`` (P, vit_dim) for vision targets prepends P patch
+        positions, offsetting the target lane's lengths by P.  Conditioned
+        streams skip prefix-cache adoption/registration (their KV depends
+        on the conditioning, not only on the token prefix)."""
         assert self.slots[slot] is None, f"slot {slot} busy"
         assert len(prompt) >= 2, "need >= 2 prompt tokens"
-        assert len(prompt) + self.gamma_max + 2 <= self.max_len, \
+        cond = frame_embeds is not None or patch_embeds is not None
+        toff = 0
+        if patch_embeds is not None:
+            patch_embeds = np.asarray(patch_embeds)
+            if patch_embeds.ndim == 2:
+                patch_embeds = patch_embeds[None]
+            toff = int(patch_embeds.shape[1])
+            assert self.target_cheap, \
+                "patch conditioning needs an attention/MLA-only target"
+            if reserve_tokens is not None:
+                reserve_tokens += toff       # patches occupy pool positions
+        assert len(prompt) + self.gamma_max + 2 + toff <= self.max_len, \
             "prompt cannot fit a single session within max_len"
         pre = prompt[:-1]                    # invariant: length = len(seq) - 1
-        adopted = self._admit_blocks(slot, prompt, reserve_tokens)
+        adopted = self._admit_blocks(slot, prompt, reserve_tokens,
+                                     use_prefix=not cond)
         rest = pre[adopted:]
         self.prefill_tokens_skipped += adopted
         self.prefill_tokens_computed += len(rest)
+        enc_seg = None
+        if frame_embeds is not None:
+            assert self.enc_pool is not None, \
+                "frame_embeds needs an enc-dec target"
+            enc_seg = self._adopt_encoder_segment(slot, frame_embeds)
         self.dcache = self._place_cache(
             self._prefill_lane("draft", self.dcache, slot, rest), paged=True)
-        self.tcache = self._place_cache(
-            self._prefill_lane("target", self.tcache, slot, rest), paged=True)
+        if patch_embeds is not None:
+            self.tcache = self._prefill_vlm_lane(slot, rest, patch_embeds)
+        else:
+            self.tcache = self._place_cache(
+                self._prefill_lane("target", self.tcache, slot, rest),
+                paged=True)
         self._dlen[slot] = len(pre)
-        self._tlen[slot] = len(pre)
+        self._tlen[slot] = len(pre) + toff
+        self._toff[slot] = toff
         st = self._new_stream_state(slot, prompt, eos_id, resume_from)
+        st["cond"] = cond
+        st["enc_seg"] = enc_seg
         self._register_prefix(slot)
         return st
 
@@ -1983,6 +2162,9 @@ class PagedSpecEngine(_ShardingMixin):
         assert self._pending is None, "flush the pending tick before preempt"
         st = self.slots[slot]
         assert st is not None, f"slot {slot} empty"
+        assert not st.get("cond"), \
+            "conditioned streams cannot be preempted (the resume handle " \
+            "carries tokens only, not the conditioning)"
         self._register_prefix(slot)
         self.preemptions += 1
         frozen = self.close_stream(slot)
@@ -2009,7 +2191,7 @@ class PagedSpecEngine(_ShardingMixin):
         stays bit-exact for the blocks' whole cache lifetime).  At rest
         the frontier is ``len(seq) - 2``; mid-prefill it is the prefill
         position, whichever is lower."""
-        if self.prefix_cache is None:
+        if self.prefix_cache is None or self.slots[slot].get("cond"):
             return
         seq = self.slots[slot]["seq"]
         upto = min(int(self._dlen[slot]), len(seq) - 2)
@@ -2020,15 +2202,18 @@ class PagedSpecEngine(_ShardingMixin):
                 (self.dalloc.owned[slot], self.talloc.owned[slot]))
 
     def _admit_blocks(self, slot: int, prompt: List[int],
-                      reserve_tokens: Optional[int]) -> int:
+                      reserve_tokens: Optional[int], *,
+                      use_prefix: bool = True) -> int:
         """Block-reservation half of admission: adopt what the prefix
         cache holds, evict/allocate the rest, point the slot's tables at
         the run, privatize the draft's COW frontier.  Returns the adopted
         token count (device lengths are set to it; the caller prefills
-        ``prompt[adopted:-1]``)."""
+        ``prompt[adopted:-1]``).  ``use_prefix=False`` (conditioned
+        streams) skips adoption — their KV is not a pure token function."""
         need = self.reserve_blocks_for(reserve_tokens or self.max_len)
         seq = list(prompt)
-        n_adopt, runs, n_cow = self._adoptable(prompt, touch=True)
+        n_adopt, runs, n_cow = (self._adoptable(prompt, touch=True)
+                                if use_prefix else (0, None, 0))
         need = max(need, n_adopt)
         need_new = need - n_adopt + n_cow
         # Pin the adopted run BEFORE any eviction: until ``share`` runs the
@@ -2134,7 +2319,8 @@ class PagedSpecEngine(_ShardingMixin):
 
     def close_stream(self, slot: int) -> dict:
         """Release a slot: blocks return to the pool, its table row points
-        at the trash block again."""
+        at the trash block again (and any adopted encoder segment drops a
+        reference — last release frees the segment for reuse)."""
         st = self.slots[slot]
         assert st is not None
         self.slots[slot] = None
@@ -2142,12 +2328,16 @@ class PagedSpecEngine(_ShardingMixin):
         self.talloc.release(slot)
         self._dlen[slot] = 0
         self._tlen[slot] = 0
+        self._toff[slot] = 0
+        tcache = {**self.tcache, "tables": jnp.asarray(self.talloc.tables),
+                  "lengths": self.tcache["lengths"].at[slot].set(0)}
+        if st.get("enc_seg"):
+            self.enc_pool.release(int(st["enc_seg"]))
+            tcache["cross_seg"] = tcache["cross_seg"].at[slot].set(0)
         self.dcache = self._place_cache(
             {**self.dcache, "tables": jnp.asarray(self.dalloc.tables),
              "lengths": self.dcache["lengths"].at[slot].set(0)}, paged=True)
-        self.tcache = self._place_cache(
-            {**self.tcache, "tables": jnp.asarray(self.talloc.tables),
-             "lengths": self.tcache["lengths"].at[slot].set(0)}, paged=True)
+        self.tcache = self._place_cache(tcache, paged=True)
         return st
 
     # -------------------------------------------------------- tick
@@ -2170,7 +2360,10 @@ class PagedSpecEngine(_ShardingMixin):
             return False
         if __debug__ and self.prefix_cache is not None:
             self._assert_cow_safety()
-        if not self.fused:
+        if not self.fused or self._toff.any():
+            # offset streams (vision-conditioned lanes) take the sync tick:
+            # the fused program rolls BOTH models back from one shared
+            # lengths vector, which an asymmetric target offset would break
             self._pending = {"acted": self._session_step_sync()}
             return True
 
@@ -2213,6 +2406,8 @@ class PagedSpecEngine(_ShardingMixin):
         nd = np.asarray(ft.n_drafted)
         m = np.asarray(ft.n_accepted)
         out_all = np.asarray(ft.out_tokens)
+        dens = (self._routing_density_rows(self.tcache)
+                if self._routed_frac > 0.0 else None)
         if self.collect_traces:
             sig_all = np.asarray(ft.signals)
             ent_all = np.asarray(ft.entropies)
@@ -2223,7 +2418,14 @@ class PagedSpecEngine(_ShardingMixin):
             seq.extend(out)
             res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
                                              int(arm_mat[s, 0])))
-            res.modeled_cost += modeled_session_cost(int(nd[s]) + 1, c_d, c_t)
+            density = 1.0
+            if dens is not None:
+                density = float(dens[s])
+                self._moe_density_sum += density
+                self._moe_sessions += 1
+            res.modeled_cost += modeled_session_cost(
+                int(nd[s]) + 1, c_d, c_t, routed_frac=self._routed_frac,
+                routing_density=density)
             if self.collect_traces:
                 res.traces.append({
                     "signals": sig_all[s], "entropies": ent_all[s],
@@ -2304,6 +2506,8 @@ class PagedSpecEngine(_ShardingMixin):
         nd = np.asarray(dres.n_drafted)
         m = np.asarray(vres.n_accepted)
         out_all = np.asarray(vres.out_tokens)
+        dens = (self._routing_density_rows(vres.cache)
+                if self._routed_frac > 0.0 else None)
         if self.collect_traces:
             sig_all = np.asarray(dres.signals)
             ent_all = np.asarray(dres.entropies)
@@ -2317,8 +2521,14 @@ class PagedSpecEngine(_ShardingMixin):
             seq.extend(out)
             res.sessions.append(SessionStats(int(nd[s]), int(m[s]),
                                              int(arm_mat[s, 0])))
+            density = 1.0
+            if dens is not None:
+                density = float(dens[s])
+                self._moe_density_sum += density
+                self._moe_sessions += 1
             res.modeled_cost += modeled_session_cost(
-                int(nd[s]) + n_in - 1, c_d, c_t)
+                int(nd[s]) + n_in - 1, c_d, c_t,
+                routed_frac=self._routed_frac, routing_density=density)
             if self.collect_traces:
                 res.traces.append({
                     "signals": sig_all[s], "entropies": ent_all[s],
@@ -2328,12 +2538,13 @@ class PagedSpecEngine(_ShardingMixin):
             if eos is not None and eos in out:
                 seq[:] = seq[:len(seq) - len(out) + out.index(eos) + 1]
                 st["done"] = True
-            if len(seq) + g + 2 >= self.max_len:
+            if len(seq) + g + 2 + int(self._toff[s]) >= self.max_len:
                 st["done"] = True
 
-        # ---- rollback: ONE length truncation per model (all layer kinds)
+        # ---- rollback: ONE length truncation per model (all layer kinds);
+        # the target's truncation carries each lane's position offset
         if self.target_cheap:
-            self._tlen = np.where(active, L + m, self._tlen)
+            self._tlen = np.where(active, L + m + self._toff, self._tlen)
             self.tcache = paged_rollback(vres.cache, self._tlen)
         else:
             self.tcache = self._place_cache(
@@ -2393,6 +2604,8 @@ class PagedSpecEngine(_ShardingMixin):
         }
         if self.prefix_cache is not None:
             stats["prefix_cache"] = self.prefix_cache.stats()
+        if self.enc_pool is not None:
+            stats["encoder_segments"] = self.enc_pool.stats()
         if self.mesh is not None:
             # per-shard residency: the "model"-sharded pools split their
             # bytes across tensor-parallel shards; block accounting is

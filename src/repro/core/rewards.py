@@ -26,14 +26,43 @@ def precision_cost_factor(precision: str) -> float:
 
 
 def modeled_session_cost(n_draft_tokens: int, cost_draft: float,
-                         cost_target: float, precision: str = "bf16") -> float:
+                         cost_target: float, precision: str = "bf16", *,
+                         routed_frac: float = 0.0,
+                         routing_density: float = 1.0) -> float:
     """Modeled cost of ONE draft/verify session: ``n_draft_tokens`` draft
     forwards (drafted tokens + any rollback refeeds) at the draft's
     precision, plus one target verify forward.  Callers whose draft bundle
     is already precision-scaled (engine-wide ``quant_draft``) pass the
-    default precision."""
+    default precision.
+
+    ROUTING-DENSITY TERM (MoE targets): the memory-bound verify streams
+    each routed expert's weights ONCE however many tokens hit it, so the
+    routed share of ``cost_target`` (which assumes the single-token top_k
+    active-parameter count) scales by ``routing_density`` =
+    mean(distinct experts hit per stream) / top_k.  One decode token gives
+    density 1 (cost unchanged); a gamma-token verify hits up to
+    gamma * top_k distinct experts, so SPECULATION RAISES the per-verify
+    routed cost — the workload-dependent trade-off the bandit learns from
+    (``moe_routed_frac`` supplies the routed share; dense targets keep the
+    defaults and are untouched)."""
+    target_factor = 1.0 - routed_frac + routed_frac * routing_density
     return (n_draft_tokens * cost_draft * precision_cost_factor(precision)
-            + cost_target)
+            + cost_target * target_factor)
+
+
+def moe_routed_frac(cfg) -> float:
+    """Fraction of a target's ACTIVE per-token parameters that are routed
+    experts — the share of ``cost_target`` the routing-density term scales.
+    0.0 for dense targets (keeps ``modeled_session_cost`` untouched)."""
+    if getattr(cfg, "moe", None) is None:
+        return 0.0
+    import dataclasses
+    active = cfg.active_param_count()
+    # routed active params = active count minus the same model with zero
+    # routed experts touched per token (router/shared/attention unchanged)
+    no_routed = cfg.replace(moe=dataclasses.replace(cfg.moe, top_k=0))
+    routed = active - no_routed.active_param_count()
+    return max(0.0, min(1.0, routed / max(active, 1)))
 
 
 def r_simple(n_accepted: int, n_drafted: int, gamma_max: int) -> float:

@@ -95,9 +95,12 @@ def block_train(params, cfg, layer_idx: int, x, positions, *, enc_out=None,
 
 
 def block_paged(params, cfg, layer_idx: int, x, layer_cache, tables, lengths,
-                spec, *, impl: str = "auto"):
+                spec, *, cross_kv=None, moe_stats=None, impl: str = "auto"):
     """Paged cached step: attention kinds go through the block-table pools,
     recurrent kinds keep their per-stream state (batch-native already).
+    ``cross_kv`` is a per-lane {"k","v"} dict gathered from the shared
+    encoder segment pools; ``moe_stats`` (a dict the caller owns)
+    accumulates the routed layers' expert-activation counts.
     Returns (x, new_layer_cache)."""
     kind = cfg.block_kind(layer_idx)
     decode = x.shape[1] == 1
@@ -114,10 +117,14 @@ def block_paged(params, cfg, layer_idx: int, x, layer_cache, tables, lengths,
     elif kind == "rglru":
         h, layer_cache = rglru_mixer(params["mixer"], cfg, h, layer_cache, decode=decode)
     x = x + h
+    if "cross" in params and cross_kv is not None:
+        h = rms_norm(x, params["cross_norm"], cfg.rms_eps)
+        x = x + cross_attn(params["cross"], cfg, h, cross_kv)
     if "ffn" in params:
         h = rms_norm(x, params["norm2"], cfg.rms_eps)
         if cfg.is_moe_layer(layer_idx):
-            h, _ = moe_ffn(params["ffn"], cfg, h, capacity_factor=2.0)
+            h, aux = moe_ffn(params["ffn"], cfg, h, capacity_factor=2.0)
+            _fold_moe_stats(moe_stats, aux)
         else:
             h = ffn_apply(params["ffn"], cfg, h)
         x = x + h
@@ -168,8 +175,19 @@ def block_tree(params, cfg, layer_idx: int, x, layer_cache, layer_nodes,
     return x, layer_nodes
 
 
+def _fold_moe_stats(moe_stats, aux):
+    """Accumulate one routed layer's expert-activation count into the
+    caller-owned ``moe_stats`` dict (callers inside ``lax.scan`` fold the
+    dict into their carry — a module-level accumulator would leak tracers)."""
+    if moe_stats is None:
+        return
+    hit = aux["moe_experts_hit"]
+    moe_stats["experts_hit"] = moe_stats.get("experts_hit", 0.0) + hit
+    moe_stats["layers"] = moe_stats.get("layers", 0) + 1
+
+
 def block_cached(params, cfg, layer_idx: int, x, pos0, layer_cache, spec,
-                 *, cross_kv=None, impl: str = "auto"):
+                 *, cross_kv=None, moe_stats=None, impl: str = "auto"):
     """Cached step (prefill chunk or decode). Returns (x, new_layer_cache)."""
     kind = cfg.block_kind(layer_idx)
     decode = x.shape[1] == 1
@@ -191,7 +209,8 @@ def block_cached(params, cfg, layer_idx: int, x, pos0, layer_cache, spec,
     if "ffn" in params:
         h = rms_norm(x, params["norm2"], cfg.rms_eps)
         if cfg.is_moe_layer(layer_idx):
-            h, _ = moe_ffn(params["ffn"], cfg, h, capacity_factor=2.0)
+            h, aux = moe_ffn(params["ffn"], cfg, h, capacity_factor=2.0)
+            _fold_moe_stats(moe_stats, aux)
         else:
             h = ffn_apply(params["ffn"], cfg, h)
         x = x + h

@@ -611,3 +611,93 @@ class PrefixCache:
         return {"chunks": self.n_chunks, "hits": self.hits,
                 "misses": self.misses, "hit_tokens": self.hit_tokens,
                 "evictions": self.evictions}
+
+
+# ================================================= encoder segment pool
+
+class EncoderSegmentPool:
+    """Host-side refcounting over the SHARED ENCODER SEGMENT pools of an
+    enc-dec paged cache (``transformer.init_paged_cache``).
+
+    The device side is a per-cross-layer (n_segments, T, G, hd) K/V pool;
+    every lane's ``cross_seg`` row indexes into it.  This class owns the
+    admission-time bookkeeping, mirroring the prefix cache's adoption
+    semantics for encoder outputs: segments are keyed by a DIGEST of the
+    raw conditioning payload (frame embeddings), so N streams decoding
+    against the same encoded input share ONE segment — one encoder forward,
+    one K/V copy — exactly like a prefix-cache hit skips a shared prefill.
+
+    Segment 0 is the reserved NULL segment (all-zero K/V = cross no-op) and
+    is never allocated or refcounted.  Segments are immutable once written:
+    ``acquire`` either returns an existing segment (hit, +1 ref) or hands
+    out a free index the caller must fill via ``write_cross_segment``.
+    """
+
+    def __init__(self, n_segments: int):
+        self.n_segments = int(n_segments)
+        self._free = list(range(self.n_segments - 1, 0, -1))
+        self._by_digest: Dict[str, int] = {}
+        self._digest_of: Dict[int, str] = {}
+        self.refcount: Dict[int, int] = {}
+        self.seg_bytes: Dict[int, int] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def digest(payload) -> str:
+        """Content key of one conditioning payload (any array)."""
+        import hashlib
+        a = np.ascontiguousarray(np.asarray(payload))
+        h = hashlib.sha1(a.tobytes())
+        h.update(str((a.shape, a.dtype)).encode())
+        return h.hexdigest()
+
+    @property
+    def free_segments(self) -> int:
+        return len(self._free)
+
+    def acquire(self, digest: str, nbytes: int) -> Tuple[int, bool]:
+        """Return ``(segment, is_new)`` for a payload digest: a hit addrefs
+        the existing segment; a miss pops a free index (the caller encodes
+        and writes it).  ``nbytes`` is the payload size the segment stands
+        in for — the sharing accounting of ``stats()``."""
+        seg = self._by_digest.get(digest)
+        if seg is not None:
+            self.refcount[seg] += 1
+            self.hits += 1
+            return seg, False
+        if not self._free:
+            raise RuntimeError("encoder segment pool exhausted")
+        seg = self._free.pop()
+        self._by_digest[digest] = seg
+        self._digest_of[seg] = digest
+        self.refcount[seg] = 1
+        self.seg_bytes[seg] = int(nbytes)
+        self.misses += 1
+        return seg, True
+
+    def release(self, seg: int) -> bool:
+        """Drop one reference; a segment whose last reference goes returns
+        to the free list.  Segment 0 (null) is a no-op."""
+        if seg == 0:
+            return False
+        self.refcount[seg] -= 1
+        if self.refcount[seg]:
+            return False
+        del self.refcount[seg]
+        del self._by_digest[self._digest_of.pop(seg)]
+        del self.seg_bytes[seg]
+        self._free.append(seg)
+        return True
+
+    def stats(self) -> dict:
+        """Sharing accounting: ``logical_bytes`` is what N private copies
+        would cost, ``unique_bytes`` what the pool actually holds — the
+        bench's ~1/N claim is their ratio."""
+        unique = sum(self.seg_bytes.values())
+        logical = sum(self.seg_bytes[s] * r for s, r in self.refcount.items())
+        return {"segments": self.n_segments - 1,
+                "unique_segments": len(self.refcount),
+                "logical_refs": sum(self.refcount.values()),
+                "unique_bytes": unique, "logical_bytes": logical,
+                "hits": self.hits, "misses": self.misses}

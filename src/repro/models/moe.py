@@ -110,8 +110,10 @@ def moe_ffn(params, cfg, x, *, capacity_factor: float = None
         y = _moe_decode_gather(params, cfg, x, gates, ids, act)
         if "shared" in params:
             y = y + _ffn_apply(params["shared"], x, act)
+        hit = jax.nn.one_hot(ids, E, dtype=jnp.int32).sum((1, 2))     # (G,E)
         aux = {"moe_aux_loss": jnp.zeros(()), "moe_z_loss": jnp.zeros(()),
-               "moe_drop_frac": jnp.zeros(())}
+               "moe_drop_frac": jnp.zeros(()),
+               "moe_experts_hit": (hit > 0).sum(-1).astype(jnp.float32)}
         return y, aux
 
     onehot = jax.nn.one_hot(ids, E, dtype=jnp.int8).sum(2)         # (G,S,E)
@@ -151,5 +153,11 @@ def moe_ffn(params, cfg, x, *, capacity_factor: float = None
         "moe_aux_loss": m.router_aux_weight * E * jnp.sum(me * ce),
         "moe_z_loss": 1e-3 * jnp.mean(jax.nn.logsumexp(logits, -1) ** 2),
         "moe_drop_frac": 1.0 - keep.astype(jnp.float32).mean(),
+        # distinct experts activated per group over the S tokens of this
+        # call — the serving tick's routing-density signal: a multi-token
+        # verify streams experts_hit/E of the routed bank (vs top_k/E for
+        # one decode token), which core/rewards.py turns into the
+        # routing-density term of the modeled session cost
+        "moe_experts_hit": (onehot > 0).any(axis=1).sum(-1).astype(jnp.float32),
     }
     return y, aux

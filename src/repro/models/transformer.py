@@ -195,6 +195,11 @@ def forward_hidden(params, cfg: ModelConfig, tokens, *, patch_embeds=None,
 
 # ------------------------------------------------------------ cached step
 
+def _n_moe_layers(cfg: ModelConfig) -> int:
+    return sum(1 for i in range(cfg.num_layers)
+               if cfg.is_moe_layer(i) and cfg.block_kind(i) != "mamba2")
+
+
 def _kv_quant(kv_dtype: Optional[str]) -> bool:
     if kv_dtype in (None, "fp", "bf16", "fp32"):
         return False
@@ -225,6 +230,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
     cache = {"pos": jnp.zeros((), jnp.int32), "layers": layers}
     if cfg.is_encdec:
         cache["cross"] = None  # filled by prefill(enc_out=...)
+    if _n_moe_layers(cfg):
+        # routing-density channel: mean distinct-experts-hit per stream over
+        # the routed layers of the LAST step call.  Present from init so the
+        # cache pytree structure is stable under while_loop/scan carries.
+        cache["moe_stats"] = jnp.zeros((batch,), jnp.float32)
     return cache, spec
 
 
@@ -266,16 +276,22 @@ def step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
 
     layers = cache["layers"]
     new_layers = {"prefix": [], "tail": [], "stack": None}
+    want_moe = "moe_stats" in cache
+    moe_acc = jnp.zeros((x.shape[0],), jnp.float32) if want_moe else None
 
     for k, i in enumerate(g.prefix):
+        st = {} if want_moe else None
         x, lc = block_cached(params["layers"]["prefix"][k], cfg, i, x, pos0,
                              layers["prefix"][k], spec.layers[i],
                              cross_kv=None if cross is None else cross["prefix"][k],
-                             impl=impl)
+                             moe_stats=st, impl=impl)
         new_layers["prefix"].append(lc)
+        if st:
+            moe_acc = moe_acc + st["experts_hit"]
 
     if g.n_cycles:
-        def cycle(x, xs):
+        def cycle(carry, xs):
+            x, acc = carry
             if cross is not None:
                 cp, cc, cx = xs
             else:
@@ -283,25 +299,31 @@ def step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
             new_cc = {}
             for j in range(g.period):
                 idx = g.scan_start + j
+                st = {} if acc is not None else None
                 x, lc = block_cached(cp[str(j)], cfg, idx, x, pos0, cc[str(j)],
                                      spec.layers[idx],
                                      cross_kv=None if cx is None else cx[str(j)],
-                                     impl=impl)
+                                     moe_stats=st, impl=impl)
                 new_cc[str(j)] = lc
-            return x, new_cc
+                if st:
+                    acc = acc + st["experts_hit"]
+            return (x, acc), new_cc
         body = jax.checkpoint(cycle) if remat else cycle
         xs = ((params["layers"]["stack"], layers["stack"], cross["stack"])
               if cross is not None else
               (params["layers"]["stack"], layers["stack"]))
-        x, new_stack = jax.lax.scan(body, x, xs)
+        (x, moe_acc), new_stack = jax.lax.scan(body, (x, moe_acc), xs)
         new_layers["stack"] = new_stack
 
     for k, i in enumerate(g.tail):
+        st = {} if want_moe else None
         x, lc = block_cached(params["layers"]["tail"][k], cfg, i, x, pos0,
                              layers["tail"][k], spec.layers[i],
                              cross_kv=None if cross is None else cross["tail"][k],
-                             impl=impl)
+                             moe_stats=st, impl=impl)
         new_layers["tail"].append(lc)
+        if st:
+            moe_acc = moe_acc + st["experts_hit"]
 
     x = rms_norm(x, params["final_norm"], cfg.rms_eps)
     if not all_logits:
@@ -309,6 +331,10 @@ def step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
     logits = logits_fn(params, cfg, x)
     S_new = tokens.shape[1] + (0 if patch_embeds is None else patch_embeds.shape[1])
     new_cache = {**cache, "pos": pos0 + S_new, "layers": new_layers}
+    if want_moe:
+        new_cache["moe_stats"] = (
+            moe_acc / max(_n_moe_layers(cfg), 1)
+        ).reshape(cache["moe_stats"].shape)
     return logits, new_cache
 
 
@@ -316,16 +342,23 @@ def step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                      block_size: int = 64, pool_tokens: Optional[int] = None,
-                     dtype=jnp.bfloat16, kv_dtype: Optional[str] = None):
+                     dtype=jnp.bfloat16, kv_dtype: Optional[str] = None,
+                     enc_segments: Optional[int] = None):
     """Paged decode cache: one global block pool per attention layer plus
     per-stream (tables, lengths). Recurrent layers keep (B, ...) state.
     ``pool_tokens`` defaults to ``batch * max_len`` — the dense engine's
     capacity — so the refactor is drop-in; serving passes less to decouple
     memory from worst-case per-slot buffers.  ``kv_dtype="int8"`` stores
     the pools quantized (per-row scales ride sibling pools), roughly
-    doubling the tokens a byte budget can back."""
-    assert not cfg.is_encdec and cfg.vision is None, \
-        "paged cache serves decoder-only LM stacks"
+    doubling the tokens a byte budget can back.
+
+    Enc-dec targets add SHARED ENCODER SEGMENT POOLS: per cross-attention
+    layer a (n_segments, frontend_len, G, hd) K/V pool plus a per-stream
+    ``cross_seg`` segment index.  Segment 0 is the reserved NULL segment
+    (all-zero K/V — zero V makes cross attention an exact no-op for
+    unconditioned lanes), so one encoded input shared by N lanes costs one
+    segment, refcounted host-side by ``models.cache.EncoderSegmentPool``.
+    ``enc_segments`` sizes the pool (default: one per lane + the null)."""
     spec = build_paged_cache_spec(cfg, max_len, block_size=block_size,
                                   pool_tokens=pool_tokens or batch * max_len,
                                   kv_quant=_kv_quant(kv_dtype))
@@ -344,11 +377,31 @@ def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     cache = {"lengths": jnp.zeros((batch,), jnp.int32),
              "tables": jnp.zeros((batch, spec.max_blocks), jnp.int32),
              "layers": layers}
+    if cfg.is_encdec:
+        nseg = enc_segments or batch + 1
+        tf = cfg.encdec.frontend_len
+        kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+        def seg_kv(lead=()):
+            z = jnp.zeros(lead + (nseg, tf, kvh, hd), dtype)
+            return {"k": z, "v": z}
+
+        cross = {"prefix": [seg_kv() for _ in g.prefix],
+                 "tail": [seg_kv() for _ in g.tail],
+                 "stack": None}
+        if g.n_cycles:
+            cross["stack"] = {str(j): seg_kv((g.n_cycles,))
+                              for j in range(g.period)}
+        cache["cross"] = cross
+        cache["cross_seg"] = jnp.zeros((batch,), jnp.int32)
+    if _n_moe_layers(cfg):
+        cache["moe_stats"] = jnp.zeros((batch,), jnp.float32)
     return cache, spec
 
 
 def paged_step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
-               all_logits: bool = False, impl: str = "auto"):
+               patch_embeds=None, all_logits: bool = False,
+               impl: str = "auto"):
     """Advance B independent streams by S tokens against the paged cache.
 
     Unlike ``step`` (one shared ``pos`` scalar) every stream writes at its
@@ -356,51 +409,130 @@ def paged_step(params, cfg: ModelConfig, tokens, cache, spec: CacheSpec, *,
     jitted program serves lanes at arbitrary sequence positions — and the
     pool is shared, which a vmap-of-single-stream formulation cannot express
     (per-lane writes to one buffer do not compose under vmap).
+
+    Conditioning: ``patch_embeds`` (B, P, vit_dim) are projected and
+    PREPENDED to the token chunk (positions = the lanes' current lengths),
+    mirroring the dense ``step``; enc-dec caches carry shared encoder
+    segment pools — each lane's ``cross_seg`` row is gathered into a
+    per-lane cross-KV once per call, so conditioning rides entirely inside
+    the (opaque) cache and every jitted session works unchanged.
     Returns (logits, new_cache); new_cache has ``lengths + S``.
     """
     assert spec.paged
     g = layer_grouping(cfg)
     lengths, tables = cache["lengths"], cache["tables"]
     x = embed_tokens(params, cfg, tokens)
+    if patch_embeds is not None:
+        x = jnp.concatenate(
+            [project_vision(params, patch_embeds).astype(x.dtype), x], axis=1)
     x = constrain(x, ("pod", "data"), None, None)
+
+    cross = None
+    if cache.get("cross") is not None:
+        seg = cache["cross_seg"]
+        cp = cache["cross"]
+        cross = {"prefix": [jax.tree.map(lambda a: a[seg], c)
+                            for c in cp["prefix"]],
+                 "tail": [jax.tree.map(lambda a: a[seg], c)
+                          for c in cp["tail"]],
+                 "stack": None if cp["stack"] is None else
+                 jax.tree.map(lambda a: a[:, seg], cp["stack"])}
 
     layers = cache["layers"]
     new_layers = {"prefix": [], "tail": [], "stack": None}
+    want_moe = "moe_stats" in cache
+    moe_acc = jnp.zeros((x.shape[0],), jnp.float32) if want_moe else None
 
     for k, i in enumerate(g.prefix):
+        st = {} if want_moe else None
         x, lc = block_paged(params["layers"]["prefix"][k], cfg, i, x,
                             layers["prefix"][k], tables, lengths,
-                            spec.layers[i], impl=impl)
+                            spec.layers[i],
+                            cross_kv=None if cross is None else cross["prefix"][k],
+                            moe_stats=st, impl=impl)
         new_layers["prefix"].append(lc)
+        if st:
+            moe_acc = moe_acc + st["experts_hit"]
 
     if g.n_cycles:
-        def cycle(x, xs):
-            cp, cc = xs
+        def cycle(carry, xs):
+            x, acc = carry
+            if cross is not None:
+                cp_, cc, cx = xs
+            else:
+                (cp_, cc), cx = xs, None
             new_cc = {}
             for j in range(g.period):
                 idx = g.scan_start + j
-                x, lc = block_paged(cp[str(j)], cfg, idx, x, cc[str(j)],
+                st = {} if acc is not None else None
+                x, lc = block_paged(cp_[str(j)], cfg, idx, x, cc[str(j)],
                                     tables, lengths, spec.layers[idx],
-                                    impl=impl)
+                                    cross_kv=None if cx is None else cx[str(j)],
+                                    moe_stats=st, impl=impl)
                 new_cc[str(j)] = lc
-            return x, new_cc
-        x, new_stack = jax.lax.scan(
-            cycle, x, (params["layers"]["stack"], layers["stack"]))
+                if st:
+                    acc = acc + st["experts_hit"]
+            return (x, acc), new_cc
+        xs = ((params["layers"]["stack"], layers["stack"], cross["stack"])
+              if cross is not None else
+              (params["layers"]["stack"], layers["stack"]))
+        (x, moe_acc), new_stack = jax.lax.scan(cycle, (x, moe_acc), xs)
         new_layers["stack"] = new_stack
 
     for k, i in enumerate(g.tail):
+        st = {} if want_moe else None
         x, lc = block_paged(params["layers"]["tail"][k], cfg, i, x,
                             layers["tail"][k], tables, lengths,
-                            spec.layers[i], impl=impl)
+                            spec.layers[i],
+                            cross_kv=None if cross is None else cross["tail"][k],
+                            moe_stats=st, impl=impl)
         new_layers["tail"].append(lc)
+        if st:
+            moe_acc = moe_acc + st["experts_hit"]
 
     x = rms_norm(x, params["final_norm"], cfg.rms_eps)
     if not all_logits:
         x = x[:, -1:]
     logits = logits_fn(params, cfg, x)
-    new_cache = {**cache, "lengths": lengths + tokens.shape[1],
-                 "layers": new_layers}
+    S_new = (tokens.shape[1]
+             + (0 if patch_embeds is None else patch_embeds.shape[1]))
+    new_cache = {**cache, "lengths": lengths + S_new, "layers": new_layers}
+    if want_moe:
+        new_cache["moe_stats"] = (
+            moe_acc / max(_n_moe_layers(cfg), 1)
+        ).reshape(cache["moe_stats"].shape)
     return logits, new_cache
+
+
+def encode_cross_segment(params, cfg: ModelConfig, frame_embeds,
+                         impl: str = "auto"):
+    """Run the encoder over ONE input's frame embeddings (1, T, F) and
+    return the per-layer cross-KV pytree (leaves (1, T, G, hd); scanned
+    cycles carry a leading n_cycles axis) — the payload
+    ``write_cross_segment`` lands in a shared segment pool."""
+    enc_out = encode(params, cfg, frame_embeds, impl)
+    return _init_cross(params, cfg, enc_out)
+
+
+def write_cross_segment(cache, cross_lane, seg):
+    """Scatter one encoded input's cross-KV into the paged cache's shared
+    segment pools at segment index ``seg`` (written once, then immutable
+    and shared by every lane whose ``cross_seg`` points at it)."""
+    pool = cache["cross"]
+
+    def put(p, n):
+        return p.at[seg].set(n[0].astype(p.dtype))
+
+    def put_stack(p, n):
+        return p.at[:, seg].set(n[:, 0].astype(p.dtype))
+
+    new = {"prefix": [jax.tree.map(put, p, n)
+                      for p, n in zip(pool["prefix"], cross_lane["prefix"])],
+           "tail": [jax.tree.map(put, p, n)
+                    for p, n in zip(pool["tail"], cross_lane["tail"])],
+           "stack": None if pool["stack"] is None else
+           jax.tree.map(put_stack, pool["stack"], cross_lane["stack"])}
+    return {**cache, "cross": new}
 
 
 # ------------------------------------------------------------ tree step

@@ -25,27 +25,123 @@ def _free_jit_executables_between_modules():
     jax.clear_caches()
 
 
+# ------------------------------------------------------ tiny model factory
+#
+# One construction site for every tiny (draft, target) family the suite
+# exercises.  Targets always init from PRNGKey(0) and drafts from PRNGKey(1)
+# — the seeds the pre-consolidation per-file constructions used — so the
+# token sequences the existing tests assert on are unchanged.
+
+_PAIRS = {}
+
+_REGISTRY_ARCH = {"moe": "qwen3-moe-235b-a22b",
+                  "encdec": "seamless-m4t-large-v2",
+                  "vlm": "internvl2-26b"}
+
+
+def make_tiny_pair(kind):
+    """(draft_bundle, target_bundle) for a tiny model family (random init).
+
+    Kinds: "dense" (attention target/draft), "recurrent" (dense target,
+    hybrid rglru/local draft), "mla" (MLA latent stacks both sides), and
+    the registry-backed conditioned/sparse targets "moe", "encdec", "vlm"
+    (smoke-sized target from ``configs/registry.py`` plus a plain dense
+    draft sharing its vocab — greedy verification makes the unconditioned
+    draft exact for conditioned targets).  Pairs are built once per session
+    and cached (params are tiny; ``jax.clear_caches`` does not drop them).
+    """
+    if kind in _PAIRS:
+        return _PAIRS[kind]
+    from repro.core import ModelBundle
+    from repro.models import MLAConfig, RGLRUConfig
+    V = 61
+    if kind == "dense":
+        tcfg = ModelConfig(name="tgt", arch_type="dense", num_layers=4,
+                           d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                           vocab_size=V)
+        dcfg = ModelConfig(name="drf", arch_type="dense", num_layers=2,
+                           d_model=64, num_heads=2, num_kv_heads=1, d_ff=128,
+                           vocab_size=V)
+    elif kind == "recurrent":
+        tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2,
+                           d_model=96, num_heads=2, num_kv_heads=1, d_ff=192,
+                           vocab_size=V)
+        dcfg = ModelConfig(name="d", arch_type="hybrid", num_layers=2,
+                           d_model=64, num_heads=2, num_kv_heads=1, d_ff=128,
+                           vocab_size=V, block_pattern=("rglru", "local"),
+                           window=16, rglru=RGLRUConfig(lru_width=64))
+    elif kind == "mla":
+        mla = MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                        qk_rope_head_dim=8, v_head_dim=16)
+        tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2,
+                           d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                           vocab_size=V, block_pattern=("mla",), mla=mla)
+        dcfg = ModelConfig(name="d", arch_type="dense", num_layers=1,
+                           d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                           vocab_size=V, block_pattern=("mla",), mla=mla)
+    elif kind in _REGISTRY_ARCH:
+        from repro.configs.registry import smoke_config
+        tcfg = smoke_config(_REGISTRY_ARCH[kind])
+        dcfg = ModelConfig(name="drf", arch_type="dense", num_layers=2,
+                           d_model=64, num_heads=2, num_kv_heads=1, d_ff=128,
+                           vocab_size=tcfg.vocab_size)
+    else:
+        raise ValueError(f"unknown tiny-pair kind {kind!r}")
+    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
+    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
+    pair = (ModelBundle(dp, dcfg), ModelBundle(tp, tcfg))
+    _PAIRS[kind] = pair
+    return pair
+
+
 @pytest.fixture(scope="session")
 def tiny_dense_pair():
     """(draft_bundle, target_bundle) of small dense models (random init)."""
-    from repro.core import ModelBundle
-    V = 61
-    tcfg = ModelConfig(name="tgt", arch_type="dense", num_layers=4, d_model=128,
-                       num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=V)
-    dcfg = ModelConfig(name="drf", arch_type="dense", num_layers=2, d_model=64,
-                       num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=V)
-    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
-    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
-    return ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    return make_tiny_pair("dense")
 
 
-def ar_greedy_decode(params, cfg, prompt, n, max_len=256):
-    """Target-only greedy decoding reference."""
+@pytest.fixture(scope="session")
+def tiny_pair():
+    """Factory fixture: ``tiny_pair(kind)`` -> (draft, target) bundles."""
+    return make_tiny_pair
+
+
+def ar_greedy_decode(params, cfg, prompt, n, max_len=256, frame_embeds=None,
+                     patch_embeds=None):
+    """Target-only greedy decoding reference (fp32 dense cache).  Encoder
+    conditioning (``frame_embeds`` (1,F,D) / ``patch_embeds`` (1,P,D))
+    applies to the prefill step only; decode steps run against the cache."""
     cache, spec = T.init_cache(cfg, 1, max_len, jnp.float32)
     seq = list(prompt)
-    lg, cache = T.step(params, cfg, jnp.asarray([seq], jnp.int32), cache, spec)
+    lg, cache = T.step(params, cfg, jnp.asarray([seq], jnp.int32), cache, spec,
+                       frame_embeds=frame_embeds, patch_embeds=patch_embeds)
     for _ in range(n):
         t = int(jnp.argmax(lg[0, -1]))
         seq.append(t)
         lg, cache = T.step(params, cfg, jnp.asarray([[t]], jnp.int32), cache, spec)
     return seq
+
+
+def drain_streams(eng, prompts, max_new, reserve=None, max_ticks=500,
+                  open_kwargs=None):
+    """Open one slot per prompt on a batched/paged engine and tick until
+    every stream produced ``max_new`` tokens (or finished); returns the
+    closed per-stream states.  ``reserve`` forwards ``reserve_tokens`` to
+    paged admission; ``open_kwargs`` is an optional per-stream list of extra
+    ``open_stream`` kwargs (e.g. encoder conditioning)."""
+    final = [None] * len(prompts)
+    for i, p in enumerate(prompts):
+        kw = dict(open_kwargs[i]) if open_kwargs else {}
+        if reserve is not None:
+            kw["reserve_tokens"] = reserve
+        eng.open_stream(i, list(p), **kw)
+    for _ in range(max_ticks):
+        for i in range(len(prompts)):
+            st = eng.slots[i]
+            if st is not None and (st["done"]
+                                   or st["res"].new_tokens >= max_new):
+                final[i] = eng.close_stream(i)
+        if all(f is not None for f in final):
+            return final
+        eng.session_step_batch()
+    raise AssertionError("streams did not drain")

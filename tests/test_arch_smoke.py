@@ -78,6 +78,37 @@ def test_smoke_decode_step(arch):
     assert not np.isnan(np.asarray(lg, np.float32)).any()
 
 
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_paged_step(arch):
+    """Every registry arch — dense, MoE, vision- and encoder-conditioned —
+    builds a tiny variant and advances the PAGED decode path: conditioned
+    prefill (patch prepend / shared cross segment) plus decode steps."""
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch, extras = _batch_for(cfg, B=1, S=8)
+    cache, spec = T.init_paged_cache(cfg, 1, 64, block_size=8,
+                                     dtype=jnp.float32)
+    # hand the lane a real block-table row (block 0 is the trash block)
+    cache = {**cache, "tables": jnp.arange(1, spec.max_blocks + 1,
+                                           dtype=jnp.int32)[None]}
+    kw = {}
+    if "patch_embeds" in extras:
+        kw["patch_embeds"] = extras["patch_embeds"]
+    if "frame_embeds" in extras:
+        lane = T.encode_cross_segment(params, cfg, extras["frame_embeds"])
+        cache = T.write_cross_segment(cache, lane, 1)
+        cache = {**cache, "cross_seg": cache["cross_seg"].at[0].set(1)}
+    lg, cache = T.paged_step(params, cfg, batch["tokens"], cache, spec, **kw)
+    for _ in range(3):
+        tok = jnp.argmax(lg[:, -1:], axis=-1).astype(jnp.int32)
+        lg, cache = T.paged_step(params, cfg, tok, cache, spec)
+    assert lg.shape == (1, 1, cfg.vocab_size)
+    assert not np.isnan(np.asarray(lg, np.float32)).any()
+    if cfg.moe is not None:
+        # the routing-density channel rode along with the decode step
+        assert float(np.asarray(cache["moe_stats"])[0]) >= 1.0
+
+
 def test_full_configs_match_assignment():
     spec = {
         "deepseek-v2-lite-16b": (27, 2048, 16, 16, 102400),

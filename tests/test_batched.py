@@ -1,37 +1,19 @@
 """Batched multi-stream speculative decoding: exact per-stream equivalence
 with single-stream runs, masked-slot isolation, and order-independent
 batched bandit updates."""
-import jax
 import numpy as np
 import pytest
 
-from repro.core import ModelBundle, SpecEngine, make_controller
+from conftest import drain_streams as _drain_batched
+from conftest import make_tiny_pair
+from repro.core import SpecEngine, make_controller
 from repro.core.bandits import EXP3, UCB1, ThompsonBeta, make_bandit
 from repro.core.engine import BatchedSpecEngine
-from repro.models import ModelConfig, RGLRUConfig
-from repro.models import transformer as T
 
 # three streams at DIFFERENT sequence positions (unequal prompt lengths)
 PROMPTS = [[1, 5, 9, 13],
            [2, 6, 10, 14, 18, 22, 26],
            [3, 7, 11, 15, 19, 23, 27, 31, 35, 39, 43]]
-
-
-def _drain_batched(eng: BatchedSpecEngine, prompts, max_new):
-    """Open one slot per prompt, tick until every stream produced max_new."""
-    final = [None] * len(prompts)
-    for i, p in enumerate(prompts):
-        eng.open_stream(i, p)
-    for _ in range(500):
-        for i in range(len(prompts)):
-            st = eng.slots[i]
-            if st is not None and (st["done"]
-                                   or st["res"].new_tokens >= max_new):
-                final[i] = eng.close_stream(i)
-        if all(f is not None for f in final):
-            break
-        eng.session_step_batch()
-    return final
 
 
 def test_batched_matches_three_single_stream_runs(tiny_dense_pair):
@@ -54,16 +36,7 @@ def test_batched_matches_three_single_stream_runs(tiny_dense_pair):
 
 def test_batched_matches_single_recurrent_family():
     """Snapshot-rollback (recurrent draft) batched == single-stream."""
-    V = 61
-    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=96,
-                       num_heads=2, num_kv_heads=1, d_ff=192, vocab_size=V)
-    dcfg = ModelConfig(name="d", arch_type="hybrid", num_layers=2, d_model=64,
-                       num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=V,
-                       block_pattern=("rglru", "local"), window=16,
-                       rglru=RGLRUConfig(lru_width=64))
-    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
-    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
-    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    draft, target = make_tiny_pair("recurrent")
     prompts = PROMPTS[:2]
     max_new = 12
     refs = []

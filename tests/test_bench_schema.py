@@ -1,0 +1,80 @@
+"""Unit tests for scripts/check_bench_schema.py — the lint-lane gate that
+keeps BENCH_serving.json rows attributable (engine blob, drafter identity,
+MoE routed-expert stats, encoder shared-segment stats)."""
+import importlib.util
+import os
+
+_PATH = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                     "check_bench_schema.py")
+_spec = importlib.util.spec_from_file_location("check_bench_schema", _PATH)
+cbs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cbs)
+
+TS = "2026-08-09T00:00:00Z"
+
+
+def _row(bench, summary):
+    return {"bench": bench, "recorded_at": TS, "summary": summary}
+
+
+def _moe_encoder_summary(**override):
+    s = {"claim_encoder_segments_shared": True,
+         "claim_moe_routed_cost_banditvisible": True,
+         "moe": {"routed_frac": 0.37, "mean_routing_density": 1.4},
+         "encoder": {"unique_bytes": 65536, "logical_bytes": 262144,
+                     "streams": 4},
+         "engine": {"backend": "paged",
+                    "moe": {"routed_frac": 0.37}}}
+    s.update(override)
+    return s
+
+
+def test_wellformed_rows_pass():
+    assert cbs.check_row(0, _row("bench_reward", {"claim_x": True})) == []
+    assert cbs.check_row(0, _row("moe_encoder", _moe_encoder_summary())) == []
+    assert cbs.check_row(
+        0, _row("moe_encoder_smoke", _moe_encoder_summary())) == []
+
+
+def test_basic_shape_violations():
+    assert cbs.check_row(0, ["not", "a", "row"])
+    assert cbs.check_row(0, {"bench": "x", "summary": {}})      # missing key
+    errs = cbs.check_row(0, _row("x", {"claim_ok": "yes"}))
+    assert any("must be bool" in e for e in errs)
+    errs = cbs.check_row(0, _row("x", {"tokens_s": 1.0}))
+    assert any("no claim_*" in e for e in errs)
+
+
+def test_moe_encoder_requires_engine_blob():
+    errs = cbs.check_row(0, _row("moe_encoder",
+                                 _moe_encoder_summary(engine=None)))
+    assert any("engine describe() blob" in e for e in errs)
+
+
+def test_moe_encoder_requires_routed_expert_stats():
+    for bad in (None, {}, {"routed_frac": 0.3},
+                {"routed_frac": "0.3", "mean_routing_density": 1.2},
+                {"routed_frac": True, "mean_routing_density": 1.2}):
+        errs = cbs.check_row(0, _row("moe_encoder",
+                                     _moe_encoder_summary(moe=bad)))
+        assert any("routed-expert stats" in e for e in errs), bad
+
+
+def test_moe_encoder_requires_shared_segment_stats():
+    for bad in (None, {}, {"unique_bytes": 1, "logical_bytes": 2},
+                {"unique_bytes": 1, "logical_bytes": None, "streams": 2}):
+        errs = cbs.check_row(0, _row("moe_encoder",
+                                     _moe_encoder_summary(encoder=bad)))
+        assert any("shared-segment stats" in e for e in errs), bad
+
+
+def test_other_benches_unaffected_by_new_rules():
+    """A non-moe_encoder bench needs neither 'moe' nor 'encoder' dicts."""
+    assert cbs.check_row(0, _row("prefix_sharing",
+                                 {"claim_cow": True,
+                                  "engine": {"backend": "paged"}})) == []
+
+
+def test_committed_bench_file_passes():
+    """The repo's own BENCH_serving.json must satisfy the checker."""
+    assert cbs.main() == 0

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from conftest import ar_greedy_decode
+from conftest import drain_streams as _drain
 from repro.core import (EngineSpec, StaticGamma, default_drafters,
                         eagle_bundle, init_eagle_head, make_engine,
                         ssd_draft_bundle)
@@ -31,22 +32,6 @@ def pool(tiny_dense_pair):
 def _pool_controller(pool, gamma_max=4, seed=0, reward="simple"):
     return TapOutTreeSequence(gamma_max, "ucb1", reward,
                               shapes=pool.shape_pool(gamma_max), seed=seed)
-
-
-def _drain(eng, prompts, max_new, max_ticks=400):
-    final = [None] * len(prompts)
-    for i, p in enumerate(prompts):
-        eng.open_stream(i, list(p))
-    for _ in range(max_ticks):
-        for i in range(len(prompts)):
-            st = eng.slots[i]
-            if st is not None and (st["done"]
-                                   or st["res"].new_tokens >= max_new):
-                final[i] = eng.close_stream(i)
-        if all(f is not None for f in final):
-            return final
-        eng.session_step_batch()
-    raise AssertionError("streams did not drain")
 
 
 # ------------------------------------------------ SSD drafter parity

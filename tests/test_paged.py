@@ -7,9 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import drain_streams as _drain
+from conftest import make_tiny_pair
 from repro.core import ModelBundle, SpecEngine, make_controller
 from repro.core.engine import BatchedSpecEngine, PagedSpecEngine
-from repro.models import MLAConfig, ModelConfig, RGLRUConfig
+from repro.models import ModelConfig, RGLRUConfig
 from repro.models import transformer as T
 from repro.models.cache import BlockAllocator, PoolExhausted
 from repro.serving.engine import SpecServer
@@ -67,25 +69,6 @@ def test_paged_rollback_is_length_truncation_only():
 
 # --------------------------------------------------------------- equivalence
 
-def _drain(eng, prompts, max_new, reserve=None):
-    final = [None] * len(prompts)
-    for i, p in enumerate(prompts):
-        if isinstance(eng, PagedSpecEngine):
-            eng.open_stream(i, p, reserve_tokens=reserve)
-        else:
-            eng.open_stream(i, p)
-    for _ in range(500):
-        for i in range(len(prompts)):
-            st = eng.slots[i]
-            if st is not None and (st["done"]
-                                   or st["res"].new_tokens >= max_new):
-                final[i] = eng.close_stream(i)
-        if all(f is not None for f in final):
-            break
-        eng.session_step_batch()
-    return final
-
-
 def test_paged_matches_single_stream_and_dense_batched(tiny_dense_pair):
     """B=4 paged generation == B=4 dense batched == 4 single-stream runs,
     token for token (the ISSUE's headline acceptance criterion)."""
@@ -117,16 +100,7 @@ def test_paged_matches_single_stream_and_dense_batched(tiny_dense_pair):
 
 def test_paged_matches_single_recurrent_family():
     """Snapshot-recompute (recurrent draft) over the paged target pool."""
-    V = 61
-    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=96,
-                       num_heads=2, num_kv_heads=1, d_ff=192, vocab_size=V)
-    dcfg = ModelConfig(name="d", arch_type="hybrid", num_layers=2, d_model=64,
-                       num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=V,
-                       block_pattern=("rglru", "local"), window=16,
-                       rglru=RGLRUConfig(lru_width=64))
-    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
-    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
-    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    draft, target = make_tiny_pair("recurrent")
     prompts = PROMPTS[:2]
     max_new = 12
     refs = []
@@ -148,18 +122,7 @@ def test_paged_matches_single_recurrent_family():
 def test_paged_matches_single_stream_mla():
     """MLA latent pools (ckv/krope block tables, absorbed attention) —
     the ISSUE's acceptance criterion names attention/MLA-only configs."""
-    V = 61
-    mla = MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
-                    qk_rope_head_dim=8, v_head_dim=16)
-    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=64,
-                       num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=V,
-                       block_pattern=("mla",), mla=mla)
-    dcfg = ModelConfig(name="d", arch_type="dense", num_layers=1, d_model=32,
-                       num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=V,
-                       block_pattern=("mla",), mla=mla)
-    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
-    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
-    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
+    draft, target = make_tiny_pair("mla")
     prompts = PROMPTS[:2]
     max_new = 12
     refs = []

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from conftest import ar_greedy_decode
+from conftest import drain_streams as _drain
 
 from repro.core import (SpecEngine, TapOutTreeSequence, TreeSpecEngine,
                         chain_shape, default_pool, make_controller,
@@ -118,22 +119,6 @@ def test_quantized_bundle_scales_cost(tiny_dense_pair):
 
 
 # ------------------------------------------------------- int8 KV parity
-
-def _drain(eng, prompts, max_new):
-    final = [None] * len(prompts)
-    for i, p in enumerate(prompts):
-        eng.open_stream(i, p)
-    for _ in range(400):
-        for i in range(len(prompts)):
-            st = eng.slots[i]
-            if st is not None and (st["done"]
-                                   or st["res"].new_tokens >= max_new):
-                final[i] = eng.close_stream(i)
-        if all(f is not None for f in final):
-            break
-        eng.session_step_batch()
-    return final
-
 
 def test_int8_kv_paged_matches_dense_batched(tiny_dense_pair):
     """Dense batched and paged engines quantize identical rows identically,

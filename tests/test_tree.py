@@ -5,12 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import ar_greedy_decode
+from conftest import ar_greedy_decode, make_tiny_pair
 from repro.core import (FixedShape, ModelBundle, SpecEngine, StaticGamma,
                         TapOutTreeSequence, TreeSpecEngine, tree_shape)
 from repro.core import tree as trees
 
-from repro.models import MLAConfig, ModelConfig
+from repro.models import ModelConfig
 from repro.models import transformer as T
 
 PROMPT = [1, 5, 9, 13]
@@ -156,19 +156,8 @@ def test_paged_tree_engine_matches_dense(tiny_dense_pair):
 
 def test_tree_engine_mla_stack():
     """MLA latent tree attention (absorbed formulation) + latent commit."""
-    V = 61
-    mla = MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
-                    qk_rope_head_dim=8, v_head_dim=16)
-    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=64,
-                       num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=V,
-                       block_pattern=("mla",), mla=mla)
-    dcfg = ModelConfig(name="d", arch_type="dense", num_layers=1, d_model=32,
-                       num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=V,
-                       block_pattern=("mla",), mla=mla)
-    tp = T.init_params(tcfg, jax.random.PRNGKey(0))
-    dp = T.init_params(dcfg, jax.random.PRNGKey(1))
-    draft, target = ModelBundle(dp, dcfg), ModelBundle(tp, tcfg)
-    ref = ar_greedy_decode(tp, tcfg, PROMPT, 20)
+    draft, target = make_tiny_pair("mla")
+    ref = ar_greedy_decode(target.params, target.cfg, PROMPT, 20)
     eng = TreeSpecEngine(draft, target,
                          FixedShape(6, tree_shape(trees.binary(2))),
                          max_len=128)
